@@ -1,0 +1,80 @@
+//! Chip-simulator tour: voltage/frequency sweep, batching effect, early
+//! exit effect, and energy breakdown on the paper's ResNet-18 @224
+//! workload — the quickest way to see the Table I / Figs. 14-18 numbers.
+//!
+//! Run with:  cargo run --release --example chip_sim
+
+use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::sim::{Chip, EnergyModel};
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let energy = EnergyModel::default();
+
+    // --- V/f sweep (Fig. 14b) ---
+    let mut t = Table::new(
+        "voltage/frequency sweep — 10-way 5-shot batched training (Fig. 14b)",
+        &["V", "MHz", "ms/image", "mJ/image", "avg mW", "TOPS/W"],
+    );
+    for &v in &[0.9, 1.0, 1.1, 1.2] {
+        let f = energy.freq_at_voltage(v);
+        let chip = Chip::paper(ChipConfig { voltage: v, freq_mhz: f, ..Default::default() });
+        let r = chip.train_episode(10, 5, true, false);
+        t.row(&[
+            format!("{v:.1}"),
+            format!("{f:.0}"),
+            format!("{:.1}", r.latency_ms_per_image),
+            format!("{:.2}", r.energy_mj_per_image),
+            format!("{:.0}", r.avg_power_mw),
+            format!("{:.2}", chip.tops_per_watt(&r)),
+        ]);
+    }
+    t.print();
+
+    // --- batching (Fig. 16) ---
+    let mut t = Table::new(
+        "batched single-pass training effect (Fig. 16)",
+        &["MHz", "no batch ms/img", "batched ms/img", "latency saving", "energy saving"],
+    );
+    for &f in &[100.0, 150.0, 200.0, 250.0] {
+        let v = 0.9 + (f - 100.0) / 150.0 * 0.3;
+        let chip = Chip::paper(ChipConfig { voltage: v, freq_mhz: f, ..Default::default() });
+        let nb = chip.train_episode(10, 5, false, false);
+        let b = chip.train_episode(10, 5, true, false);
+        t.row(&[
+            format!("{f:.0}"),
+            format!("{:.1}", nb.latency_ms_per_image),
+            format!("{:.1}", b.latency_ms_per_image),
+            format!("{:.0}%", 100.0 * (1.0 - b.latency_ms_per_image / nb.latency_ms_per_image)),
+            format!("{:.0}%", 100.0 * (1.0 - b.energy_mj_per_image / nb.energy_mj_per_image)),
+        ]);
+    }
+    t.print();
+
+    // --- early exit (Fig. 18's effect) ---
+    let chip = Chip::paper(ChipConfig::default());
+    let mut t = Table::new(
+        "inference vs exit depth (10 classes, Fig. 18's mechanism)",
+        &["exit after block", "ms/image", "mJ/image", "conv layers"],
+    );
+    for s in 0..4 {
+        let r = chip.infer_image(10, Some(s));
+        t.row(&[
+            (s + 1).to_string(),
+            format!("{:.2}", r.latency_ms),
+            format!("{:.3}", r.energy_mj),
+            format!("{}/{}", r.conv_layers_run, r.conv_layers_total),
+        ]);
+    }
+    t.print();
+
+    // --- where the cycles go ---
+    let r_nb = chip.train_episode(10, 5, false, false);
+    let r_b = chip.train_episode(10, 5, true, false);
+    let mut t = Table::new("cycle accounting, 50-image training", &["mode", "total Mcycles", "PE util"]);
+    t.row(&["non-batched".into(), format!("{:.1}", r_nb.cycles as f64 / 1e6),
+        format!("{:.0}%", 100.0 * r_nb.pe_utilization)]);
+    t.row(&["batched".into(), format!("{:.1}", r_b.cycles as f64 / 1e6),
+        format!("{:.0}%", 100.0 * r_b.pe_utilization)]);
+    t.print();
+}

@@ -1,0 +1,74 @@
+//! Early-exit configuration sweep on a live session (Fig. 17's knobs).
+//!
+//! Trains one session, then classifies the same query set under every
+//! (E_s, E_c) configuration, showing the accuracy-vs-depth tradeoff the
+//! paper tunes to (E_s=2, E_c=2).
+//!
+//! Run with:  cargo run --release --example early_exit_demo
+
+use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::coordinator::Coordinator;
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    let (n_way, k_shot, queries) = (5, 5, 12);
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(move || ComputeEngine::open(Backend::Native, &dir2), k_shot)?;
+    let gen = ImageGen::new(model.image_size, 32, 99);
+    let mut rng = Rng::new(99);
+    let classes = rng.choose_k(gen.n_classes, n_way);
+
+    let sid = coord.create_session(n_way, 4)?;
+    for (label, &cls) in classes.iter().enumerate() {
+        for _ in 0..k_shot {
+            coord.add_shot(sid, label, gen.sample(cls, &mut rng))?;
+        }
+    }
+    coord.finish_training(sid)?;
+
+    // fixed query set so configurations are directly comparable
+    let mut queryset = Vec::new();
+    for (label, &cls) in classes.iter().enumerate() {
+        for _ in 0..queries {
+            queryset.push((gen.sample(cls, &mut rng), label));
+        }
+    }
+
+    let mut t = Table::new(
+        "early-exit sweep (Fig. 17 axes): accuracy vs average depth",
+        &["config (E_s,E_c)", "accuracy", "avg blocks", "layers skipped"],
+    );
+    let mut configs: Vec<(String, Option<EeConfig>)> = vec![("none (full)".into(), None)];
+    for e_s in 1..=3usize {
+        for e_c in 1..=3usize {
+            if e_s - 1 + e_c <= model.n_branches() {
+                configs.push((format!("{e_s},{e_c}"), Some(EeConfig { e_s, e_c })));
+            }
+        }
+    }
+    for (name, ee) in configs {
+        let mut correct = 0;
+        let mut blocks = 0usize;
+        for (img, label) in &queryset {
+            let out = coord.query(sid, img.clone(), ee)?;
+            correct += (out.prediction == *label) as usize;
+            blocks += out.blocks_used;
+        }
+        let n = queryset.len();
+        let avg_blocks = blocks as f64 / n as f64;
+        t.row(&[
+            name,
+            format!("{:.1}%", 100.0 * correct as f64 / n as f64),
+            format!("{:.2}/{}", avg_blocks, model.n_branches()),
+            format!("{:.0}%", 100.0 * (1.0 - avg_blocks / model.n_branches() as f64)),
+        ]);
+    }
+    t.print();
+    println!("(the paper's operating point is E_s=2, E_c=2: 20-25% of layers skipped, <1% loss)");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Fleet serving: a router fans Poisson-arriving few-shot sessions over
+//! several FSL-HDnn devices, reporting SLO attainment — the multi-device
+//! deployment story the single-chip paper motivates (edge hubs gang
+//! accelerators behind one endpoint).
+//!
+//! Run with:  cargo run --release --example fleet_serving -- [devices] [sessions]
+
+use std::time::Instant;
+
+use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::coordinator::{DeviceRouter, Placement};
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::data::trace::{SloReport, TraceGen, TraceOp};
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_devices: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let n_sessions: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let dir = std::path::PathBuf::from("artifacts");
+    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+
+    let gen_trace = TraceGen { n_way: 5, k_shot: 5, queries_per_session: 15, ..Default::default() };
+    let mut rng = Rng::new(31);
+    let trace = gen_trace.generate(n_sessions, &mut rng);
+    println!(
+        "== fleet serving: {n_devices} devices, {n_sessions} sessions, {} events ==",
+        trace.len()
+    );
+
+    let mut router = DeviceRouter::start(n_devices, gen_trace.k_shot, Placement::LeastLoaded,
+        |_i| {
+            let d = dir.clone();
+            move || ComputeEngine::open(Backend::Native, &d)
+        })?;
+
+    let images = ImageGen::new(model.image_size, 64, 5);
+    // map trace session slots -> (router session id, drawn pool classes)
+    let mut slots: Vec<Option<(u64, Vec<usize>)>> = vec![None; n_sessions];
+    let mut slo_query = SloReport::new(50.0);
+    let mut slo_shot = SloReport::new(100.0);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let ee = EeConfig::paper_default();
+    let t0 = Instant::now();
+    for (_t, op) in &trace {
+        match op {
+            TraceOp::NewSession { n_way } => {
+                let sid = router.create_session(*n_way, 4)?;
+                let classes = rng.choose_k(images.n_classes, *n_way);
+                let slot = slots.iter().position(|s| s.is_none()).unwrap();
+                slots[slot] = Some((sid, classes));
+            }
+            TraceOp::Shot { session_slot, class } => {
+                let (sid, classes) = slots[*session_slot].as_ref().unwrap();
+                let img = images.sample(classes[*class], &mut rng);
+                let t = Instant::now();
+                router.add_shot(*sid, *class, img)?;
+                slo_shot.record(t.elapsed().as_secs_f64() * 1e3);
+            }
+            TraceOp::Train { session_slot } => {
+                let (sid, _) = slots[*session_slot].as_ref().unwrap();
+                router.finish_training(*sid)?;
+            }
+            TraceOp::Query { session_slot, class } => {
+                let (sid, classes) = slots[*session_slot].as_ref().unwrap();
+                let img = images.sample(classes[*class], &mut rng);
+                let t = Instant::now();
+                let out = router.query(*sid, img, Some(ee))?;
+                slo_query.record(t.elapsed().as_secs_f64() * 1e3);
+                correct += (out.prediction == *class) as usize;
+                total += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new("fleet summary", &["metric", "value"]);
+    t.row(&["devices".into(), format!("{n_devices} (loads {:?})", router.loads())]);
+    t.row(&["events replayed".into(), trace.len().to_string()]);
+    t.row(&["query accuracy".into(), format!("{:.1}%", 100.0 * correct as f64 / total as f64)]);
+    t.row(&["query p50 / p99".into(),
+        format!("{:.1} / {:.1} ms", slo_query.p50(), slo_query.p99())]);
+    t.row(&["query SLO (50 ms) attainment".into(),
+        format!("{:.1}%", 100.0 * slo_query.attainment())]);
+    t.row(&["shot p50".into(), format!("{:.1} ms", slo_shot.p50())]);
+    t.row(&["wall-clock".into(), format!("{wall:.1} s")]);
+    t.print();
+    for (i, m) in router.fleet_metrics().iter().enumerate() {
+        println!(
+            "device {i}: {} shots, {} queries, query {:.1} ms mean, EE rate {:.0}%",
+            m.shots, m.queries, m.query_ms_mean, 100.0 * m.early_exit_rate
+        );
+    }
+    Ok(())
+}

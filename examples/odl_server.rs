@@ -1,0 +1,119 @@
+//! End-to-end ODL serving driver — the EXPERIMENTS.md validation run.
+//!
+//! Reproduces the paper's deployment story at system level: a device
+//! coordinator serving a stream of 10-way 5-shot personalization tasks,
+//! with the PJRT artifacts as the compute "chip". For every episode it
+//! (a) streams 50 labeled shots (batched single-pass training),
+//! (b) serves 100 queries with the paper's early-exit setting, and
+//! (c) attaches the chip simulator's latency/energy estimate for the same
+//!     workload at the measured corners — the numbers Table I reports.
+//!
+//! Run with:  cargo run --release --example odl_server -- [episodes] [backend]
+
+use std::time::Instant;
+
+use fsl_hdnn::config::{ChipConfig, EeConfig};
+use fsl_hdnn::coordinator::Coordinator;
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::stats;
+use fsl_hdnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let episodes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let backend = Backend::from_name(args.get(2).map(|s| s.as_str()).unwrap_or("pjrt"))?;
+    let (n_way, k_shot, queries_per_class) = (10, 5, 10);
+    let dir = std::path::PathBuf::from("artifacts");
+    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+
+    println!("== FSL-HDnn ODL serving driver ==");
+    println!(
+        "backend={backend:?}, {episodes} episodes of {n_way}-way {k_shot}-shot, {} queries each",
+        n_way * queries_per_class
+    );
+
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(move || ComputeEngine::open(backend, &dir2), k_shot)?;
+    let gen = ImageGen::new(model.image_size, 64, 2024);
+    let mut rng = Rng::new(2024);
+    let ee = EeConfig::paper_default();
+
+    let mut accs = Vec::new();
+    let mut train_wall_s = Vec::new();
+    let mut query_wall_ms = Vec::new();
+    let mut blocks = Vec::new();
+    let t_total = Instant::now();
+    for ep in 0..episodes {
+        let classes = rng.choose_k(gen.n_classes, n_way);
+        let sid = coord.create_session(n_way, 4)?;
+        let t0 = Instant::now();
+        for (label, &cls) in classes.iter().enumerate() {
+            for _ in 0..k_shot {
+                coord.add_shot(sid, label, gen.sample(cls, &mut rng))?;
+            }
+        }
+        coord.finish_training(sid)?;
+        let train_s = t0.elapsed().as_secs_f64();
+        train_wall_s.push(train_s);
+
+        let mut pairs = Vec::new();
+        for (label, &cls) in classes.iter().enumerate() {
+            for _ in 0..queries_per_class {
+                let tq = Instant::now();
+                let out = coord.query(sid, gen.sample(cls, &mut rng), Some(ee))?;
+                query_wall_ms.push(tq.elapsed().as_secs_f64() * 1e3);
+                pairs.push((out.prediction, label));
+                blocks.push(out.blocks_used as f64);
+            }
+        }
+        let acc = stats::accuracy(&pairs);
+        accs.push(acc);
+        println!(
+            "episode {ep}: trained {} shots in {:.2}s, accuracy {:.1}%",
+            n_way * k_shot,
+            train_s,
+            100.0 * acc
+        );
+        coord.call(fsl_hdnn::coordinator::Request::CloseSession { session: sid });
+    }
+    let wall = t_total.elapsed().as_secs_f64();
+    let m = coord.metrics();
+
+    let mut t = Table::new("end-to-end serving summary", &["metric", "value"]);
+    t.row(&["episodes".into(), episodes.to_string()]);
+    t.row(&["mean accuracy".into(),
+        format!("{:.1}% ± {:.1}", 100.0 * stats::mean(&accs), 100.0 * stats::ci95(&accs))]);
+    t.row(&["training wall-clock / episode".into(),
+        format!("{:.2} s ({:.1} images/s)", stats::mean(&train_wall_s),
+            (n_way * k_shot) as f64 / stats::mean(&train_wall_s))]);
+    t.row(&["query latency p50 / p95".into(),
+        format!("{:.1} / {:.1} ms", stats::percentile(&query_wall_ms, 50.0),
+            stats::percentile(&query_wall_ms, 95.0))]);
+    t.row(&["avg CONV blocks used (EE 2,2)".into(),
+        format!("{:.2} / {}", stats::mean(&blocks), model.n_branches())]);
+    t.row(&["early-exit rate".into(), format!("{:.0}%", 100.0 * m.early_exit_rate)]);
+    t.row(&["total wall-clock".into(), format!("{wall:.1} s")]);
+    t.print();
+
+    // --- chip-simulator projection of the same workload (Table I row) ---
+    let chip = Chip::paper(ChipConfig::default());
+    let train = chip.train_episode(n_way, k_shot, true, true);
+    let exit_stages: Vec<usize> = blocks.iter().map(|&b| b as usize - 1).collect();
+    let infer = chip.infer_with_exit_distribution(32, &exit_stages);
+    let mut t2 = Table::new(
+        "simulated FSL-HDnn chip on this workload (ResNet-18 @224, 250 MHz, 1.2 V)",
+        &["metric", "value"],
+    );
+    t2.row(&["training latency".into(), format!("{:.1} ms/image", train.latency_ms_per_image)]);
+    t2.row(&["training energy".into(), format!("{:.2} mJ/image", train.energy_mj_per_image)]);
+    t2.row(&["training throughput".into(),
+        format!("{:.1} images/s", 1e3 / train.latency_ms_per_image)]);
+    t2.row(&["inference latency (measured EE mix)".into(), format!("{:.2} ms", infer.latency_ms)]);
+    t2.row(&["inference energy (measured EE mix)".into(), format!("{:.3} mJ", infer.energy_mj)]);
+    t2.row(&["avg power".into(), format!("{:.0} mW", train.avg_power_mw)]);
+    t2.print();
+    Ok(())
+}

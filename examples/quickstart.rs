@@ -1,0 +1,81 @@
+//! Quickstart: one 5-way 5-shot few-shot learning episode, end to end.
+//!
+//!   1. open the compute engine over the AOT artifacts (PJRT if available,
+//!      falling back to the native mirror),
+//!   2. start the coordinator (the "device"),
+//!   3. stream 25 labeled shots — the batcher groups them per class and
+//!      trains the HDC model in a single pass (Fig. 12),
+//!   4. classify query images with and without early exit (Fig. 11).
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::coordinator::Coordinator;
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    // read geometry on the caller side; build the engine inside the worker
+    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    println!("model: {0}x{0}x{1} image -> F={2}, D={3}", model.image_size,
+             model.in_channels, model.feature_dim, model.d);
+
+    let (n_way, k_shot) = (5, 5);
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        move || {
+            ComputeEngine::open(Backend::Pjrt, &dir2)
+                .or_else(|e| {
+                    eprintln!("PJRT unavailable ({e}), using native backend");
+                    ComputeEngine::open(Backend::Native, &dir2)
+                })
+        },
+        k_shot,
+    )?;
+
+    // synthetic class-structured images (per-class texture families)
+    let gen = ImageGen::new(model.image_size, 32, 7);
+    let mut rng = Rng::new(7);
+    let classes = rng.choose_k(gen.n_classes, n_way);
+
+    // --- single-pass training ---
+    let session = coord.create_session(n_way, 4)?;
+    for (label, &cls) in classes.iter().enumerate() {
+        for _ in 0..k_shot {
+            coord.add_shot(session, label, gen.sample(cls, &mut rng))?;
+        }
+    }
+    let shots = coord.finish_training(session)?;
+    println!("trained on {shots} shots ({n_way}-way {k_shot}-shot), single pass");
+
+    // --- queries ---
+    let mut correct_full = 0;
+    let mut correct_ee = 0;
+    let mut blocks_ee = 0usize;
+    let queries = 10;
+    for (label, &cls) in classes.iter().enumerate() {
+        for _ in 0..queries {
+            let img = gen.sample(cls, &mut rng);
+            let full = coord.query(session, img.clone(), None)?;
+            let ee = coord.query(session, img, Some(EeConfig::paper_default()))?;
+            correct_full += (full.prediction == label) as usize;
+            correct_ee += (ee.prediction == label) as usize;
+            blocks_ee += ee.blocks_used;
+        }
+    }
+    let total = n_way * queries;
+    println!(
+        "accuracy: full {:.1}% | early-exit (E_s=2,E_c=2) {:.1}% using {:.2}/4 blocks on average",
+        100.0 * correct_full as f64 / total as f64,
+        100.0 * correct_ee as f64 / total as f64,
+        blocks_ee as f64 / total as f64
+    );
+    let m = coord.metrics();
+    println!(
+        "device latency: add_shot {:.2} ms, query {:.2} ms (early-exit rate {:.0}%)",
+        m.add_shot_ms_mean, m.query_ms_mean, 100.0 * m.early_exit_rate
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT compile path: lower every L2 entrypoint to HLO *text* artifacts.
+
+This is the only python that ever runs (`make artifacts`); the rust binary
+loads `artifacts/*.hlo.txt` via PJRT and is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under --out, default ../artifacts):
+  *.hlo.txt          one module per entrypoint x static shape
+  manifest.json      entrypoint -> file + input/output shapes + model config
+  fe_weights.bin     clustered dense FE weights (f32 LE) for the rust-native
+                     FE and the chip simulator
+  goldens/           deterministic input/output vectors cross-checked by
+                     both pytest and `cargo test`
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import resnet
+from .kernels import lfsr
+from .model import FslHdnnModel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    CRITICAL: print with `print_large_constants=True`. The default printer
+    elides big constant arrays as `{...}`, and xla_extension 0.5.1's text
+    parser silently materializes those as ZEROS — the FE weights and cRP
+    seed tables are baked-in constants, so default printing produces
+    artifacts that run but compute garbage (all-zero features).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern metadata attributes (source_end_line etc.) are rejected by the
+    # 0.5.1 text parser — strip them
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shapes(tree):
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        out.append({"shape": list(leaf.shape), "dtype": str(leaf.dtype)})
+    return out
+
+
+def build_artifacts(out_dir: str, d: int = 4096, classes_max: int = 32,
+                    shots: int = 5, image_size: int = 32,
+                    widths=(16, 32, 64, 128), seed: int = 2024) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "goldens"), exist_ok=True)
+    cfg = resnet.FeConfig(image_size=image_size, widths=tuple(widths), seed=seed)
+    model = FslHdnnModel(cfg, d=d)
+    fmax = cfg.feature_dim
+    c3 = cfg.in_channels
+
+    entries = []
+
+    def emit(name: str, fn, *args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "file": fname,
+            "inputs": _shapes(args),
+            "outputs": _shapes(jax.eval_shape(fn, *args)),
+        })
+        print(f"  emitted {fname} ({len(text)} chars)")
+
+    for b in (1, 8):
+        emit(f"fe_forward_b{b}", model.fe_forward, _spec(b, image_size, image_size, c3))
+        emit(f"crp_encode_b{b}", model.encode, _spec(b, fmax))
+        emit(f"hdc_infer_b{b}", model.hdc_infer, _spec(b, d), _spec(classes_max, d))
+    emit(f"hdc_train_k{shots}", model.hdc_train, _spec(shots, d))
+    emit("fsl_infer_b1", model.fsl_infer, _spec(1, image_size, image_size, c3),
+         _spec(classes_max, d))
+
+    # --- weights export (rust-native FE + chip simulator) ---
+    wmanifest, blob = model.export_weights()
+    with open(os.path.join(out_dir, "fe_weights.bin"), "wb") as f:
+        f.write(blob)
+
+    # --- goldens: the python pipeline's answers on fixed inputs ---
+    g = os.path.join(out_dir, "goldens")
+    rng = np.random.default_rng(7)
+    x = rng.normal(0.0, 1.0, size=(2, image_size, image_size, c3)).astype(np.float32)
+    feats = np.asarray(model.fe_forward(jnp.asarray(x)))            # (2,4,Fmax)
+    hv = np.asarray(model.encode(jnp.asarray(feats[:, -1, :])))     # (2,D)
+    cls_feats = rng.normal(0.0, 1.0, size=(4, fmax)).astype(np.float32)
+    # batch rows of the cRP encoder are independent, so one 4-row call
+    # produces exactly what four 1-row calls would
+    classes = np.asarray(model.encode(jnp.asarray(cls_feats)))
+    dist = np.asarray(model.hdc_infer(jnp.asarray(hv), jnp.asarray(classes)))
+    agg = np.asarray(model.hdc_train(jnp.asarray(classes[: shots - 1]))) \
+        if shots - 1 <= 4 else None
+
+    def dump(name, arr):
+        np.ascontiguousarray(arr, dtype="<f4").tofile(os.path.join(g, name))
+
+    dump("x.bin", x)
+    dump("feats.bin", feats)
+    dump("hv.bin", hv)
+    dump("class_feats.bin", cls_feats)
+    dump("classes.bin", classes)
+    dump("dist.bin", dist)
+    if agg is not None:
+        dump("agg.bin", agg)
+
+    goldens = lfsr.golden_vectors(model.master_seed)
+    goldens.update({
+        "shapes": {
+            "x": list(x.shape), "feats": list(feats.shape),
+            "hv": list(hv.shape), "class_feats": list(cls_feats.shape),
+            "classes": list(classes.shape), "dist": list(dist.shape),
+            "agg": [int(hv.shape[1])] if agg is not None else [],
+        },
+        "input_seed": 7,
+    })
+    with open(os.path.join(g, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+    manifest = {
+        "entries": entries,
+        "weights": wmanifest,
+        "config": {
+            "image_size": image_size, "in_channels": c3,
+            "widths": list(widths), "feature_dim": fmax,
+            "n_branches": len(widths), "d": d, "classes_max": classes_max,
+            "shots": shots, "master_seed": model.master_seed,
+            "ch_sub": cfg.ch_sub, "n_centroids": cfg.n_centroids,
+            "seed": seed,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} modules + weights + goldens to {out_dir}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--d", type=int, default=4096)
+    p.add_argument("--classes-max", type=int, default=32)
+    p.add_argument("--shots", type=int, default=5)
+    p.add_argument("--image-size", type=int, default=32)
+    args = p.parse_args()
+    build_artifacts(args.out, d=args.d, classes_max=args.classes_max,
+                    shots=args.shots, image_size=args.image_size)
+
+
+if __name__ == "__main__":
+    main()

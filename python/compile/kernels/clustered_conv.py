@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: weight-clustered convolution — Fig. 4(b) / Fig. 8.
+
+The chip's PE performs the clustered conv in two overlapped phases:
+
+  phase 1 (accumulate): input activations sharing a weight *index* are
+      summed into an N-entry register file (one partial sum per centroid,
+      per Ch_sub channel group);
+  phase 2 (MAC): the N partial sums are multiplied by the N codebook
+      centroids and reduced — turning 2*K^2-1 ops into K^2 + N - 1.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the index->bin scatter is
+re-expressed as a contraction with a static one-hot tensor so *both* phases
+are MXU matmuls in sequence:
+
+      bins(P, G*N) = patches(P, KKC) @ onehot(KKC, G*N)     # phase 1
+      out (P,)     = bins @ codebook_flat(G*N,)             # phase 2
+
+``onehot[k, g*N+n] = [group(k) == g && idx(k) == n]`` is built on the host
+once per layer (it is static data derived from the clustered weights, the
+analogue of the chip's 36 KB index memory). The codebook for one output
+channel stays resident in VMEM while output-pixel tiles stream through —
+the codebook-stationary dataflow of Fig. 7.
+
+Runs interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def build_onehot(idx: np.ndarray, ch_sub: int, cin: int, n: int) -> np.ndarray:
+    """Static (Cout, KKC, G*N) one-hot routing tensor from weight indices.
+
+    Layout of flat patch position k: ((ky*K + kx)*Cin + ci); the channel
+    group is ci // ch_sub, matching ``ref.clustered_conv_ref``.
+    """
+    cout, kkc = idx.shape
+    g = (cin + ch_sub - 1) // ch_sub
+    ci = np.arange(kkc) % cin
+    group = ci // ch_sub
+    onehot = np.zeros((cout, kkc, g * n), dtype=np.float32)
+    for co in range(cout):
+        onehot[co, np.arange(kkc), group * n + idx[co]] = 1.0
+    return onehot
+
+
+def _cc_kernel(patches_ref, onehot_ref, cb_ref, o_ref):
+    """One (pixel-tile, output-channel) cell of the clustered conv.
+
+    patches_ref: (Pt, KKC) f32
+    onehot_ref:  (1, KKC, GN) f32 — this channel's routing tensor
+    cb_ref:      (1, GN) f32      — this channel's flattened codebook
+    o_ref:       (Pt, 1) f32
+    """
+    patches = patches_ref[...]
+    onehot = onehot_ref[0]
+    bins = jnp.dot(patches, onehot)            # phase 1: (Pt, GN)
+    out = jnp.dot(bins, cb_ref[0])             # phase 2: (Pt,)
+    o_ref[...] = out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("pixel_tile",))
+def clustered_conv(
+    patches: jnp.ndarray,   # (P, KKC)
+    onehot: jnp.ndarray,    # (Cout, KKC, GN)
+    codebook: jnp.ndarray,  # (Cout, GN)
+    pixel_tile: int = 64,
+) -> jnp.ndarray:
+    """Clustered convolution over im2col patches -> (P, Cout)."""
+    p, kkc = patches.shape
+    cout, kkc2, gn = onehot.shape
+    assert kkc == kkc2 and codebook.shape == (cout, gn)
+    assert p % pixel_tile == 0, "pad P to a multiple of pixel_tile"
+    return pl.pallas_call(
+        _cc_kernel,
+        grid=(p // pixel_tile, cout),
+        in_specs=[
+            pl.BlockSpec((pixel_tile, kkc), lambda i, co: (i, 0)),
+            pl.BlockSpec((1, kkc, gn), lambda i, co: (co, 0, 0)),
+            pl.BlockSpec((1, gn), lambda i, co: (co, 0)),
+        ],
+        out_specs=pl.BlockSpec((pixel_tile, 1), lambda i, co: (i, co)),
+        out_shape=jax.ShapeDtypeStruct((p, cout), jnp.float32),
+        interpret=True,
+    )(patches.astype(jnp.float32), onehot.astype(jnp.float32),
+      codebook.astype(jnp.float32))
+
+
+def im2col(x: jnp.ndarray, k: int, stride: int = 1, pad: int = 1) -> jnp.ndarray:
+    """(H, W, Cin) -> (P, K*K*Cin) patches, layout (ky*K+kx)*Cin + ci."""
+    h, w, cin = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[ky : ky + ho * stride : stride, kx : kx + wo * stride : stride, :]
+            cols.append(sl.reshape(ho * wo, cin))
+    return jnp.concatenate(cols, axis=1)

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: cyclic Random Projection (cRP) encoding — Fig. 6(b).
+
+The conventional RP encoder stores a D x F ±1 base matrix (256 KB at
+F=512, D=4096). The chip's cRP encoder instead *streams* the matrix out of
+16 LFSRs, 16x16 elements per cycle. This kernel is the TPU-shaped
+re-expression of that datapath (DESIGN.md §Hardware-Adaptation):
+
+  * grid program ``i`` owns a 16-row band of the output HV — the analogue
+    of the chip's adder-tree bank;
+  * the 16 LFSR states for the band live in registers/VMEM (shape (16,)),
+    initialized from an O(D) seed table that a splitmix64 chain derives from
+    one u64 master seed (the full base matrix NEVER exists in HBM);
+  * a ``fori_loop`` over the F/16 column blocks advances each LFSR 16 steps
+    (one fresh word), expands states into a 16x16 ±1 block in VMEM, and
+    contracts it with the feature segment — the MXU-friendly version of the
+    chip's 16 parallel 16-input adder trees.
+
+VMEM footprint per program: (B,F) features + (16,16) block + (B,16)
+accumulator — ~B*F*4 bytes, KBs at production sizes (F ≤ 1024).
+Runs interpret=True on CPU (real-TPU lowering would emit Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lfsr_step16(s: jnp.ndarray) -> jnp.ndarray:
+    """Advance a vector of 16-bit Fibonacci LFSRs (taps 16,15,13,4) 16 steps.
+
+    Operates on int32 lanes; must match ``lfsr.lfsr16_step16`` bit-exactly.
+    """
+    def body(_, s):
+        fb = ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1
+        return ((s << 1) | fb) & 0xFFFF
+
+    return jax.lax.fori_loop(0, 16, body, s)
+
+
+def _block_signs(states: jnp.ndarray) -> jnp.ndarray:
+    """(16,) int32 LFSR states -> (16,16) ±1 f32 block (bit c of state r)."""
+    bits = (states[:, None] >> jnp.arange(16, dtype=jnp.int32)[None, :]) & 1
+    return (2 * bits - 1).astype(jnp.float32)
+
+
+def _crp_kernel(states_ref, x_ref, o_ref, *, n_col_blocks: int):
+    """One 16-row band of h = B @ x for the whole batch.
+
+    states_ref: (1, 16) int32 — initial LFSR states for this row band
+    x_ref:      (B, F)  f32   — full feature block (F small, stays in VMEM)
+    o_ref:      (B, 16) f32   — output band
+    """
+    x = x_ref[...]
+    b = x.shape[0]
+    init = (states_ref[0, :], jnp.zeros((b, 16), jnp.float32))
+
+    def body(j, carry):
+        states, acc = carry
+        states = _lfsr_step16(states)
+        signs = _block_signs(states)  # (16 rows, 16 cols)
+        seg = jax.lax.dynamic_slice_in_dim(x, j * 16, 16, axis=1)  # (B, 16)
+        # acc[b, r] += sum_c signs[r, c] * seg[b, c]
+        acc = acc + jnp.dot(seg, signs.T)
+        return states, acc
+
+    _, acc = jax.lax.fori_loop(0, n_col_blocks, body, init)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def crp_encode(x: jnp.ndarray, row_states: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Encode features (B, F) into hypervectors (B, D).
+
+    ``row_states`` is the (D/16, 16) int32 seed table from
+    ``lfsr.all_row_states`` — O(D) bytes, the only stored randomness.
+    """
+    b, f = x.shape
+    assert f % 16 == 0 and d % 16 == 0
+    assert row_states.shape == (d // 16, 16)
+    kernel = functools.partial(_crp_kernel, n_col_blocks=f // 16)
+    return pl.pallas_call(
+        kernel,
+        grid=(d // 16,),
+        in_specs=[
+            pl.BlockSpec((1, 16), lambda i: (i, 0)),
+            pl.BlockSpec((b, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 16), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(row_states.astype(jnp.int32), x.astype(jnp.float32))

@@ -1,0 +1,87 @@
+"""L1 Pallas kernels: HDC distance search (eq. 5) and class aggregation (eq. 4).
+
+Distance search mirrors the chip's inference module (Fig. 9): per cycle a
+256-bit HV segment is fetched from class memory, element-wise subtracted
+from the query segment, absolute differences accumulated. Here each grid
+step owns one D-segment and accumulates |q - C| into the (B, C) distance
+table (the revisited output block is the accumulator — the distance-table
+register of Fig. 11).
+
+Aggregation mirrors the training module's HV updater: 16 parallel adders
+summing k shot-HVs segment by segment.
+
+Runs interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_seg(d: int, seg: int) -> int:
+    """Largest multiple-of-16 divisor of d that is <= seg."""
+    s = min(seg, d)
+    s -= s % 16
+    while s > 16 and d % s != 0:
+        s -= 16
+    assert s >= 16 and d % s == 0, f"d={d} must be a multiple of 16"
+    return s
+
+
+def _l1_kernel(q_ref, c_ref, o_ref):
+    """Accumulate one D-segment of the L1 distance table.
+
+    q_ref: (B, TD), c_ref: (C, TD), o_ref: (B, C) — same block every step.
+    """
+    seg = jnp.abs(q_ref[...][:, None, :] - c_ref[...][None, :, :]).sum(-1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += seg
+
+
+@functools.partial(jax.jit, static_argnames=("seg",))
+def l1_distance(q: jnp.ndarray, classes: jnp.ndarray, seg: int = 256) -> jnp.ndarray:
+    """Manhattan distance table (B, D) x (C, D) -> (B, C)."""
+    b, d = q.shape
+    c, d2 = classes.shape
+    assert d == d2
+    seg = _pick_seg(d, seg)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=(d // seg,),
+        in_specs=[
+            pl.BlockSpec((b, seg), lambda i: (0, i)),
+            pl.BlockSpec((c, seg), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), classes.astype(jnp.float32))
+
+
+def _agg_kernel(h_ref, o_ref):
+    """Sum k shot-HVs over one D-segment: h_ref (k, TD) -> o_ref (1, TD)."""
+    o_ref[...] = h_ref[...].sum(axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("seg",))
+def aggregate(hvs: jnp.ndarray, seg: int = 256) -> jnp.ndarray:
+    """Bundle k shot-HVs into one class HV: (k, D) -> (D,)."""
+    k, d = hvs.shape
+    seg = _pick_seg(d, seg)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(d // seg,),
+        in_specs=[pl.BlockSpec((k, seg), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, seg), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=True,
+    )(hvs.astype(jnp.float32))
+    return out[0]

@@ -1,0 +1,124 @@
+"""16-bit Fibonacci LFSR — the cRP encoder's pseudo-random source.
+
+This module is the *contract* between the python (artifact-time) and rust
+(request-time) cyclic Random Projection (cRP) encoders: both must generate
+bit-identical ±1 blocks from the same master seed. The paper (Section IV-B2)
+uses 16 LFSRs, each emitting a 16-bit word per cycle, so one "cyclic block"
+is a 16x16 ±1 matrix (256 bits).
+
+Polynomial: x^16 + x^15 + x^13 + x^4 + 1 (taps 16,15,13,4 — maximal length,
+period 2^16-1; Xilinx XAPP052 table). Fibonacci form, left shift:
+
+    fb = bit15 ^ bit14 ^ bit12 ^ bit3
+    s' = ((s << 1) | fb) & 0xFFFF
+
+Seeding uses splitmix64 so that a single u64 master seed deterministically
+derives every LFSR state without storing any matrix — the O(B) memory
+property of the chip's cRP encoder (vs O(F*D) for explicit RP).
+
+Block schedule (documented deviation from the chip, see DESIGN.md
+§Hardware-Adaptation): the chip advances its LFSRs strictly sequentially
+across the whole matrix; we re-derive the 16 LFSR states per *row-block*
+``i`` (16 rows of the D x F base matrix) from ``splitmix64`` so that row
+bands can be generated in parallel by independent kernel programs, and
+advance each LFSR 16 steps per *column-block* ``j`` so consecutive blocks
+carry fresh state. Statistically this is the same family of pseudo-random
+±1 matrices; memory stays O(1) per band.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK16 = 0xFFFF
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+def splitmix64(x: int) -> int:
+    """One splitmix64 output for state ``x`` (returns the mixed value)."""
+    x = (x + GOLDEN) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return z ^ (z >> 31)
+
+
+def lfsr16_step(s: int) -> int:
+    """One Fibonacci LFSR step (taps 16,15,13,4)."""
+    fb = ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1
+    return ((s << 1) | fb) & MASK16
+
+
+def lfsr16_step16(s: int) -> int:
+    """Advance 16 steps — one fresh 16-bit word."""
+    for _ in range(16):
+        s = lfsr16_step(s)
+    return s
+
+
+def row_block_states(master_seed: int, i: int) -> np.ndarray:
+    """Initial states of the 16 LFSRs for row-block ``i`` (shape (16,) u16).
+
+    Derivation: chain splitmix64 from ``master_seed ^ (i+1)*GOLDEN`` and take
+    the low 16 bits of each output; the all-zero lockup state is remapped to
+    0xACE1.
+    """
+    s = (master_seed ^ (((i + 1) * GOLDEN) & 0xFFFFFFFFFFFFFFFF)) & 0xFFFFFFFFFFFFFFFF
+    out = np.empty(16, dtype=np.uint16)
+    for r in range(16):
+        s = splitmix64(s)
+        v = s & MASK16
+        out[r] = v if v != 0 else 0xACE1
+    return out
+
+
+def all_row_states(master_seed: int, d: int) -> np.ndarray:
+    """States for every row-block of a D-dimensional encoder: (d//16, 16) u16."""
+    assert d % 16 == 0
+    return np.stack([row_block_states(master_seed, i) for i in range(d // 16)])
+
+
+def block_signs(states: np.ndarray) -> np.ndarray:
+    """Expand 16 LFSR states into a 16x16 ±1 block.
+
+    Element (r, c) = +1 if bit ``c`` of state ``r`` is set, else -1.
+    """
+    s = states.astype(np.int64)[:, None]
+    bits = (s >> np.arange(16)[None, :]) & 1
+    return (2 * bits - 1).astype(np.int32)
+
+
+def base_matrix(master_seed: int, d: int, f: int) -> np.ndarray:
+    """Materialize the full D x F ±1 base matrix (test/oracle use only).
+
+    The production encoders never build this; it exists so ``ref.py`` can
+    check the streaming kernels against a dense matmul.
+    """
+    assert d % 16 == 0 and f % 16 == 0
+    mat = np.empty((d, f), dtype=np.int32)
+    for i in range(d // 16):
+        states = row_block_states(master_seed, i).astype(np.int64)
+        for j in range(f // 16):
+            states = np.array([lfsr16_step16(int(s)) for s in states], dtype=np.int64)
+            mat[i * 16 : (i + 1) * 16, j * 16 : (j + 1) * 16] = block_signs(states)
+    return mat
+
+
+def golden_vectors(master_seed: int = 0xF51_4D17, n: int = 64) -> dict:
+    """Golden test vectors consumed by both pytest and `cargo test`."""
+    seq = []
+    s = 0xACE1
+    for _ in range(n):
+        s = lfsr16_step(s)
+        seq.append(int(s))
+    states0 = row_block_states(master_seed, 0)
+    states7 = row_block_states(master_seed, 7)
+    return {
+        "master_seed": master_seed,
+        "step_seq_from_ace1": seq,
+        "row0_states": [int(v) for v in states0],
+        "row7_states": [int(v) for v in states7],
+        "row0_step16": [int(lfsr16_step16(int(v))) for v in states0],
+        "block0_sign_row0": [int(v) for v in block_signs(
+            np.array([lfsr16_step16(int(v)) for v in states0], dtype=np.uint16))[0]],
+    }

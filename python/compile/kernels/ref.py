@@ -1,0 +1,89 @@
+"""Pure-jnp / numpy correctness oracles for every Pallas kernel.
+
+These are the semantics the kernels must match (``assert_allclose`` in
+python/tests). They are deliberately written in the most direct dense form —
+no streaming, no blocking — so a reviewer can audit the math against the
+paper's equations:
+
+  * cRP encode         — eq. (3): h = B @ x with the LFSR base matrix
+  * class aggregation  — eq. (4): C_j = sum_i h_i^j
+  * distance search    — eq. (5): argmin_j Distance(q, C_j)
+  * clustered conv     — Fig. 4(b): bin-accumulate by weight index, then
+                         multiply by the codebook centroids
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import lfsr
+
+
+def crp_encode_ref(x: np.ndarray, master_seed: int, d: int) -> np.ndarray:
+    """Dense-oracle cRP encoding: (B, F) -> (B, D) via the full base matrix."""
+    x = np.asarray(x, dtype=np.float32)
+    b_mat = lfsr.base_matrix(master_seed, d, x.shape[-1]).astype(np.float32)
+    return x @ b_mat.T
+
+
+def aggregate_ref(hvs: np.ndarray) -> np.ndarray:
+    """Class-HV aggregation (bundling): (k, D) -> (D,)."""
+    return np.asarray(hvs, dtype=np.float32).sum(axis=0)
+
+
+def l1_distance_ref(q: np.ndarray, classes: np.ndarray) -> np.ndarray:
+    """Manhattan distance table: (B, D) x (C, D) -> (B, C)."""
+    q = np.asarray(q, dtype=np.float32)
+    c = np.asarray(classes, dtype=np.float32)
+    return np.abs(q[:, None, :] - c[None, :, :]).sum(axis=-1)
+
+
+def dot_score_ref(q: np.ndarray, classes: np.ndarray) -> np.ndarray:
+    """Dot-product similarity table (cosine numerator): (B,D)x(C,D)->(B,C)."""
+    return np.asarray(q, np.float32) @ np.asarray(classes, np.float32).T
+
+
+def clustered_conv_ref(
+    patches: np.ndarray,  # (P, KKC) im2col patches
+    idx: np.ndarray,      # (Cout, KKC) weight index in [0, N)
+    codebook: np.ndarray, # (Cout, G, N) centroid values
+    ch_sub: int,
+    cin: int,
+) -> np.ndarray:
+    """Weight-clustered convolution oracle, written as the PE does it:
+
+    1. accumulation: bin patch entries by (group, weight index)
+    2. MAC: multiply the N bins of each group by the codebook and sum
+    """
+    p, kkc = patches.shape
+    cout, g, n = codebook.shape
+    assert idx.shape == (cout, kkc)
+    # group of flat position k: layout k = (ky*K + kx)*Cin + ci
+    ci = np.arange(kkc) % cin
+    group = ci // ch_sub
+    assert group.max() + 1 == g
+    out = np.zeros((p, cout), dtype=np.float32)
+    for co in range(cout):
+        bins = np.zeros((p, g, n), dtype=np.float32)
+        for k in range(kkc):
+            bins[:, group[k], idx[co, k]] += patches[:, k]
+        out[:, co] = np.einsum("pgn,gn->p", bins, codebook[co]).astype(np.float32)
+    return out
+
+
+def reconstruct_weights(
+    idx: np.ndarray, codebook: np.ndarray, ch_sub: int, cin: int
+) -> np.ndarray:
+    """Expand (index, codebook) back to dense weights (Cout, KKC).
+
+    ``clustered_conv_ref(patches, ...) == patches @ reconstruct_weights(...).T``
+    up to float association — used by the L2 model to run full conv layers
+    through lax.conv with *numerically identical* clustered weights.
+    """
+    cout, kkc = idx.shape
+    ci = np.arange(kkc) % cin
+    group = ci // ch_sub
+    w = np.empty((cout, kkc), dtype=np.float32)
+    for co in range(cout):
+        w[co] = codebook[co, group, idx[co]]
+    return w

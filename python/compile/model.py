@@ -1,0 +1,138 @@
+"""L2: the FSL-HDnn compute graph — FE forward, cRP encode, HDC train/infer.
+
+Every public function here is an AOT entrypoint: ``aot.py`` jit-lowers it
+once to HLO text and the rust coordinator executes the compiled artifact on
+the PJRT CPU client at request time. The Pallas kernels (L1) are called
+from inside these functions so they lower into the same HLO module.
+
+Weights are *baked into the artifacts as constants* — the FE is frozen
+(transfer-learning, Section III-A), so the artifact is the exact analogue
+of the chip's pre-loaded index/codebook memories.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import clustering, resnet
+from .kernels import clustered_conv as cc
+from .kernels import crp_encoder, hdc_ops, lfsr
+
+
+class FslHdnnModel:
+    """Frozen clustered FE + cRP/HDC classifier, ready for AOT lowering."""
+
+    def __init__(self, cfg: resnet.FeConfig, d: int = 4096,
+                 master_seed: int = 0xF51_4D17, use_pallas_stem: bool = True):
+        self.cfg = cfg
+        self.d = d
+        self.master_seed = master_seed
+        self.use_pallas_stem = use_pallas_stem
+
+        raw = resnet.init_params(cfg)
+        raw = resnet.rms_calibrate(raw, cfg)
+        # weight clustering (Fig. 4a) on every conv layer, then reconstruct
+        # dense clustered weights so lax.conv computes the identical math.
+        self.cluster_meta: dict = {}
+        self.params: dict = {}
+        for name in resnet.conv_layer_names(raw):
+            w = np.asarray(raw[name])
+            cout, k, _, cin = w.shape
+            idx, codebook = clustering.cluster_layer(w, cfg.ch_sub, cfg.n_centroids)
+            self.cluster_meta[name] = (idx, codebook)
+            dense = clustering.reconstruct(idx, codebook, cin, k)
+            self.params[name] = dense.reshape(cout, k, k, cin)
+        # static routing tensors for the pallas stem conv
+        stem = self.params["stem"]
+        cout, k, _, cin = stem.shape
+        idx, codebook = self.cluster_meta["stem"]
+        self._stem_onehot = cc.build_onehot(idx, cfg.ch_sub, cin, cfg.n_centroids)
+        g = codebook.shape[1]
+        self._stem_cb = codebook.reshape(cout, g * cfg.n_centroids)
+        # cRP seed table — the only stored randomness, O(D) bytes (Fig. 6b)
+        self.row_states = lfsr.all_row_states(master_seed, d).astype(np.int32)
+
+    # ---------------- FE ----------------
+
+    def _stem_pallas(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Stem conv routed through the L1 clustered-conv kernel."""
+        b, h, w, cin = x.shape
+        patches = jax.vmap(lambda im: cc.im2col(im, 3, 1, 1))(x)  # (B,P,KKC)
+        p = patches.shape[1]
+        flat = patches.reshape(b * p, -1)
+        tile = 64 if (b * p) % 64 == 0 else 16
+        out = cc.clustered_conv(flat, jnp.asarray(self._stem_onehot),
+                                jnp.asarray(self._stem_cb), pixel_tile=tile)
+        cout = self._stem_cb.shape[0]
+        return jax.nn.relu(out.reshape(b, h, w, cout))
+
+    def fe_forward(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B,H,W,Cin) -> (B, 4, Fmax): per-stage branch features, each
+        zero-padded to Fmax = widths[-1] so one cRP artifact serves all
+        branches (padding contributes 0 to the projection)."""
+        cfg = self.cfg
+        if self.use_pallas_stem:
+            h = self._stem_pallas(x)
+            branches = self._stages(h)
+        else:
+            branches = resnet.forward(self.params, x, cfg)
+        fmax = cfg.feature_dim
+        padded = [jnp.pad(f, ((0, 0), (0, fmax - f.shape[1]))) for f in branches]
+        return jnp.stack(padded, axis=1)
+
+    def _stages(self, h: jnp.ndarray) -> list:
+        """Stage stack after the stem (mirrors resnet.forward)."""
+        cfg, params = self.cfg, self.params
+        branches = []
+        for s, w in enumerate(cfg.widths):
+            stride = 1 if s == 0 else 2
+            for b in range(cfg.blocks_per_stage):
+                pre = f"s{s}b{b}"
+                st = stride if b == 0 else 1
+                y = jax.nn.relu(resnet._conv(h, params[f"{pre}_conv1"], stride=st))
+                y = resnet._conv(y, params[f"{pre}_conv2"], stride=1)
+                if f"{pre}_proj" in params:
+                    skip = resnet._conv(h, params[f"{pre}_proj"], stride=st)
+                elif st != 1:
+                    skip = h[:, ::st, ::st, :]
+                else:
+                    skip = h
+                h = jax.nn.relu(y + skip)
+            branches.append(h.mean(axis=(1, 2)))
+        return branches
+
+    # ---------------- HDC ----------------
+
+    def encode(self, feats: jnp.ndarray) -> jnp.ndarray:
+        """cRP encode (B, Fmax) -> (B, D) via the L1 kernel."""
+        return crp_encoder.crp_encode(feats, jnp.asarray(self.row_states), self.d)
+
+    def hdc_train(self, hvs: jnp.ndarray) -> jnp.ndarray:
+        """Single-pass class-HV aggregation (k, D) -> (D,) — eq. (4)."""
+        return hdc_ops.aggregate(hvs)
+
+    def hdc_infer(self, q: jnp.ndarray, classes: jnp.ndarray) -> jnp.ndarray:
+        """L1-distance table (B, D) x (C, D) -> (B, C) — eq. (5)."""
+        return hdc_ops.l1_distance(q, classes)
+
+    def fsl_infer(self, x: jnp.ndarray, classes: jnp.ndarray) -> jnp.ndarray:
+        """Fused serving path: image -> final-branch feature -> HV ->
+        distance table. The early-exit path instead calls fe_forward +
+        encode + hdc_infer per branch from the rust coordinator."""
+        feats = self.fe_forward(x)[:, -1, :]
+        q = self.encode(feats)
+        return self.hdc_infer(q, classes)
+
+    # ---------------- export ----------------
+
+    def export_weights(self) -> tuple[dict, bytes]:
+        """(layer manifest, packed f32 LE blob) of clustered dense weights."""
+        layers = []
+        blob = bytearray()
+        for name in resnet.conv_layer_names(self.params):
+            w = self.params[name]
+            layers.append({"name": name, "shape": list(w.shape)})
+            blob.extend(np.ascontiguousarray(w, dtype="<f4").tobytes())
+        return {"layers": layers}, bytes(blob)

@@ -1,0 +1,139 @@
+"""ResNet-18-shaped feature extractor with per-block branch taps (Fig. 11).
+
+The paper freezes an ImageNet-pretrained ResNet-18 and taps the output of
+each of the four CONV stages (average-pooled) as "branch features" for the
+early-exit mechanism. We reproduce the *structure* — 4 stages of 2 basic
+blocks, stride-2 downsampling, branch taps after every stage — at a
+configurable width so the whole FE fits the PJRT-CPU budget (DESIGN.md
+substitution table: FE experiments depend on conv structure, not ImageNet
+semantics).
+
+Weights are deterministic (seeded He init) and then RMS-calibrated on a
+probe batch so activations are well-conditioned without batch norm
+(equivalent to folding frozen BN scales into the convs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FeConfig:
+    """Feature-extractor hyperparameters."""
+    image_size: int = 32
+    in_channels: int = 3
+    widths: tuple = (16, 32, 64, 128)
+    blocks_per_stage: int = 2
+    seed: int = 2024
+    ch_sub: int = 64          # weight-clustering group size (paper: 64)
+    n_centroids: int = 16     # centroids per codebook
+
+    @property
+    def feature_dim(self) -> int:
+        return self.widths[-1]
+
+    @property
+    def branch_dims(self) -> tuple:
+        return self.widths
+
+
+def _conv_init(rng: np.random.Generator, k: int, cin: int, cout: int) -> np.ndarray:
+    """He-normal (Cout, K, K, Cin)."""
+    std = float(np.sqrt(2.0 / (k * k * cin)))
+    return rng.normal(0.0, std, size=(cout, k, k, cin)).astype(np.float32)
+
+
+def init_params(cfg: FeConfig) -> dict:
+    """Deterministic parameter pytree. Conv weights as (Cout,K,K,Cin) f32."""
+    rng = np.random.default_rng(cfg.seed)
+    params: dict = {"stem": _conv_init(rng, 3, cfg.in_channels, cfg.widths[0])}
+    for s, w in enumerate(cfg.widths):
+        cin = cfg.widths[s - 1] if s > 0 else cfg.widths[0]
+        for b in range(cfg.blocks_per_stage):
+            bcin = cin if b == 0 else w
+            pre = f"s{s}b{b}"
+            params[f"{pre}_conv1"] = _conv_init(rng, 3, bcin, w)
+            params[f"{pre}_conv2"] = _conv_init(rng, 3, w, w)
+            if bcin != w:
+                params[f"{pre}_proj"] = _conv_init(rng, 1, bcin, w)
+    return params
+
+
+def _conv(x: jnp.ndarray, w: np.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC conv with SAME padding; w is (Cout, K, K, Cin)."""
+    kernel = jnp.transpose(jnp.asarray(w), (1, 2, 3, 0))  # HWIO
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def forward(params: dict, x: jnp.ndarray, cfg: FeConfig) -> list:
+    """FE forward pass. x: (B, H, W, Cin). Returns 4 branch features,
+    each (B, width_s) — global average pool of the stage output."""
+    h = jax.nn.relu(_conv(x, params["stem"], stride=1))
+    branches = []
+    for s, w in enumerate(cfg.widths):
+        stride = 1 if s == 0 else 2
+        for b in range(cfg.blocks_per_stage):
+            pre = f"s{s}b{b}"
+            st = stride if b == 0 else 1
+            y = jax.nn.relu(_conv(h, params[f"{pre}_conv1"], stride=st))
+            y = _conv(y, params[f"{pre}_conv2"], stride=1)
+            if f"{pre}_proj" in params:
+                skip = _conv(h, params[f"{pre}_proj"], stride=st)
+            elif st != 1:
+                skip = h[:, ::st, ::st, :]
+            else:
+                skip = h
+            h = jax.nn.relu(y + skip)
+        branches.append(h.mean(axis=(1, 2)))  # (B, width_s)
+    return branches
+
+
+def rms_calibrate(params: dict, cfg: FeConfig, probe_batch: int = 8) -> dict:
+    """Rescale each conv so its stage activations have ~unit RMS (frozen-BN
+    fold-in). Deterministic: the probe batch comes from the config seed."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    x = jnp.asarray(rng.normal(size=(probe_batch, cfg.image_size,
+                                     cfg.image_size, cfg.in_channels)).astype(np.float32))
+    params = dict(params)
+    # iterate a couple of times: each conv rescale shifts downstream stats
+    for _ in range(2):
+        h = jax.nn.relu(_conv(x, params["stem"], stride=1))
+        rms = float(jnp.sqrt(jnp.mean(h * h)) + 1e-8)
+        params["stem"] = params["stem"] / rms
+        h = h / rms
+        for s, w in enumerate(cfg.widths):
+            stride = 1 if s == 0 else 2
+            for b in range(cfg.blocks_per_stage):
+                pre = f"s{s}b{b}"
+                st = stride if b == 0 else 1
+                y1 = jax.nn.relu(_conv(h, params[f"{pre}_conv1"], stride=st))
+                r1 = float(jnp.sqrt(jnp.mean(y1 * y1)) + 1e-8)
+                params[f"{pre}_conv1"] = params[f"{pre}_conv1"] / r1
+                y1 = y1 / r1
+                y2 = _conv(y1, params[f"{pre}_conv2"], stride=1)
+                r2 = float(jnp.sqrt(jnp.mean(y2 * y2)) + 1e-8)
+                params[f"{pre}_conv2"] = params[f"{pre}_conv2"] / r2
+                y2 = y2 / r2
+                if f"{pre}_proj" in params:
+                    skip = _conv(h, params[f"{pre}_proj"], stride=st)
+                    rp = float(jnp.sqrt(jnp.mean(skip * skip)) + 1e-8)
+                    params[f"{pre}_proj"] = params[f"{pre}_proj"] / rp
+                    skip = skip / rp
+                elif st != 1:
+                    skip = h[:, ::st, ::st, :]
+                else:
+                    skip = h
+                h = jax.nn.relu(y2 + skip)
+    return params
+
+
+def conv_layer_names(params: dict) -> list:
+    """Deterministic ordering of conv layers (export / clustering)."""
+    return sorted(params.keys())

@@ -1,0 +1,102 @@
+"""AOT pipeline tests — especially the HLO-text pitfalls that produce
+artifacts which *run but compute garbage* on xla_extension 0.5.1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text
+
+
+def lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def test_no_elided_constants():
+    """REGRESSION: the default HLO printer elides big constants as `{...}`
+    and the 0.5.1 text parser silently materializes them as ZEROS. Every
+    artifact bakes FE weights/seed tables in as constants, so elision ==
+    all-zero features at runtime. to_hlo_text must print them in full."""
+    big = jnp.asarray(np.arange(4096, dtype=np.float32))
+
+    def fn(x):
+        return (x + big,)
+
+    text = to_hlo_text(lower(fn, jax.ShapeDtypeStruct((4096,), jnp.float32)))
+    assert "{...}" not in text and "{ ... }" not in text, "large constants were elided"
+    # spot-check an actual payload value made it into the text
+    assert "4095" in text
+
+
+def test_no_modern_metadata_attributes():
+    """The 0.5.1 parser rejects source_end_line/source_end_column metadata
+    that modern XLA prints by default."""
+    def fn(x):
+        return (x * 2.0,)
+
+    text = to_hlo_text(lower(fn, jax.ShapeDtypeStruct((8,), jnp.float32)))
+    assert "source_end_line" not in text
+    assert "source_end_column" not in text
+
+
+def test_output_is_tuple_rooted():
+    """aot lowers with return_tuple=True; the rust loader unwraps tuples."""
+    def fn(x):
+        return (x,)
+
+    text = to_hlo_text(lower(fn, jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert text.startswith("HloModule")
+    # the ENTRY root should produce a tuple type
+    entry = [l for l in text.splitlines() if "ROOT" in l]
+    assert entry, "no ROOT instruction"
+    assert any("(" in l and ")" in l for l in entry)
+
+
+def test_pallas_kernel_lowers_to_plain_hlo():
+    """interpret=True pallas must lower to plain HLO ops (no custom-call
+    the CPU PJRT client cannot run)."""
+    from compile.kernels import hdc_ops
+
+    def fn(q, c):
+        return (hdc_ops.l1_distance(q, c),)
+
+    text = to_hlo_text(lower(
+        fn,
+        jax.ShapeDtypeStruct((1, 64), jnp.float32),
+        jax.ShapeDtypeStruct((4, 64), jnp.float32),
+    ))
+    assert "custom-call" not in text.lower(), "pallas left a custom-call in the HLO"
+
+
+def test_build_artifacts_smoke(tmp_path):
+    """A miniature end-to-end artifact build: emits parseable modules, a
+    consistent manifest, weights and goldens."""
+    import json
+    import os
+
+    from compile.aot import build_artifacts
+
+    out = tmp_path / "artifacts"
+    build_artifacts(str(out), d=128, classes_max=4, shots=2, image_size=8,
+                    widths=(4, 8, 8, 16), seed=3)
+    man = json.loads((out / "manifest.json").read_text())
+    assert len(man["entries"]) >= 8
+    for e in man["entries"]:
+        text = (out / e["file"]).read_text()
+        assert text.startswith("HloModule")
+        assert "{...}" not in text
+    cfg = man["config"]
+    assert cfg["d"] == 128 and cfg["feature_dim"] == 16
+    # weights blob length matches the manifest shapes
+    total = sum(int(np.prod(l["shape"])) for l in man["weights"]["layers"])
+    assert os.path.getsize(out / "fe_weights.bin") == 4 * total
+    # goldens are self-consistent
+    g = json.loads((out / "goldens" / "goldens.json").read_text())
+    hv = np.fromfile(out / "goldens" / "hv.bin", dtype="<f4")
+    assert hv.size == int(np.prod(g["shapes"]["hv"]))
+    assert np.isfinite(hv).all()
+    dist = np.fromfile(out / "goldens" / "dist.bin", dtype="<f4").reshape(g["shapes"]["dist"])
+    classes = np.fromfile(out / "goldens" / "classes.bin", dtype="<f4").reshape(g["shapes"]["classes"])
+    want = np.abs(hv.reshape(g["shapes"]["hv"])[:, None, :] - classes[None]).sum(-1)
+    np.testing.assert_allclose(dist, want, rtol=1e-4)

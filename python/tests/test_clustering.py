@@ -1,0 +1,89 @@
+"""Weight-clustering (Fig. 4a) unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import clustering
+
+SET = settings(max_examples=15, deadline=None)
+
+
+@SET
+@given(n=st.sampled_from([2, 4, 8, 16]), seed=st.integers(0, 2**31 - 1),
+       size=st.integers(20, 300))
+def test_kmeans_labels_are_nearest_centroid(n, seed, size):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=size).astype(np.float32)
+    cents, labels = clustering.kmeans_1d(v, n)
+    d = np.abs(v[:, None] - cents[None, :])
+    np.testing.assert_array_equal(labels, d.argmin(axis=1))
+
+
+def test_kmeans_exact_when_fewer_values_than_centroids():
+    v = np.array([3.0, 1.0, 2.0])
+    cents, labels = clustering.kmeans_1d(v, 8)
+    np.testing.assert_allclose(cents[labels], v)
+
+
+def test_kmeans_error_decreases_with_n():
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=500)
+    errs = []
+    for n in (2, 4, 8, 16):
+        cents, labels = clustering.kmeans_1d(v, n)
+        errs.append(np.mean((v - cents[labels]) ** 2))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_cluster_layer_roundtrip_shapes():
+    rng = np.random.default_rng(1)
+    cout, k, cin, ch_sub, n = 6, 3, 16, 8, 4
+    w = rng.normal(size=(cout, k, k, cin)).astype(np.float32)
+    idx, cb = clustering.cluster_layer(w, ch_sub, n)
+    assert idx.shape == (cout, k * k * cin)
+    assert cb.shape == (cout, cin // ch_sub, n)
+    assert idx.min() >= 0 and idx.max() < n
+    dense = clustering.reconstruct(idx, cb, cin, k)
+    assert dense.shape == w.shape
+    # clustering with many centroids should track the original weights
+    idx2, cb2 = clustering.cluster_layer(w, ch_sub, 64)
+    dense2 = clustering.reconstruct(idx2, cb2, cin, k)
+    assert np.mean((dense2 - w) ** 2) < np.mean((dense - w) ** 2) + 1e-9
+
+
+def test_cluster_error_shrinks_with_smaller_groups():
+    """Smaller Ch_sub = more codebooks = lower FE error (Fig. 5 trend)."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(4, 3, 3, 32)).astype(np.float32)
+    errs = []
+    for ch_sub in (4, 8, 16, 32):
+        idx, cb = clustering.cluster_layer(w, ch_sub, 8)
+        dense = clustering.reconstruct(idx, cb, 32, 3)
+        errs.append(float(np.mean((dense - w) ** 2)))
+    assert errs[0] <= errs[-1] + 1e-9
+
+
+def test_compression_ratio_trend():
+    """Compression improves with Ch_sub and saturates (~2x, Fig. 5)."""
+    rs = [clustering.compression_ratio(512, 3, c, 16) for c in (8, 16, 32, 64, 128, 256)]
+    assert all(b >= a - 1e-9 for a, b in zip(rs, rs[1:]))
+    assert 1.5 < rs[-1] <= 2.1
+
+
+def test_op_reduction_ratio_trend():
+    rs = [clustering.op_reduction_ratio(3, 16, c, 512) for c in (8, 16, 32, 64, 128, 256)]
+    assert all(b >= a - 1e-9 for a, b in zip(rs, rs[1:]))
+    assert 1.8 < rs[-1] <= 2.0  # -> 2*K^2/(K^2) = 2 asymptote
+
+
+def test_clustered_weights_have_at_most_n_uniques_per_group():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(2, 3, 3, 8)).astype(np.float32)
+    idx, cb = clustering.cluster_layer(w, 4, 4)
+    dense = clustering.reconstruct(idx, cb, 8, 3).reshape(2, -1)
+    ci = np.arange(dense.shape[1]) % 8
+    for co in range(2):
+        for g in range(2):
+            vals = dense[co][(ci // 4) == g]
+            assert len(np.unique(vals)) <= 4

@@ -1,0 +1,98 @@
+"""LFSR unit tests — the python half of the python/rust bit-exactness contract."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import lfsr
+
+
+def test_step_is_16bit():
+    s = 0xACE1
+    for _ in range(1000):
+        s = lfsr.lfsr16_step(s)
+        assert 0 <= s <= 0xFFFF
+
+
+def test_maximal_period():
+    """Taps (16,15,13,4) must give the full 2^16-1 cycle."""
+    s0 = 1
+    s = lfsr.lfsr16_step(s0)
+    n = 1
+    while s != s0:
+        s = lfsr.lfsr16_step(s)
+        n += 1
+        assert n <= 65535, "period exceeded 2^16-1: not maximal"
+    assert n == 65535
+
+
+def test_zero_is_lockup():
+    assert lfsr.lfsr16_step(0) == 0
+
+
+def test_step16_equals_16_steps():
+    s = 0xBEEF
+    expect = s
+    for _ in range(16):
+        expect = lfsr.lfsr16_step(expect)
+    assert lfsr.lfsr16_step16(s) == expect
+
+
+def test_row_states_deterministic_and_nonzero():
+    a = lfsr.row_block_states(123, 5)
+    b = lfsr.row_block_states(123, 5)
+    assert (a == b).all()
+    assert (a != 0).all()
+    c = lfsr.row_block_states(124, 5)
+    assert (a != c).any()
+
+
+def test_row_states_differ_across_rows():
+    s0 = lfsr.row_block_states(9, 0)
+    s1 = lfsr.row_block_states(9, 1)
+    assert (s0 != s1).any()
+
+
+def test_block_signs_pm_one():
+    states = lfsr.row_block_states(77, 3)
+    signs = lfsr.block_signs(states)
+    assert signs.shape == (16, 16)
+    assert set(np.unique(signs)) <= {-1, 1}
+
+
+def test_block_signs_bit_mapping():
+    states = np.array([0b101] + [0] * 15, dtype=np.uint16)
+    signs = lfsr.block_signs(states)
+    assert signs[0, 0] == 1 and signs[0, 1] == -1 and signs[0, 2] == 1
+    assert (signs[1:] == -1).all()
+
+
+def test_base_matrix_shape_and_balance():
+    m = lfsr.base_matrix(42, 64, 32)
+    assert m.shape == (64, 32)
+    assert set(np.unique(m)) <= {-1, 1}
+    # pseudo-random ±1 entries should be roughly balanced
+    assert abs(m.mean()) < 0.15
+
+
+def test_base_matrix_rows_decorrelated():
+    m = lfsr.base_matrix(42, 64, 64).astype(np.float64)
+    gram = (m @ m.T) / m.shape[1]
+    off = gram - np.eye(64)
+    assert np.abs(off).mean() < 0.2
+
+
+def test_golden_vectors_self_consistent():
+    g = lfsr.golden_vectors()
+    assert len(g["step_seq_from_ace1"]) == 64
+    s = 0xACE1
+    for v in g["step_seq_from_ace1"]:
+        s = lfsr.lfsr16_step(s)
+        assert s == v
+    assert g["row0_states"] == [int(v) for v in lfsr.row_block_states(g["master_seed"], 0)]
+
+
+def test_splitmix_known_mixing():
+    # splitmix64 of distinct inputs should differ and stay in u64 range
+    vals = {lfsr.splitmix64(i) for i in range(64)}
+    assert len(vals) == 64
+    assert all(0 <= v < 2**64 for v in vals)

@@ -1,0 +1,143 @@
+"""L2 model tests: FE shapes/branches, pipeline consistency, AOT manifest."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import resnet
+from compile.model import FslHdnnModel
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+# tiny config so interpret-mode pallas stays fast
+TINY = resnet.FeConfig(image_size=16, widths=(8, 16, 32, 32), seed=1)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return FslHdnnModel(TINY, d=128)
+
+
+def test_fe_forward_shape(model):
+    x = jnp.zeros((2, 16, 16, 3))
+    f = model.fe_forward(x)
+    assert f.shape == (2, 4, 32)
+
+
+def test_branch_padding_is_zero(model):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16, 3)).astype(np.float32))
+    f = np.asarray(model.fe_forward(x))
+    # branch 0 has width 8 -> features 8..32 are padding
+    assert (f[0, 0, 8:] == 0).all()
+    assert (f[0, 1, 16:] == 0).all()
+    assert np.abs(f[0, 0, :8]).sum() > 0
+
+
+def test_fe_features_finite_and_scaled(model):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 16, 16, 3)).astype(np.float32))
+    f = np.asarray(model.fe_forward(x))
+    assert np.isfinite(f).all()
+    rms = np.sqrt((f[:, -1, :] ** 2).mean())
+    assert 1e-3 < rms < 1e3, "RMS calibration failed"
+
+
+def test_fe_pallas_stem_matches_lax(model):
+    """Routing the stem through the L1 kernel must not change the math."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16, 3)).astype(np.float32))
+    with_pallas = np.asarray(model.fe_forward(x))
+    model2 = FslHdnnModel(TINY, d=128, use_pallas_stem=False)
+    without = np.asarray(model2.fe_forward(x))
+    np.testing.assert_allclose(with_pallas, without, rtol=5e-4, atol=5e-4)
+
+
+def test_fsl_infer_equals_staged_pipeline(model):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16, 3)).astype(np.float32))
+    classes = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    fused = np.asarray(model.fsl_infer(x, classes))
+    feats = model.fe_forward(x)[:, -1, :]
+    staged = np.asarray(model.hdc_infer(model.encode(feats), classes))
+    np.testing.assert_allclose(fused, staged, rtol=1e-4, atol=1e-4)
+
+
+def test_hdc_train_then_infer_recovers_class(model):
+    """Aggregated class HVs classify their own shots (sanity of eq. 4+5)."""
+    rng = np.random.default_rng(4)
+    protos = rng.normal(size=(3, 32)).astype(np.float32) * 4.0
+    shots = protos[:, None, :] + rng.normal(size=(3, 5, 32)).astype(np.float32) * 0.1
+    classes = []
+    for c in range(3):
+        hv = model.encode(jnp.asarray(shots[c]))
+        classes.append(np.asarray(model.hdc_train(hv)) / 5.0)
+    q = model.encode(jnp.asarray(protos))
+    dist = np.asarray(model.hdc_infer(q, jnp.asarray(np.stack(classes))))
+    assert (dist.argmin(axis=1) == np.arange(3)).all()
+
+
+def test_weight_export_roundtrip(model):
+    manifest, blob = model.export_weights()
+    total = sum(int(np.prod(l["shape"])) for l in manifest["layers"])
+    assert len(blob) == 4 * total
+    first = manifest["layers"][0]
+    w = np.frombuffer(blob[: 4 * int(np.prod(first["shape"]))], dtype="<f4")
+    np.testing.assert_allclose(
+        w.reshape(first["shape"]), model.params[first["name"]], rtol=1e-6)
+
+
+def test_cluster_meta_consistency(model):
+    for name, (idx, cb) in model.cluster_meta.items():
+        w = model.params[name]
+        cout, k, _, cin = w.shape
+        assert idx.shape == (cout, k * k * cin)
+        assert idx.max() < cb.shape[2]
+
+
+# ---------------- artifacts (require `make artifacts`) ----------------
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+@needs_artifacts
+def test_manifest_entries_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert len(man["entries"]) >= 8
+    for e in man["entries"]:
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), e["file"]
+        with open(path) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule"), e["file"]
+
+
+@needs_artifacts
+def test_manifest_config_matches_goldens():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = man["config"]
+    with open(os.path.join(ART, "goldens", "goldens.json")) as f:
+        g = json.load(f)
+    assert g["master_seed"] == cfg["master_seed"]
+    d = cfg["d"]
+    assert g["shapes"]["hv"] == [2, d]
+    hv = np.fromfile(os.path.join(ART, "goldens", "hv.bin"), dtype="<f4")
+    assert hv.size == 2 * d and np.isfinite(hv).all()
+
+
+@needs_artifacts
+def test_golden_distances_consistent():
+    with open(os.path.join(ART, "goldens", "goldens.json")) as f:
+        g = json.load(f)
+    hv = np.fromfile(os.path.join(ART, "goldens", "hv.bin"), dtype="<f4").reshape(g["shapes"]["hv"])
+    classes = np.fromfile(os.path.join(ART, "goldens", "classes.bin"), dtype="<f4").reshape(g["shapes"]["classes"])
+    dist = np.fromfile(os.path.join(ART, "goldens", "dist.bin"), dtype="<f4").reshape(g["shapes"]["dist"])
+    want = np.abs(hv[:, None, :] - classes[None, :, :]).sum(-1)
+    np.testing.assert_allclose(dist, want, rtol=1e-4)

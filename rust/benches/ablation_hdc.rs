@@ -1,0 +1,95 @@
+//! Ablations over the HDC design choices the paper fixes: HDC dimension D
+//! (1024-8192 supported, 4096 default), class-HV precision (INT1-16), and
+//! the chip's 4-bit feature quantization. Each knob trades accuracy
+//! against class-memory capacity and encode cycles — the tradeoff space
+//! behind Fig. 13(b)'s spec table.
+
+use fsl_hdnn::data::DatasetPreset;
+use fsl_hdnn::experiments::{eval_learner, sampler_for, Learner};
+use fsl_hdnn::hdc::{quant, CrpEncoder, HdcModel};
+use fsl_hdnn::sim::hdc_engine::encode_tally;
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::stats;
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let episodes = 8;
+
+    // ---- D sweep ----
+    let mut t = Table::new(
+        "ablation: HDC dimension D (5-way 5-shot, cifar100 preset)",
+        &["D", "accuracy", "encode cycles (F=512)", "class KB (16b, 32 cls)"],
+    );
+    let sampler = sampler_for(DatasetPreset::Cifar100, 128, 5, 5, 8, 7);
+    for d in [512usize, 1024, 2048, 4096, 8192] {
+        let (acc, _) = eval_learner(&sampler, Learner::FslHdnn { d, bits: 16 }, episodes, 3);
+        t.row(&[
+            d.to_string(),
+            format!("{:.1}%", 100.0 * acc),
+            encode_tally(512, d).total_cycles.to_string(),
+            format!("{}", 32 * d * 16 / 8 / 1024),
+        ]);
+    }
+    t.print();
+    println!("expected: accuracy saturates near D=4096 (the paper's default)\n");
+
+    // ---- class-HV precision sweep ----
+    let mut t = Table::new(
+        "ablation: class-HV precision (D=4096, 5-way 5-shot)",
+        &["bits", "cifar100", "trafficsign", "classes @256KB (1 branch)", "w/ EE branches"],
+    );
+    for bits in [1u32, 2, 4, 8, 16] {
+        let mut row = vec![bits.to_string()];
+        for preset in [DatasetPreset::Cifar100, DatasetPreset::TrafficSign] {
+            let s = sampler_for(preset, 128, 5, 5, 8, 7);
+            let (acc, _) = eval_learner(&s, Learner::FslHdnn { d: 4096, bits }, episodes, 3);
+            row.push(format!("{:.1}%", 100.0 * acc));
+        }
+        row.push(quant::classes_capacity(256, 4096, bits).to_string());
+        row.push((quant::classes_capacity(256, 4096, bits) / 4).to_string());
+        t.row(&row);
+    }
+    t.print();
+    println!("expected: 4-bit matches 16-bit accuracy at 4x the class capacity\n");
+
+    // ---- feature quantization (the chip feeds 4-bit features) ----
+    let mut t = Table::new(
+        "ablation: feature quantization before cRP encode (D=4096)",
+        &["feature bits", "accuracy (cifar100)", "accuracy (flower102)"],
+    );
+    for fbits in [2u32, 4, 8, 32] {
+        let mut row = vec![if fbits == 32 { "f32".into() } else { format!("INT{fbits}") }];
+        for preset in [DatasetPreset::Cifar100, DatasetPreset::Flower102] {
+            let s = sampler_for(preset, 128, 5, 5, 8, 7);
+            let enc = CrpEncoder::new(4096, 0xF51_4D17);
+            let mut rng = Rng::new(9);
+            let mut accs = Vec::new();
+            for _ in 0..episodes {
+                let ep = s.sample(&mut rng);
+                let mut model = HdcModel::new(ep.n_way, 4096);
+                let q = |f: &[f32]| -> Vec<f32> {
+                    if fbits == 32 {
+                        f.to_vec()
+                    } else {
+                        quant::quantize(f, fbits).0
+                    }
+                };
+                for (c, shots) in ep.support.iter().enumerate() {
+                    let hvs: Vec<Vec<f32>> =
+                        shots.iter().map(|s| enc.encode_padded(&q(s))).collect();
+                    model.train_batch(c, &hvs);
+                }
+                let pairs: Vec<(usize, usize)> = ep
+                    .queries
+                    .iter()
+                    .map(|(f, l)| (model.predict(&enc.encode_padded(&q(f))), *l))
+                    .collect();
+                accs.push(stats::accuracy(&pairs));
+            }
+            row.push(format!("{:.1}%", 100.0 * stats::mean(&accs)));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("expected: the chip's 4-bit feature quantization is accuracy-neutral");
+}

@@ -1,0 +1,74 @@
+//! Fig. 3 — (a) FSL accuracy vs training iterations for partial/full FT
+//! (FSL-HDnn converges in a single pass); (b) accuracy vs normalized
+//! training complexity for kNN, partial FT, full FT and FSL-HDnn.
+//!
+//! Protocol: 20-way 5-shot episodes (the paper's Fig. 3 setting).
+
+use fsl_hdnn::baselines::complexity::PassCosts;
+use fsl_hdnn::data::DatasetPreset;
+use fsl_hdnn::experiments::{convergence_curve, eval_learner, sampler_for, Learner};
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let (n_way, k_shot, queries, episodes) = (20, 5, 5, 8);
+    let sampler = sampler_for(DatasetPreset::Cifar100, 128, n_way, k_shot, queries, 42);
+
+    // ---- (a) accuracy vs iterations ----
+    let epochs = 12;
+    let partial = convergence_curve(&sampler, false, epochs, episodes, 1);
+    let full = convergence_curve(&sampler, true, epochs, episodes, 1);
+    let (ours, _) = eval_learner(&sampler, Learner::FslHdnn { d: 4096, bits: 16 }, episodes, 1);
+    let mut t = Table::new(
+        "Fig. 3(a): 20-way 5-shot accuracy vs training iterations",
+        &["iteration", "partial FT", "full FT", "FSL-HDnn (single pass)"],
+    );
+    for e in 0..epochs {
+        t.row(&[
+            (e + 1).to_string(),
+            format!("{:.1}%", 100.0 * partial[e]),
+            format!("{:.1}%", 100.0 * full[e]),
+            if e == 0 { format!("{:.1}%", 100.0 * ours) } else { "-".into() },
+        ]);
+    }
+    t.print();
+
+    // ---- (b) accuracy vs complexity (normalized to the smallest) ----
+    let costs = PassCosts::resnet18();
+    let samples = n_way * k_shot;
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("kNN", costs.knn(samples), {
+            let (a, _) = eval_learner(&sampler, Learner::Knn, episodes, 2);
+            a
+        }),
+        ("partial FT (15 it)", costs.partial_ft(15, samples, 0.3), {
+            let (a, _) = eval_learner(&sampler, Learner::PartialFt { epochs: 15 }, episodes, 2);
+            a
+        }),
+        ("full FT (5 it)", costs.full_ft(5, samples), {
+            let (a, _) = eval_learner(&sampler, Learner::FullFt { epochs: 5 }, episodes, 2);
+            a
+        }),
+        ("FSL-HDnn", costs.fsl_hdnn(samples, 2.1), {
+            let (a, _) =
+                eval_learner(&sampler, Learner::FslHdnn { d: 4096, bits: 16 }, episodes, 2);
+            a
+        }),
+    ];
+    let min_cost = rows.iter().map(|r| r.1).fold(f64::MAX, f64::min);
+    let mut t = Table::new(
+        "Fig. 3(b): accuracy vs training complexity (normalized)",
+        &["algorithm", "norm. complexity", "accuracy"],
+    );
+    for (name, cost, acc) in &rows {
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}x", cost / min_cost),
+            format!("{:.1}%", 100.0 * acc),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper shape check: FSL-HDnn is the cheapest ({}x) while matching FT-family accuracy",
+        (rows[3].1 / min_cost).round()
+    );
+}

@@ -1,0 +1,59 @@
+//! Fig. 13 — (a) the chip's shmoo plot (voltage/frequency pass-fail grid)
+//! and (b) the specification table.
+//!
+//! The shmoo comes from the calibrated V/f operating curve (100 MHz @
+//! 0.9 V .. 250 MHz @ 1.2 V, linear between — the measured corners); a
+//! cell passes when the requested frequency is at or below the curve.
+
+use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::sim::memory::ChipMemories;
+use fsl_hdnn::sim::{Chip, EnergyModel};
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let em = EnergyModel::default();
+
+    // ---- (a) shmoo ----
+    let freqs = [275.0, 250.0, 225.0, 200.0, 175.0, 150.0, 125.0, 100.0, 75.0];
+    let volts = [0.85, 0.9, 0.95, 1.0, 1.05, 1.1, 1.15, 1.2];
+    let mut header: Vec<String> = vec!["MHz \\ V".into()];
+    header.extend(volts.iter().map(|v| format!("{v:.2}")));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig. 13(a): shmoo plot (PASS/fail)", &hdr_refs);
+    for &f in &freqs {
+        let mut row = vec![format!("{f:.0}")];
+        for &v in &volts {
+            // +0.5 MHz guard: the V/f curve arithmetic is f64 and the
+            // measured corners sit exactly on it
+            row.push(if f <= em.freq_at_voltage(v) + 0.5 { "PASS".into() } else { ".".into() });
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("measured corners: 100 MHz @ 0.9 V and 250 MHz @ 1.2 V both PASS\n");
+
+    // ---- (b) specification table ----
+    let mem = ChipMemories::paper();
+    let fast = Chip::paper(ChipConfig::default());
+    let slow = Chip::paper(ChipConfig::slow_corner());
+    let r_fast = fast.train_episode(10, 5, true, false);
+    let r_slow = slow.train_episode(10, 5, true, false);
+    let mut t = Table::new("Fig. 13(b): chip specifications", &["item", "value"]);
+    t.row(&["technology".into(), "40 nm CMOS (simulated)".into()]);
+    t.row(&["die area".into(), "11.3 mm2 (as published)".into()]);
+    t.row(&["on-chip memory".into(), format!(
+        "{} KB (act {} + idx {} + cb {} + class {})",
+        mem.total_kb(), mem.activation.kb, mem.index.kb, mem.codebook.kb, mem.class.kb)]);
+    t.row(&["PE array".into(), format!("{} x {}", fast.cfg.pe_rows, fast.cfg.pe_cols)]);
+    t.row(&["precision".into(), "BF16 FE / INT1-16 HDC".into()]);
+    t.row(&["frequency".into(), "100 - 250 MHz".into()]);
+    t.row(&["voltage".into(), "0.9 - 1.2 V".into()]);
+    t.row(&["power (training avg)".into(),
+        format!("{:.0} - {:.0} mW", r_slow.avg_power_mw, r_fast.avg_power_mw)]);
+    t.row(&["feature dim F".into(), "16 - 1024 (model default 512)".into()]);
+    t.row(&["HDC dim D".into(), "1024 - 8192 (default 4096)".into()]);
+    t.row(&["max classes".into(), "128 @ 4-bit class HVs".into()]);
+    t.row(&["peak throughput".into(), format!("{:.0} GOPS (effective)", fast.peak_gops())]);
+    t.print();
+    println!("paper: 424 KB, 100-250 MHz, 0.9-1.2 V, 59-305 mW, 197 GOPS, F 16-1024, D 1024-8192");
+}

@@ -1,0 +1,51 @@
+//! Fig. 15 — FSL accuracy of full FT (5 epochs), partial FT (15 epochs),
+//! kNN-L1 and FSL-HDnn on the three dataset presets under
+//! {5,10,20}-way x {1,5}-shot settings.
+
+use fsl_hdnn::data::DatasetPreset;
+use fsl_hdnn::experiments::{eval_learner, sampler_for, Learner};
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let episodes = 10;
+    let feature_dim = 128;
+    let learners = [
+        Learner::FullFt { epochs: 5 },
+        Learner::PartialFt { epochs: 15 },
+        Learner::Knn,
+        Learner::FslHdnn { d: 4096, bits: 16 },
+    ];
+    for preset in [DatasetPreset::Cifar100, DatasetPreset::Flower102, DatasetPreset::TrafficSign] {
+        let mut t = Table::new(
+            &format!("Fig. 15: FSL accuracy on {} (mean over {episodes} episodes)", preset.name()),
+            &["setting", "full FT", "partial FT", "kNN-L1", "FSL-HDnn"],
+        );
+        let mut gaps = Vec::new();
+        for (n_way, k_shot) in [(5usize, 1usize), (5, 5), (10, 5), (20, 5)] {
+            if n_way > preset.n_classes() {
+                continue;
+            }
+            let sampler = sampler_for(preset, feature_dim, n_way, k_shot, 8, 7);
+            let mut row = vec![format!("{n_way}-way {k_shot}-shot")];
+            let mut accs = Vec::new();
+            for l in &learners {
+                let (a, _) = eval_learner(&sampler, *l, episodes, 11);
+                accs.push(a);
+                row.push(format!("{:.1}%", 100.0 * a));
+            }
+            gaps.push((accs[3] - accs[2], accs[0] - accs[3]));
+            t.row(&row);
+        }
+        t.print();
+        let knn_gap: f64 = gaps.iter().map(|g| g.0).sum::<f64>() / gaps.len() as f64;
+        let ft_gap: f64 = gaps.iter().map(|g| g.1).sum::<f64>() / gaps.len() as f64;
+        println!(
+            "  {}: FSL-HDnn beats kNN by {:+.1} pts on average, trails full FT by {:+.1} pts\n",
+            preset.name(),
+            100.0 * knn_gap,
+            100.0 * ft_gap
+        );
+    }
+    println!("paper shape check: FSL-HDnn ~= FT-family (e.g. 94.1 vs 94.5 on Flower102),");
+    println!("surpasses kNN by ~4.9 pts on average with the largest margin on Traffic-sign");
+}

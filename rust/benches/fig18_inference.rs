@@ -1,0 +1,52 @@
+//! Fig. 18 — average inference latency and energy per 224x224 image,
+//! FSL-HDnn with / without early exit vs the prior ODL chips.
+//!
+//! The EE exit distribution comes from the Fig. 17 harness at the paper's
+//! operating point (E_s=2, E_c=2) on the CIFAR-100 preset.
+
+use fsl_hdnn::baselines::chips::table1_chips;
+use fsl_hdnn::config::{ChipConfig, EeConfig};
+use fsl_hdnn::data::{DatasetPreset, SyntheticDataset};
+use fsl_hdnn::experiments::eval_early_exit;
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let chip = Chip::paper(ChipConfig::default());
+    // measure the exit distribution at (2,2) on the hard preset
+    let ds = SyntheticDataset::new(DatasetPreset::Cifar100, 128, 21);
+    let (_, _, hist) =
+        eval_early_exit(&ds, 5, 5, 10, Some(EeConfig::paper_default()), 2048, 6, 31);
+    let mut exits = Vec::new();
+    for (stage, &count) in hist.iter().enumerate() {
+        for _ in 0..count {
+            exits.push(stage);
+        }
+    }
+    let no_ee = chip.infer_image(10, None);
+    let with_ee = chip.infer_with_exit_distribution(10, &exits);
+
+    let mut t = Table::new(
+        "Fig. 18: average inference latency & energy per image",
+        &["design", "latency (ms)", "energy (mJ)"],
+    );
+    t.row(&["FSL-HDnn (no EE)".into(), format!("{:.1}", no_ee.latency_ms),
+        format!("{:.2}", no_ee.energy_mj)]);
+    t.row(&["FSL-HDnn (EE 2,2)".into(), format!("{:.1}", with_ee.latency_ms),
+        format!("{:.2}", with_ee.energy_mj)]);
+    for c in table1_chips() {
+        t.row(&[format!("{} {}", c.name, c.venue), format!("{:.1}", c.infer_latency_ms_img),
+            format!("{:.2}", c.infer_energy_mj_img)]);
+    }
+    t.print();
+    let lat_red = 1.0 - with_ee.latency_ms / no_ee.latency_ms;
+    let e_red = 1.0 - with_ee.energy_mj / no_ee.energy_mj;
+    println!(
+        "EE reduction: latency {:.0}%, energy {:.0}% (paper: ~32% both);\n\
+         exit histogram by block: {hist:?}",
+        100.0 * lat_red,
+        100.0 * e_red
+    );
+    println!("paper shape check: FSL-HDnn balances latency and energy where [7] is slow");
+    println!("and [5]/[6] are energy-hungry");
+}

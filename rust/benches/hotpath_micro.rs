@@ -1,0 +1,83 @@
+//! Hot-path microbenchmarks (the §Perf targets in DESIGN.md): native cRP
+//! encode throughput, L1 distance search, clustered conv, FE forward and
+//! the chip simulator itself. Not a paper figure — the optimization
+//! baseline/after log in EXPERIMENTS.md §Perf comes from here.
+
+use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
+use fsl_hdnn::fe::kmeans::cluster_layer;
+use fsl_hdnn::hdc::{distance, CrpEncoder, HdcModel};
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::timer::{bench, black_box};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // --- cRP encode (F=512 -> D=4096), the HDC hot loop ---
+    let enc = CrpEncoder::new(4096, 0xF51_4D17);
+    let x: Vec<f32> = (0..512).map(|_| rng.gauss_f32()).collect();
+    let mut out = vec![0f32; 4096];
+    let r = bench("crp_encode F=512 D=4096", 300.0, || {
+        enc.encode_into(black_box(&x), &mut out);
+    });
+    println!("{r}");
+    println!(
+        "    -> {:.1} MB/s feature throughput, {:.2} Melem/s HV",
+        r.throughput(512.0 * 4.0) / 1e6,
+        r.throughput(4096.0) / 1e6
+    );
+
+    // --- L1 distance search (32 classes x D=4096) ---
+    let classes: Vec<Vec<f32>> =
+        (0..32).map(|_| (0..4096).map(|_| rng.gauss_f32()).collect()).collect();
+    let q: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
+    let r = bench("l1_distance 32 x D=4096", 200.0, || {
+        let mut best = 0.0f64;
+        for c in &classes {
+            best += distance::l1(black_box(&q), c);
+        }
+        black_box(best);
+    });
+    println!("{r}");
+
+    // --- HDC train + predict round ---
+    let mut model = HdcModel::new(10, 4096);
+    let hv: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
+    for c in 0..10 {
+        model.train_shot(c, &hv);
+    }
+    let r = bench("hdc predict 10-way D=4096", 200.0, || {
+        black_box(model.predict(black_box(&hv)));
+    });
+    println!("{r}");
+
+    // --- clustered conv vs dense conv (Cin=Cout=64 @ 16x16) ---
+    let (cin, cout, k, n, ch_sub) = (64usize, 64usize, 3usize, 16usize, 64usize);
+    let std = (2.0 / (k * k * cin) as f32).sqrt();
+    let w: Vec<f32> = (0..cout * k * k * cin).map(|_| std * rng.gauss_f32()).collect();
+    let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
+    let img = Tensor3::from_vec(16, 16, cin, (0..16 * 16 * cin).map(|_| rng.gauss_f32()).collect());
+    let r = bench("dense conv 64->64 @16x16", 300.0, || {
+        black_box(conv2d(black_box(&img), &w, cout, k, 1));
+    });
+    println!("{r}");
+    let r = bench("clustered conv 64->64 @16x16", 300.0, || {
+        black_box(clustered_conv2d(black_box(&img), &cl.idx, &cl.codebook, cout, k, 1, ch_sub, n));
+    });
+    println!("{r}");
+
+    // --- chip simulator speed (simulated cycles per wall second) ---
+    let chip = Chip::paper(ChipConfig::default());
+    let mut cycles = 0u64;
+    let r = bench("chip sim: 10-way 5-shot train episode", 300.0, || {
+        let rep = chip.train_episode(10, 5, true, false);
+        cycles = rep.cycles;
+        black_box(rep);
+    });
+    println!("{r}");
+    println!(
+        "    -> {:.1} M simulated cycles / wall-second",
+        cycles as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+}

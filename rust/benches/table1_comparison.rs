@@ -1,0 +1,65 @@
+//! Table I — the full comparison with state-of-the-art ODL accelerators:
+//! published rows for [2]-[7] plus the simulated FSL-HDnn row.
+
+use fsl_hdnn::baselines::chips::{relative_factors, table1_chips, OurChipRow};
+use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::table::Table;
+
+fn main() {
+    let fast = Chip::paper(ChipConfig::default());
+    let slow = Chip::paper(ChipConfig::slow_corner());
+    let r_fast = fast.train_episode(10, 5, true, false);
+    let r_slow = slow.train_episode(10, 5, true, false);
+    // efficiency corner (~1.0 V) for the headline mJ/image
+    let eff = Chip::paper(ChipConfig { voltage: 1.0, freq_mhz: 150.0, ..Default::default() });
+    let r_eff = eff.train_episode(10, 5, true, false);
+
+    let mut t = Table::new(
+        "Table I: comparison with state-of-the-art ODL accelerators",
+        &["design", "tech", "area mm2", "mem KB", "power mW", "precision",
+          "algorithm", "GOPS", "train ms/img", "train mJ/img"],
+    );
+    for c in table1_chips() {
+        t.row(&[
+            format!("{} {}", c.name, c.venue),
+            format!("{} nm", c.tech_nm),
+            format!("{}", c.die_area_mm2),
+            c.on_chip_kb.to_string(),
+            format!("{}", c.power_mw_max),
+            c.precision.into(),
+            c.algorithm.into(),
+            format!("{}", c.throughput_gops),
+            format!("{}", c.train_latency_ms_img),
+            format!("{}", c.train_energy_mj_img),
+        ]);
+    }
+    t.row(&[
+        "FSL-HDnn (this work, simulated)".into(),
+        "40 nm".into(),
+        "11.3".into(),
+        "424".into(),
+        format!("{:.0}-{:.0}", r_slow.avg_power_mw, r_fast.avg_power_mw),
+        "BF16/INT1-16".into(),
+        "HDC-based FSL".into(),
+        format!("{:.0}", fast.peak_gops()),
+        format!("{:.0}", r_fast.latency_ms_per_image),
+        format!("{:.1}", r_eff.energy_mj_per_image),
+    ]);
+    t.print();
+
+    let ours = OurChipRow {
+        train_latency_ms_img: r_fast.latency_ms_per_image,
+        train_energy_mj_img: r_eff.energy_mj_per_image,
+    };
+    let mut t = Table::new(
+        "Table I factors: prior chip / FSL-HDnn",
+        &["design", "latency factor", "energy factor"],
+    );
+    for (name, lat, en) in relative_factors(&ours) {
+        t.row(&[name, format!("{lat:.1}x"), format!("{en:.1}x")]);
+    }
+    t.print();
+    println!("paper shape check: latency factors 5.3-229.1x, energy factors 2.0-20.9x");
+    println!("(paper row: 35 ms/img, 6 mJ/img, 197 GOPS, 59-305 mW, 1.4-2.9 TOPS/W)");
+}

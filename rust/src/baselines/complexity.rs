@@ -1,0 +1,111 @@
+//! Training-cost model — eqs. (1), (2), (6) and the Fig. 3(b) axes.
+//!
+//! Costs are in dense-equivalent operations on the ResNet-18 @224 backbone
+//! (Cost_FP = 2 * 1.8G MACs). Full FT pays FP+GC+BP+WU per sample per
+//! iteration; partial FT drops most of BP/WU; kNN and FSL-HDnn are
+//! single-pass and gradient-free.
+
+use crate::sim::workload::{resnet18_224, total_macs};
+
+/// Per-pass operation costs (dense-equivalent ops) for one image.
+#[derive(Clone, Copy, Debug)]
+pub struct PassCosts {
+    pub fp: f64,
+    pub gc: f64,
+    pub bp: f64,
+    pub wu: f64,
+    pub hdc: f64,
+}
+
+impl PassCosts {
+    /// ResNet-18 @ 224 with D=4096, F=512 HDC head.
+    pub fn resnet18() -> Self {
+        let fp = 2.0 * total_macs(&resnet18_224()) as f64;
+        // standard backprop accounting: grad-wrt-input (BP) and
+        // grad-wrt-weights (GC) each cost about one forward pass
+        let bp = fp;
+        let gc = fp;
+        // weight update: one MAC per parameter
+        let wu = 2.0 * 11.7e6;
+        // HDC: encode (D*F sign-adds) + class update (D adds)
+        let hdc = (4096.0 * 512.0) + 4096.0;
+        PassCosts { fp, gc, bp, wu, hdc }
+    }
+
+    /// eq. (1): full fine-tuning.
+    pub fn full_ft(&self, iters: usize, samples: usize) -> f64 {
+        iters as f64 * samples as f64 * (self.fp + self.gc + self.bp + self.wu)
+    }
+
+    /// eq. (2): partial fine-tuning — only the classifier fraction `rho`
+    /// of weights trains, removing most BP/WU (the paper's partial-FT
+    /// baselines retrain the final block / head).
+    pub fn partial_ft(&self, iters: usize, samples: usize, rho: f64) -> f64 {
+        iters as f64
+            * samples as f64
+            * (self.fp + rho * (self.gc + self.bp + self.wu))
+    }
+
+    /// kNN: feature extraction only, single pass (plus negligible store).
+    pub fn knn(&self, samples: usize) -> f64 {
+        samples as f64 * self.fp
+    }
+
+    /// eq. (6): FSL-HDnn — single pass, FP (with clustered-conv reduction
+    /// `op_red`) + HDC.
+    pub fn fsl_hdnn(&self, samples: usize, op_red: f64) -> f64 {
+        samples as f64 * (self.fp / op_red + self.hdc)
+    }
+}
+
+/// The paper's headline ops claim: FSL-HDnn reduces training ops by ~21x
+/// vs FT-based methods (Section VI-C1: 5 epochs, 10-way 5-shot).
+pub fn ops_reduction_vs_ft(epochs: usize) -> f64 {
+    let c = PassCosts::resnet18();
+    let samples = 50;
+    c.full_ft(epochs, samples) / c.fsl_hdnn(samples, 2.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_ft_dominates_everything() {
+        let c = PassCosts::resnet18();
+        let (it, n) = (5, 50);
+        let full = c.full_ft(it, n);
+        let part = c.partial_ft(it, n, 0.3);
+        let knn = c.knn(n);
+        let ours = c.fsl_hdnn(n, 2.1);
+        assert!(full > part && part > knn && knn > ours);
+    }
+
+    #[test]
+    fn headline_21x_claim_shape() {
+        // 5 epochs of full FT vs single-pass FSL-HDnn: the paper says 21x;
+        // accept the right order of magnitude (our op accounting differs
+        // in the backprop constant)
+        let r = ops_reduction_vs_ft(5);
+        assert!((10.0..45.0).contains(&r), "got {r:.1}x");
+    }
+
+    #[test]
+    fn partial_ft_between_knn_and_full() {
+        let c = PassCosts::resnet18();
+        assert!(c.partial_ft(15, 50, 0.1) < c.full_ft(15, 50));
+        assert!(c.partial_ft(1, 50, 0.0) >= c.knn(50));
+    }
+
+    #[test]
+    fn hdc_overhead_negligible() {
+        let c = PassCosts::resnet18();
+        assert!(c.hdc / c.fp < 0.01, "HDC must be <1% of a forward pass");
+    }
+
+    #[test]
+    fn single_pass_scales_linearly() {
+        let c = PassCosts::resnet18();
+        assert!((c.fsl_hdnn(100, 2.1) / c.fsl_hdnn(50, 2.1) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,205 @@
+//! Full fine-tuning baseline: a 2-layer MLP head with backprop on the
+//! frozen features — the accuracy proxy for "retrain everything" ODL
+//! ([2], [3], [5]–[7]; eq. (1)). The *cost* of true full FT (backprop
+//! through the whole CNN) is accounted separately by `complexity.rs`;
+//! this module supplies the accuracy side of Figs. 3 and 15.
+
+use crate::util::prng::Rng;
+
+/// Two-layer MLP (dim -> hidden -> classes) trained with SGD + momentum.
+#[derive(Clone, Debug)]
+pub struct MlpHead {
+    pub dim: usize,
+    pub hidden: usize,
+    pub n_classes: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    m1: Vec<f32>,
+    m2: Vec<f32>,
+    pub lr: f32,
+    pub momentum: f32,
+    scale: f32,
+}
+
+impl MlpHead {
+    pub fn new(n_classes: usize, dim: usize, hidden: usize, rng: &mut Rng) -> Self {
+        let s1 = (2.0 / dim as f32).sqrt();
+        let s2 = (2.0 / hidden as f32).sqrt();
+        MlpHead {
+            dim,
+            hidden,
+            n_classes,
+            w1: (0..hidden * dim).map(|_| s1 * rng.gauss_f32()).collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..n_classes * hidden).map(|_| s2 * rng.gauss_f32()).collect(),
+            b2: vec![0.0; n_classes],
+            m1: vec![0.0; hidden * dim],
+            m2: vec![0.0; n_classes * hidden],
+            lr: 0.005,
+            momentum: 0.9,
+            scale: 1.0,
+        }
+    }
+
+    fn forward(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let mut h = vec![0f32; self.hidden];
+        for j in 0..self.hidden {
+            let row = &self.w1[j * self.dim..(j + 1) * self.dim];
+            let mut s = self.b1[j];
+            for (w, xi) in row.iter().zip(x) {
+                s += w * xi;
+            }
+            h[j] = s.max(0.0); // ReLU
+        }
+        let mut logits = vec![0f32; self.n_classes];
+        for c in 0..self.n_classes {
+            let row = &self.w2[c * self.hidden..(c + 1) * self.hidden];
+            let mut s = self.b2[c];
+            for (w, hj) in row.iter().zip(&h) {
+                s += w * hj;
+            }
+            logits[c] = s;
+        }
+        (h, logits)
+    }
+
+    fn softmax(logits: &[f32]) -> Vec<f32> {
+        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+
+    /// One backprop step; returns the loss.
+    pub fn sgd_step(&mut self, x: &[f32], label: usize) -> f32 {
+        let (h, logits) = self.forward(x);
+        let probs = Self::softmax(&logits);
+        let loss = -probs[label].max(1e-12).ln();
+        // output layer grads
+        let dlogits: Vec<f32> = (0..self.n_classes)
+            .map(|c| probs[c] - if c == label { 1.0 } else { 0.0 })
+            .collect();
+        let mut dh = vec![0f32; self.hidden];
+        for c in 0..self.n_classes {
+            let g = dlogits[c];
+            let row = &mut self.w2[c * self.hidden..(c + 1) * self.hidden];
+            let mrow = &mut self.m2[c * self.hidden..(c + 1) * self.hidden];
+            for j in 0..self.hidden {
+                dh[j] += row[j] * g;
+                let grad = g * h[j];
+                mrow[j] = self.momentum * mrow[j] - self.lr * grad;
+                row[j] += mrow[j];
+            }
+            self.b2[c] -= self.lr * g;
+        }
+        // hidden layer grads (through ReLU)
+        for j in 0..self.hidden {
+            if h[j] <= 0.0 {
+                continue;
+            }
+            let g = dh[j];
+            let row = &mut self.w1[j * self.dim..(j + 1) * self.dim];
+            let mrow = &mut self.m1[j * self.dim..(j + 1) * self.dim];
+            for (i, xi) in x.iter().enumerate() {
+                let grad = g * xi;
+                mrow[i] = self.momentum * mrow[i] - self.lr * grad;
+                row[i] += mrow[i];
+            }
+            self.b1[j] -= self.lr * g;
+        }
+        loss
+    }
+
+    /// Train `epochs` shuffled passes; returns per-epoch mean losses
+    /// (Fig. 3a's convergence curve).
+    pub fn fit(&mut self, xs: &[Vec<f32>], ys: &[usize], epochs: usize, rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(xs.len(), ys.len());
+        let scale = (xs
+            .iter()
+            .flat_map(|x| x.iter())
+            .map(|v| (v * v) as f64)
+            .sum::<f64>()
+            / (xs.len().max(1) * self.dim) as f64)
+            .sqrt()
+            .max(1e-6) as f32;
+        self.scale = scale;
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut curve = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut acc = 0.0;
+            for &i in &order {
+                let x: Vec<f32> = xs[i].iter().map(|v| v / scale).collect();
+                acc += self.sgd_step(&x, ys[i]);
+            }
+            curve.push(acc / xs.len().max(1) as f32);
+        }
+        curve
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let xs: Vec<f32> = x.iter().map(|v| v / self.scale.max(1e-6)).collect();
+        let (_, logits) = self.forward(&xs);
+        let mut best = 0;
+        for (i, &l) in logits.iter().enumerate().skip(1) {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_like(rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<usize>) {
+        // non-linearly separable: needs the hidden layer
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..40 {
+            let a = rng.below(2) as f32;
+            let b = rng.below(2) as f32;
+            let x = vec![
+                a * 2.0 - 1.0 + 0.1 * rng.gauss_f32(),
+                b * 2.0 - 1.0 + 0.1 * rng.gauss_f32(),
+            ];
+            xs.push(x);
+            ys.push(((a as i32) ^ (b as i32)) as usize);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn solves_xor() {
+        let mut rng = Rng::new(1);
+        let (xs, ys) = xor_like(&mut rng);
+        let mut mlp = MlpHead::new(2, 2, 16, &mut rng);
+        mlp.fit(&xs, &ys, 60, &mut rng);
+        let correct = xs.iter().zip(&ys).filter(|(x, &y)| mlp.predict(x) == y).count();
+        assert!(correct >= 36, "{correct}/40");
+    }
+
+    #[test]
+    fn loss_curve_monotone_ish() {
+        let mut rng = Rng::new(2);
+        let (xs, ys) = xor_like(&mut rng);
+        let mut mlp = MlpHead::new(2, 2, 16, &mut rng);
+        let curve = mlp.fit(&xs, &ys, 30, &mut rng);
+        assert!(curve.last().unwrap() < &curve[0], "loss should drop: {curve:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let build = || {
+            let mut rng = Rng::new(3);
+            let (xs, ys) = xor_like(&mut rng);
+            let mut mlp = MlpHead::new(2, 2, 8, &mut rng);
+            mlp.fit(&xs, &ys, 5, &mut rng)
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,0 +1,120 @@
+//! kNN-L1 baseline [17], [18]: no training beyond storing support
+//! features; classification = majority vote over the k nearest stored
+//! samples under L1 distance. Cheap but accuracy-limited (Figs. 3b, 15) —
+//! the gap FSL-HDnn closes.
+
+use crate::hdc::distance::l1;
+
+/// kNN classifier over raw feature vectors.
+#[derive(Clone, Debug, Default)]
+pub struct KnnClassifier {
+    pub k: usize,
+    store: Vec<(Vec<f32>, usize)>,
+    n_classes: usize,
+}
+
+impl KnnClassifier {
+    pub fn new(k: usize) -> Self {
+        KnnClassifier { k: k.max(1), store: Vec::new(), n_classes: 0 }
+    }
+
+    /// "Training" = memorize the support set.
+    pub fn add_example(&mut self, feature: Vec<f32>, label: usize) {
+        self.n_classes = self.n_classes.max(label + 1);
+        self.store.push((feature, label));
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn predict(&self, query: &[f32]) -> usize {
+        assert!(!self.store.is_empty(), "predict on empty kNN store");
+        let mut dists: Vec<(f64, usize)> = self
+            .store
+            .iter()
+            .map(|(f, l)| (l1(query, f), *l))
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0usize; self.n_classes];
+        for (_, l) in dists.iter().take(self.k.min(dists.len())) {
+            votes[*l] += 1;
+        }
+        // majority vote; ties broken by nearer neighbor
+        let max_votes = *votes.iter().max().unwrap();
+        for (_, l) in dists.iter() {
+            if votes[*l] == max_votes {
+                return *l;
+            }
+        }
+        unreachable!()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn nearest_neighbor_exact() {
+        let mut knn = KnnClassifier::new(1);
+        knn.add_example(vec![0.0, 0.0], 0);
+        knn.add_example(vec![10.0, 10.0], 1);
+        assert_eq!(knn.predict(&[1.0, 1.0]), 0);
+        assert_eq!(knn.predict(&[9.0, 9.0]), 1);
+    }
+
+    #[test]
+    fn majority_vote_overrides_single_outlier() {
+        let mut knn = KnnClassifier::new(3);
+        knn.add_example(vec![0.0], 0);
+        knn.add_example(vec![0.2], 0);
+        knn.add_example(vec![0.05], 1); // outlier of class 1 sitting in class 0
+        knn.add_example(vec![5.0], 1);
+        assert_eq!(knn.predict(&[0.1]), 0);
+    }
+
+    #[test]
+    fn sensitive_to_outliers_with_k1() {
+        // the failure mode HDC aggregation fixes: one bad shot flips 1-NN
+        let mut knn = KnnClassifier::new(1);
+        knn.add_example(vec![0.0], 0);
+        knn.add_example(vec![0.3], 1); // class-1 outlier near class 0
+        knn.add_example(vec![5.0], 1);
+        assert_eq!(knn.predict(&[0.25]), 1, "1-NN grabs the outlier");
+    }
+
+    #[test]
+    fn separable_clusters_high_accuracy() {
+        let mut rng = Rng::new(1);
+        let mut knn = KnnClassifier::new(5);
+        let protos = [[0.0f32; 8], [4.0f32; 8]];
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..5 {
+                let f: Vec<f32> = p.iter().map(|v| v + 0.3 * rng.gauss_f32()).collect();
+                knn.add_example(f, c);
+            }
+        }
+        let mut correct = 0;
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..20 {
+                let q: Vec<f32> = p.iter().map(|v| v + 0.3 * rng.gauss_f32()).collect();
+                if knn.predict(&q) == c {
+                    correct += 1;
+                }
+            }
+        }
+        assert!(correct >= 38, "{correct}/40");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_store_panics() {
+        KnnClassifier::new(1).predict(&[0.0]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Partial fine-tuning baseline: multinomial logistic regression (linear
+//! probe) on the frozen features, trained with minibatch SGD — the
+//! "retrain only the last layer(s)" family of ODL accelerators
+//! ([4], [9], [10]; eq. (2)). Iterative and gradient-based, unlike
+//! FSL-HDnn's single pass.
+
+use crate::util::prng::Rng;
+
+/// Softmax-regression head trained by SGD.
+#[derive(Clone, Debug)]
+pub struct LinearProbe {
+    pub n_classes: usize,
+    pub dim: usize,
+    /// weights (n_classes x dim) + bias (n_classes)
+    w: Vec<f32>,
+    b: Vec<f32>,
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// feature RMS captured by `fit` and re-applied at prediction time
+    scale: f32,
+}
+
+impl LinearProbe {
+    pub fn new(n_classes: usize, dim: usize) -> Self {
+        LinearProbe {
+            n_classes,
+            dim,
+            w: vec![0.0; n_classes * dim],
+            b: vec![0.0; n_classes],
+            lr: 0.05,
+            weight_decay: 1e-4,
+            scale: 1.0,
+        }
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dim);
+        (0..self.n_classes)
+            .map(|c| {
+                let row = &self.w[c * self.dim..(c + 1) * self.dim];
+                let mut s = self.b[c];
+                for (wi, xi) in row.iter().zip(x) {
+                    s += wi * xi;
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn softmax(logits: &[f32]) -> Vec<f32> {
+        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+
+    /// One SGD step on one example; returns the cross-entropy loss.
+    pub fn sgd_step(&mut self, x: &[f32], label: usize) -> f32 {
+        let probs = Self::softmax(&self.logits(x));
+        let loss = -probs[label].max(1e-12).ln();
+        for c in 0..self.n_classes {
+            let g = probs[c] - if c == label { 1.0 } else { 0.0 };
+            let row = &mut self.w[c * self.dim..(c + 1) * self.dim];
+            for (wi, xi) in row.iter_mut().zip(x) {
+                *wi -= self.lr * (g * xi + self.weight_decay * *wi);
+            }
+            self.b[c] -= self.lr * g;
+        }
+        loss
+    }
+
+    /// Train for `epochs` passes over the support set (shuffled).
+    /// Returns the mean loss of the final epoch.
+    pub fn fit(&mut self, xs: &[Vec<f32>], ys: &[usize], epochs: usize, rng: &mut Rng) -> f32 {
+        assert_eq!(xs.len(), ys.len());
+        // feature scale normalization makes the fixed lr robust
+        let scale = (xs
+            .iter()
+            .flat_map(|x| x.iter())
+            .map(|v| (v * v) as f64)
+            .sum::<f64>()
+            / (xs.len().max(1) * self.dim) as f64)
+            .sqrt()
+            .max(1e-6) as f32;
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut last = 0.0;
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            last = 0.0;
+            for &i in &order {
+                let x: Vec<f32> = xs[i].iter().map(|v| v / scale).collect();
+                last += self.sgd_step(&x, ys[i]);
+            }
+            last /= xs.len().max(1) as f32;
+        }
+        self.scale = scale;
+        last
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let xs: Vec<f32> = x.iter().map(|v| v / self.scale.max(1e-6)).collect();
+        let logits = self.logits(&xs);
+        let mut best = 0;
+        for (i, &l) in logits.iter().enumerate().skip(1) {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_data(rng: &mut Rng) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for c in 0..3usize {
+            for _ in 0..10 {
+                let mut x = vec![0.0f32; 6];
+                x[c * 2] = 2.0 + 0.3 * rng.gauss_f32();
+                x[c * 2 + 1] = 2.0 + 0.3 * rng.gauss_f32();
+                xs.push(x);
+                ys.push(c);
+            }
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn learns_separable_data() {
+        let mut rng = Rng::new(1);
+        let (xs, ys) = toy_data(&mut rng);
+        let mut lp = LinearProbe::new(3, 6);
+        lp.fit(&xs, &ys, 20, &mut rng);
+        let correct = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| lp.predict(x) == y)
+            .count();
+        assert!(correct >= 28, "{correct}/30");
+    }
+
+    #[test]
+    fn loss_decreases_over_epochs() {
+        let mut rng = Rng::new(2);
+        let (xs, ys) = toy_data(&mut rng);
+        let mut lp = LinearProbe::new(3, 6);
+        let l1 = lp.fit(&xs, &ys, 1, &mut rng);
+        let mut lp2 = LinearProbe::new(3, 6);
+        let l20 = lp2.fit(&xs, &ys, 20, &mut rng);
+        assert!(l20 < l1, "loss should fall: {l20} vs {l1}");
+    }
+
+    #[test]
+    fn untrained_predicts_first_class() {
+        let lp = LinearProbe::new(4, 3);
+        assert_eq!(lp.predict(&[1.0, 2.0, 3.0]), 0);
+    }
+
+    #[test]
+    fn more_epochs_never_catastrophic() {
+        let mut rng = Rng::new(3);
+        let (xs, ys) = toy_data(&mut rng);
+        let mut lp = LinearProbe::new(3, 6);
+        lp.fit(&xs, &ys, 100, &mut rng);
+        let correct = xs.iter().zip(&ys).filter(|(x, &y)| lp.predict(x) == y).count();
+        assert!(correct >= 28);
+    }
+}

@@ -1,0 +1,18 @@
+//! Baselines the paper compares against.
+//!
+//! * algorithmic: kNN-L1 [17,18], partial fine-tuning (linear probe with
+//!   SGD), full fine-tuning (MLP head with backprop) — all consuming the
+//!   same frozen features as FSL-HDnn (Figs. 3, 15);
+//! * analytic: the training-cost model of eqs. (1), (2), (6) (Fig. 3b,
+//!   the 21x ops claim) and the prior ODL chips of Table I as published
+//!   cost models (Table I, Figs. 18, 19).
+
+pub mod chips;
+pub mod complexity;
+pub mod full_ft;
+pub mod knn;
+pub mod linear_probe;
+
+pub use knn::KnnClassifier;
+pub use linear_probe::LinearProbe;
+pub use full_ft::MlpHead;

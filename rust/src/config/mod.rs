@@ -1,0 +1,253 @@
+//! Configuration system: typed configs + a TOML-subset loader.
+//!
+//! Every binary (CLI, examples, benches) builds its run from these types;
+//! `presets` holds the paper's configurations (the fabricated chip, the
+//! ResNet-18 @ 224x224 workload, the three dataset difficulty presets).
+
+pub mod toml;
+
+use crate::util::json::Json;
+
+/// Feature-extractor / model geometry (must match `artifacts/manifest.json`
+/// when the PJRT backend is used).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub image_size: usize,
+    pub in_channels: usize,
+    pub widths: Vec<usize>,
+    pub blocks_per_stage: usize,
+    /// final feature dimension F (= last width)
+    pub feature_dim: usize,
+    /// HDC dimension D
+    pub d: usize,
+    /// weight-clustering group size Ch_sub (paper: 64)
+    pub ch_sub: usize,
+    /// centroids per codebook N (paper: 16 -> 4-bit indices)
+    pub n_centroids: usize,
+    /// cRP master seed (python/rust contract)
+    pub master_seed: u64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            image_size: 32,
+            in_channels: 3,
+            widths: vec![16, 32, 64, 128],
+            blocks_per_stage: 2,
+            feature_dim: 128,
+            d: 4096,
+            ch_sub: 64,
+            n_centroids: 16,
+            master_seed: 0xF51_4D17,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Load the geometry the artifacts were built with.
+    pub fn from_manifest(man: &Json) -> anyhow::Result<Self> {
+        let cfg = man.get("config").ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let req = |k: &str| {
+            cfg.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing {k}"))
+        };
+        Ok(ModelConfig {
+            image_size: req("image_size")? as usize,
+            in_channels: req("in_channels")? as usize,
+            widths: cfg
+                .get("widths")
+                .and_then(|v| v.as_usize_vec())
+                .ok_or_else(|| anyhow::anyhow!("missing widths"))?,
+            blocks_per_stage: 2,
+            feature_dim: req("feature_dim")? as usize,
+            d: req("d")? as usize,
+            ch_sub: req("ch_sub")? as usize,
+            n_centroids: req("n_centroids")? as usize,
+            master_seed: req("master_seed")? as u64,
+        })
+    }
+
+    pub fn n_branches(&self) -> usize {
+        self.widths.len()
+    }
+}
+
+/// Few-shot workload: N-way k-shot episodes with q queries per class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub queries_per_class: usize,
+    pub episodes: usize,
+    pub dataset: String,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_way: 10,
+            k_shot: 5,
+            queries_per_class: 15,
+            episodes: 20,
+            dataset: "cifar100".into(),
+            seed: 42,
+        }
+    }
+}
+
+/// Early-exit configuration (E_s, E_c) — Section V-A.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EeConfig {
+    /// first CONV block (1-based) whose prediction participates
+    pub e_s: usize,
+    /// consecutive consistent predictions required to exit
+    pub e_c: usize,
+}
+
+impl EeConfig {
+    /// The paper's chosen operating point (Fig. 17): E_s=2, E_c=2.
+    pub fn paper_default() -> Self {
+        EeConfig { e_s: 2, e_c: 2 }
+    }
+}
+
+/// Chip configuration (Fig. 7 / Fig. 13b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipConfig {
+    pub freq_mhz: f64,
+    pub voltage: f64,
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    pub act_mem_kb: usize,
+    pub idx_mem_kb: usize,
+    pub cb_mem_kb: usize,
+    pub class_mem_kb: usize,
+    pub class_mem_banks: usize,
+    /// HV precision for class memory, 1..=16 bits
+    pub hv_bits: u32,
+    /// off-chip DRAM bandwidth available for weight/index streaming (GB/s)
+    pub dram_gbps: f64,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        // the fabricated FSL-HDnn chip at its fast corner
+        ChipConfig {
+            freq_mhz: 250.0,
+            voltage: 1.2,
+            pe_rows: 4,
+            pe_cols: 16,
+            act_mem_kb: 128,
+            idx_mem_kb: 36,
+            cb_mem_kb: 4,
+            class_mem_kb: 256,
+            class_mem_banks: 16,
+            hv_bits: 16,
+            // FPGA-bridged test-board DRAM (Fig. 13a): modest effective
+            // bandwidth — calibrated so batching savings land in the
+            // paper's 18-32% band (Fig. 16)
+            dram_gbps: 0.22,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// Slow corner measured in Fig. 14(b): 100 MHz @ 0.9 V.
+    pub fn slow_corner() -> Self {
+        ChipConfig { freq_mhz: 100.0, voltage: 0.9, ..Default::default() }
+    }
+
+    /// Clock period in nanoseconds.
+    pub fn period_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+}
+
+/// Top-level run configuration assembled by the CLI / examples.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub workload: WorkloadConfig,
+    pub chip: ChipConfig,
+    pub ee: Option<EeConfig>,
+    pub batched_training: bool,
+}
+
+impl RunConfig {
+    /// Apply `key = value` pairs from a parsed TOML-subset document.
+    pub fn apply_toml(&mut self, doc: &toml::Doc) -> anyhow::Result<()> {
+        for (section, key, val) in doc.entries() {
+            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            match path.as_str() {
+                "model.d" => self.model.d = val.as_int()? as usize,
+                "model.image_size" => self.model.image_size = val.as_int()? as usize,
+                "model.ch_sub" => self.model.ch_sub = val.as_int()? as usize,
+                "model.n_centroids" => self.model.n_centroids = val.as_int()? as usize,
+                "workload.n_way" => self.workload.n_way = val.as_int()? as usize,
+                "workload.k_shot" => self.workload.k_shot = val.as_int()? as usize,
+                "workload.queries_per_class" => {
+                    self.workload.queries_per_class = val.as_int()? as usize
+                }
+                "workload.episodes" => self.workload.episodes = val.as_int()? as usize,
+                "workload.dataset" => self.workload.dataset = val.as_str()?.to_string(),
+                "workload.seed" => self.workload.seed = val.as_int()? as u64,
+                "chip.freq_mhz" => self.chip.freq_mhz = val.as_float()?,
+                "chip.voltage" => self.chip.voltage = val.as_float()?,
+                "chip.hv_bits" => self.chip.hv_bits = val.as_int()? as u32,
+                "ee.e_s" => {
+                    let e = self.ee.get_or_insert(EeConfig::paper_default());
+                    e.e_s = val.as_int()? as usize;
+                }
+                "ee.e_c" => {
+                    let e = self.ee.get_or_insert(EeConfig::paper_default());
+                    e.e_c = val.as_int()? as usize;
+                }
+                "batched_training" => self.batched_training = val.as_bool()?,
+                other => anyhow::bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_papers() {
+        let c = ChipConfig::default();
+        assert_eq!(c.pe_rows * c.pe_cols, 64);
+        assert_eq!(c.act_mem_kb + c.idx_mem_kb + c.cb_mem_kb + c.class_mem_kb, 424);
+        assert_eq!(ModelConfig::default().d, 4096);
+    }
+
+    #[test]
+    fn apply_toml_full_roundtrip() {
+        let doc = toml::Doc::parse(
+            "batched_training = true\n\
+             [model]\nd = 2048\n\
+             [workload]\nn_way = 5\ndataset = \"flower102\"\n\
+             [ee]\ne_s = 1\ne_c = 3\n\
+             [chip]\nfreq_mhz = 100.0\nvoltage = 0.9\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.model.d, 2048);
+        assert_eq!(rc.workload.n_way, 5);
+        assert_eq!(rc.workload.dataset, "flower102");
+        assert_eq!(rc.ee, Some(EeConfig { e_s: 1, e_c: 3 }));
+        assert!(rc.batched_training);
+        assert_eq!(rc.chip.freq_mhz, 100.0);
+    }
+
+    #[test]
+    fn apply_toml_rejects_unknown() {
+        let doc = toml::Doc::parse("[model]\nbogus = 1\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+}

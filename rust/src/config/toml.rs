@@ -1,0 +1,165 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs with
+//! string / integer / float / boolean values and `#` comments. That covers
+//! every config file this project ships; nested tables and arrays are
+//! intentionally out of scope.
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_int(&self) -> anyhow::Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => anyhow::bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> anyhow::Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => anyhow::bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => anyhow::bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => anyhow::bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: ordered (section, key, value) triples.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl Doc {
+    pub fn parse(src: &str) -> anyhow::Result<Doc> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unclosed section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            entries.push((section.clone(), key, parse_value(v.trim(), lineno + 1)?));
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Doc> {
+        Doc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> anyhow::Result<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            "top = 1\n# comment\n[a]\nx = 2.5\ny = \"hi # not comment\"\n[b]\nz = false # tail\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("a", "x"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("a", "y"), Some(&Value::Str("hi # not comment".into())));
+        assert_eq!(doc.get("b", "z"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        assert_eq!(Value::Int(3).as_float().unwrap(), 3.0);
+        assert!(Value::Str("x".into()).as_float().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Doc::parse("[unclosed\n").is_err());
+        assert!(Doc::parse("novalue\n").is_err());
+        assert!(Doc::parse("k = @@@\n").is_err());
+        assert!(Doc::parse(" = 3\n").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let doc = Doc::parse("\n# only comments\n").unwrap();
+        assert_eq!(doc.entries().count(), 0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Class batcher (Fig. 12): groups incoming same-class shots so the FE
+//! processes them back-to-back under one weight-stream pass and the HDC
+//! trainer aggregates them in one class-memory sweep.
+
+use std::collections::BTreeMap;
+
+/// A batch of same-class shots ready for the FE.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassBatch<T> {
+    pub class: usize,
+    pub items: Vec<T>,
+}
+
+/// Accumulates shots per class; flushes when a class reaches `k_shot`
+/// (or on demand at train time).
+#[derive(Clone, Debug)]
+pub struct ClassBatcher<T> {
+    pub k_shot: usize,
+    pending: BTreeMap<usize, Vec<T>>,
+}
+
+impl<T> ClassBatcher<T> {
+    pub fn new(k_shot: usize) -> Self {
+        assert!(k_shot >= 1);
+        ClassBatcher { k_shot, pending: BTreeMap::new() }
+    }
+
+    /// Add one shot; returns a full batch if the class just reached k.
+    pub fn push(&mut self, class: usize, item: T) -> Option<ClassBatch<T>> {
+        let slot = self.pending.entry(class).or_default();
+        slot.push(item);
+        if slot.len() >= self.k_shot {
+            let items = self.pending.remove(&class).unwrap();
+            Some(ClassBatch { class, items })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every partially filled class (train-now request).
+    pub fn flush_all(&mut self) -> Vec<ClassBatch<T>> {
+        let pending = std::mem::take(&mut self.pending);
+        pending
+            .into_iter()
+            .map(|(class, items)| ClassBatch { class, items })
+            .collect()
+    }
+
+    pub fn pending_shots(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+
+    pub fn pending_classes(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_on_k_reached() {
+        let mut b = ClassBatcher::new(3);
+        assert!(b.push(0, "a").is_none());
+        assert!(b.push(1, "x").is_none());
+        assert!(b.push(0, "b").is_none());
+        let full = b.push(0, "c").unwrap();
+        assert_eq!(full.class, 0);
+        assert_eq!(full.items, vec!["a", "b", "c"]);
+        assert_eq!(b.pending_shots(), 1);
+    }
+
+    #[test]
+    fn preserves_arrival_order_within_class() {
+        let mut b = ClassBatcher::new(2);
+        b.push(5, 1);
+        let batch = b.push(5, 2).unwrap();
+        assert_eq!(batch.items, vec![1, 2]);
+    }
+
+    #[test]
+    fn flush_returns_partials_sorted_by_class() {
+        let mut b = ClassBatcher::new(5);
+        b.push(2, "q");
+        b.push(0, "p");
+        b.push(2, "r");
+        let flushed = b.flush_all();
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0].class, 0);
+        assert_eq!(flushed[1].class, 2);
+        assert_eq!(flushed[1].items, vec!["q", "r"]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn no_cross_class_mixing() {
+        let mut b = ClassBatcher::new(2);
+        b.push(0, 10);
+        b.push(1, 20);
+        let f0 = b.push(0, 11).unwrap();
+        assert!(f0.items.iter().all(|&v| v < 20));
+    }
+
+    #[test]
+    fn counts() {
+        let mut b: ClassBatcher<u8> = ClassBatcher::new(4);
+        b.push(0, 1);
+        b.push(1, 2);
+        b.push(1, 3);
+        assert_eq!(b.pending_shots(), 3);
+        assert_eq!(b.pending_classes(), 2);
+    }
+}

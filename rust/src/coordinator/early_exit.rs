@@ -1,0 +1,145 @@
+//! Early-exit controller (Section V-A, Fig. 11).
+//!
+//! The FSL classifier terminates inference when predictions stay
+//! consistent across `E_c` consecutive CONV blocks, starting from the
+//! `E_s`-th block (both 1-based in the paper). The distance table keeps
+//! each block's prediction so the consistency check needs no extra
+//! hardware — here it is exactly that table plus a counter.
+
+use crate::config::EeConfig;
+
+/// Decision returned after feeding one block's prediction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EeDecision {
+    /// keep extracting features
+    Continue,
+    /// exit now with this prediction
+    Exit(usize),
+}
+
+/// Per-query controller state.
+#[derive(Clone, Debug)]
+pub struct EarlyExitController {
+    pub cfg: EeConfig,
+    /// distance-table record: (block index, prediction)
+    pub table: Vec<(usize, usize)>,
+    consecutive: usize,
+    last_pred: Option<usize>,
+}
+
+impl EarlyExitController {
+    pub fn new(cfg: EeConfig) -> Self {
+        assert!(cfg.e_s >= 1, "E_s is 1-based");
+        assert!(cfg.e_c >= 1, "E_c must be at least 1");
+        EarlyExitController { cfg, table: Vec::new(), consecutive: 0, last_pred: None }
+    }
+
+    /// Feed the prediction of CONV block `block` (0-based). Returns the
+    /// decision; callers must feed blocks in order.
+    pub fn feed(&mut self, block: usize, pred: usize) -> EeDecision {
+        debug_assert_eq!(block, self.table.len(), "blocks must be fed in order");
+        self.table.push((block, pred));
+        // blocks before E_s do not participate in the consistency check
+        if block + 1 < self.cfg.e_s {
+            return EeDecision::Continue;
+        }
+        if self.last_pred == Some(pred) || (self.consecutive == 0 && self.last_pred.is_none()) {
+            self.consecutive += 1;
+        } else {
+            self.consecutive = 1;
+        }
+        self.last_pred = Some(pred);
+        if self.consecutive >= self.cfg.e_c {
+            EeDecision::Exit(pred)
+        } else {
+            EeDecision::Continue
+        }
+    }
+
+    /// Reset for the next query.
+    pub fn reset(&mut self) {
+        self.table.clear();
+        self.consecutive = 0;
+        self.last_pred = None;
+    }
+
+    /// Blocks consumed so far (= exit depth once Exit is returned).
+    pub fn blocks_used(&self) -> usize {
+        self.table.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ee(e_s: usize, e_c: usize) -> EarlyExitController {
+        EarlyExitController::new(EeConfig { e_s, e_c })
+    }
+
+    #[test]
+    fn exits_after_ec_consistent_blocks() {
+        let mut c = ee(1, 2);
+        assert_eq!(c.feed(0, 3), EeDecision::Continue);
+        assert_eq!(c.feed(1, 3), EeDecision::Exit(3));
+        assert_eq!(c.blocks_used(), 2);
+    }
+
+    #[test]
+    fn disagreement_resets_counter() {
+        let mut c = ee(1, 2);
+        assert_eq!(c.feed(0, 3), EeDecision::Continue);
+        assert_eq!(c.feed(1, 4), EeDecision::Continue);
+        assert_eq!(c.feed(2, 4), EeDecision::Exit(4));
+    }
+
+    #[test]
+    fn es_delays_participation() {
+        // E_s = 3: blocks 0 and 1 are ignored entirely
+        let mut c = ee(3, 2);
+        assert_eq!(c.feed(0, 1), EeDecision::Continue);
+        assert_eq!(c.feed(1, 1), EeDecision::Continue);
+        assert_eq!(c.feed(2, 1), EeDecision::Continue); // first counted block
+        assert_eq!(c.feed(3, 1), EeDecision::Exit(1));
+    }
+
+    #[test]
+    fn ec1_exits_immediately_at_es() {
+        let mut c = ee(2, 1);
+        assert_eq!(c.feed(0, 9), EeDecision::Continue);
+        assert_eq!(c.feed(1, 9), EeDecision::Exit(9));
+    }
+
+    #[test]
+    fn paper_default_2_2() {
+        let mut c = EarlyExitController::new(EeConfig::paper_default());
+        assert_eq!(c.feed(0, 5), EeDecision::Continue); // block 1 ignored (E_s=2)
+        assert_eq!(c.feed(1, 5), EeDecision::Continue); // 1st counted
+        assert_eq!(c.feed(2, 5), EeDecision::Exit(5)); // 2nd consistent
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut c = ee(1, 2);
+        c.feed(0, 1);
+        c.reset();
+        assert_eq!(c.blocks_used(), 0);
+        assert_eq!(c.feed(0, 2), EeDecision::Continue);
+        assert_eq!(c.feed(1, 2), EeDecision::Exit(2));
+    }
+
+    #[test]
+    fn distance_table_records_history() {
+        let mut c = ee(1, 4);
+        for (b, p) in [(0, 1), (1, 2), (2, 2), (3, 2)] {
+            c.feed(b, p);
+        }
+        assert_eq!(c.table, vec![(0, 1), (1, 2), (2, 2), (3, 2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "E_s is 1-based")]
+    fn rejects_zero_es() {
+        ee(0, 1);
+    }
+}

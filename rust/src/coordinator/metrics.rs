@@ -1,0 +1,99 @@
+//! Coordinator metrics: request counters and latency distributions for
+//! every operation class, snapshotted on demand.
+
+use crate::util::stats::OnlineStats;
+
+/// Operation classes tracked separately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    AddShot,
+    Train,
+    Query,
+}
+
+/// Live metrics owned by the worker thread.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub add_shot: OnlineStats,
+    pub train: OnlineStats,
+    pub query: OnlineStats,
+    pub queries_exited_early: u64,
+    pub blocks_used_total: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, op: Op, seconds: f64) {
+        let s = seconds * 1e3; // store milliseconds
+        match op {
+            Op::AddShot => self.add_shot.push(s),
+            Op::Train => self.train.push(s),
+            Op::Query => self.query.push(s),
+        }
+    }
+
+    pub fn record_query_depth(&mut self, blocks_used: usize, exited_early: bool) {
+        self.blocks_used_total += blocks_used as u64;
+        if exited_early {
+            self.queries_exited_early += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let q = self.query.n.max(1) as f64;
+        MetricsSnapshot {
+            shots: self.add_shot.n,
+            trains: self.train.n,
+            queries: self.query.n,
+            errors: self.errors,
+            add_shot_ms_mean: self.add_shot.mean(),
+            train_ms_mean: self.train.mean(),
+            query_ms_mean: self.query.mean(),
+            query_ms_max: if self.query.n == 0 { 0.0 } else { self.query.max },
+            early_exit_rate: self.queries_exited_early as f64 / q,
+            avg_blocks_used: self.blocks_used_total as f64 / q,
+        }
+    }
+}
+
+/// Immutable snapshot returned over the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub shots: u64,
+    pub trains: u64,
+    pub queries: u64,
+    pub errors: u64,
+    pub add_shot_ms_mean: f64,
+    pub train_ms_mean: f64,
+    pub query_ms_mean: f64,
+    pub query_ms_max: f64,
+    pub early_exit_rate: f64,
+    pub avg_blocks_used: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let mut m = Metrics::default();
+        m.record(Op::AddShot, 0.001);
+        m.record(Op::AddShot, 0.003);
+        m.record(Op::Query, 0.010);
+        m.record_query_depth(2, true);
+        let s = m.snapshot();
+        assert_eq!(s.shots, 2);
+        assert_eq!(s.queries, 1);
+        assert!((s.add_shot_ms_mean - 2.0).abs() < 1e-9);
+        assert!((s.early_exit_rate - 1.0).abs() < 1e-9);
+        assert!((s.avg_blocks_used - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.queries, 0);
+        assert_eq!(s.query_ms_max, 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The on-device-learning coordinator — the paper's L3 system logic.
+//!
+//! A few-shot session accumulates labeled shots, trains the HDC model in a
+//! single pass (batched per class, Fig. 12), and serves queries with the
+//! early-exit policy (Fig. 11). `server` wraps it all behind an
+//! mpsc-request event loop with a worker thread owning the compute engine,
+//! so callers interact with the device the way a host driver would.
+
+pub mod batcher;
+pub mod early_exit;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use early_exit::EarlyExitController;
+pub use request::{Request, Response};
+pub use router::{DeviceRouter, Placement};
+pub use server::Coordinator;
+pub use session::FslSession;

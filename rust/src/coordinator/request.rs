@@ -1,0 +1,56 @@
+//! Request/response protocol between clients and the coordinator's worker
+//! thread — the host<->device command stream of the test setup (Fig. 13a).
+
+use crate::config::EeConfig;
+use crate::coordinator::session::QueryOutcome;
+
+/// Commands accepted by the coordinator.
+#[derive(Debug)]
+pub enum Request {
+    /// Create a few-shot session; replies `SessionCreated`.
+    CreateSession { n_way: usize, hv_bits: u32 },
+    /// Add one labeled shot (raw image, flat NHWC). The coordinator
+    /// batches same-class shots and trains when a class reaches k_shot
+    /// or on `FinishTraining`.
+    AddShot { session: u64, class: usize, image: Vec<f32> },
+    /// Add one labeled shot given as a pre-extracted feature vector,
+    /// bypassing the FE — Fig. 7: "either the features extracted by FE or
+    /// the raw input data can serve as the input to the FSL classifier".
+    /// Trains the final branch only (no EE branch HVs exist without FE).
+    AddFeatureShot { session: u64, class: usize, feature: Vec<f32> },
+    /// Classify a pre-extracted feature vector (final branch, no EE).
+    QueryFeature { session: u64, feature: Vec<f32> },
+    /// Flush partial batches and finish single-pass training.
+    FinishTraining { session: u64 },
+    /// Classify an image; `ee` enables early exit.
+    Query { session: u64, image: Vec<f32>, ee: Option<EeConfig> },
+    /// Drop a session.
+    CloseSession { session: u64 },
+    /// Snapshot metrics.
+    GetMetrics,
+    /// Stop the worker loop.
+    Shutdown,
+}
+
+/// Replies.
+#[derive(Debug)]
+pub enum Response {
+    SessionCreated { session: u64 },
+    ShotAccepted { session: u64, pending: usize, trained_classes: usize },
+    TrainingDone { session: u64, shots: usize },
+    QueryResult { session: u64, outcome: QueryOutcome },
+    SessionClosed { session: u64 },
+    Metrics(crate::coordinator::metrics::MetricsSnapshot),
+    ShuttingDown,
+    Error(String),
+}
+
+impl Response {
+    /// Convenience for tests: unwrap a query result.
+    pub fn expect_query(self) -> QueryOutcome {
+        match self {
+            Response::QueryResult { outcome, .. } => outcome,
+            other => panic!("expected QueryResult, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Multi-device router: fans few-shot sessions out over a fleet of
+//! FSL-HDnn devices (coordinators), vLLM-router style. Edge deployments
+//! gang several accelerators behind one endpoint; the router places each
+//! new session on the least-loaded device (class-memory pressure counts
+//! as load) and pins all of a session's traffic to its device.
+
+use std::collections::HashMap;
+
+use crate::config::EeConfig;
+use crate::coordinator::server::Coordinator;
+use crate::coordinator::session::QueryOutcome;
+use crate::runtime::ComputeEngine;
+
+/// Routing policy for new sessions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// A routed session id: (device index, device-local session id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RoutedSession {
+    pub device: usize,
+    pub local: u64,
+}
+
+/// The router: owns `n` coordinators and the session placement table.
+pub struct DeviceRouter {
+    devices: Vec<Coordinator>,
+    policy: Placement,
+    /// open sessions per device (load proxy)
+    load: Vec<usize>,
+    /// global session id -> placement
+    table: HashMap<u64, RoutedSession>,
+    next_global: u64,
+    rr_next: usize,
+}
+
+impl DeviceRouter {
+    /// Spawn `n_devices` coordinators from a factory-of-factories (each
+    /// device's engine is constructed inside its own worker thread).
+    pub fn start<F, G>(n_devices: usize, k_shot: usize, policy: Placement, make: F)
+        -> anyhow::Result<Self>
+    where
+        F: Fn(usize) -> G,
+        G: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
+    {
+        anyhow::ensure!(n_devices >= 1, "need at least one device");
+        let mut devices = Vec::with_capacity(n_devices);
+        for i in 0..n_devices {
+            devices.push(Coordinator::start(make(i), k_shot)?);
+        }
+        Ok(DeviceRouter {
+            load: vec![0; n_devices],
+            devices,
+            policy,
+            table: HashMap::new(),
+            next_global: 1,
+            rr_next: 0,
+        })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn pick_device(&mut self) -> usize {
+        match self.policy {
+            Placement::RoundRobin => {
+                let d = self.rr_next % self.devices.len();
+                self.rr_next += 1;
+                d
+            }
+            Placement::LeastLoaded => {
+                let mut best = 0;
+                for (i, &l) in self.load.iter().enumerate() {
+                    if l < self.load[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Create a session somewhere in the fleet; on a full device, falls
+    /// back to any device with room (backpressure surfaces only when the
+    /// whole fleet is out of class memory).
+    pub fn create_session(&mut self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
+        let first = self.pick_device();
+        let n = self.devices.len();
+        let mut last_err = None;
+        for off in 0..n {
+            let d = (first + off) % n;
+            match self.devices[d].create_session(n_way, hv_bits) {
+                Ok(local) => {
+                    let gid = self.next_global;
+                    self.next_global += 1;
+                    self.table.insert(gid, RoutedSession { device: d, local });
+                    self.load[d] += 1;
+                    return Ok(gid);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no devices")))
+    }
+
+    fn route(&self, session: u64) -> anyhow::Result<RoutedSession> {
+        self.table
+            .get(&session)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown routed session {session}"))
+    }
+
+    pub fn placement(&self, session: u64) -> Option<RoutedSession> {
+        self.table.get(&session).copied()
+    }
+
+    pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
+        let r = self.route(session)?;
+        self.devices[r.device].add_shot(r.local, class, image)
+    }
+
+    pub fn finish_training(&self, session: u64) -> anyhow::Result<usize> {
+        let r = self.route(session)?;
+        self.devices[r.device].finish_training(r.local)
+    }
+
+    pub fn query(
+        &self,
+        session: u64,
+        image: Vec<f32>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<QueryOutcome> {
+        let r = self.route(session)?;
+        self.devices[r.device].query(r.local, image, ee)
+    }
+
+    pub fn close_session(&mut self, session: u64) -> anyhow::Result<()> {
+        let r = self.route(session)?;
+        self.devices[r.device]
+            .call(crate::coordinator::request::Request::CloseSession { session: r.local });
+        self.load[r.device] = self.load[r.device].saturating_sub(1);
+        self.table.remove(&session);
+        Ok(())
+    }
+
+    /// Per-device open-session counts.
+    pub fn loads(&self) -> &[usize] {
+        &self.load
+    }
+
+    /// Aggregate metrics across the fleet.
+    pub fn fleet_metrics(&self) -> Vec<crate::coordinator::metrics::MetricsSnapshot> {
+        self.devices.iter().map(|d| d.metrics()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Router tests that need a real engine live in
+    // rust/tests/integration_coordinator.rs; placement arithmetic is
+    // covered there too (it needs running devices).
+}

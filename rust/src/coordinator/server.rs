@@ -1,0 +1,350 @@
+//! The coordinator event loop: a worker thread owns the compute engine
+//! (PJRT or native) and all session state; clients talk over an mpsc
+//! channel exactly like a host driving the device.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::EeConfig;
+use crate::coordinator::batcher::ClassBatcher;
+use crate::coordinator::metrics::{Metrics, Op};
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::session::FslSession;
+use crate::hdc::class_mem::{Allocation, ClassMemoryManager};
+use crate::runtime::ComputeEngine;
+
+struct SessionState {
+    session: FslSession,
+    batcher: ClassBatcher<Vec<f32>>,
+}
+
+struct Worker {
+    engine: ComputeEngine,
+    k_shot: usize,
+    sessions: HashMap<u64, SessionState>,
+    next_id: u64,
+    metrics: Metrics,
+    /// models the chip's 256 KB class memory: sessions that do not fit on
+    /// the device are rejected exactly like the hardware would
+    class_mem: ClassMemoryManager,
+}
+
+impl Worker {
+    /// Encode one raw feature vector (pad/validate against the model's F).
+    fn encode_feature(&self, feature: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let fdim = self.engine.model().feature_dim;
+        anyhow::ensure!(
+            feature.len() <= fdim,
+            "feature length {} exceeds model F={fdim}",
+            feature.len()
+        );
+        let mut f = feature.to_vec();
+        f.resize(fdim, 0.0);
+        Ok(self.engine.encode(&[f])?.remove(0))
+    }
+
+    /// FE + encode for a batch of images -> per image per branch HVs.
+    fn extract_hvs(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
+        let branches = self.engine.fe_forward(images)?;
+        let nb = self.engine.model().n_branches();
+        // flatten to one encode batch: image-major, branch-minor
+        let mut feats = Vec::with_capacity(images.len() * nb);
+        for image_branches in &branches {
+            for f in image_branches {
+                feats.push(f.clone());
+            }
+        }
+        let hvs = self.engine.encode(&feats)?;
+        Ok(hvs
+            .chunks(nb)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+
+    fn train_full_batch(
+        &mut self,
+        session_id: u64,
+        class: usize,
+        images: Vec<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        let shots_hvs = self.extract_hvs(&images)?;
+        let st = self
+            .sessions
+            .get_mut(&session_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
+        st.session.train_batch(class, &shots_hvs);
+        Ok(())
+    }
+
+    fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::CreateSession { n_way, hv_bits } => {
+                let model = self.engine.model();
+                let id = self.next_id;
+                let alloc = Allocation {
+                    session: id,
+                    n_classes: n_way,
+                    n_branches: model.n_branches(),
+                    hv_bits,
+                    d: model.d,
+                };
+                if let Err(e) = self.class_mem.allocate(alloc) {
+                    self.metrics.errors += 1;
+                    return Response::Error(e.to_string());
+                }
+                self.next_id += 1;
+                let session =
+                    FslSession::new(id, n_way, model.d, model.n_branches()).with_precision(hv_bits);
+                self.sessions.insert(
+                    id,
+                    SessionState { session, batcher: ClassBatcher::new(self.k_shot) },
+                );
+                Response::SessionCreated { session: id }
+            }
+            Request::AddShot { session, class, image } => {
+                let t0 = Instant::now();
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                if class >= st.session.n_way {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!(
+                        "class {class} out of range for {}-way session",
+                        st.session.n_way
+                    ));
+                }
+                let maybe_batch = st.batcher.push(class, image);
+                if let Some(batch) = maybe_batch {
+                    if let Err(e) = self.train_full_batch(session, batch.class, batch.items) {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                }
+                let st = self.sessions.get(&session).unwrap();
+                self.metrics.record(Op::AddShot, t0.elapsed().as_secs_f64());
+                Response::ShotAccepted {
+                    session,
+                    pending: st.batcher.pending_shots(),
+                    trained_classes: st.session.shots_seen / self.k_shot.max(1),
+                }
+            }
+            Request::AddFeatureShot { session, class, feature } => {
+                let t0 = Instant::now();
+                let hv = match self.encode_feature(&feature) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                };
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                if class >= st.session.n_way {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("class {class} out of range"));
+                }
+                // raw-feature input bypasses the FE (Fig. 7): every branch
+                // sees the same classifier input, so all branch models get
+                // the identical HV — EE queries stay well-defined
+                let hvs = vec![hv; st.session.n_branches];
+                st.session.train_shot(class, &hvs);
+                self.metrics.record(Op::AddShot, t0.elapsed().as_secs_f64());
+                Response::ShotAccepted {
+                    session,
+                    pending: st.batcher.pending_shots(),
+                    trained_classes: st.session.shots_seen / self.k_shot.max(1),
+                }
+            }
+            Request::QueryFeature { session, feature } => {
+                let t0 = Instant::now();
+                let hv = match self.encode_feature(&feature) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                };
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                let outcome = st.session.query_full(&hv);
+                self.metrics.record(Op::Query, t0.elapsed().as_secs_f64());
+                self.metrics.record_query_depth(outcome.blocks_used, outcome.exited_early);
+                Response::QueryResult { session, outcome }
+            }
+            Request::FinishTraining { session } => {
+                let t0 = Instant::now();
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                let partials = st.batcher.flush_all();
+                for batch in partials {
+                    if let Err(e) = self.train_full_batch(session, batch.class, batch.items) {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                }
+                let shots = self.sessions.get(&session).unwrap().session.shots_seen;
+                self.metrics.record(Op::Train, t0.elapsed().as_secs_f64());
+                Response::TrainingDone { session, shots }
+            }
+            Request::Query { session, image, ee } => {
+                let t0 = Instant::now();
+                let hvs = match self.extract_hvs(std::slice::from_ref(&image)) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                };
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                let outcome = match ee {
+                    Some(cfg) => st.session.query_early_exit(&hvs[0], cfg),
+                    None => st.session.query_full(&hvs[0][hvs[0].len() - 1]),
+                };
+                self.metrics.record(Op::Query, t0.elapsed().as_secs_f64());
+                self.metrics.record_query_depth(outcome.blocks_used, outcome.exited_early);
+                Response::QueryResult { session, outcome }
+            }
+            Request::CloseSession { session } => {
+                if self.sessions.remove(&session).is_some() {
+                    self.class_mem.release(session);
+                    Response::SessionClosed { session }
+                } else {
+                    Response::Error(format!("unknown session {session}"))
+                }
+            }
+            Request::GetMetrics => Response::Metrics(self.metrics.snapshot()),
+            Request::Shutdown => Response::ShuttingDown,
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Sender<(Request, Sender<Response>)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread. The engine is *constructed inside* the
+    /// worker (PJRT clients are not `Send`); `factory` runs there once and
+    /// any construction error is reported back before `start` returns.
+    pub fn start<F>(factory: F, k_shot: usize) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<(Request, Sender<Response>)>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::spawn(move || {
+            let engine = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let mut worker = Worker {
+                engine,
+                k_shot,
+                sessions: HashMap::new(),
+                next_id: 1,
+                metrics: Metrics::default(),
+                class_mem: ClassMemoryManager::paper(),
+            };
+            while let Ok((req, reply)) = rx.recv() {
+                let shutdown = matches!(req, Request::Shutdown);
+                let resp = worker.handle(req);
+                let _ = reply.send(resp);
+                if shutdown {
+                    break;
+                }
+            }
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Coordinator { tx, handle: Some(handle) }),
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                anyhow::bail!("engine construction failed: {e}")
+            }
+            Err(_) => anyhow::bail!("coordinator worker died during startup"),
+        }
+    }
+
+    /// Synchronous request/response.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = channel();
+        if self.tx.send((req, rtx)).is_err() {
+            return Response::Error("coordinator stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+    }
+
+    /// Convenience wrappers -----------------------------------------------
+
+    pub fn create_session(&self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
+        match self.call(Request::CreateSession { n_way, hv_bits }) {
+            Response::SessionCreated { session } => Ok(session),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
+        match self.call(Request::AddShot { session, class, image }) {
+            Response::ShotAccepted { .. } => Ok(()),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn finish_training(&self, session: u64) -> anyhow::Result<usize> {
+        match self.call(Request::FinishTraining { session }) {
+            Response::TrainingDone { shots, .. } => Ok(shots),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn query(
+        &self,
+        session: u64,
+        image: Vec<f32>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<crate::coordinator::session::QueryOutcome> {
+        match self.call(Request::Query { session, image, ee }) {
+            Response::QueryResult { outcome, .. } => Ok(outcome),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn metrics(&self) -> crate::coordinator::metrics::MetricsSnapshot {
+        match self.call(Request::GetMetrics) {
+            Response::Metrics(m) => m,
+            _ => Default::default(),
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let (rtx, _rrx) = channel();
+        let _ = self.tx.send((Request::Shutdown, rtx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! A few-shot learning session: the device-side state for one N-way
+//! k-shot task — per-branch HDC models (branch class HVs for early exit,
+//! Section V-A) plus the single-pass training and query logic.
+
+use crate::config::EeConfig;
+use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
+use crate::hdc::{distance::argmin, HdcModel};
+
+/// Outcome of one query.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueryOutcome {
+    pub prediction: usize,
+    /// CONV blocks evaluated (4 = ran the whole FE)
+    pub blocks_used: usize,
+    /// whether early exit fired before the final block
+    pub exited_early: bool,
+}
+
+/// Session state: one HDC model per FE branch.
+#[derive(Clone, Debug)]
+pub struct FslSession {
+    pub id: u64,
+    pub n_way: usize,
+    pub d: usize,
+    pub n_branches: usize,
+    /// branch_models[b] = HDC model fed by CONV block b's features
+    branch_models: Vec<HdcModel>,
+    pub shots_seen: usize,
+}
+
+impl FslSession {
+    pub fn new(id: u64, n_way: usize, d: usize, n_branches: usize) -> Self {
+        assert!(n_branches >= 1);
+        FslSession {
+            id,
+            n_way,
+            d,
+            n_branches,
+            branch_models: (0..n_branches).map(|_| HdcModel::new(n_way, d)).collect(),
+            shots_seen: 0,
+        }
+    }
+
+    pub fn with_precision(mut self, bits: u32) -> Self {
+        self.branch_models =
+            self.branch_models.into_iter().map(|m| m.with_precision(bits)).collect();
+        self
+    }
+
+    /// Single-pass training on one shot: `branch_hvs[b]` is the encoded HV
+    /// of CONV block b's feature (all branches trained — EE training).
+    pub fn train_shot(&mut self, class: usize, branch_hvs: &[Vec<f32>]) {
+        assert_eq!(branch_hvs.len(), self.n_branches, "one HV per branch");
+        for (m, hv) in self.branch_models.iter_mut().zip(branch_hvs) {
+            m.train_shot(class, hv);
+        }
+        self.shots_seen += 1;
+    }
+
+    /// Batched single-pass training: all k same-class shots at once
+    /// (Fig. 12) — identical math to `train_shot` k times.
+    pub fn train_batch(&mut self, class: usize, shots_branch_hvs: &[Vec<Vec<f32>>]) {
+        for (b, m) in self.branch_models.iter_mut().enumerate() {
+            let hvs: Vec<Vec<f32>> =
+                shots_branch_hvs.iter().map(|shot| shot[b].clone()).collect();
+            m.train_batch(class, &hvs);
+        }
+        self.shots_seen += shots_branch_hvs.len();
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.branch_models.iter().all(|m| m.is_trained())
+    }
+
+    /// Query using only the final branch (no early exit).
+    pub fn query_full(&mut self, final_hv: &[f32]) -> QueryOutcome {
+        let pred = self.branch_models[self.n_branches - 1].predict(final_hv);
+        QueryOutcome { prediction: pred, blocks_used: self.n_branches, exited_early: false }
+    }
+
+    /// Query with early exit: `branch_hvs` are fed block by block; the
+    /// controller stops as soon as (E_s, E_c) is satisfied. In hardware
+    /// the remaining blocks are never computed — callers use
+    /// `blocks_used` to account saved FE work.
+    pub fn query_early_exit(&mut self, branch_hvs: &[Vec<f32>], ee: EeConfig) -> QueryOutcome {
+        assert_eq!(branch_hvs.len(), self.n_branches);
+        let mut ctl = EarlyExitController::new(ee);
+        for (b, hv) in branch_hvs.iter().enumerate() {
+            let pred = self.branch_models[b].predict(hv);
+            if let EeDecision::Exit(p) = ctl.feed(b, pred) {
+                return QueryOutcome {
+                    prediction: p,
+                    blocks_used: b + 1,
+                    exited_early: b + 1 < self.n_branches,
+                };
+            }
+        }
+        // no exit fired: use the final block's prediction
+        let final_pred = ctl.table.last().map(|&(_, p)| p).unwrap_or(0);
+        QueryOutcome {
+            prediction: final_pred,
+            blocks_used: self.n_branches,
+            exited_early: false,
+        }
+    }
+
+    /// Distances from the final-branch model (for inspection / metrics).
+    pub fn final_distances(&mut self, hv: &[f32]) -> Vec<f64> {
+        self.branch_models[self.n_branches - 1].distances(hv)
+    }
+
+    /// Prediction from distances (exposed for the fused-PJRT path, where
+    /// the distance table arrives from the artifact).
+    pub fn predict_from_distances(dists: &[f64]) -> usize {
+        argmin(dists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn hv(rng: &mut Rng, proto: &[f32]) -> Vec<f32> {
+        proto.iter().map(|p| p + 0.3 * rng.gauss_f32()).collect()
+    }
+
+    fn protos(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| (0..d).map(|_| 2.0 * rng.gauss_f32()).collect()).collect()
+    }
+
+    #[test]
+    fn train_and_query_full() {
+        let d = 256;
+        let mut rng = Rng::new(1);
+        let ps = protos(&mut rng, 3, d);
+        let mut s = FslSession::new(1, 3, d, 4);
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..5 {
+                let hvs: Vec<Vec<f32>> = (0..4).map(|_| hv(&mut rng, p)).collect();
+                s.train_shot(c, &hvs);
+            }
+        }
+        assert!(s.is_trained());
+        assert_eq!(s.shots_seen, 15);
+        for (c, p) in ps.iter().enumerate() {
+            let out = s.query_full(&hv(&mut rng, p));
+            assert_eq!(out.prediction, c);
+            assert_eq!(out.blocks_used, 4);
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let d = 64;
+        let mut rng = Rng::new(2);
+        let p = protos(&mut rng, 1, d).remove(0);
+        let shots: Vec<Vec<Vec<f32>>> = (0..5)
+            .map(|_| (0..2).map(|_| hv(&mut rng, &p)).collect())
+            .collect();
+        let mut seq = FslSession::new(1, 2, d, 2);
+        for shot in &shots {
+            seq.train_shot(0, shot);
+        }
+        let mut bat = FslSession::new(2, 2, d, 2);
+        bat.train_batch(0, &shots);
+        assert_eq!(seq.shots_seen, bat.shots_seen);
+        let q = hv(&mut rng, &p);
+        assert_eq!(
+            seq.final_distances(&q)
+                .iter()
+                .zip(bat.final_distances(&q))
+                .all(|(a, b)| (a - b).abs() < 1e-3),
+            true
+        );
+    }
+
+    #[test]
+    fn early_exit_uses_fewer_blocks_when_confident() {
+        let d = 256;
+        let mut rng = Rng::new(3);
+        let ps = protos(&mut rng, 2, d);
+        let mut s = FslSession::new(1, 2, d, 4);
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..5 {
+                let hvs: Vec<Vec<f32>> = (0..4).map(|_| hv(&mut rng, p)).collect();
+                s.train_shot(c, &hvs);
+            }
+        }
+        // every branch agrees -> exit at block E_s..E_s+E_c-1
+        let hvs: Vec<Vec<f32>> = (0..4).map(|_| hv(&mut rng, &ps[0])).collect();
+        let out = s.query_early_exit(&hvs, crate::config::EeConfig { e_s: 1, e_c: 2 });
+        assert_eq!(out.prediction, 0);
+        assert_eq!(out.blocks_used, 2);
+        assert!(out.exited_early);
+    }
+
+    #[test]
+    fn early_exit_runs_full_when_branches_disagree() {
+        let d = 128;
+        let mut rng = Rng::new(4);
+        let ps = protos(&mut rng, 2, d);
+        let mut s = FslSession::new(1, 2, d, 4);
+        for (c, p) in ps.iter().enumerate() {
+            let hvs: Vec<Vec<f32>> = (0..4).map(|_| hv(&mut rng, p)).collect();
+            s.train_shot(c, &hvs);
+        }
+        // feed alternating-class branch HVs: no two consecutive agree
+        let hvs = vec![
+            hv(&mut rng, &ps[0]),
+            hv(&mut rng, &ps[1]),
+            hv(&mut rng, &ps[0]),
+            hv(&mut rng, &ps[1]),
+        ];
+        let out = s.query_early_exit(&hvs, crate::config::EeConfig { e_s: 1, e_c: 2 });
+        assert_eq!(out.blocks_used, 4);
+        assert!(!out.exited_early);
+    }
+
+    #[test]
+    #[should_panic(expected = "one HV per branch")]
+    fn branch_arity_checked() {
+        let mut s = FslSession::new(1, 2, 16, 4);
+        s.train_shot(0, &[vec![0.0; 16]]);
+    }
+}

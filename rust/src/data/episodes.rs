@@ -1,0 +1,107 @@
+//! N-way k-shot episode sampling — the paper's FSL protocol (footnote 1):
+//! an episode draws N unseen classes, k labeled support samples per class
+//! and a query set to evaluate on.
+
+use super::synth::SyntheticDataset;
+use crate::util::prng::Rng;
+
+/// One few-shot episode over feature vectors.
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub n_way: usize,
+    pub k_shot: usize,
+    /// support[c] = k feature vectors for episode-class c
+    pub support: Vec<Vec<Vec<f32>>>,
+    /// (feature, episode-class label)
+    pub queries: Vec<(Vec<f32>, usize)>,
+    /// which pool classes were drawn (for image regeneration)
+    pub pool_classes: Vec<usize>,
+}
+
+/// Samples episodes from a synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct EpisodeSampler {
+    pub dataset: SyntheticDataset,
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub queries_per_class: usize,
+}
+
+impl EpisodeSampler {
+    pub fn new(
+        dataset: SyntheticDataset,
+        n_way: usize,
+        k_shot: usize,
+        queries_per_class: usize,
+    ) -> Self {
+        assert!(n_way <= dataset.n_classes(), "n_way exceeds class pool");
+        EpisodeSampler { dataset, n_way, k_shot, queries_per_class }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Episode {
+        let pool_classes = rng.choose_k(self.dataset.n_classes(), self.n_way);
+        let mut support = Vec::with_capacity(self.n_way);
+        let mut queries = Vec::new();
+        for (label, &pc) in pool_classes.iter().enumerate() {
+            support.push(self.dataset.sample_n(pc, self.k_shot, rng));
+            for _ in 0..self.queries_per_class {
+                queries.push((self.dataset.sample(pc, rng), label));
+            }
+        }
+        rng.shuffle(&mut queries);
+        Episode { n_way: self.n_way, k_shot: self.k_shot, support, queries, pool_classes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::DatasetPreset;
+
+    fn sampler() -> EpisodeSampler {
+        let ds = SyntheticDataset::new(DatasetPreset::Cifar100, 32, 1);
+        EpisodeSampler::new(ds, 5, 3, 4)
+    }
+
+    #[test]
+    fn episode_shape() {
+        let mut rng = Rng::new(1);
+        let ep = sampler().sample(&mut rng);
+        assert_eq!(ep.support.len(), 5);
+        assert!(ep.support.iter().all(|s| s.len() == 3));
+        assert_eq!(ep.queries.len(), 20);
+        assert!(ep.queries.iter().all(|(_, l)| *l < 5));
+        assert_eq!(ep.pool_classes.len(), 5);
+        let mut pc = ep.pool_classes.clone();
+        pc.sort_unstable();
+        pc.dedup();
+        assert_eq!(pc.len(), 5, "episode classes must be distinct");
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let mut rng = Rng::new(2);
+        let ep = sampler().sample(&mut rng);
+        let mut counts = [0usize; 5];
+        for (_, l) in &ep.queries {
+            counts[*l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn episodes_differ() {
+        let mut rng = Rng::new(3);
+        let s = sampler();
+        let a = s.sample(&mut rng);
+        let b = s.sample(&mut rng);
+        assert!(a.pool_classes != b.pool_classes || a.queries[0].0 != b.queries[0].0);
+    }
+
+    #[test]
+    #[should_panic(expected = "n_way exceeds class pool")]
+    fn n_way_bounds() {
+        let ds = SyntheticDataset::new(DatasetPreset::TrafficSign, 16, 1);
+        EpisodeSampler::new(ds, 100, 1, 1);
+    }
+}

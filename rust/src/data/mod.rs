@@ -1,0 +1,17 @@
+//! Synthetic few-shot data substrates.
+//!
+//! The paper evaluates on CIFAR-100 / Flower102 / Traffic-sign features
+//! from an ImageNet-pretrained ResNet-18 — neither the datasets nor the
+//! pretrained weights are available here (repro band 0), so `synth`
+//! generates embedding-space class clusters whose difficulty presets are
+//! calibrated to the paper's accuracy bands, and `images` generates
+//! procedural class-structured images for the conv/PJRT path
+//! (substitution table in DESIGN.md).
+
+pub mod episodes;
+pub mod images;
+pub mod synth;
+pub mod trace;
+
+pub use episodes::{Episode, EpisodeSampler};
+pub use synth::{DatasetPreset, SyntheticDataset};

@@ -1,0 +1,195 @@
+//! Trace-driven workloads: Poisson request arrivals over few-shot
+//! sessions, plus SLO accounting — the serving-side evaluation harness
+//! (edge devices see bursty personalize-then-query traffic, not batch
+//! sweeps).
+
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+/// One timed event in a workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceOp {
+    /// open a new N-way session
+    NewSession { n_way: usize },
+    /// labeled shot for an open session (indices into the open-session list)
+    Shot { session_slot: usize, class: usize },
+    /// finish training an open session
+    Train { session_slot: usize },
+    /// query against a trained session
+    Query { session_slot: usize, class: usize },
+}
+
+/// (arrival time in seconds, operation)
+pub type TraceEvent = (f64, TraceOp);
+
+/// Poisson-arrival trace generator: sessions open at `session_rate` Hz;
+/// each runs shots -> train -> queries with exponential gaps at `op_rate`.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub n_way: usize,
+    pub k_shot: usize,
+    pub queries_per_session: usize,
+    pub session_rate_hz: f64,
+    pub op_rate_hz: f64,
+}
+
+impl Default for TraceGen {
+    fn default() -> Self {
+        TraceGen {
+            n_way: 5,
+            k_shot: 5,
+            queries_per_session: 20,
+            session_rate_hz: 0.5,
+            op_rate_hz: 50.0,
+        }
+    }
+}
+
+impl TraceGen {
+    fn exp(&self, rate: f64, rng: &mut Rng) -> f64 {
+        -(1.0 - rng.uniform()).ln() / rate
+    }
+
+    /// Generate a trace of `n_sessions` session lifecycles, sorted by time.
+    pub fn generate(&self, n_sessions: usize, rng: &mut Rng) -> Vec<TraceEvent> {
+        let mut events = Vec::new();
+        let mut session_t = 0.0f64;
+        for slot in 0..n_sessions {
+            session_t += self.exp(self.session_rate_hz, rng);
+            let mut t = session_t;
+            events.push((t, TraceOp::NewSession { n_way: self.n_way }));
+            // shots arrive class-grouped (user labels one class at a time)
+            for class in 0..self.n_way {
+                for _ in 0..self.k_shot {
+                    t += self.exp(self.op_rate_hz, rng);
+                    events.push((t, TraceOp::Shot { session_slot: slot, class }));
+                }
+            }
+            t += self.exp(self.op_rate_hz, rng);
+            events.push((t, TraceOp::Train { session_slot: slot }));
+            for q in 0..self.queries_per_session {
+                t += self.exp(self.op_rate_hz, rng);
+                events.push((t, TraceOp::Query { session_slot: slot, class: q % self.n_way }));
+            }
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        events
+    }
+}
+
+/// SLO accounting over measured (latency_ms, deadline_ms) pairs.
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    pub latencies_ms: Vec<f64>,
+    pub deadline_ms: f64,
+}
+
+impl SloReport {
+    pub fn new(deadline_ms: f64) -> Self {
+        SloReport { latencies_ms: Vec::new(), deadline_ms }
+    }
+
+    pub fn record(&mut self, latency_ms: f64) {
+        self.latencies_ms.push(latency_ms);
+    }
+
+    pub fn attainment(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 1.0;
+        }
+        self.latencies_ms.iter().filter(|&&l| l <= self.deadline_ms).count() as f64
+            / self.latencies_ms.len() as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.latencies_ms, 99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_time_ordered_and_complete() {
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(1);
+        let trace = gen.generate(3, &mut rng);
+        let expected = 3 * (1 + gen.n_way * gen.k_shot + 1 + gen.queries_per_session);
+        assert_eq!(trace.len(), expected);
+        for w in trace.windows(2) {
+            assert!(w[0].0 <= w[1].0, "trace not sorted");
+        }
+    }
+
+    #[test]
+    fn per_session_causality() {
+        // within a slot: NewSession < all Shots < Train < all Queries
+        let gen = TraceGen::default();
+        let mut rng = Rng::new(2);
+        let trace = gen.generate(4, &mut rng);
+        for slot in 0..4 {
+            let mut t_new = f64::NAN;
+            let mut t_train = f64::NAN;
+            let mut last_shot: f64 = 0.0;
+            let mut first_query = f64::INFINITY;
+            for (t, op) in &trace {
+                match op {
+                    TraceOp::NewSession { .. } => {
+                        if t_new.is_nan() {
+                            // NewSession events are per slot in order
+                        }
+                        let _ = &mut t_new;
+                    }
+                    TraceOp::Shot { session_slot, .. } if *session_slot == slot => {
+                        last_shot = last_shot.max(*t);
+                    }
+                    TraceOp::Train { session_slot } if *session_slot == slot => t_train = *t,
+                    TraceOp::Query { session_slot, .. } if *session_slot == slot => {
+                        first_query = first_query.min(*t);
+                    }
+                    _ => {}
+                }
+            }
+            assert!(last_shot < t_train, "slot {slot}: shot after train");
+            assert!(t_train < first_query, "slot {slot}: query before train");
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let gen = TraceGen { session_rate_hz: 2.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let trace = gen.generate(40, &mut rng);
+        let t_last_session = trace
+            .iter()
+            .filter(|(_, op)| matches!(op, TraceOp::NewSession { .. }))
+            .map(|(t, _)| *t)
+            .fold(0.0, f64::max);
+        let rate = 40.0 / t_last_session;
+        assert!((1.0..4.0).contains(&rate), "empirical session rate {rate}");
+    }
+
+    #[test]
+    fn slo_accounting() {
+        let mut slo = SloReport::new(10.0);
+        for l in [1.0, 5.0, 9.0, 11.0, 20.0] {
+            slo.record(l);
+        }
+        assert!((slo.attainment() - 0.6).abs() < 1e-9);
+        assert_eq!(slo.p50(), 9.0);
+        assert!(slo.p99() > 19.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = TraceGen::default();
+        let a = gen.generate(2, &mut Rng::new(7));
+        let b = gen.generate(2, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

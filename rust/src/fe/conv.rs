@@ -1,0 +1,314 @@
+//! Convolution substrate: dense NHWC conv with XLA-compatible SAME padding
+//! and the weight-clustered two-phase convolution of Fig. 4(b).
+//!
+//! Padding matches `jax.lax.conv_general_dilated(..., padding="SAME")`
+//! exactly (out = ceil(in/stride), asymmetric low/high pads) so the native
+//! FE reproduces the artifact numerics.
+
+/// A minimal HxWxC tensor (row-major, NHWC per image).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor3 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor3 {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Tensor3 { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c);
+        Tensor3 { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, y: usize, x: usize, ch: usize) -> &mut f32 {
+        &mut self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    pub fn relu(mut self) -> Self {
+        for v in self.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        self
+    }
+
+    /// Global average pool -> length-C feature.
+    pub fn global_avg_pool(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.c];
+        let hw = (self.h * self.w) as f32;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let base = (y * self.w + x) * self.c;
+                for ch in 0..self.c {
+                    out[ch] += self.data[base + ch];
+                }
+            }
+        }
+        out.iter_mut().for_each(|v| *v /= hw);
+        out
+    }
+
+    /// Strided spatial subsample (python's `h[:, ::s, ::s, :]`).
+    pub fn subsample(&self, s: usize) -> Tensor3 {
+        let ho = self.h.div_ceil(s);
+        let wo = self.w.div_ceil(s);
+        let mut out = Tensor3::zeros(ho, wo, self.c);
+        for y in 0..ho {
+            for x in 0..wo {
+                for ch in 0..self.c {
+                    *out.at_mut(y, x, ch) = self.at(y * s, x * s, ch);
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise addition.
+    pub fn add(mut self, other: &Tensor3) -> Tensor3 {
+        assert_eq!((self.h, self.w, self.c), (other.h, other.w, other.c));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        self
+    }
+}
+
+/// XLA SAME padding: (out_size, pad_lo) for one spatial dim.
+#[inline]
+fn same_pad(input: usize, k: usize, stride: usize) -> (usize, isize) {
+    let out = input.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(input) as isize;
+    (out, pad_total / 2)
+}
+
+/// Multi-accumulator dot product — breaks the serial FP dependency chain
+/// so LLVM vectorizes the FE hot loop (EXPERIMENTS.md §Perf).
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n8 = a.len() / 8 * 8;
+    let mut acc = [0f32; 8];
+    let (a8, b8) = (&a[..n8], &b[..n8]);
+    for (ca, cb) in a8.chunks_exact(8).zip(b8.chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for i in n8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Dense conv: weights (Cout, K, K, Cin) flattened row-major.
+pub fn conv2d(x: &Tensor3, w: &[f32], cout: usize, k: usize, stride: usize) -> Tensor3 {
+    assert_eq!(w.len(), cout * k * k * x.c);
+    let (ho, pad_y) = same_pad(x.h, k, stride);
+    let (wo, pad_x) = same_pad(x.w, k, stride);
+    let cin = x.c;
+    let kkc = k * k * cin;
+    let mut out = Tensor3::zeros(ho, wo, cout);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let obase = (oy * wo + ox) * cout;
+            for ky in 0..k {
+                let iy = oy as isize * stride as isize + ky as isize - pad_y;
+                if iy < 0 || iy >= x.h as isize {
+                    continue;
+                }
+                // contiguous kx run that stays inside the image: fuse the
+                // (kx, ci) loop into one long dot product per channel
+                let ix0 = ox as isize * stride as isize - pad_x;
+                let kx_lo = (-ix0).clamp(0, k as isize) as usize;
+                let kx_hi = ((x.w as isize - ix0).clamp(0, k as isize)) as usize;
+                if kx_lo >= kx_hi {
+                    continue;
+                }
+                let run = kx_hi - kx_lo;
+                let ibase = (iy as usize * x.w + (ix0 + kx_lo as isize) as usize) * cin;
+                let xrow = &x.data[ibase..ibase + run * cin];
+                let wbase = (ky * k + kx_lo) * cin;
+                for co in 0..cout {
+                    let wrow = &w[co * kkc + wbase..co * kkc + wbase + run * cin];
+                    out.data[obase + co] += dot_f32(xrow, wrow);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Weight-clustered conv (Fig. 4b): phase 1 bins activations by weight
+/// index into per-(group, centroid) partial sums, phase 2 multiplies the
+/// bins by the codebook. Numerically equals `conv2d` with reconstructed
+/// weights (up to f32 association) — asserted by tests.
+///
+/// `idx`: (Cout, K*K*Cin) centroid indices; `codebook`: (Cout, G, N).
+pub fn clustered_conv2d(
+    x: &Tensor3,
+    idx: &[u8],
+    codebook: &[f32],
+    cout: usize,
+    k: usize,
+    stride: usize,
+    ch_sub: usize,
+    n: usize,
+) -> Tensor3 {
+    let cin = x.c;
+    let ch_sub = ch_sub.min(cin);
+    let g = cin.div_ceil(ch_sub);
+    assert_eq!(idx.len(), cout * k * k * cin);
+    assert_eq!(codebook.len(), cout * g * n);
+    let (ho, pad_y) = same_pad(x.h, k, stride);
+    let (wo, pad_x) = same_pad(x.w, k, stride);
+    let mut out = Tensor3::zeros(ho, wo, cout);
+    let mut bins = vec![0f32; g * n];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for co in 0..cout {
+                bins.iter_mut().for_each(|b| *b = 0.0);
+                // phase 1: accumulate activations into (group, index) bins
+                for ky in 0..k {
+                    let iy = oy as isize * stride as isize + ky as isize - pad_y;
+                    if iy < 0 || iy >= x.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = ox as isize * stride as isize + kx as isize - pad_x;
+                        if ix < 0 || ix >= x.w as isize {
+                            continue;
+                        }
+                        let ibase = (iy as usize * x.w + ix as usize) * cin;
+                        let kbase = co * k * k * cin + (ky * k + kx) * cin;
+                        for ci in 0..cin {
+                            let gidx = ci / ch_sub;
+                            let nidx = idx[kbase + ci] as usize;
+                            bins[gidx * n + nidx] += x.data[ibase + ci];
+                        }
+                    }
+                }
+                // phase 2: MAC with codebook centroids
+                let cb = &codebook[co * g * n..(co + 1) * g * n];
+                let mut acc = 0f32;
+                for (b, c) in bins.iter().zip(cb) {
+                    acc += b * c;
+                }
+                out.data[(oy * wo + ox) * cout + co] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_tensor(h: usize, w: usize, c: usize, rng: &mut Rng) -> Tensor3 {
+        Tensor3::from_vec(h, w, c, (0..h * w * c).map(|_| rng.gauss_f32()).collect())
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 conv with identity weights = channel copy
+        let mut rng = Rng::new(1);
+        let x = rand_tensor(4, 4, 3, &mut rng);
+        let mut w = vec![0f32; 3 * 1 * 1 * 3];
+        for c in 0..3 {
+            w[c * 3 + c] = 1.0;
+        }
+        let y = conv2d(&x, &w, 3, 1, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn same_padding_stride1_shape() {
+        let mut rng = Rng::new(2);
+        let x = rand_tensor(5, 7, 2, &mut rng);
+        let w = vec![0.1f32; 4 * 3 * 3 * 2];
+        let y = conv2d(&x, &w, 4, 3, 1);
+        assert_eq!((y.h, y.w, y.c), (5, 7, 4));
+    }
+
+    #[test]
+    fn same_padding_stride2_shape_and_xla_asymmetry() {
+        // in=32, k=3, s=2 -> out=16, pad_total=1 -> pad_lo=0 (XLA rule)
+        let mut rng = Rng::new(3);
+        let x = rand_tensor(32, 32, 1, &mut rng);
+        let w = vec![1.0f32; 1 * 3 * 3 * 1];
+        let y = conv2d(&x, &w, 1, 3, 2);
+        assert_eq!((y.h, y.w), (16, 16));
+        // output (0,0) with pad_lo=0 sums x[0..3, 0..3]
+        let mut want = 0.0;
+        for yy in 0..3 {
+            for xx in 0..3 {
+                want += x.at(yy, xx, 0);
+            }
+        }
+        assert!((y.at(0, 0, 0) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn clustered_matches_dense_reconstruction() {
+        let mut rng = Rng::new(4);
+        let (cin, cout, k, ch_sub, n) = (8, 5, 3, 4, 4);
+        let x = rand_tensor(9, 9, cin, &mut rng);
+        let g = cin / ch_sub;
+        let idx: Vec<u8> = (0..cout * k * k * cin).map(|_| rng.below(n) as u8).collect();
+        let cb: Vec<f32> = (0..cout * g * n).map(|_| rng.gauss_f32()).collect();
+        // dense reconstruction
+        let mut w = vec![0f32; cout * k * k * cin];
+        for co in 0..cout {
+            for kk in 0..k * k {
+                for ci in 0..cin {
+                    let flat = co * k * k * cin + kk * cin + ci;
+                    let gi = ci / ch_sub;
+                    w[flat] = cb[co * g * n + gi * n + idx[flat] as usize];
+                }
+            }
+        }
+        for stride in [1, 2] {
+            let dense = conv2d(&x, &w, cout, k, stride);
+            let clus = clustered_conv2d(&x, &idx, &cb, cout, k, stride, ch_sub, n);
+            assert_eq!((dense.h, dense.w, dense.c), (clus.h, clus.w, clus.c));
+            for (a, b) in dense.data.iter().zip(&clus.data) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_avg_pool_means() {
+        let x = Tensor3::from_vec(2, 2, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        assert_eq!(x.global_avg_pool(), vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn subsample_matches_python_slicing() {
+        let x = Tensor3::from_vec(4, 4, 1, (0..16).map(|v| v as f32).collect());
+        let y = x.subsample(2);
+        assert_eq!((y.h, y.w), (2, 2));
+        assert_eq!(y.data, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let x = Tensor3::from_vec(1, 1, 3, vec![-1.0, 0.5, 2.0]).relu();
+        assert_eq!(x.data, vec![0.0, 0.5, 2.0]);
+        let y = x.add(&Tensor3::from_vec(1, 1, 3, vec![1.0, 1.0, 1.0]));
+        assert_eq!(y.data, vec![1.0, 1.5, 3.0]);
+    }
+}

@@ -1,0 +1,236 @@
+//! 1-D K-means weight clustering (Fig. 4a) — rust mirror of
+//! `python/compile/clustering.py` (quantile init, Lloyd iterations).
+
+/// A clustered conv layer: per-output-channel indices + codebooks.
+#[derive(Clone, Debug)]
+pub struct ClusteredLayer {
+    pub cout: usize,
+    pub k: usize,
+    pub cin: usize,
+    pub ch_sub: usize,
+    pub n: usize,
+    /// (Cout, K*K*Cin) centroid indices, layout (ky*K+kx)*Cin + ci
+    pub idx: Vec<u8>,
+    /// (Cout, G, N) centroids
+    pub codebook: Vec<f32>,
+}
+
+impl ClusteredLayer {
+    pub fn groups(&self) -> usize {
+        self.cin.div_ceil(self.ch_sub.min(self.cin))
+    }
+
+    /// Reconstruct dense weights (Cout, K, K, Cin) row-major.
+    pub fn reconstruct(&self) -> Vec<f32> {
+        let kkc = self.k * self.k * self.cin;
+        let g = self.groups();
+        let ch_sub = self.ch_sub.min(self.cin);
+        let mut w = vec![0f32; self.cout * kkc];
+        for co in 0..self.cout {
+            for kk in 0..kkc {
+                let ci = kk % self.cin;
+                let gi = ci / ch_sub;
+                let ni = self.idx[co * kkc + kk] as usize;
+                w[co * kkc + kk] = self.codebook[(co * g + gi) * self.n + ni];
+            }
+        }
+        w
+    }
+
+    /// Storage cost in bits: indices (log2 N each) + codebooks (16-bit).
+    pub fn storage_bits(&self) -> u64 {
+        let idx_bits = (self.n as f64).log2().ceil() as u64;
+        let kkc = (self.k * self.k * self.cin) as u64;
+        self.cout as u64 * (kkc * idx_bits + self.groups() as u64 * self.n as u64 * 16)
+    }
+}
+
+/// Linear-interpolated quantile (numpy default) on a sorted slice.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = q * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Lloyd's 1-D k-means with deterministic quantile init.
+/// Returns (centroids (n,), labels).
+pub fn kmeans_1d(values: &[f32], n: usize, iters: usize) -> (Vec<f32>, Vec<u8>) {
+    assert!(n <= 256, "u8 label space");
+    let v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+    if v.len() <= n {
+        // degenerate: every value its own centroid (sorted order)
+        let mut order: Vec<usize> = (0..v.len()).collect();
+        order.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut cents = vec![0f64; n];
+        let mut labels = vec![0u8; v.len()];
+        for (slot, &i) in order.iter().enumerate() {
+            cents[slot] = v[i];
+            labels[i] = slot as u8;
+        }
+        return (cents.iter().map(|&c| c as f32).collect(), labels);
+    }
+    let mut sorted = v.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut cents: Vec<f64> =
+        (0..n).map(|i| quantile_sorted(&sorted, (i as f64 + 0.5) / n as f64)).collect();
+    let eps = 1e-12 + 1e-9 * (sorted[sorted.len() - 1] - sorted[0]);
+    for i in 1..n {
+        if cents[i] <= cents[i - 1] {
+            cents[i] = cents[i - 1] + eps;
+        }
+    }
+    let assign = |cents: &[f64], x: f64| -> usize {
+        let mut best = 0;
+        let mut bd = (x - cents[0]).abs();
+        for (j, &c) in cents.iter().enumerate().skip(1) {
+            let d = (x - c).abs();
+            if d < bd {
+                bd = d;
+                best = j;
+            }
+        }
+        best
+    };
+    for _ in 0..iters {
+        let mut sums = vec![0f64; n];
+        let mut cnts = vec![0u64; n];
+        for &x in &v {
+            let j = assign(&cents, x);
+            sums[j] += x;
+            cnts[j] += 1;
+        }
+        for j in 0..n {
+            if cnts[j] > 0 {
+                cents[j] = sums[j] / cnts[j] as f64;
+            }
+        }
+    }
+    let labels: Vec<u8> = v.iter().map(|&x| assign(&cents, x) as u8).collect();
+    (cents.iter().map(|&c| c as f32).collect(), labels)
+}
+
+/// Cluster a conv layer's weights: `w` is (Cout, K, K, Cin) row-major.
+pub fn cluster_layer(w: &[f32], cout: usize, k: usize, cin: usize, ch_sub: usize, n: usize)
+    -> ClusteredLayer
+{
+    assert_eq!(w.len(), cout * k * k * cin);
+    let ch_sub_eff = ch_sub.min(cin);
+    let g = cin.div_ceil(ch_sub_eff);
+    let kkc = k * k * cin;
+    let mut idx = vec![0u8; cout * kkc];
+    let mut codebook = vec![0f32; cout * g * n];
+    let mut member_pos: Vec<usize> = Vec::new();
+    let mut member_val: Vec<f32> = Vec::new();
+    for co in 0..cout {
+        for gi in 0..g {
+            member_pos.clear();
+            member_val.clear();
+            for kk in 0..kkc {
+                let ci = kk % cin;
+                if ci / ch_sub_eff == gi {
+                    member_pos.push(kk);
+                    member_val.push(w[co * kkc + kk]);
+                }
+            }
+            let (cents, labels) = kmeans_1d(&member_val, n, 15);
+            codebook[(co * g + gi) * n..(co * g + gi + 1) * n].copy_from_slice(&cents);
+            for (m, &pos) in member_pos.iter().enumerate() {
+                idx[co * kkc + pos] = labels[m];
+            }
+        }
+    }
+    ClusteredLayer { cout, k, cin, ch_sub: ch_sub_eff, n, idx, codebook }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn labels_are_nearest() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..200).map(|_| rng.gauss_f32()).collect();
+        let (cents, labels) = kmeans_1d(&v, 8, 15);
+        for (x, &l) in v.iter().zip(&labels) {
+            let d_l = (x - cents[l as usize]).abs();
+            for c in &cents {
+                assert!(d_l <= (x - c).abs() + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_n() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..500).map(|_| rng.gauss_f32()).collect();
+        let mut prev = f64::INFINITY;
+        for n in [2, 4, 8, 16] {
+            let (cents, labels) = kmeans_1d(&v, n, 15);
+            let mse: f64 = v
+                .iter()
+                .zip(&labels)
+                .map(|(x, &l)| ((x - cents[l as usize]) as f64).powi(2))
+                .sum::<f64>()
+                / v.len() as f64;
+            assert!(mse <= prev + 1e-12);
+            prev = mse;
+        }
+    }
+
+    #[test]
+    fn degenerate_fewer_values_than_centroids() {
+        let (cents, labels) = kmeans_1d(&[3.0, 1.0], 4, 15);
+        assert_eq!(cents[labels[0] as usize], 3.0);
+        assert_eq!(cents[labels[1] as usize], 1.0);
+    }
+
+    #[test]
+    fn cluster_layer_reconstruction_error_bounded() {
+        let mut rng = Rng::new(3);
+        let (cout, k, cin) = (4, 3, 16);
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32() * 0.1).collect();
+        let cl = cluster_layer(&w, cout, k, cin, 8, 16);
+        let rec = cl.reconstruct();
+        let mse: f64 = w
+            .iter()
+            .zip(&rec)
+            .map(|(a, b)| ((a - b) * (a - b)) as f64)
+            .sum::<f64>()
+            / w.len() as f64;
+        // 16 centroids over 72 values per group: should be tight
+        assert!(mse < 1e-4, "mse {mse}");
+    }
+
+    #[test]
+    fn smaller_ch_sub_lower_error() {
+        let mut rng = Rng::new(4);
+        let (cout, k, cin) = (2, 3, 32);
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32()).collect();
+        let err = |ch_sub: usize| {
+            let cl = cluster_layer(&w, cout, k, cin, ch_sub, 8);
+            let rec = cl.reconstruct();
+            w.iter().zip(&rec).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>()
+        };
+        assert!(err(8) <= err(32) + 1e-9);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let cl = ClusteredLayer {
+            cout: 2, k: 3, cin: 8, ch_sub: 4, n: 16,
+            idx: vec![0; 2 * 72], codebook: vec![0.0; 2 * 2 * 16],
+        };
+        // per channel: 72 indices * 4b + 2 codebooks * 16 * 16b = 288 + 512
+        assert_eq!(cl.storage_bits(), 2 * (288 + 512));
+    }
+}

@@ -1,0 +1,52 @@
+//! INT8 weight quantization — the Fig. 5 baseline ("INT8-quantized
+//! ResNet-18 serves as the baseline" for FE output error / compression).
+
+/// Symmetric per-tensor INT8 quantization; returns the dequantized weights
+/// the INT8 datapath would effectively apply.
+pub fn quantize_int8(w: &[f32]) -> Vec<f32> {
+    let max_abs = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return vec![0.0; w.len()];
+    }
+    let scale = max_abs / 127.0;
+    w.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) * scale).collect()
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| ((x - y) * (x - y)) as f64).sum::<f64>() / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn int8_error_small() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..1000).map(|_| rng.gauss_f32() * 0.1).collect();
+        let q = quantize_int8(&w);
+        // max error is half an LSB = max_abs/254
+        let max_abs = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let lsb = max_abs / 127.0;
+        for (a, b) in w.iter().zip(&q) {
+            assert!((a - b).abs() <= lsb / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_safe() {
+        assert_eq!(quantize_int8(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+}

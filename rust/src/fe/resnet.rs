@@ -1,0 +1,236 @@
+//! The frozen ResNet-18-shaped FE, loading AOT-exported clustered weights
+//! so the native forward pass computes the same features as the PJRT
+//! artifacts (cross-checked against `artifacts/goldens/feats.bin`).
+//!
+//! Structure mirrors `python/compile/resnet.py`: stem conv -> 4 stages x
+//! `blocks_per_stage` basic blocks (stride 2 from stage 1) -> per-stage
+//! global-avg-pool branch features padded to Fmax (Fig. 11 branch taps).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::fe::conv::{conv2d, Tensor3};
+use crate::util::json::Json;
+
+/// Loaded FE: named conv weights + geometry.
+#[derive(Clone, Debug)]
+pub struct FeModel {
+    pub cfg: ModelConfig,
+    /// layer name -> (weights row-major (Cout,K,K,Cin), cout, k, cin)
+    layers: BTreeMap<String, (Vec<f32>, usize, usize, usize)>,
+}
+
+impl FeModel {
+    /// Load from `artifacts/` (manifest.json + fe_weights.bin).
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let man_text = std::fs::read_to_string(artifacts_dir.join("manifest.json"))?;
+        let man = Json::parse(&man_text)?;
+        let cfg = ModelConfig::from_manifest(&man)?;
+        let blob = std::fs::read(artifacts_dir.join("fe_weights.bin"))?;
+        let layers_json = man
+            .get("weights")
+            .and_then(|w| w.get("layers"))
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing weights.layers"))?;
+        let mut layers = BTreeMap::new();
+        let mut off = 0usize;
+        for l in layers_json {
+            let name = l
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("layer missing name"))?
+                .to_string();
+            let shape = l
+                .get("shape")
+                .and_then(|s| s.as_usize_vec())
+                .ok_or_else(|| anyhow::anyhow!("layer missing shape"))?;
+            anyhow::ensure!(shape.len() == 4, "conv weights must be 4-D");
+            let count: usize = shape.iter().product();
+            anyhow::ensure!(blob.len() >= (off + count) * 4, "fe_weights.bin too short");
+            let mut w = Vec::with_capacity(count);
+            for i in 0..count {
+                let b = &blob[(off + i) * 4..(off + i) * 4 + 4];
+                w.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += count;
+            layers.insert(name, (w, shape[0], shape[1], shape[3]));
+        }
+        anyhow::ensure!(off * 4 == blob.len(), "fe_weights.bin has trailing bytes");
+        Ok(FeModel { cfg, layers })
+    }
+
+    /// Build from explicit weights (tests / synthetic configs).
+    pub fn from_parts(
+        cfg: ModelConfig,
+        layers: BTreeMap<String, (Vec<f32>, usize, usize, usize)>,
+    ) -> Self {
+        FeModel { cfg, layers }
+    }
+
+    fn conv(&self, name: &str, x: &Tensor3, stride: usize) -> anyhow::Result<Tensor3> {
+        let (w, cout, k, cin) = self
+            .layers
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing FE layer {name}"))?;
+        anyhow::ensure!(*cin == x.c, "{name}: cin {cin} != input {c}", c = x.c);
+        Ok(conv2d(x, w, *cout, *k, stride))
+    }
+
+    /// Forward pass: image (H*W*3 flat NHWC) -> 4 branch features, each
+    /// padded to `feature_dim`.
+    pub fn forward(&self, image: &[f32]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let s = self.cfg.image_size;
+        anyhow::ensure!(
+            image.len() == s * s * self.cfg.in_channels,
+            "image size mismatch: {} vs {}",
+            image.len(),
+            s * s * self.cfg.in_channels
+        );
+        let x = Tensor3::from_vec(s, s, self.cfg.in_channels, image.to_vec());
+        let mut h = self.conv("stem", &x, 1)?.relu();
+        let fmax = self.cfg.feature_dim;
+        let mut branches = Vec::with_capacity(self.cfg.widths.len());
+        for (si, _w) in self.cfg.widths.iter().enumerate() {
+            let stage_stride = if si == 0 { 1 } else { 2 };
+            for b in 0..self.cfg.blocks_per_stage {
+                let pre = format!("s{si}b{b}");
+                let st = if b == 0 { stage_stride } else { 1 };
+                let y = self.conv(&format!("{pre}_conv1"), &h, st)?.relu();
+                let y = self.conv(&format!("{pre}_conv2"), &y, 1)?;
+                let skip = if self.layers.contains_key(&format!("{pre}_proj")) {
+                    self.conv(&format!("{pre}_proj"), &h, st)?
+                } else if st != 1 {
+                    h.subsample(st)
+                } else {
+                    h.clone()
+                };
+                h = y.add(&skip).relu();
+            }
+            let mut feat = h.global_avg_pool();
+            feat.resize(fmax, 0.0);
+            branches.push(feat);
+        }
+        Ok(branches)
+    }
+
+    /// Forward only through the first `n_blocks` stages (early-exit body
+    /// computation): returns the branch features produced so far.
+    pub fn forward_prefix(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let s = self.cfg.image_size;
+        let x = Tensor3::from_vec(s, s, self.cfg.in_channels, image.to_vec());
+        let mut h = self.conv("stem", &x, 1)?.relu();
+        let fmax = self.cfg.feature_dim;
+        let mut branches = Vec::new();
+        for si in 0..n_stages.min(self.cfg.widths.len()) {
+            let stage_stride = if si == 0 { 1 } else { 2 };
+            for b in 0..self.cfg.blocks_per_stage {
+                let pre = format!("s{si}b{b}");
+                let st = if b == 0 { stage_stride } else { 1 };
+                let y = self.conv(&format!("{pre}_conv1"), &h, st)?.relu();
+                let y = self.conv(&format!("{pre}_conv2"), &y, 1)?;
+                let skip = if self.layers.contains_key(&format!("{pre}_proj")) {
+                    self.conv(&format!("{pre}_proj"), &h, st)?
+                } else if st != 1 {
+                    h.subsample(st)
+                } else {
+                    h.clone()
+                };
+                h = y.add(&skip).relu();
+            }
+            let mut feat = h.global_avg_pool();
+            feat.resize(fmax, 0.0);
+            branches.push(feat);
+        }
+        Ok(branches)
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.layers.values().map(|(w, ..)| w.len()).sum()
+    }
+
+    /// Layer geometries for the chip simulator: (name, cout, k, cin).
+    pub fn layer_geometries(&self) -> Vec<(String, usize, usize, usize)> {
+        self.layers
+            .iter()
+            .map(|(n, (_, cout, k, cin))| (n.clone(), *cout, *k, *cin))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Build a tiny synthetic FE without artifacts.
+    pub fn tiny_model(seed: u64) -> FeModel {
+        let cfg = ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8],
+            blocks_per_stage: 1,
+            feature_dim: 8,
+            d: 64,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed);
+        let mut layers = BTreeMap::new();
+        let mut add = |name: &str, cout: usize, k: usize, cin: usize, rng: &mut Rng| {
+            let std = (2.0 / (k * k * cin) as f32).sqrt();
+            let w: Vec<f32> =
+                (0..cout * k * k * cin).map(|_| std * rng.gauss_f32()).collect();
+            layers.insert(name.to_string(), (w, cout, k, cin));
+        };
+        add("stem", 4, 3, 3, &mut rng);
+        add("s0b0_conv1", 4, 3, 4, &mut rng);
+        add("s0b0_conv2", 4, 3, 4, &mut rng);
+        add("s1b0_conv1", 8, 3, 4, &mut rng);
+        add("s1b0_conv2", 8, 3, 8, &mut rng);
+        add("s1b0_proj", 8, 1, 4, &mut rng);
+        FeModel::from_parts(cfg, layers)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(1);
+        let mut rng = Rng::new(2);
+        let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect();
+        let branches = m.forward(&img).unwrap();
+        assert_eq!(branches.len(), 2);
+        assert!(branches.iter().all(|b| b.len() == 8));
+        // stage-0 branch has width 4 -> padding above index 4
+        assert!(branches[0][4..].iter().all(|&v| v == 0.0));
+        assert!(branches[0][..4].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn prefix_matches_full_forward() {
+        let m = tiny_model(3);
+        let mut rng = Rng::new(4);
+        let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect();
+        let full = m.forward(&img).unwrap();
+        let prefix = m.forward_prefix(&img, 1).unwrap();
+        assert_eq!(prefix.len(), 1);
+        assert_eq!(prefix[0], full[0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = tiny_model(5);
+        let img = vec![0.5f32; 8 * 8 * 3];
+        assert_eq!(m.forward(&img).unwrap(), m.forward(&img).unwrap());
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let m = tiny_model(6);
+        assert!(m.forward(&vec![0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn param_count_positive() {
+        assert!(tiny_model(7).n_params() > 500);
+    }
+}

@@ -1,0 +1,158 @@
+//! Class-memory manager: allocation of class HVs in the chip's 256 KB,
+//! 16-bank class memory (Section IV-B3/V-A).
+//!
+//! The memory holds, per FE branch, one class HV per session class at the
+//! configured precision; capacity is what limits how many ways a session
+//! may have (32-way @ 4-bit with EE branches, 32 classes @ 16-bit without,
+//! 128 @ 4-bit). Unused banks are gated off (Fig. 9) — the manager reports
+//! the gating level for the energy model.
+
+/// One allocation: a session's class HVs for all branches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allocation {
+    pub session: u64,
+    pub n_classes: usize,
+    pub n_branches: usize,
+    pub hv_bits: u32,
+    pub d: usize,
+}
+
+impl Allocation {
+    pub fn bits(&self) -> u64 {
+        self.n_classes as u64 * self.n_branches as u64 * self.d as u64 * self.hv_bits as u64
+    }
+}
+
+/// Tracks what lives in class memory.
+#[derive(Clone, Debug)]
+pub struct ClassMemoryManager {
+    pub capacity_bits: u64,
+    pub banks: usize,
+    allocations: Vec<Allocation>,
+}
+
+impl ClassMemoryManager {
+    /// The chip's memory: 256 KB in 16 banks.
+    pub fn paper() -> Self {
+        ClassMemoryManager::new(256, 16)
+    }
+
+    pub fn new(kb: usize, banks: usize) -> Self {
+        ClassMemoryManager {
+            capacity_bits: kb as u64 * 1024 * 8,
+            banks,
+            allocations: Vec::new(),
+        }
+    }
+
+    pub fn used_bits(&self) -> u64 {
+        self.allocations.iter().map(|a| a.bits()).sum()
+    }
+
+    pub fn free_bits(&self) -> u64 {
+        self.capacity_bits - self.used_bits()
+    }
+
+    /// Try to allocate; fails when the session would not fit on chip.
+    pub fn allocate(&mut self, alloc: Allocation) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.allocations.iter().any(|a| a.session == alloc.session),
+            "session {} already allocated",
+            alloc.session
+        );
+        let need = alloc.bits();
+        anyhow::ensure!(
+            need <= self.free_bits(),
+            "class memory exhausted: need {} KB, free {} KB (capacity {} KB) — \
+             lower hv_bits or n_way",
+            need / 8192,
+            self.free_bits() / 8192,
+            self.capacity_bits / 8192
+        );
+        self.allocations.push(alloc);
+        Ok(())
+    }
+
+    pub fn release(&mut self, session: u64) -> bool {
+        let before = self.allocations.len();
+        self.allocations.retain(|a| a.session != session);
+        self.allocations.len() != before
+    }
+
+    /// Banks that must stay powered for the current occupancy; the rest
+    /// are gated (power saving counted by the energy model).
+    pub fn active_banks(&self) -> usize {
+        if self.capacity_bits == 0 {
+            return 0;
+        }
+        let frac = self.used_bits() as f64 / self.capacity_bits as f64;
+        ((frac * self.banks as f64).ceil() as usize).clamp(1, self.banks)
+    }
+
+    pub fn gated_banks(&self) -> usize {
+        self.banks - self.active_banks()
+    }
+
+    /// Max ways a new session could still get at (d, bits, branches).
+    pub fn max_ways(&self, d: usize, hv_bits: u32, n_branches: usize) -> usize {
+        let per_class = d as u64 * hv_bits as u64 * n_branches as u64;
+        (self.free_bits() / per_class) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(session: u64, classes: usize, branches: usize, bits: u32) -> Allocation {
+        Allocation { session, n_classes: classes, n_branches: branches, hv_bits: bits, d: 4096 }
+    }
+
+    #[test]
+    fn paper_capacities() {
+        let m = ClassMemoryManager::paper();
+        // Section V-A: 32-way EE task at 4-bit fills the memory exactly
+        assert_eq!(m.max_ways(4096, 4, 4), 32);
+        // Section IV-B3: 32 classes @ 16-bit, 128 @ 4-bit (single branch)
+        assert_eq!(m.max_ways(4096, 16, 1), 32);
+        assert_eq!(m.max_ways(4096, 4, 1), 128);
+    }
+
+    #[test]
+    fn allocate_and_release() {
+        let mut m = ClassMemoryManager::paper();
+        m.allocate(alloc(1, 10, 4, 4)).unwrap();
+        assert!(m.used_bits() > 0);
+        assert!(m.allocate(alloc(1, 5, 4, 4)).is_err(), "double alloc rejected");
+        m.allocate(alloc(2, 10, 4, 4)).unwrap();
+        assert!(m.release(1));
+        assert!(!m.release(1));
+        assert_eq!(m.used_bits(), alloc(2, 10, 4, 4).bits());
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let mut m = ClassMemoryManager::paper();
+        m.allocate(alloc(1, 32, 4, 4)).unwrap(); // fills it
+        assert_eq!(m.free_bits(), 0);
+        let e = m.allocate(alloc(2, 1, 1, 1)).unwrap_err();
+        assert!(e.to_string().contains("exhausted"));
+    }
+
+    #[test]
+    fn bank_gating_tracks_occupancy() {
+        let mut m = ClassMemoryManager::paper();
+        assert_eq!(m.active_banks(), 1, "empty memory keeps one bank awake");
+        m.allocate(alloc(1, 16, 4, 4)).unwrap(); // half full
+        assert_eq!(m.active_banks(), 8);
+        assert_eq!(m.gated_banks(), 8);
+        m.allocate(alloc(2, 16, 4, 4)).unwrap(); // full
+        assert_eq!(m.gated_banks(), 0);
+    }
+
+    #[test]
+    fn sixteen_bit_sessions_cost_4x() {
+        let m = ClassMemoryManager::paper();
+        assert_eq!(m.max_ways(4096, 16, 4), 8, "16-bit EE sessions: only 8 ways fit");
+    }
+}

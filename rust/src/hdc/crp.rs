@@ -1,0 +1,185 @@
+//! Cyclic Random Projection encoder (Fig. 6b) — native hot path.
+//!
+//! Streams the D x F ±1 base matrix out of 16 LFSRs, 16x16 elements per
+//! "cycle", with O(1) live state: memory is 16 u16 states + one 16x16
+//! block, exactly the chip's O(B) property. Bit-compatible with the Pallas
+//! kernel (`crp_encoder.py`): same seed derivation, same 16-steps-per-block
+//! advance, same (row-band, column-block) schedule.
+
+use super::lfsr;
+
+/// Streaming cRP encoder for a fixed (D, master_seed).
+#[derive(Clone, Debug)]
+pub struct CrpEncoder {
+    pub d: usize,
+    pub master_seed: u64,
+}
+
+impl CrpEncoder {
+    pub fn new(d: usize, master_seed: u64) -> Self {
+        assert_eq!(d % 16, 0, "D must be a multiple of 16");
+        CrpEncoder { d, master_seed }
+    }
+
+    /// Encode one feature vector into `out` (len D). `x.len()` must be a
+    /// multiple of 16 (zero-pad shorter features — zero columns contribute
+    /// nothing, see `test_crp_zero_padding_is_noop_on_prefix`).
+    pub fn encode_into(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len() % 16, 0, "F must be a multiple of 16 (zero-pad)");
+        assert_eq!(out.len(), self.d);
+        let ncol = x.len() / 16;
+        // Precompute, once per encode, 4 nibble subset-sum tables per
+        // column block: sum over any bit subset of a 16-value segment
+        // becomes 4 lookups + 3 adds, and the ±1 contraction uses
+        //   sum_r = 2 * subset_sum(state_r) - total.
+        // The tables depend only on the features, so all D/16 bands share
+        // them; together with the table-jump LFSR the inner loop is pure
+        // lookups (EXPERIMENTS.md §Perf).
+        let mut tables: Vec<[[f32; 16]; 4]> = vec![[[0f32; 16]; 4]; ncol];
+        let mut totals = vec![0f32; ncol];
+        for (j, tj) in tables.iter_mut().enumerate() {
+            let seg = &x[j * 16..(j + 1) * 16];
+            for (g, t) in tj.iter_mut().enumerate() {
+                let base = &seg[g * 4..g * 4 + 4];
+                for m in 1..16usize {
+                    let low = m & m.wrapping_neg();
+                    t[m] = t[m & (m - 1)] + base[low.trailing_zeros() as usize];
+                }
+            }
+            totals[j] = tj[0][15] + tj[1][15] + tj[2][15] + tj[3][15];
+        }
+        for (i, band) in out.chunks_exact_mut(16).enumerate() {
+            let mut states = lfsr::row_block_states(self.master_seed, i as u64);
+            let mut acc = [0f32; 16];
+            for (tj, &total) in tables.iter().zip(&totals) {
+                for r in 0..16 {
+                    let st = lfsr::step16_fast(states[r]);
+                    states[r] = st;
+                    let s = st as usize;
+                    let set = tj[0][s & 15]
+                        + tj[1][(s >> 4) & 15]
+                        + tj[2][(s >> 8) & 15]
+                        + tj[3][(s >> 12) & 15];
+                    acc[r] += 2.0 * set - total;
+                }
+            }
+            band.copy_from_slice(&acc);
+        }
+    }
+
+    /// Encode and allocate.
+    pub fn encode(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.d];
+        self.encode_into(x, &mut out);
+        out
+    }
+
+    /// Encode a feature of arbitrary length by zero-padding to 16.
+    pub fn encode_padded(&self, x: &[f32]) -> Vec<f32> {
+        let f = x.len().div_ceil(16) * 16;
+        if f == x.len() {
+            return self.encode(x);
+        }
+        let mut xp = vec![0f32; f];
+        xp[..x.len()].copy_from_slice(x);
+        self.encode(&xp)
+    }
+
+    /// Number of LFSR "cycles" (16x16 blocks) one encode consumes — the
+    /// chip-cycle analogue used by the simulator: D*F/256.
+    pub fn blocks(&self, f: usize) -> u64 {
+        (self.d as u64 * f as u64) / 256
+    }
+
+    /// Materialize the dense base matrix (tests only; production never does).
+    #[doc(hidden)]
+    pub fn dense_base(&self, f: usize) -> Vec<Vec<f32>> {
+        assert_eq!(f % 16, 0);
+        let mut rows = vec![vec![0f32; f]; self.d];
+        for i in 0..self.d / 16 {
+            let mut states = lfsr::row_block_states(self.master_seed, i as u64);
+            for j in 0..f / 16 {
+                for s in states.iter_mut() {
+                    *s = lfsr::step16(*s);
+                }
+                for r in 0..16 {
+                    for c in 0..16 {
+                        let sign = if (states[r] >> c) & 1 == 1 { 1.0 } else { -1.0 };
+                        rows[i * 16 + r][j * 16 + c] = sign;
+                    }
+                }
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn encode_matches_dense_matmul() {
+        let enc = CrpEncoder::new(64, 99);
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..32).map(|_| rng.gauss_f32()).collect();
+        let dense = enc.dense_base(32);
+        let h = enc.encode(&x);
+        for (i, row) in dense.iter().enumerate() {
+            let want: f32 = row.iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((h[i] - want).abs() < 1e-4, "row {i}: {} vs {want}", h[i]);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let enc = CrpEncoder::new(96, 5);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..48).map(|_| rng.gauss_f32()).collect();
+        let y: Vec<f32> = (0..48).map(|_| rng.gauss_f32()).collect();
+        let z: Vec<f32> = x.iter().zip(&y).map(|(a, b)| 2.0 * a + b).collect();
+        let hx = enc.encode(&x);
+        let hy = enc.encode(&y);
+        let hz = enc.encode(&z);
+        for i in 0..96 {
+            assert!((hz[i] - (2.0 * hx[i] + hy[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_padding_noop() {
+        let enc = CrpEncoder::new(64, 7);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..32).map(|_| rng.gauss_f32()).collect();
+        let mut xp = x.clone();
+        xp.extend([0.0; 32]);
+        assert_eq!(enc.encode(&x), enc.encode(&xp));
+    }
+
+    #[test]
+    fn encode_padded_pads() {
+        let enc = CrpEncoder::new(32, 7);
+        let x = vec![1.0f32; 20]; // not a multiple of 16
+        let h = enc.encode_padded(&x);
+        assert_eq!(h.len(), 32);
+    }
+
+    #[test]
+    fn distance_preserved_in_expectation() {
+        // Johnson-Lindenstrauss sanity: ||h(x)||^2 / D ~ ||x||^2
+        let enc = CrpEncoder::new(4096, 11);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let h = enc.encode(&x);
+        let nx: f32 = x.iter().map(|v| v * v).sum();
+        let nh: f32 = h.iter().map(|v| v * v).sum::<f32>() / 4096.0;
+        assert!((nh / nx - 1.0).abs() < 0.2, "JL ratio {}", nh / nx);
+    }
+
+    #[test]
+    fn blocks_count() {
+        let enc = CrpEncoder::new(4096, 0);
+        assert_eq!(enc.blocks(512), 8192);
+    }
+}

@@ -1,0 +1,135 @@
+//! Distance metrics for HDC inference (eq. 5) — the chip's distance
+//! calculation module supports absolute-difference (L1) accumulation;
+//! cosine / dot / hamming are provided for the baseline comparisons.
+
+/// Supported similarity/distance functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distance {
+    /// Manhattan distance — the chip's datapath (|q - C| accumulate).
+    L1,
+    /// Negative dot product (so smaller = more similar, like a distance).
+    Dot,
+    /// Cosine distance 1 - cos(q, C).
+    Cosine,
+    /// Hamming distance on sign bits — for 1-bit class HVs.
+    Hamming,
+}
+
+impl Distance {
+    pub fn eval(&self, q: &[f32], c: &[f32]) -> f64 {
+        debug_assert_eq!(q.len(), c.len());
+        match self {
+            Distance::L1 => l1(q, c),
+            Distance::Dot => -dot(q, c),
+            Distance::Cosine => {
+                let d = dot(q, c);
+                let nq = dot(q, q).max(1e-30).sqrt();
+                let nc = dot(c, c).max(1e-30).sqrt();
+                1.0 - d / (nq * nc)
+            }
+            Distance::Hamming => q
+                .iter()
+                .zip(c)
+                .filter(|(a, b)| (**a >= 0.0) != (**b >= 0.0))
+                .count() as f64,
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    // 4-lane unrolled accumulation: the compiler vectorizes this cleanly
+    let mut acc = [0f64; 4];
+    let n4 = a.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += (a[i] * b[i]) as f64;
+        acc[1] += (a[i + 1] * b[i + 1]) as f64;
+        acc[2] += (a[i + 2] * b[i + 2]) as f64;
+        acc[3] += (a[i + 3] * b[i + 3]) as f64;
+        i += 4;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in n4..a.len() {
+        s += (a[j] * b[j]) as f64;
+    }
+    s
+}
+
+#[inline]
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0f64; 4];
+    let n4 = a.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += (a[i] - b[i]).abs() as f64;
+        acc[1] += (a[i + 1] - b[i + 1]).abs() as f64;
+        acc[2] += (a[i + 2] - b[i + 2]).abs() as f64;
+        acc[3] += (a[i + 3] - b[i + 3]).abs() as f64;
+        i += 4;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in n4..a.len() {
+        s += (a[j] - b[j]).abs() as f64;
+    }
+    s
+}
+
+/// Index of the smallest distance (ties -> lowest index).
+pub fn argmin(dists: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &d) in dists.iter().enumerate().skip(1) {
+        if d < dists[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_basics() {
+        assert_eq!(l1(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(l1(&[0.0, 0.0, 0.0, 0.0, 1.0], &[1.0, 0.0, 0.0, 0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x * y) as f64).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_range() {
+        let q = [1.0f32, 0.0];
+        assert!((Distance::Cosine.eval(&q, &[1.0, 0.0])).abs() < 1e-9);
+        assert!((Distance::Cosine.eval(&q, &[-1.0, 0.0]) - 2.0).abs() < 1e-9);
+        assert!((Distance::Cosine.eval(&q, &[0.0, 1.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hamming_counts_sign_flips() {
+        let q = [1.0f32, -1.0, 1.0, -1.0];
+        let c = [1.0f32, 1.0, -1.0, -1.0];
+        assert_eq!(Distance::Hamming.eval(&q, &c), 2.0);
+    }
+
+    #[test]
+    fn argmin_ties_low_index() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 5.0]), 1);
+        assert_eq!(argmin(&[0.5]), 0);
+    }
+
+    #[test]
+    fn dot_distance_orders_like_similarity() {
+        let q = [1.0f32, 2.0, 3.0];
+        let near = [1.1f32, 2.0, 2.9];
+        let far = [-1.0f32, 0.0, 1.0];
+        assert!(Distance::Dot.eval(&q, &near) < Distance::Dot.eval(&q, &far));
+    }
+}

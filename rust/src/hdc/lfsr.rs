@@ -1,0 +1,140 @@
+//! 16-bit Fibonacci LFSR — rust half of the python/rust bit-exactness
+//! contract (see `python/compile/kernels/lfsr.py` for the spec and the
+//! block-schedule rationale).
+//!
+//! Polynomial x^16 + x^15 + x^13 + x^4 + 1 (taps 16,15,13,4; maximal).
+
+use crate::util::prng::GOLDEN;
+
+pub const MASK16: u16 = 0xFFFF;
+
+/// One LFSR step.
+#[inline]
+pub fn step(s: u16) -> u16 {
+    let fb = ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1;
+    (s << 1) | fb
+}
+
+/// Sixteen steps — one fresh 16-bit word (one cyclic-block column advance).
+#[inline]
+pub fn step16(mut s: u16) -> u16 {
+    for _ in 0..16 {
+        s = step(s);
+    }
+    s
+}
+
+/// step16 is linear over GF(2) (the feedback is a pure XOR of state bits,
+/// no constant term), so `step16(a ^ b) = step16(a) ^ step16(b)` and the
+/// 16-step jump decomposes into two byte-indexed table lookups. This is
+/// the cRP encoder's hottest scalar op — see EXPERIMENTS.md §Perf.
+const fn build_step16_table(shift: u32) -> [u16; 256] {
+    let mut t = [0u16; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut s = (i as u16) << shift;
+        let mut n = 0;
+        while n < 16 {
+            let fb = ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1;
+            s = (s << 1) | fb;
+            n += 1;
+        }
+        t[i] = s;
+        i += 1;
+    }
+    t
+}
+
+static STEP16_LO: [u16; 256] = build_step16_table(0);
+static STEP16_HI: [u16; 256] = build_step16_table(8);
+
+/// Table-accelerated 16-step jump; bit-identical to [`step16`].
+#[inline(always)]
+pub fn step16_fast(s: u16) -> u16 {
+    STEP16_LO[(s & 0xFF) as usize] ^ STEP16_HI[(s >> 8) as usize]
+}
+
+/// Initial states of the 16 LFSRs for row-block `i` of a D x F encoder.
+/// Mirrors `lfsr.row_block_states`: chain splitmix64 from
+/// `master_seed ^ (i+1)*GOLDEN`, low 16 bits, zero remapped to 0xACE1.
+pub fn row_block_states(master_seed: u64, i: u64) -> [u16; 16] {
+    let mut s = master_seed ^ (i.wrapping_add(1)).wrapping_mul(GOLDEN);
+    let mut out = [0u16; 16];
+    for v in out.iter_mut() {
+        // python chains on the MIXED output: s = splitmix64(s)
+        s = crate::util::prng::splitmix64_next(s);
+        let w = (s & MASK16 as u64) as u16;
+        *v = if w == 0 { 0xACE1 } else { w };
+    }
+    out
+}
+
+/// All row-block states for a D-dimensional encoder: (d/16) x 16.
+pub fn all_row_states(master_seed: u64, d: usize) -> Vec<[u16; 16]> {
+    assert_eq!(d % 16, 0, "D must be a multiple of 16");
+    (0..d / 16).map(|i| row_block_states(master_seed, i as u64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maximal_period() {
+        let s0 = 1u16;
+        let mut s = step(s0);
+        let mut n = 1u32;
+        while s != s0 {
+            s = step(s);
+            n += 1;
+            assert!(n <= 65535, "not maximal");
+        }
+        assert_eq!(n, 65535);
+    }
+
+    #[test]
+    fn zero_lockup() {
+        assert_eq!(step(0), 0);
+    }
+
+    #[test]
+    fn step16_equals_16_steps() {
+        let mut s = 0xBEEFu16;
+        let quick = step16(s);
+        for _ in 0..16 {
+            s = step(s);
+        }
+        assert_eq!(quick, s);
+    }
+
+    /// Golden sequence from python: lfsr16_step chain starting at 0xACE1.
+    /// (printed by `python -c "...lfsr.golden_vectors()..."` — the same
+    /// values land in artifacts/goldens/goldens.json).
+    #[test]
+    fn python_step_golden() {
+        let mut s = 0xACE1u16;
+        let expect: [u16; 8] = [0x59c3, 0xb386, 0x670c, 0xce18, 0x9c31, 0x3862, 0x70c5, 0xe18a];
+        for e in expect {
+            s = step(s);
+            assert_eq!(s, e, "LFSR diverges from python");
+        }
+    }
+
+    #[test]
+    fn step16_fast_bit_identical() {
+        // exhaustive: the table jump must equal 16 sequential steps for
+        // every possible state
+        for s in 0..=u16::MAX {
+            assert_eq!(step16_fast(s), step16(s), "state {s:#06x}");
+        }
+    }
+
+    #[test]
+    fn row_states_nonzero_deterministic() {
+        let a = row_block_states(123, 5);
+        let b = row_block_states(123, 5);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v != 0));
+        assert_ne!(row_block_states(123, 6), a);
+    }
+}

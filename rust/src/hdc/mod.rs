@@ -1,0 +1,17 @@
+//! Hyperdimensional-computing FSL classifier (Sections II-B, III-B, IV-B).
+//!
+//! Native mirror of the L1 kernels: the cRP encoder here is bit-compatible
+//! with `python/compile/kernels/crp_encoder.py` (same LFSR stream, same
+//! block schedule), so class HVs trained natively are interchangeable with
+//! HVs produced by the PJRT artifacts.
+
+pub mod class_mem;
+pub mod crp;
+pub mod distance;
+pub mod lfsr;
+pub mod model;
+pub mod quant;
+
+pub use crp::CrpEncoder;
+pub use distance::Distance;
+pub use model::HdcModel;

@@ -1,0 +1,227 @@
+//! HDC few-shot model: single-pass training (eq. 4) + distance inference
+//! (eq. 5), with the chip's class-memory precision options.
+
+use super::distance::{argmin, Distance};
+use super::quant;
+
+/// A trained (or in-training) HDC classification model.
+#[derive(Clone, Debug)]
+pub struct HdcModel {
+    pub d: usize,
+    pub n_classes: usize,
+    /// accumulated class HVs (eq. 4), row-major (n_classes x d)
+    sums: Vec<f32>,
+    /// shots accumulated per class
+    pub counts: Vec<u32>,
+    /// quantized view used for inference (rebuilt lazily)
+    quantized: Option<Vec<f32>>,
+    pub hv_bits: u32,
+    pub metric: Distance,
+}
+
+impl HdcModel {
+    pub fn new(n_classes: usize, d: usize) -> Self {
+        HdcModel {
+            d,
+            n_classes,
+            sums: vec![0.0; n_classes * d],
+            counts: vec![0; n_classes],
+            quantized: None,
+            hv_bits: 16,
+            metric: Distance::L1,
+        }
+    }
+
+    pub fn with_precision(mut self, bits: u32) -> Self {
+        self.hv_bits = bits;
+        self.quantized = None;
+        self
+    }
+
+    pub fn with_metric(mut self, metric: Distance) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    /// Single-pass training: bundle one encoded shot into its class HV.
+    pub fn train_shot(&mut self, class: usize, hv: &[f32]) {
+        assert!(class < self.n_classes, "class {class} out of range");
+        assert_eq!(hv.len(), self.d);
+        let row = &mut self.sums[class * self.d..(class + 1) * self.d];
+        for (a, b) in row.iter_mut().zip(hv) {
+            *a += b;
+        }
+        self.counts[class] += 1;
+        self.quantized = None;
+    }
+
+    /// Batched single-pass training (Fig. 12): aggregate all k same-class
+    /// shot HVs, then add once — identical math, one memory sweep.
+    pub fn train_batch(&mut self, class: usize, hvs: &[Vec<f32>]) {
+        assert!(class < self.n_classes);
+        if hvs.is_empty() {
+            return;
+        }
+        let row = &mut self.sums[class * self.d..(class + 1) * self.d];
+        for hv in hvs {
+            assert_eq!(hv.len(), self.d);
+        }
+        for i in 0..self.d {
+            let mut s = 0f32;
+            for hv in hvs {
+                s += hv[i];
+            }
+            row[i] += s;
+        }
+        self.counts[class] += hvs.len() as u32;
+        self.quantized = None;
+    }
+
+    /// Class HVs normalized by shot count (centroid form) and quantized to
+    /// the configured class-memory precision.
+    fn class_hvs(&mut self) -> &[f32] {
+        if self.quantized.is_none() {
+            let mut q = Vec::with_capacity(self.n_classes * self.d);
+            for c in 0..self.n_classes {
+                let cnt = self.counts[c].max(1) as f32;
+                let row: Vec<f32> = self.sums[c * self.d..(c + 1) * self.d]
+                    .iter()
+                    .map(|v| v / cnt)
+                    .collect();
+                let (qr, _) = quant::quantize(&row, self.hv_bits);
+                q.extend(qr);
+            }
+            self.quantized = Some(q);
+        }
+        self.quantized.as_ref().unwrap()
+    }
+
+    /// Raw (unquantized, unnormalized) class HV — e.g. for export.
+    pub fn raw_class_hv(&self, class: usize) -> &[f32] {
+        &self.sums[class * self.d..(class + 1) * self.d]
+    }
+
+    /// Distance from a query HV to every class HV.
+    pub fn distances(&mut self, q: &[f32]) -> Vec<f64> {
+        assert_eq!(q.len(), self.d);
+        let d = self.d;
+        let metric = self.metric;
+        let n_classes = self.n_classes;
+        let hvs = self.class_hvs();
+        (0..n_classes)
+            .map(|c| metric.eval(q, &hvs[c * d..(c + 1) * d]))
+            .collect()
+    }
+
+    /// Predict the class of a query HV.
+    pub fn predict(&mut self, q: &[f32]) -> usize {
+        argmin(&self.distances(q))
+    }
+
+    /// True when every class has at least one shot.
+    pub fn is_trained(&self) -> bool {
+        self.counts.iter().all(|&c| c > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn cluster_hv(rng: &mut Rng, proto: &[f32], noise: f32) -> Vec<f32> {
+        proto.iter().map(|&p| p + noise * rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn recovers_well_separated_classes() {
+        let d = 512;
+        let mut rng = Rng::new(1);
+        let protos: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| 3.0 * rng.gauss_f32()).collect())
+            .collect();
+        let mut m = HdcModel::new(4, d);
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..5 {
+                m.train_shot(c, &cluster_hv(&mut rng, p, 0.5));
+            }
+        }
+        assert!(m.is_trained());
+        for (c, p) in protos.iter().enumerate() {
+            let q = cluster_hv(&mut rng, p, 0.5);
+            assert_eq!(m.predict(&q), c);
+        }
+    }
+
+    #[test]
+    fn batch_equals_sequential() {
+        let d = 64;
+        let mut rng = Rng::new(2);
+        let hvs: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..d).map(|_| rng.gauss_f32()).collect()).collect();
+        let mut seq = HdcModel::new(2, d);
+        for hv in &hvs {
+            seq.train_shot(0, hv);
+        }
+        let mut bat = HdcModel::new(2, d);
+        bat.train_batch(0, &hvs);
+        for i in 0..d {
+            assert!((seq.raw_class_hv(0)[i] - bat.raw_class_hv(0)[i]).abs() < 1e-4);
+        }
+        assert_eq!(seq.counts, bat.counts);
+    }
+
+    #[test]
+    fn quantization_preserves_separable_predictions() {
+        let d = 1024;
+        let mut rng = Rng::new(3);
+        let protos: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..d).map(|_| 2.0 * rng.gauss_f32()).collect())
+            .collect();
+        for bits in [1u32, 4, 8, 16] {
+            let mut m = HdcModel::new(3, d).with_precision(bits);
+            for (c, p) in protos.iter().enumerate() {
+                for _ in 0..5 {
+                    m.train_shot(c, &cluster_hv(&mut rng, p, 0.3));
+                }
+            }
+            let mut correct = 0;
+            for (c, p) in protos.iter().enumerate() {
+                if m.predict(&cluster_hv(&mut rng, p, 0.3)) == c {
+                    correct += 1;
+                }
+            }
+            assert_eq!(correct, 3, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn untrained_class_detected() {
+        let mut m = HdcModel::new(3, 16);
+        m.train_shot(0, &vec![1.0; 16]);
+        assert!(!m.is_trained());
+    }
+
+    #[test]
+    fn count_normalization_balances_shot_imbalance() {
+        // class 0 has 10 shots, class 1 has 1 — normalization keeps the
+        // decision boundary near the middle instead of favoring class 0
+        let d = 256;
+        let mut rng = Rng::new(4);
+        let p0: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        let p1: Vec<f32> = p0.iter().map(|v| -v).collect();
+        let mut m = HdcModel::new(2, d);
+        for _ in 0..10 {
+            m.train_shot(0, &cluster_hv(&mut rng, &p0, 0.2));
+        }
+        m.train_shot(1, &cluster_hv(&mut rng, &p1, 0.2));
+        assert_eq!(m.predict(&p1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn class_bounds_checked() {
+        let mut m = HdcModel::new(2, 8);
+        m.train_shot(5, &vec![0.0; 8]);
+    }
+}

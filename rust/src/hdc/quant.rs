@@ -1,0 +1,107 @@
+//! Class-HV quantization: the chip stores class HVs at 1..16-bit integer
+//! precision in the 256 KB class memory (Section IV-B4). Lower precision
+//! fits more classes (32 @ 16-bit, 128 @ 4-bit at D=4096) and costs less
+//! energy per distance computation (Fig. 14a).
+
+/// Quantize an f32 HV to `bits`-bit signed integers (symmetric, per-vector
+/// scale), returning the dequantized f32 representation the distance
+/// datapath would see plus the scale.
+pub fn quantize(hv: &[f32], bits: u32) -> (Vec<f32>, f32) {
+    assert!((1..=16).contains(&bits), "HV precision is 1..=16 bits");
+    if bits == 1 {
+        // sign binarization; scale keeps magnitudes comparable
+        let mean_abs = hv.iter().map(|v| v.abs()).sum::<f32>() / hv.len().max(1) as f32;
+        let q: Vec<f32> = hv
+            .iter()
+            .map(|&v| if v >= 0.0 { mean_abs } else { -mean_abs })
+            .collect();
+        return (q, mean_abs);
+    }
+    let max_abs = hv.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return (vec![0.0; hv.len()], 1.0);
+    }
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let scale = max_abs / qmax;
+    let q: Vec<f32> = hv
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-qmax, qmax) * scale)
+        .collect();
+    (q, scale)
+}
+
+/// Storage bits for one class HV at dimension `d`.
+pub fn storage_bits(d: usize, bits: u32) -> u64 {
+    d as u64 * bits as u64
+}
+
+/// How many class HVs fit in a class memory of `mem_kb` KB (paper: 256 KB
+/// holds 32 classes at 16-bit / 128 at 4-bit, D=4096).
+pub fn classes_capacity(mem_kb: usize, d: usize, bits: u32) -> usize {
+    let mem_bits = mem_kb as u64 * 1024 * 8;
+    (mem_bits / storage_bits(d, bits)) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn paper_capacity_numbers() {
+        assert_eq!(classes_capacity(256, 4096, 16), 32);
+        assert_eq!(classes_capacity(256, 4096, 4), 128);
+    }
+
+    #[test]
+    fn quantize_is_idempotent_in_error() {
+        let mut rng = Rng::new(1);
+        let hv: Vec<f32> = (0..256).map(|_| rng.gauss_f32()).collect();
+        let (q8, _) = quantize(&hv, 8);
+        let (q8b, _) = quantize(&q8, 8);
+        // re-quantizing changes the scale slightly but values stay close
+        for (a, b) in q8.iter().zip(&q8b) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Rng::new(2);
+        let hv: Vec<f32> = (0..1024).map(|_| rng.gauss_f32() * 3.0).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 8, 12, 16] {
+            let (q, _) = quantize(&hv, bits);
+            let mse: f64 = hv
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>()
+                / hv.len() as f64;
+            assert!(mse <= prev + 1e-12, "mse should fall with precision");
+            prev = mse;
+        }
+        assert!(prev < 1e-6);
+    }
+
+    #[test]
+    fn one_bit_is_sign() {
+        let hv = [3.0f32, -0.5, 0.0, -2.0];
+        let (q, scale) = quantize(&hv, 1);
+        assert!(scale > 0.0);
+        assert!(q[0] > 0.0 && q[1] < 0.0 && q[2] >= 0.0 && q[3] < 0.0);
+        assert_eq!(q[0], -q[1].signum() * q[0].abs());
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        let (q, _) = quantize(&[0.0; 8], 8);
+        assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_bits() {
+        quantize(&[1.0], 17);
+    }
+}

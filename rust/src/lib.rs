@@ -1,0 +1,34 @@
+//! # FSL-HDnn — few-shot on-device learning, full-system reproduction
+//!
+//! Rust coordinator (L3) for the FSL-HDnn accelerator paper: a few-shot
+//! on-device-learning system combining a weight-clustered frozen feature
+//! extractor with a hyperdimensional-computing (HDC) classifier, plus a
+//! cycle-approximate simulator of the 40 nm chip and all the baselines the
+//! paper compares against.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
+//! * [`coordinator`] — the ODL device logic: few-shot sessions, batched
+//!   single-pass training (Fig. 12), early-exit inference (Fig. 11).
+//! * [`hdc`], [`fe`] — native compute substrates mirroring the kernels
+//!   bit-for-bit (LFSR contract) for the simulator and fast experiments.
+//! * [`sim`] — cycle-approximate model of the chip (Figs. 7–9) with a
+//!   calibrated 40 nm energy model.
+//! * [`baselines`] — kNN / partial-FT / full-FT learners and the prior
+//!   ODL chips of Table I as analytic cost models.
+//! * [`data`] — synthetic few-shot datasets and episode samplers.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fe;
+pub mod hdc;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

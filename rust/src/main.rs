@@ -1,0 +1,272 @@
+//! fsl-hdnn CLI — drive the coordinator, the chip simulator and the
+//! artifact checks from the command line.
+//!
+//! Subcommands:
+//!   episode         run N-way k-shot ODL episodes through the coordinator
+//!   sim             chip-simulator report (training / inference)
+//!   check-artifacts load artifacts, execute them, compare vs goldens
+//!   info            print model / chip configuration
+//!
+//! Examples:
+//!   fsl-hdnn episode --n-way 10 --k-shot 5 --episodes 3 --backend native
+//!   fsl-hdnn episode --backend pjrt --ee 2,2
+//!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
+//!   fsl-hdnn check-artifacts
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use fsl_hdnn::config::{ChipConfig, EeConfig};
+use fsl_hdnn::coordinator::Coordinator;
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::runtime::ArtifactRegistry;
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::stats;
+use fsl_hdnn::util::table::Table;
+
+/// Minimal `--key value` argument parser.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = HashMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches("--").to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(k, rest[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(k, "true".into());
+                i += 1;
+            }
+        }
+        Args { cmd, kv }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn ee(&self) -> Option<EeConfig> {
+        self.kv.get("ee").map(|s| {
+            let parts: Vec<usize> =
+                s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+            match parts.as_slice() {
+                [e_s, e_c] => EeConfig { e_s: *e_s, e_c: *e_c },
+                _ => EeConfig::paper_default(),
+            }
+        })
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("artifacts", "artifacts"))
+}
+
+fn cmd_episode(args: &Args) -> anyhow::Result<()> {
+    // optional TOML-subset config file, overridden by CLI flags
+    let mut rc = fsl_hdnn::config::RunConfig::default();
+    if let Some(path) = args.kv.get("config") {
+        let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
+        rc.apply_toml(&doc)?;
+    }
+    let backend = Backend::from_name(&args.get_str("backend", "native"))?;
+    let n_way: usize = args.get("n-way", rc.workload.n_way);
+    let k_shot: usize = args.get("k-shot", rc.workload.k_shot);
+    let queries: usize = args.get("queries", rc.workload.queries_per_class);
+    let episodes: usize = args.get("episodes", rc.workload.episodes.min(3));
+    let seed: u64 = args.get("seed", rc.workload.seed);
+    let hv_bits: u32 = args.get("hv-bits", if rc.chip.hv_bits == 16 { 4 } else { rc.chip.hv_bits });
+    let ee = args.ee().or(rc.ee);
+
+    let dir = artifacts_dir(args);
+    // model geometry read on this thread; the engine itself is built
+    // inside the coordinator worker (PJRT clients are not Send)
+    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    println!(
+        "backend={backend:?} model: {}x{}x{} -> F={} D={}",
+        model.image_size, model.image_size, model.in_channels, model.feature_dim, model.d
+    );
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(move || ComputeEngine::open(backend, &dir2), k_shot)?;
+    let gen = ImageGen::new(model.image_size, 64.max(n_way), seed);
+    let mut rng = Rng::new(seed);
+    let mut accs = Vec::new();
+    let mut blocks = Vec::new();
+    for ep in 0..episodes {
+        let classes = rng.choose_k(gen.n_classes, n_way);
+        let sid = coord.create_session(n_way, hv_bits)?;
+        for (label, &cls) in classes.iter().enumerate() {
+            for _ in 0..k_shot {
+                coord.add_shot(sid, label, gen.sample(cls, &mut rng))?;
+            }
+        }
+        coord.finish_training(sid)?;
+        let mut pairs = Vec::new();
+        for (label, &cls) in classes.iter().enumerate() {
+            for _ in 0..queries {
+                let out = coord.query(sid, gen.sample(cls, &mut rng), ee)?;
+                pairs.push((out.prediction, label));
+                blocks.push(out.blocks_used as f64);
+            }
+        }
+        let acc = stats::accuracy(&pairs);
+        accs.push(acc);
+        println!("episode {ep}: accuracy {:.1}%", 100.0 * acc);
+        coord.call(fsl_hdnn::coordinator::Request::CloseSession { session: sid });
+    }
+    let m = coord.metrics();
+    println!(
+        "\nmean accuracy {:.1}% ± {:.1} | avg blocks used {:.2}/{} | early-exit rate {:.0}%",
+        100.0 * stats::mean(&accs),
+        100.0 * stats::ci95(&accs),
+        stats::mean(&blocks),
+        model.n_branches(),
+        100.0 * m.early_exit_rate
+    );
+    println!(
+        "latency: add_shot {:.2} ms | train {:.2} ms | query {:.2} ms (max {:.2})",
+        m.add_shot_ms_mean, m.train_ms_mean, m.query_ms_mean, m.query_ms_max
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let cfg = ChipConfig {
+        freq_mhz: args.get("freq", 250.0),
+        voltage: args.get("voltage", 1.2),
+        hv_bits: args.get("hv-bits", 16),
+        ..Default::default()
+    };
+    let chip = Chip::paper(cfg.clone());
+    match args.get_str("task", "train").as_str() {
+        "train" => {
+            let batched: bool = args.get("batched", true);
+            let n_way: usize = args.get("n-way", 10);
+            let k_shot: usize = args.get("k-shot", 5);
+            let r = chip.train_episode(n_way, k_shot, batched, args.get("ee-train", false));
+            let mut t = Table::new(
+                &format!(
+                    "chip sim: {n_way}-way {k_shot}-shot training (batched={batched}, {} MHz, {} V)",
+                    cfg.freq_mhz, cfg.voltage
+                ),
+                &["metric", "value"],
+            );
+            t.row(&["images".into(), r.images.to_string()]);
+            t.row(&["cycles".into(), r.cycles.to_string()]);
+            t.row(&["latency (ms/img)".into(), format!("{:.1}", r.latency_ms_per_image)]);
+            t.row(&["energy (mJ/img)".into(), format!("{:.2}", r.energy_mj_per_image)]);
+            t.row(&["avg power (mW)".into(), format!("{:.1}", r.avg_power_mw)]);
+            t.row(&["PE utilization".into(), format!("{:.1}%", 100.0 * r.pe_utilization)]);
+            t.row(&["TOPS/W".into(), format!("{:.2}", chip.tops_per_watt(&r))]);
+            t.print();
+        }
+        "infer" => {
+            let n_classes: usize = args.get("classes", 10);
+            let mut t = Table::new(
+                &format!("chip sim: inference ({} MHz, {} V)", cfg.freq_mhz, cfg.voltage),
+                &["exit after block", "latency (ms)", "energy (mJ)", "conv layers"],
+            );
+            for s in 0..4 {
+                let r = chip.infer_image(n_classes, Some(s));
+                t.row(&[
+                    (s + 1).to_string(),
+                    format!("{:.2}", r.latency_ms),
+                    format!("{:.3}", r.energy_mj),
+                    format!("{}/{}", r.conv_layers_run, r.conv_layers_total),
+                ]);
+            }
+            let full = chip.infer_image(n_classes, None);
+            t.row(&[
+                "none (full)".into(),
+                format!("{:.2}", full.latency_ms),
+                format!("{:.3}", full.energy_mj),
+                format!("{}/{}", full.conv_layers_run, full.conv_layers_total),
+            ]);
+            t.print();
+        }
+        other => anyhow::bail!("unknown sim task {other} (train|infer)"),
+    }
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let reg = ArtifactRegistry::open(&dir)?;
+    println!("artifacts: {:?}", reg.entry_names());
+    // run the goldens through the PJRT path
+    let g = fsl_hdnn::util::json::Json::parse(&std::fs::read_to_string(
+        dir.join("goldens").join("goldens.json"),
+    )?)?;
+    let shape = |k: &str| g.get("shapes").and_then(|s| s.get(k)).and_then(|v| v.as_usize_vec());
+    let read_bin = |name: &str| -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(dir.join("goldens").join(name))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    };
+    let xs = shape("x").ok_or_else(|| anyhow::anyhow!("missing x shape"))?;
+    let x = read_bin("x.bin")?;
+    let feats_want = read_bin("feats.bin")?;
+    let fshape = shape("feats").unwrap();
+    // run image 0 through fe_forward_b1
+    let per_img = xs[1] * xs[2] * xs[3];
+    let out = reg.exec_f32("fe_forward_b1", &[(&x[..per_img], &[1, xs[1], xs[2], xs[3]])])?;
+    let got = &out[0];
+    let want = &feats_want[..fshape[1] * fshape[2]];
+    let mut max_err = 0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    println!("fe_forward_b1 vs python golden: max |err| = {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "feature mismatch vs goldens");
+    println!("check-artifacts OK ({} modules)", reg.entry_names().len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    match ArtifactRegistry::open(&dir) {
+        Ok(reg) => {
+            println!("model config (from {dir:?}): {:#?}", reg.model);
+            println!("entries: {:?}", reg.entry_names());
+        }
+        Err(e) => println!("no artifacts ({e}); chip defaults:\n{:#?}", ChipConfig::default()),
+    }
+    Ok(())
+}
+
+fn main() {
+    let args = Args::parse();
+    let result = match args.cmd.as_str() {
+        "episode" => cmd_episode(&args),
+        "sim" => cmd_sim(&args),
+        "check-artifacts" => cmd_check_artifacts(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!(
+                "usage: fsl-hdnn <episode|sim|check-artifacts|info> [--key value ...]\n\
+                 see doc comments in rust/src/main.rs"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Artifact registry: manifest-driven loading, one-time compilation and
+//! typed execution of the `artifacts/*.hlo.txt` modules.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos that jax >= 0.5
+//! serializes and xla_extension 0.5.1 rejects (see DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Shape+dtype signature of one artifact entry.
+#[derive(Clone, Debug)]
+pub struct EntrySig {
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Loaded registry: PJRT client + lazily compiled executables.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    entries: HashMap<String, EntrySig>,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl std::fmt::Debug for ArtifactRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactRegistry")
+            .field("dir", &self.dir)
+            .field("entries", &self.entries.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl ArtifactRegistry {
+    /// Open `artifacts/` (parses manifest, creates the PJRT CPU client;
+    /// compilation happens on first use of each entry).
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let man_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest.json in {dir:?}: {e} — run `make artifacts`"))?;
+        let man = Json::parse(&man_text)?;
+        let model = ModelConfig::from_manifest(&man)?;
+        let mut entries = HashMap::new();
+        for e in man
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+        {
+            let name = e.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+            let file = e.get("file").and_then(|v| v.as_str()).unwrap_or_default().to_string();
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                e.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|s| s.get("shape").and_then(|x| x.as_usize_vec()))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            entries.insert(
+                name,
+                EntrySig { file, input_shapes: shapes("inputs"), output_shapes: shapes("outputs") },
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), model, entries, client, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&EntrySig> {
+        self.entries.get(name)
+    }
+
+    /// Compile (once) and cache an entry.
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        let mut compiled = self.compiled.lock().unwrap();
+        if compiled.contains_key(name) {
+            return Ok(());
+        }
+        let sig = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact entry: {name}"))?;
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry on f32 inputs; inputs are (data, dims) pairs that
+    /// must match the manifest signature. Returns flattened f32 outputs.
+    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let sig = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact entry: {name}"))?;
+        anyhow::ensure!(
+            inputs.len() == sig.input_shapes.len(),
+            "{name}: expected {} inputs, got {}",
+            sig.input_shapes.len(),
+            inputs.len()
+        );
+        for (i, ((data, dims), want)) in inputs.iter().zip(&sig.input_shapes).enumerate() {
+            anyhow::ensure!(
+                *dims == want.as_slice(),
+                "{name}: input {i} shape {dims:?} != manifest {want:?}"
+            );
+            let n: usize = dims.iter().product();
+            anyhow::ensure!(data.len() == n, "{name}: input {i} data len {} != {n}", data.len());
+        }
+        self.ensure_compiled(name)?;
+        let compiled = self.compiled.lock().unwrap();
+        let exe = compiled.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Number of compiled (cached) executables — used by tests/metrics.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,157 @@
+//! Compute engine: one typed API over two backends.
+//!
+//! * `Pjrt` — the production path: every FE/encode/distance call executes
+//!   an AOT-compiled artifact on the PJRT CPU client (the "device").
+//! * `Native` — the rust mirror (same weights, bit-compatible cRP): used
+//!   by the simulator, the baselines and as a fast fallback. Cross-checked
+//!   against the PJRT path by integration tests.
+
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::fe::FeModel;
+use crate::hdc::CrpEncoder;
+use crate::runtime::ArtifactRegistry;
+
+/// Backend selection for the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => anyhow::bail!("unknown backend {other} (native|pjrt)"),
+        }
+    }
+}
+
+/// The engine. Both variants load the same `artifacts/` directory so the
+/// weights and cRP seeds always agree.
+pub enum ComputeEngine {
+    Native { fe: FeModel, enc: CrpEncoder },
+    Pjrt { reg: ArtifactRegistry, enc: CrpEncoder },
+}
+
+impl std::fmt::Debug for ComputeEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ComputeEngine::Native { .. } => write!(f, "ComputeEngine::Native"),
+            ComputeEngine::Pjrt { .. } => write!(f, "ComputeEngine::Pjrt"),
+        }
+    }
+}
+
+impl ComputeEngine {
+    pub fn open(backend: Backend, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        match backend {
+            Backend::Native => {
+                let fe = FeModel::load(artifacts_dir)?;
+                let enc = CrpEncoder::new(fe.cfg.d, fe.cfg.master_seed);
+                Ok(ComputeEngine::Native { fe, enc })
+            }
+            Backend::Pjrt => {
+                let reg = ArtifactRegistry::open(artifacts_dir)?;
+                let enc = CrpEncoder::new(reg.model.d, reg.model.master_seed);
+                Ok(ComputeEngine::Pjrt { reg, enc })
+            }
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self {
+            ComputeEngine::Native { .. } => Backend::Native,
+            ComputeEngine::Pjrt { .. } => Backend::Pjrt,
+        }
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        match self {
+            ComputeEngine::Native { fe, .. } => &fe.cfg,
+            ComputeEngine::Pjrt { reg, .. } => &reg.model,
+        }
+    }
+
+    /// FE forward for a batch of images (each flat H*W*C). Returns, per
+    /// image, the `n_branches` branch features padded to `feature_dim`.
+    pub fn fe_forward(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
+        match self {
+            ComputeEngine::Native { fe, .. } => {
+                images.iter().map(|img| fe.forward(img)).collect()
+            }
+            ComputeEngine::Pjrt { reg, .. } => {
+                let m = &reg.model;
+                let (s, c) = (m.image_size, m.in_channels);
+                let fdim = m.feature_dim;
+                let nb = m.n_branches();
+                let mut out = Vec::with_capacity(images.len());
+                let mut i = 0;
+                while i < images.len() {
+                    let take = if images.len() - i >= 8 { 8 } else { 1 };
+                    let entry = format!("fe_forward_b{take}");
+                    let mut flat = Vec::with_capacity(take * s * s * c);
+                    for img in &images[i..i + take] {
+                        anyhow::ensure!(img.len() == s * s * c, "image size mismatch");
+                        flat.extend_from_slice(img);
+                    }
+                    let res = reg.exec_f32(&entry, &[(&flat, &[take, s, s, c])])?;
+                    let feats = &res[0]; // (take, nb, fdim)
+                    for b in 0..take {
+                        let mut branches = Vec::with_capacity(nb);
+                        for br in 0..nb {
+                            let base = (b * nb + br) * fdim;
+                            branches.push(feats[base..base + fdim].to_vec());
+                        }
+                        out.push(branches);
+                    }
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// cRP-encode a batch of `feature_dim` features into D-dim HVs.
+    pub fn encode(&self, feats: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        match self {
+            ComputeEngine::Native { enc, .. } => {
+                Ok(feats.iter().map(|f| enc.encode_padded(f)).collect())
+            }
+            ComputeEngine::Pjrt { reg, .. } => {
+                let m = &reg.model;
+                let fdim = m.feature_dim;
+                let d = m.d;
+                let mut out = Vec::with_capacity(feats.len());
+                let mut i = 0;
+                while i < feats.len() {
+                    let take = if feats.len() - i >= 8 { 8 } else { 1 };
+                    let entry = format!("crp_encode_b{take}");
+                    let mut flat = Vec::with_capacity(take * fdim);
+                    for f in &feats[i..i + take] {
+                        anyhow::ensure!(f.len() == fdim, "feature dim mismatch");
+                        flat.extend_from_slice(f);
+                    }
+                    let res = reg.exec_f32(&entry, &[(&flat, &[take, fdim])])?;
+                    for b in 0..take {
+                        out.push(res[0][b * d..(b + 1) * d].to_vec());
+                    }
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// The native encoder is always available (HV post-processing,
+    /// baselines) regardless of backend.
+    pub fn native_encoder(&self) -> &CrpEncoder {
+        match self {
+            ComputeEngine::Native { enc, .. } => enc,
+            ComputeEngine::Pjrt { enc, .. } => enc,
+        }
+    }
+}

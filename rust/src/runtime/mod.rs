@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them from the coordinator's hot path. Python never runs here — the
+//! artifacts directory is the entire compile-path hand-off.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::ArtifactRegistry;
+pub use engine::ComputeEngine;

@@ -1,0 +1,343 @@
+//! Whole-chip simulation: composes the FE and HDC engines into the
+//! end-to-end training / inference flows the paper measures (Figs. 14–19,
+//! Table I).
+
+use super::energy::{EnergyModel, EnergyTally};
+use super::fe_engine;
+use super::hdc_engine;
+use super::workload::{self, ConvGeom};
+use crate::config::{ChipConfig, EeConfig};
+
+/// The simulated FSL-HDnn chip.
+#[derive(Clone, Debug)]
+pub struct Chip {
+    pub cfg: ChipConfig,
+    pub energy: EnergyModel,
+    /// conv layer table of the frozen FE workload
+    pub layers: Vec<ConvGeom>,
+    /// feature dim fed to the encoder (final stage width)
+    pub feature_dim: usize,
+    /// HDC dimension
+    pub d: usize,
+    pub ch_sub: usize,
+    pub n_centroids: usize,
+}
+
+/// Result of simulating a training workload.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainReport {
+    pub images: u64,
+    pub cycles: u64,
+    pub fe_stall_cycles: u64,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    pub avg_power_mw: f64,
+    /// per-image numbers (Fig. 16's y-axes)
+    pub latency_ms_per_image: f64,
+    pub energy_mj_per_image: f64,
+    pub pe_utilization: f64,
+}
+
+/// Result of simulating inference for one image.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferReport {
+    pub cycles: u64,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    /// conv layers executed (early exit skips the tail)
+    pub conv_layers_run: usize,
+    pub conv_layers_total: usize,
+}
+
+impl Chip {
+    /// The paper's measurement configuration: ResNet-18 @ 224x224, F=512,
+    /// D=4096, Ch_sub=64, N=16.
+    pub fn paper(cfg: ChipConfig) -> Self {
+        Chip {
+            cfg,
+            energy: EnergyModel::default(),
+            layers: workload::resnet18_224(),
+            feature_dim: 512,
+            d: 4096,
+            ch_sub: 64,
+            n_centroids: 16,
+        }
+    }
+
+    /// A chip running an arbitrary layer table (e.g. the small AOT model).
+    pub fn with_layers(cfg: ChipConfig, layers: Vec<ConvGeom>, feature_dim: usize, d: usize) -> Self {
+        Chip { cfg, energy: EnergyModel::default(), layers, feature_dim, d, ch_sub: 64, n_centroids: 16 }
+    }
+
+    fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.cfg.freq_mhz * 1e6)
+    }
+
+    /// Simulate N-way k-shot single-pass training.
+    ///
+    /// `batched`: process the k same-class shots back-to-back through the
+    /// FE with one index/codebook load (Fig. 12); otherwise each image
+    /// reloads weights. Early-exit training additionally encodes + updates
+    /// all 4 branch HVs per image (Section V-A); plain training encodes
+    /// the final feature only.
+    pub fn train_episode(&self, n_way: usize, k_shot: usize, batched: bool, ee_branches: bool) -> TrainReport {
+        let mut tally = EnergyTally::default();
+        let images = (n_way * k_shot) as u64;
+        // --- FE ---
+        let fe_batch = if batched { k_shot as u64 } else { 1 };
+        let passes = if batched { n_way as u64 } else { images };
+        let (reports, fe_tally) =
+            fe_engine::simulate_model(&self.layers, &self.cfg, self.ch_sub, self.n_centroids, fe_batch);
+        let fe_stalls: u64 = reports.iter().map(|r| r.stall_cycles).sum::<u64>() * passes;
+        tally.add(&fe_tally.scaled(passes));
+        // --- HDC encode + update ---
+        let n_branches = if ee_branches { 4 } else { 1 };
+        for _ in 0..n_branches {
+            tally.add(&hdc_engine::encode_tally(self.feature_dim, self.d).scaled(images));
+        }
+        // batched single-pass: aggregate k HVs then one class update per
+        // class; non-batched: one update per shot — same adds, more
+        // read-modify-writes
+        let updates = if batched { n_way as u64 } else { images };
+        let k_per_update = if batched { k_shot } else { 1 };
+        for _ in 0..n_branches {
+            tally.add(
+                &hdc_engine::train_update_tally(self.d, k_per_update, self.cfg.hv_bits)
+                    .scaled(updates),
+            );
+        }
+        let energy_mj = self.energy.energy_mj(&tally, self.cfg.voltage);
+        let latency_ms = self.seconds(tally.total_cycles) * 1e3;
+        TrainReport {
+            images,
+            cycles: tally.total_cycles,
+            fe_stall_cycles: fe_stalls,
+            latency_ms,
+            energy_mj,
+            avg_power_mw: self.energy.avg_power_mw(&tally, self.cfg.voltage, self.cfg.freq_mhz),
+            latency_ms_per_image: latency_ms / images as f64,
+            energy_mj_per_image: energy_mj / images as f64,
+            pe_utilization: tally.active_cycles as f64 / tally.total_cycles.max(1) as f64,
+        }
+    }
+
+    /// Simulate inference of one image that exits after `exit_stage`
+    /// CONV blocks (0-based; `None` = full network, no EE datapath).
+    pub fn infer_image(&self, n_classes: usize, exit_stage: Option<usize>) -> InferReport {
+        let (layers, checks): (Vec<ConvGeom>, usize) = match exit_stage {
+            Some(s) => (workload::prefix(&self.layers, s), s + 1),
+            None => (self.layers.clone(), 1),
+        };
+        let mut tally = EnergyTally::default();
+        let (_, fe_tally) =
+            fe_engine::simulate_model(&layers, &self.cfg, self.ch_sub, self.n_centroids, 1);
+        tally.add(&fe_tally);
+        // each confidence check = encode branch feature + distance search
+        for _ in 0..checks {
+            tally.add(&hdc_engine::encode_tally(self.feature_dim, self.d));
+            tally.add(&hdc_engine::distance_tally(self.d, n_classes, self.cfg.hv_bits));
+        }
+        InferReport {
+            cycles: tally.total_cycles,
+            latency_ms: self.seconds(tally.total_cycles) * 1e3,
+            energy_mj: self.energy.energy_mj(&tally, self.cfg.voltage),
+            conv_layers_run: layers.len(),
+            conv_layers_total: self.layers.len(),
+        }
+    }
+
+    /// Average inference over an empirical exit-stage distribution
+    /// (produced by the coordinator's EE logic on real episodes).
+    pub fn infer_with_exit_distribution(&self, n_classes: usize, exit_stages: &[usize]) -> InferReport {
+        assert!(!exit_stages.is_empty());
+        let mut acc = InferReport::default();
+        for &s in exit_stages {
+            let r = self.infer_image(n_classes, Some(s));
+            acc.cycles += r.cycles;
+            acc.latency_ms += r.latency_ms;
+            acc.energy_mj += r.energy_mj;
+            acc.conv_layers_run += r.conv_layers_run;
+            acc.conv_layers_total = r.conv_layers_total;
+        }
+        let n = exit_stages.len() as f64;
+        InferReport {
+            cycles: (acc.cycles as f64 / n) as u64,
+            latency_ms: acc.latency_ms / n,
+            energy_mj: acc.energy_mj / n,
+            conv_layers_run: (acc.conv_layers_run as f64 / n).round() as usize,
+            conv_layers_total: acc.conv_layers_total,
+        }
+    }
+
+    /// Peak throughput in effective GOPS (dense-equivalent ops/s): the
+    /// paper counts clustered ops at their dense equivalence (Table I).
+    pub fn peak_gops(&self) -> f64 {
+        // per cycle: pe_rows*3*pe_cols accumulates ~= dense MACs = 2 ops,
+        // scaled by the clustering op-equivalence (2K^2-1)/(K^2+N-1) ~ 2.1/2
+        let dense_ops_per_cycle = (self.cfg.pe_rows * 3 * self.cfg.pe_cols) as f64 * 2.0;
+        let k2 = 9.0;
+        let equiv = (2.0 * k2 * self.ch_sub as f64)
+            / (k2 * self.ch_sub as f64 + 2.0 * self.n_centroids as f64);
+        dense_ops_per_cycle * equiv * self.cfg.freq_mhz * 1e6 / 1e9
+    }
+
+    /// Energy efficiency in TOPS/W: effective (dense-equivalent) ops
+    /// retired per joule during the workload. NOTE: the paper quotes
+    /// 1.4-2.9 TOPS/W; the throughput-based figure from its own Table-I
+    /// numbers (197 GOPS / 305 mW = 0.65) is lower — the quoted band
+    /// evidently counts reduced-precision HDC ops. We report the
+    /// work-based number and document the difference in EXPERIMENTS.md.
+    pub fn tops_per_watt(&self, report: &TrainReport) -> f64 {
+        let total_ops = (report.images as f64)
+            * (workload::total_macs(&self.layers) as f64)
+            * 2.0;
+        total_ops / (report.energy_mj * 1e-3) / 1e12
+    }
+
+    /// Check that every EE config's class HVs fit the class memory
+    /// (Section V-A: 4*C*D*B bits vs 256 KB).
+    pub fn ee_class_memory_fits(&self, n_classes: usize) -> bool {
+        let bits = 4 * n_classes as u64 * self.d as u64 * self.cfg.hv_bits as u64;
+        bits <= self.cfg.class_mem_kb as u64 * 1024 * 8
+    }
+
+    /// Exit stage implied by an (E_s, E_c) policy if predictions agree
+    /// from stage `first_agree` on — pure policy arithmetic used by tests;
+    /// the real decision comes from the coordinator's distance tables.
+    pub fn ee_exit_stage(ee: &EeConfig, n_stages: usize, agree_from: usize) -> usize {
+        let start = ee.e_s.max(1) - 1; // convert to 0-based stage
+        let mut consistent = 0;
+        for s in 0..n_stages {
+            if s >= start && s >= agree_from {
+                consistent += 1;
+                if consistent >= ee.e_c {
+                    return s;
+                }
+            }
+        }
+        n_stages - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chip() -> Chip {
+        Chip::paper(ChipConfig::default())
+    }
+
+    #[test]
+    fn training_latency_matches_table1() {
+        // Table I: 35 ms/image at the fast corner (batched)
+        let r = chip().train_episode(10, 5, true, false);
+        assert!(
+            (20.0..55.0).contains(&r.latency_ms_per_image),
+            "got {} ms/image",
+            r.latency_ms_per_image
+        );
+    }
+
+    #[test]
+    fn training_energy_close_to_6mj() {
+        // 6 mJ/image at the efficiency corner (~1.0 V); allow a band
+        let cfg = ChipConfig { voltage: 1.0, freq_mhz: 150.0, ..Default::default() };
+        let r = Chip::paper(cfg).train_episode(10, 5, true, false);
+        assert!(
+            (3.0..12.0).contains(&r.energy_mj_per_image),
+            "got {} mJ/image",
+            r.energy_mj_per_image
+        );
+    }
+
+    #[test]
+    fn training_power_between_measured_corners() {
+        // Fig. 14b: 59 mW (slow) .. 305 mW (fast, peak). Training-average
+        // power at the fast corner must land inside the measured envelope.
+        let r = chip().train_episode(10, 5, true, false);
+        assert!(
+            (120.0..330.0).contains(&r.avg_power_mw),
+            "got {} mW",
+            r.avg_power_mw
+        );
+        let slow = Chip::paper(ChipConfig::slow_corner()).train_episode(10, 5, true, false);
+        assert!(slow.avg_power_mw < r.avg_power_mw);
+        assert!(slow.avg_power_mw > 20.0, "got {} mW", slow.avg_power_mw);
+    }
+
+    #[test]
+    fn batching_saves_18_to_32_percent() {
+        // Fig. 16's headline: 18-32% per-image savings; assert the effect
+        // exists and is material at the fast corner
+        let c = chip();
+        let nb = c.train_episode(10, 5, false, false);
+        let b = c.train_episode(10, 5, true, false);
+        let saving = 1.0 - b.latency_ms_per_image / nb.latency_ms_per_image;
+        assert!(saving > 0.15, "batched saving too small: {saving:.3}");
+        assert!(saving < 0.40, "batched saving implausibly large: {saving:.3}");
+    }
+
+    #[test]
+    fn early_exit_reduces_latency_monotonically() {
+        let c = chip();
+        let full = c.infer_image(10, None);
+        let mut prev = 0.0;
+        for s in 0..4 {
+            let r = c.infer_image(10, Some(s));
+            assert!(r.latency_ms > prev);
+            prev = r.latency_ms;
+            if s < 3 {
+                assert!(r.latency_ms < full.latency_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_near_197_gops() {
+        let g = chip().peak_gops();
+        assert!((120.0..260.0).contains(&g), "got {g} GOPS");
+    }
+
+    #[test]
+    fn tops_per_watt_in_paper_band() {
+        // work-based TOPS/W lands below the paper's 1.4-2.9 quote (see
+        // tops_per_watt doc); assert the plausible band and that the slow
+        // corner is more efficient (matches Fig. 14b's trend)
+        let fast = chip().train_episode(10, 5, true, false);
+        let tw_fast = chip().tops_per_watt(&fast);
+        assert!((0.2..3.5).contains(&tw_fast), "got {tw_fast} TOPS/W");
+        let slow = Chip::paper(ChipConfig::slow_corner());
+        let r_slow = slow.train_episode(10, 5, true, false);
+        assert!(slow.tops_per_watt(&r_slow) > tw_fast, "efficiency should rise at low V");
+    }
+
+    #[test]
+    fn ee_memory_capacity() {
+        let c = chip();
+        // 4 branches x 32 classes x 4096 x 4-bit = 256 KB exactly
+        let c4 = Chip { cfg: ChipConfig { hv_bits: 4, ..ChipConfig::default() }, ..c.clone() };
+        assert!(c4.ee_class_memory_fits(32));
+        assert!(!c.ee_class_memory_fits(32), "16-bit HVs: only 8 classes fit with EE");
+    }
+
+    #[test]
+    fn ee_exit_policy_arithmetic() {
+        let ee = EeConfig { e_s: 2, e_c: 2 };
+        // agreement from stage 0: checks start at stage 1; exit at stage 2
+        assert_eq!(Chip::ee_exit_stage(&ee, 4, 0), 2);
+        // never agrees until the last stage
+        assert_eq!(Chip::ee_exit_stage(&ee, 4, 3), 3);
+        let eager = EeConfig { e_s: 1, e_c: 1 };
+        assert_eq!(Chip::ee_exit_stage(&eager, 4, 0), 0);
+    }
+
+    #[test]
+    fn ee_training_costs_more_encodes() {
+        let c = chip();
+        let plain = c.train_episode(5, 5, true, false);
+        let ee = c.train_episode(5, 5, true, true);
+        assert!(ee.energy_mj > plain.energy_mj);
+        // but FE dominates: overhead should be small (<10%)
+        assert!(ee.energy_mj / plain.energy_mj < 1.10);
+    }
+}

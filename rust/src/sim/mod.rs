@@ -1,0 +1,33 @@
+//! Cycle-approximate simulator of the FSL-HDnn chip (Figs. 7–9, 12, 13).
+//!
+//! The fabricated 40 nm ASIC is not available (repro band 0), so every
+//! latency/energy experiment runs on this model instead. It reproduces the
+//! architecture at the level the paper's evaluation depends on:
+//!
+//! * 4x16 PE array, each PE with 3 accumulation RFs + 1 MAC (Fig. 8):
+//!   3 activation-accumulates per PE per cycle, MAC overlapped;
+//! * codebook-stationary dataflow with per-(channel-block, Ch_sub-group)
+//!   index/codebook loads from off-chip DRAM — the stall source that
+//!   batched training amortizes (Fig. 12);
+//! * double-buffered 128 KB activation SRAM (activation loads hidden);
+//! * cRP encoder at one 16x16 block/cycle, distance/update modules at one
+//!   256-bit HV segment/cycle (Fig. 9);
+//! * a 40 nm energy model fitted to the measured corners
+//!   (59 mW @ 100 MHz/0.9 V, 305 mW @ 250 MHz/1.2 V, 6 mJ/image training).
+//!
+//! `workload` carries the ResNet-18 @ 224x224 layer table the paper
+//! measures with; the simulator equally accepts the small AOT model's
+//! geometry (`FeModel::layer_geometries`).
+
+pub mod chip;
+pub mod energy;
+pub mod fe_engine;
+pub mod hdc_engine;
+pub mod memory;
+pub mod pe;
+pub mod pe_array;
+pub mod workload;
+
+pub use chip::{Chip, InferReport, TrainReport};
+pub use energy::EnergyModel;
+pub use workload::{resnet18_224, ConvGeom};

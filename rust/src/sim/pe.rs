@@ -1,0 +1,233 @@
+//! Event-driven PE model (Fig. 8): four register files, four adders, one
+//! MAC unit, with the 3-accumulate + 1-MAC rotation that overlaps the
+//! codebook MAC of a finished window with the accumulation of the next.
+//!
+//! This is the micro-architectural validation of the analytic throughput
+//! used by `fe_engine` (3 activation-accumulates per PE per cycle in
+//! steady state): `pe_array::simulate_tile` steps a whole 4x16 array
+//! cycle-by-cycle and the integration tests check the analytic model's
+//! cycle counts against it.
+
+/// Rotation role of one register file in a given phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RfRole {
+    /// accumulating partial sums for an output pixel
+    Accumulate,
+    /// feeding the MAC unit with its N bins
+    Draining,
+    /// idle (no pixel assigned)
+    Idle,
+}
+
+/// One register file: N partial-sum bins for one output pixel's window.
+#[derive(Clone, Debug)]
+pub struct RegFile {
+    pub bins: Vec<f32>,
+    pub role: RfRole,
+    /// accumulate operations received for the current window
+    pub accum_count: usize,
+    /// window size expected (K^2 * Ch_sub taps)
+    pub window_taps: usize,
+    /// bins drained so far (MAC progress)
+    pub drained: usize,
+}
+
+impl RegFile {
+    pub fn new(n_bins: usize, window_taps: usize) -> Self {
+        RegFile {
+            bins: vec![0.0; n_bins],
+            role: RfRole::Idle,
+            accum_count: 0,
+            window_taps,
+            drained: 0,
+        }
+    }
+
+    pub fn start_window(&mut self) {
+        self.bins.iter_mut().for_each(|b| *b = 0.0);
+        self.accum_count = 0;
+        self.drained = 0;
+        self.role = RfRole::Accumulate;
+    }
+
+    /// Accumulate one activation into bin `idx` (phase 1 of Fig. 4b).
+    pub fn accumulate(&mut self, idx: usize, activation: f32) {
+        debug_assert_eq!(self.role, RfRole::Accumulate);
+        self.bins[idx] += activation;
+        self.accum_count += 1;
+    }
+
+    pub fn window_complete(&self) -> bool {
+        self.accum_count >= self.window_taps
+    }
+
+    /// One MAC-drain step: multiply the next bin by its codebook entry.
+    /// Returns the partial product, and whether the drain finished.
+    pub fn drain_step(&mut self, codebook: &[f32]) -> (f32, bool) {
+        debug_assert_eq!(self.role, RfRole::Draining);
+        let i = self.drained;
+        let p = self.bins[i] * codebook[i];
+        self.drained += 1;
+        let done = self.drained >= self.bins.len();
+        (p, done)
+    }
+}
+
+/// One PE: 3 RFs accumulating 3 horizontally consecutive output pixels
+/// while the 4th drains through the MAC (Fig. 8b/c).
+#[derive(Clone, Debug)]
+pub struct Pe {
+    pub rfs: [RegFile; 4],
+    /// running MAC accumulator for the draining pixel
+    mac_acc: f32,
+    /// finished outputs (pixel results) this PE produced
+    pub outputs: Vec<f32>,
+    /// cycle counters
+    pub accum_ops: u64,
+    pub mac_ops: u64,
+    pub stall_cycles: u64,
+}
+
+impl Pe {
+    pub fn new(n_bins: usize, window_taps: usize) -> Self {
+        Pe {
+            rfs: [
+                RegFile::new(n_bins, window_taps),
+                RegFile::new(n_bins, window_taps),
+                RegFile::new(n_bins, window_taps),
+                RegFile::new(n_bins, window_taps),
+            ],
+            mac_acc: 0.0,
+            outputs: Vec::new(),
+            accum_ops: 0,
+            mac_ops: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Indices of RFs currently accumulating.
+    pub fn accumulating(&self) -> Vec<usize> {
+        (0..4).filter(|&i| self.rfs[i].role == RfRole::Accumulate).collect()
+    }
+
+    /// Assign a fresh window to an idle RF; returns the RF index.
+    pub fn assign_window(&mut self) -> Option<usize> {
+        for i in 0..4 {
+            if self.rfs[i].role == RfRole::Idle {
+                self.rfs[i].start_window();
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// One cycle: up to 3 accumulates (same tap broadcast to the 3 active
+    /// windows) + 1 MAC-drain step. `taps` supplies (bin index, activation)
+    /// per accumulating RF.
+    pub fn step(&mut self, taps: &[(usize, usize, f32)], codebook: &[f32]) {
+        let mut accum_this_cycle = 0;
+        for &(rf, bin, act) in taps.iter().take(3) {
+            if self.rfs[rf].role == RfRole::Accumulate {
+                self.rfs[rf].accumulate(bin, act);
+                self.accum_ops += 1;
+                accum_this_cycle += 1;
+            }
+        }
+        if accum_this_cycle == 0 && taps.is_empty() {
+            self.stall_cycles += 1;
+        }
+        // rotate a completed accumulation window into the drain slot if the
+        // MAC is free (no RF currently draining)
+        if !self.rfs.iter().any(|r| r.role == RfRole::Draining) {
+            if let Some(i) = (0..4).find(|&i| {
+                self.rfs[i].role == RfRole::Accumulate && self.rfs[i].window_complete()
+            }) {
+                self.rfs[i].role = RfRole::Draining;
+                self.mac_acc = 0.0;
+            }
+        }
+        // MAC-drain one bin per cycle
+        if let Some(i) = (0..4).find(|&i| self.rfs[i].role == RfRole::Draining) {
+            let (p, done) = self.rfs[i].drain_step(codebook);
+            self.mac_acc += p;
+            self.mac_ops += 1;
+            if done {
+                self.outputs.push(self.mac_acc);
+                self.rfs[i].role = RfRole::Idle;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_lifecycle() {
+        let mut rf = RegFile::new(4, 6);
+        rf.start_window();
+        for i in 0..6 {
+            rf.accumulate(i % 4, 1.0);
+        }
+        assert!(rf.window_complete());
+        rf.role = RfRole::Draining;
+        let cb = [1.0, 2.0, 3.0, 4.0];
+        let mut acc = 0.0;
+        loop {
+            let (p, done) = rf.drain_step(&cb);
+            acc += p;
+            if done {
+                break;
+            }
+        }
+        // bins: idx0 gets taps 0,4 -> 2.0; idx1 gets 1,5 -> 2.0; idx2,3 -> 1.0
+        assert!((acc - (2.0 * 1.0 + 2.0 * 2.0 + 1.0 * 3.0 + 1.0 * 4.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pe_produces_correct_output() {
+        // single window: 2 taps into 2 bins, codebook [10, 100]
+        let mut pe = Pe::new(2, 2);
+        let rf = pe.assign_window().unwrap();
+        pe.step(&[(rf, 0, 3.0)], &[10.0, 100.0]);
+        pe.step(&[(rf, 1, 5.0)], &[10.0, 100.0]);
+        // window complete; drain takes 2 more cycles
+        pe.step(&[], &[10.0, 100.0]);
+        pe.step(&[], &[10.0, 100.0]);
+        assert_eq!(pe.outputs.len(), 1);
+        assert!((pe.outputs[0] - (3.0 * 10.0 + 5.0 * 100.0)).abs() < 1e-6);
+        assert_eq!(pe.accum_ops, 2);
+        assert_eq!(pe.mac_ops, 2);
+    }
+
+    #[test]
+    fn mac_overlaps_next_accumulation() {
+        // two windows: while the first drains, the second accumulates
+        let mut pe = Pe::new(2, 2);
+        let a = pe.assign_window().unwrap();
+        pe.step(&[(a, 0, 1.0)], &[1.0, 1.0]);
+        pe.step(&[(a, 1, 1.0)], &[1.0, 1.0]);
+        let b = pe.assign_window().unwrap();
+        assert_ne!(a, b);
+        // drain of a proceeds in the same cycles as accumulation of b
+        pe.step(&[(b, 0, 2.0)], &[1.0, 1.0]);
+        pe.step(&[(b, 1, 2.0)], &[1.0, 1.0]);
+        assert_eq!(pe.outputs.len(), 1, "first window drained during second's accumulation");
+        pe.step(&[], &[1.0, 1.0]);
+        pe.step(&[], &[1.0, 1.0]);
+        assert_eq!(pe.outputs.len(), 2);
+        assert!((pe.outputs[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn three_windows_accumulate_in_parallel() {
+        let mut pe = Pe::new(1, 1);
+        let r0 = pe.assign_window().unwrap();
+        let r1 = pe.assign_window().unwrap();
+        let r2 = pe.assign_window().unwrap();
+        assert_eq!(pe.accumulating().len(), 3);
+        pe.step(&[(r0, 0, 1.0), (r1, 0, 2.0), (r2, 0, 3.0)], &[1.0]);
+        assert_eq!(pe.accum_ops, 3);
+    }
+}

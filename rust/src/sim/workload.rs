@@ -1,0 +1,122 @@
+//! Workload geometry: conv layer tables fed to the FE engine.
+
+/// Geometry of one convolution layer as the accelerator sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub cout: usize,
+    pub cin: usize,
+    pub k: usize,
+    /// output spatial size (H_out == W_out assumed for these workloads)
+    pub out: usize,
+    pub stride: usize,
+    /// ResNet stage (0-based) this layer belongs to — drives the
+    /// early-exit prefix accounting (4 CONV layers per block, Fig. 11)
+    pub stage: usize,
+}
+
+impl ConvGeom {
+    /// Dense MAC count.
+    pub fn macs(&self) -> u64 {
+        (self.out * self.out * self.cout * self.k * self.k * self.cin) as u64
+    }
+
+    /// Activation-accumulate operations (phase 1 of the clustered conv) —
+    /// same count as MACs: each input tap is accumulated once.
+    pub fn accum_ops(&self) -> u64 {
+        self.macs()
+    }
+
+    /// Weight-index storage bits at log2(N) bits per weight.
+    pub fn index_bits(&self, n_centroids: usize) -> u64 {
+        let idx_bits = (n_centroids as f64).log2().ceil() as u64;
+        (self.cout * self.k * self.k * self.cin) as u64 * idx_bits
+    }
+
+    /// Codebook storage bits: one N x 16-bit codebook per (cout, group).
+    pub fn codebook_bits(&self, ch_sub: usize, n_centroids: usize) -> u64 {
+        let g = self.cin.div_ceil(ch_sub.min(self.cin)) as u64;
+        self.cout as u64 * g * n_centroids as u64 * 16
+    }
+}
+
+/// ResNet-18 at 224x224 — the paper's measurement workload (Table I
+/// footnote f: "224x224 image @ ResNet-18"). Stage indices mark the four
+/// CONV blocks whose outputs feed the early-exit branches (Fig. 11).
+pub fn resnet18_224() -> Vec<ConvGeom> {
+    let mut layers = vec![
+        // stem: 7x7/2 conv, 3->64, out 112 (then 3x3/2 maxpool -> 56)
+        ConvGeom { cout: 64, cin: 3, k: 7, out: 112, stride: 2, stage: 0 },
+    ];
+    // stage 1: 2 basic blocks @56, 64ch
+    for _ in 0..2 {
+        layers.push(ConvGeom { cout: 64, cin: 64, k: 3, out: 56, stride: 1, stage: 0 });
+        layers.push(ConvGeom { cout: 64, cin: 64, k: 3, out: 56, stride: 1, stage: 0 });
+    }
+    // stages 2..4: first block downsamples (stride 2) + 1x1 projection
+    let specs = [(128usize, 64usize, 28usize, 1usize), (256, 128, 14, 2), (512, 256, 7, 3)];
+    for (w, w_prev, out, stage) in specs {
+        layers.push(ConvGeom { cout: w, cin: w_prev, k: 3, out, stride: 2, stage });
+        layers.push(ConvGeom { cout: w, cin: w, k: 3, out, stride: 1, stage });
+        layers.push(ConvGeom { cout: w, cin: w_prev, k: 1, out, stride: 2, stage }); // proj
+        layers.push(ConvGeom { cout: w, cin: w, k: 3, out, stride: 1, stage });
+        layers.push(ConvGeom { cout: w, cin: w, k: 3, out, stride: 1, stage });
+    }
+    layers
+}
+
+/// Total dense MACs of a layer table.
+pub fn total_macs(layers: &[ConvGeom]) -> u64 {
+    layers.iter().map(|l| l.macs()).sum()
+}
+
+/// Layers belonging to stages `0..=stage` (early-exit prefix).
+pub fn prefix(layers: &[ConvGeom], stage: usize) -> Vec<ConvGeom> {
+    layers.iter().copied().filter(|l| l.stage <= stage).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_macs_about_1_8g() {
+        let g = total_macs(&resnet18_224());
+        // published ResNet-18 @224 is ~1.8 GMAC
+        assert!(g > 1_600_000_000 && g < 2_100_000_000, "got {g}");
+    }
+
+    #[test]
+    fn stages_cover_0_to_3() {
+        let layers = resnet18_224();
+        for s in 0..4 {
+            assert!(layers.iter().any(|l| l.stage == s));
+        }
+        assert!(layers.iter().all(|l| l.stage < 4));
+    }
+
+    #[test]
+    fn prefix_monotone() {
+        let layers = resnet18_224();
+        let mut prev = 0;
+        for s in 0..4 {
+            let macs = total_macs(&prefix(&layers, s));
+            assert!(macs > prev);
+            prev = macs;
+        }
+        assert_eq!(prev, total_macs(&layers));
+    }
+
+    #[test]
+    fn index_bits_match_4bit_per_weight() {
+        let l = ConvGeom { cout: 64, cin: 64, k: 3, out: 56, stride: 1, stage: 0 };
+        assert_eq!(l.index_bits(16), (64 * 9 * 64 * 4) as u64);
+    }
+
+    #[test]
+    fn early_stage_cheaper_than_late_but_same_order() {
+        let layers = resnet18_224();
+        let s0 = total_macs(&prefix(&layers, 0));
+        let all = total_macs(&layers);
+        assert!(s0 * 2 < all, "stage 0 should be well under half the model");
+    }
+}

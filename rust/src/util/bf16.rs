@@ -1,0 +1,88 @@
+//! bfloat16 emulation — the chip's FE computes in BF16 (Fig. 13b).
+//!
+//! We round f32 -> bf16 -> f32 (round-to-nearest-even) at the points where
+//! the chip would store/feed BF16 values, so the native FE reproduces the
+//! chip's numerics while keeping f32 storage.
+
+/// Round an f32 to the nearest bf16 (ties to even) and back.
+#[inline]
+pub fn round_f32(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // NaN: keep quiet NaN
+    if x.is_nan() {
+        return f32::from_bits(bits | 0x0040_0000);
+    }
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    let _ = round_bit;
+    f32::from_bits(rounded)
+}
+
+/// Pack an f32 into raw bf16 bits.
+#[inline]
+pub fn to_bits(x: f32) -> u16 {
+    (round_f32(x).to_bits() >> 16) as u16
+}
+
+/// Unpack raw bf16 bits to f32.
+#[inline]
+pub fn from_bits(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round a whole slice in place.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_f32(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -0.09375] {
+            assert_eq!(round_f32(v), v, "{v} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // 1.0 + 2^-9 is halfway-ish below the next bf16 step (2^-7 at 1.0)
+        let x = 1.0f32 + 1.0 / 512.0;
+        let r = round_f32(x);
+        assert!((r - 1.0).abs() < 1.0 / 64.0);
+        // relative error of bf16 rounding is <= 2^-8
+        for v in [3.14159f32, -271.828, 1e-3, 42.42] {
+            let r = round_f32(v);
+            assert!(((r - v) / v).abs() <= 1.0 / 256.0, "{v} -> {r}");
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        for v in [1.5f32, -3.25, 1024.0] {
+            assert_eq!(from_bits(to_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan_inf_stays_inf() {
+        assert!(round_f32(f32::NAN).is_nan());
+        assert_eq!(round_f32(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_f32(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut r = crate::util::prng::Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.gauss_f32() * 100.0;
+            let once = round_f32(v);
+            assert_eq!(round_f32(once), once);
+        }
+    }
+}

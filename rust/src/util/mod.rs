@@ -1,0 +1,11 @@
+//! Self-contained infrastructure: PRNG, JSON, stats, tables, bf16, timing.
+//!
+//! The build runs against a vendored offline registry with no serde / rand /
+//! criterion, so the small utilities those crates would provide live here.
+
+pub mod bf16;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,216 @@
+//! Deterministic PRNGs: splitmix64 (the python-contract seeder) and
+//! xoshiro256** for general sampling.
+//!
+//! `splitmix64_next` must match `python/compile/kernels/lfsr.py::splitmix64`
+//! bit-for-bit — it seeds the cRP encoder's LFSRs on both sides.
+
+/// The splitmix64 increment (golden ratio).
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One splitmix64 output for state `x` (mirrors the python helper, which
+/// takes the *pre-increment* state and returns the mixed value).
+#[inline]
+pub fn splitmix64_next(x: u64) -> u64 {
+    let x = x.wrapping_add(GOLDEN);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, no_std-friendly generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller sample
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via splitmix64 expansion (never all-zero).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            sm = sm.wrapping_add(GOLDEN);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            *v = z ^ (z >> 31);
+        }
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9;
+        }
+        Rng { s, gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal (Box-Muller with spare caching).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn gauss_f32(&mut self) -> f32 {
+        self.gauss() as f32
+    }
+
+    /// Student-t-ish heavy-tailed sample (normal / sqrt(chi2/df)) — used by
+    /// dataset presets to create the outliers that hurt kNN.
+    pub fn heavy_tail(&mut self, df: f64) -> f64 {
+        let z = self.gauss();
+        let mut chi2 = 0.0;
+        let k = df.round().max(1.0) as usize;
+        for _ in 0..k {
+            let g = self.gauss();
+            chi2 += g * g;
+        }
+        z / (chi2 / df).sqrt()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices out of 0..n (partial shuffle).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Derive an independent child generator (stable under reordering).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(GOLDEN))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_matches_python_golden() {
+        // printed by python/compile/kernels/lfsr.py::splitmix64
+        assert_eq!(splitmix64_next(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64_next(1), 0x910A_2DEC_8902_5CC1);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gauss();
+            m += g;
+            v += g * g;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.03, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(4);
+        let ks = r.choose_k(10, 5);
+        let mut s = ks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+        assert!(ks.iter().all(|&i| i < 10));
+    }
+
+    #[test]
+    fn deterministic_and_fork_independent() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut f1 = a.fork(1);
+        let mut f2 = b.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,113 @@
+//! Built-in micro-bench harness (criterion is unavailable offline).
+//!
+//! `bench()` warms up, then runs timed repetitions and reports
+//! mean ± std and median — what every `benches/*.rs` target prints.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<38} {:>12} ± {:>10}  (median {:>12}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.median_ns),
+            self.reps
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with warmup; adapts the repetition count to the op cost so a
+/// case takes roughly `budget_ms` total.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
+    // warmup + cost estimate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64() * 1e9;
+    let reps = ((budget_ms * 1e6 / once.max(1.0)).ceil() as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / reps as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / reps as f64;
+    BenchResult {
+        name: name.to_string(),
+        reps,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        median_ns: samples[reps / 2],
+        min_ns: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut acc = 0u64;
+        let r = bench("spin", 2.0, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.reps >= 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,260 @@
+//! Coordinator integration: full session lifecycle over the native
+//! backend, error paths, metrics accounting and early-exit behaviour.
+//!
+//! Skipped when `make artifacts` has not run (the engine loads weights
+//! from the artifacts directory).
+
+use std::path::PathBuf;
+
+use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::coordinator::{Coordinator, Request, Response};
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::util::prng::Rng;
+
+fn start_native() -> Option<Coordinator> {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Coordinator::start(move || ComputeEngine::open(Backend::Native, &dir), 3).unwrap())
+}
+
+fn model_geometry() -> (usize, usize) {
+    let dir = PathBuf::from("artifacts");
+    let m = ComputeEngine::open(Backend::Native, &dir).unwrap().model().clone();
+    (m.image_size, m.in_channels)
+}
+
+#[test]
+fn session_lifecycle_and_learning() {
+    let Some(coord) = start_native() else { return };
+    let (size, chans) = model_geometry();
+    let gen = ImageGen::new(size, 8, 5);
+    let mut rng = Rng::new(5);
+    let sid = coord.create_session(3, 16).unwrap();
+    // 3 classes x 3 shots; batcher trains each class when it reaches k=3
+    for class in 0..3 {
+        for _ in 0..3 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    let shots = coord.finish_training(sid).unwrap();
+    assert_eq!(shots, 9);
+    let mut correct = 0;
+    let total = 12;
+    for i in 0..total {
+        let class = i % 3;
+        let out = coord.query(sid, gen.sample(class, &mut rng), None).unwrap();
+        correct += (out.prediction == class) as usize;
+        assert_eq!(out.blocks_used, 4);
+        assert!(!out.exited_early);
+    }
+    assert!(correct * 2 > total, "learned sessions must beat chance: {correct}/{total}");
+    let _ = chans;
+    match coord.call(Request::CloseSession { session: sid }) {
+        Response::SessionClosed { session } => assert_eq!(session, sid),
+        other => panic!("unexpected {other:?}"),
+    }
+    // closed session rejects further work
+    assert!(coord.query(sid, gen.sample(0, &mut rng), None).is_err());
+}
+
+#[test]
+fn error_paths_reported_not_panicked() {
+    let Some(coord) = start_native() else { return };
+    let (size, _) = model_geometry();
+    // unknown session
+    assert!(coord.add_shot(999, 0, vec![0.0; size * size * 3]).is_err());
+    assert!(coord.finish_training(999).is_err());
+    // class out of range
+    let sid = coord.create_session(2, 16).unwrap();
+    assert!(coord.add_shot(sid, 7, vec![0.0; size * size * 3]).is_err());
+    // wrong image size surfaces as an error when the batch flushes
+    coord.add_shot(sid, 0, vec![0.0; 3]).unwrap(); // accepted into batcher...
+    let r = coord.finish_training(sid);
+    assert!(r.is_err(), "bad image must fail at FE time: {r:?}");
+    // coordinator still alive afterwards
+    let m = coord.metrics();
+    assert!(m.errors >= 3, "errors must be counted: {m:?}");
+}
+
+#[test]
+fn early_exit_uses_fewer_blocks_on_confident_queries() {
+    let Some(coord) = start_native() else { return };
+    let (size, _) = model_geometry();
+    let gen = ImageGen::new(size, 8, 11);
+    let mut rng = Rng::new(11);
+    let sid = coord.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        for _ in 0..3 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    let ee = EeConfig { e_s: 1, e_c: 2 };
+    let mut total_blocks = 0;
+    let n = 10;
+    for i in 0..n {
+        let out = coord.query(sid, gen.sample(i % 2, &mut rng), Some(ee)).unwrap();
+        total_blocks += out.blocks_used;
+        assert!(out.blocks_used >= 2, "(1,2) needs at least 2 blocks");
+    }
+    assert!(
+        total_blocks < n * 4,
+        "some queries must exit early: {total_blocks} blocks for {n} queries"
+    );
+    let m = coord.metrics();
+    assert!(m.early_exit_rate > 0.0);
+    assert!(m.avg_blocks_used >= 2.0 && m.avg_blocks_used <= 4.0);
+}
+
+#[test]
+fn metrics_count_operations() {
+    let Some(coord) = start_native() else { return };
+    let (size, _) = model_geometry();
+    let gen = ImageGen::new(size, 4, 13);
+    let mut rng = Rng::new(13);
+    let sid = coord.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        for _ in 0..3 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    coord.query(sid, gen.sample(0, &mut rng), None).unwrap();
+    coord.query(sid, gen.sample(1, &mut rng), None).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.shots, 6);
+    assert_eq!(m.trains, 1);
+    assert_eq!(m.queries, 2);
+    assert!(m.query_ms_mean > 0.0);
+}
+
+#[test]
+fn concurrent_sessions_are_isolated() {
+    let Some(coord) = start_native() else { return };
+    let (size, _) = model_geometry();
+    let gen = ImageGen::new(size, 8, 17);
+    let mut rng = Rng::new(17);
+    let s1 = coord.create_session(2, 16).unwrap();
+    let s2 = coord.create_session(3, 16).unwrap();
+    assert_ne!(s1, s2);
+    // interleave shots of both sessions
+    for i in 0..3 {
+        coord.add_shot(s1, 0, gen.sample(0, &mut rng)).unwrap();
+        coord.add_shot(s2, i % 3, gen.sample(4 + (i % 3), &mut rng)).unwrap();
+        coord.add_shot(s1, 1, gen.sample(1, &mut rng)).unwrap();
+    }
+    coord.add_shot(s2, 1, gen.sample(5, &mut rng)).unwrap();
+    coord.add_shot(s2, 2, gen.sample(6, &mut rng)).unwrap();
+    let n1 = coord.finish_training(s1).unwrap();
+    let n2 = coord.finish_training(s2).unwrap();
+    assert_eq!(n1, 6);
+    assert_eq!(n2, 5);
+    // each session answers in its own label space
+    let o1 = coord.query(s1, gen.sample(0, &mut rng), None).unwrap();
+    assert!(o1.prediction < 2);
+    let o2 = coord.query(s2, gen.sample(5, &mut rng), None).unwrap();
+    assert!(o2.prediction < 3);
+}
+
+#[test]
+fn router_places_and_isolates_sessions() {
+    use fsl_hdnn::coordinator::{DeviceRouter, Placement};
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (size, _) = model_geometry();
+    let mut router = DeviceRouter::start(2, 2, Placement::LeastLoaded, |_i| {
+        let d = dir.clone();
+        move || ComputeEngine::open(Backend::Native, &d)
+    })
+    .unwrap();
+    let gen = ImageGen::new(size, 8, 19);
+    let mut rng = Rng::new(19);
+    // four sessions -> least-loaded should balance 2/2
+    let sids: Vec<u64> = (0..4).map(|_| router.create_session(2, 4).unwrap()).collect();
+    assert_eq!(router.loads(), &[2, 2], "least-loaded must balance");
+    // train + query one session on each device
+    for &sid in &sids[..2] {
+        for class in 0..2 {
+            for _ in 0..2 {
+                router.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+            }
+        }
+        assert_eq!(router.finish_training(sid).unwrap(), 4);
+        let out = router.query(sid, gen.sample(0, &mut rng), None).unwrap();
+        assert!(out.prediction < 2);
+    }
+    // closing rebalances
+    router.close_session(sids[0]).unwrap();
+    assert_eq!(router.loads().iter().sum::<usize>(), 3);
+    assert!(router.query(sids[0], gen.sample(0, &mut rng), None).is_err());
+    // global ids are unique even across devices
+    let mut uniq = sids.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), 4);
+}
+
+#[test]
+fn router_spills_to_other_device_when_full() {
+    use fsl_hdnn::coordinator::{DeviceRouter, Placement};
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+        let d = dir.clone();
+        move || ComputeEngine::open(Backend::Native, &d)
+    })
+    .unwrap();
+    // 32-way @ 4-bit x 4 branches fills one device's 256 KB class memory
+    let a = router.create_session(32, 4).unwrap();
+    let b = router.create_session(32, 4).unwrap();
+    let pa = router.placement(a).unwrap();
+    let pb = router.placement(b).unwrap();
+    assert_ne!(pa.device, pb.device, "second big session must spill");
+    // a third cannot fit anywhere
+    assert!(router.create_session(32, 4).is_err(), "fleet-wide backpressure");
+}
+
+#[test]
+fn raw_feature_input_mode() {
+    // Fig. 7: raw features can bypass the FE and feed the FSL classifier
+    let Some(coord) = start_native() else { return };
+    let sid = coord.create_session(3, 16).unwrap();
+    let mut rng = Rng::new(23);
+    // well-separated feature prototypes
+    let protos: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..128).map(|_| 3.0 * rng.gauss_f32()).collect())
+        .collect();
+    for (c, p) in protos.iter().enumerate() {
+        for _ in 0..3 {
+            let f: Vec<f32> = p.iter().map(|v| v + 0.3 * rng.gauss_f32()).collect();
+            match coord.call(Request::AddFeatureShot { session: sid, class: c, feature: f }) {
+                Response::ShotAccepted { .. } => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+    let mut correct = 0;
+    for (c, p) in protos.iter().enumerate() {
+        let q: Vec<f32> = p.iter().map(|v| v + 0.3 * rng.gauss_f32()).collect();
+        let out = coord
+            .call(Request::QueryFeature { session: sid, feature: q })
+            .expect_query();
+        correct += (out.prediction == c) as usize;
+    }
+    assert_eq!(correct, 3, "feature-mode session must classify its prototypes");
+    // short features are zero-padded; oversize rejected
+    let ok = coord.call(Request::QueryFeature { session: sid, feature: vec![0.5; 16] });
+    assert!(matches!(ok, Response::QueryResult { .. }));
+    let bad = coord.call(Request::QueryFeature { session: sid, feature: vec![0.5; 4096] });
+    assert!(matches!(bad, Response::Error(_)));
+}

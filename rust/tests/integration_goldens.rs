@@ -1,0 +1,142 @@
+//! Cross-language golden tests: the rust-native substrates must reproduce
+//! the python pipeline's answers recorded in `artifacts/goldens/` at AOT
+//! time. This is the contract that makes native class HVs interchangeable
+//! with PJRT-produced ones.
+//!
+//! Skipped (with a message) when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use fsl_hdnn::fe::FeModel;
+use fsl_hdnn::hdc::{distance, lfsr, CrpEncoder};
+use fsl_hdnn::util::json::Json;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn read_bin(dir: &Path, name: &str) -> Vec<f32> {
+    std::fs::read(dir.join("goldens").join(name))
+        .unwrap_or_else(|e| panic!("missing golden {name}: {e}"))
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn goldens_json(dir: &Path) -> Json {
+    Json::parse(&std::fs::read_to_string(dir.join("goldens").join("goldens.json")).unwrap())
+        .unwrap()
+}
+
+fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn lfsr_matches_python_goldens() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens_json(&dir);
+    let seq = g.get("step_seq_from_ace1").unwrap().as_u64_vec().unwrap();
+    let mut s = 0xACE1u16;
+    for want in seq {
+        s = lfsr::step(s);
+        assert_eq!(s as u64, want, "LFSR step sequence diverges");
+    }
+    let master = g.get("master_seed").unwrap().as_u64().unwrap();
+    let row0 = g.get("row0_states").unwrap().as_u64_vec().unwrap();
+    let got = lfsr::row_block_states(master, 0);
+    assert_eq!(got.iter().map(|&v| v as u64).collect::<Vec<_>>(), row0);
+    let row7 = g.get("row7_states").unwrap().as_u64_vec().unwrap();
+    let got7 = lfsr::row_block_states(master, 7);
+    assert_eq!(got7.iter().map(|&v| v as u64).collect::<Vec<_>>(), row7);
+    let step16 = g.get("row0_step16").unwrap().as_u64_vec().unwrap();
+    for (s0, want) in got.iter().zip(step16) {
+        assert_eq!(lfsr::step16(*s0) as u64, want);
+    }
+}
+
+#[test]
+fn native_fe_matches_python_features() {
+    let Some(dir) = artifacts() else { return };
+    let fe = FeModel::load(&dir).unwrap();
+    let g = goldens_json(&dir);
+    let xs = g.get("shapes").unwrap().get("x").unwrap().as_usize_vec().unwrap();
+    let fs = g.get("shapes").unwrap().get("feats").unwrap().as_usize_vec().unwrap();
+    let x = read_bin(&dir, "x.bin");
+    let feats = read_bin(&dir, "feats.bin");
+    let per_img = xs[1] * xs[2] * xs[3];
+    let per_feat = fs[1] * fs[2];
+    for b in 0..xs[0] {
+        let branches = fe.forward(&x[b * per_img..(b + 1) * per_img]).unwrap();
+        let flat: Vec<f32> = branches.concat();
+        let err = max_abs_err(&flat, &feats[b * per_feat..(b + 1) * per_feat]);
+        assert!(err < 2e-3, "image {b}: native FE vs python err {err}");
+    }
+}
+
+#[test]
+fn native_crp_matches_python_hv() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens_json(&dir);
+    let master = g.get("master_seed").unwrap().as_u64().unwrap();
+    let hv_shape = g.get("shapes").unwrap().get("hv").unwrap().as_usize_vec().unwrap();
+    let d = hv_shape[1];
+    let feats = read_bin(&dir, "feats.bin");
+    let hv = read_bin(&dir, "hv.bin");
+    let fs = g.get("shapes").unwrap().get("feats").unwrap().as_usize_vec().unwrap();
+    let (nb, fdim) = (fs[1], fs[2]);
+    let enc = CrpEncoder::new(d, master);
+    for b in 0..hv_shape[0] {
+        // python encoded the FINAL branch feature (branch nb-1)
+        let base = (b * nb + (nb - 1)) * fdim;
+        let got = enc.encode(&feats[base..base + fdim]);
+        let err = max_abs_err(&got, &hv[b * d..(b + 1) * d]);
+        assert!(err < 1e-2, "image {b}: native cRP vs python err {err}");
+    }
+}
+
+#[test]
+fn native_distance_matches_python_table() {
+    let Some(dir) = artifacts() else { return };
+    let g = goldens_json(&dir);
+    let ds = g.get("shapes").unwrap().get("dist").unwrap().as_usize_vec().unwrap();
+    let d = g.get("shapes").unwrap().get("hv").unwrap().as_usize_vec().unwrap()[1];
+    let hv = read_bin(&dir, "hv.bin");
+    let classes = read_bin(&dir, "classes.bin");
+    let dist = read_bin(&dir, "dist.bin");
+    for b in 0..ds[0] {
+        for c in 0..ds[1] {
+            let got = distance::l1(&hv[b * d..(b + 1) * d], &classes[c * d..(c + 1) * d]);
+            let want = dist[b * ds[1] + c] as f64;
+            assert!(
+                (got - want).abs() / want.max(1.0) < 1e-4,
+                "dist[{b}][{c}]: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_classes_match_python_encodings() {
+    // encode the 4 class features natively and compare to classes.bin
+    let Some(dir) = artifacts() else { return };
+    let g = goldens_json(&dir);
+    let master = g.get("master_seed").unwrap().as_u64().unwrap();
+    let cs = g.get("shapes").unwrap().get("classes").unwrap().as_usize_vec().unwrap();
+    let cf = read_bin(&dir, "class_feats.bin");
+    let classes = read_bin(&dir, "classes.bin");
+    let fdim = g.get("shapes").unwrap().get("class_feats").unwrap().as_usize_vec().unwrap()[1];
+    let enc = CrpEncoder::new(cs[1], master);
+    for c in 0..cs[0] {
+        let got = enc.encode(&cf[c * fdim..(c + 1) * fdim]);
+        let err = max_abs_err(&got, &classes[c * cs[1]..(c + 1) * cs[1]]);
+        assert!(err < 1e-2, "class {c}: err {err}");
+    }
+}

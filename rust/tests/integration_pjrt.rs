@@ -1,0 +1,150 @@
+//! PJRT runtime integration: load every artifact, execute it, and verify
+//! the PJRT and native backends produce interchangeable results — the
+//! "device" and its rust mirror must agree bit-for-bit (within f32 assoc).
+//!
+//! Skipped when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::runtime::ArtifactRegistry;
+use fsl_hdnn::util::prng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn registry_loads_and_signatures_sane() {
+    let Some(dir) = artifacts() else { return };
+    let reg = ArtifactRegistry::open(&dir).unwrap();
+    let names = reg.entry_names();
+    for required in ["fe_forward_b1", "fe_forward_b8", "crp_encode_b1", "crp_encode_b8",
+                     "hdc_infer_b1", "hdc_train_k5", "fsl_infer_b1"] {
+        assert!(names.iter().any(|n| n == required), "missing artifact {required}");
+    }
+    let sig = reg.signature("fe_forward_b1").unwrap();
+    assert_eq!(sig.input_shapes.len(), 1);
+    assert_eq!(sig.input_shapes[0][0], 1);
+    assert_eq!(sig.output_shapes[0].len(), 3);
+    assert_eq!(reg.compiled_count(), 0, "compilation must be lazy");
+}
+
+#[test]
+fn exec_rejects_bad_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let reg = ArtifactRegistry::open(&dir).unwrap();
+    let bad = vec![0f32; 10];
+    assert!(reg.exec_f32("fe_forward_b1", &[(&bad, &[1, 10])]).is_err());
+    assert!(reg.exec_f32("nonexistent", &[]).is_err());
+    let sig = reg.signature("crp_encode_b1").unwrap().clone();
+    let n: usize = sig.input_shapes[0].iter().product();
+    // right shape, wrong data length
+    let short = vec![0f32; n - 1];
+    assert!(reg
+        .exec_f32("crp_encode_b1", &[(&short, &sig.input_shapes[0].clone())])
+        .is_err());
+}
+
+#[test]
+fn pjrt_and_native_backends_agree() {
+    let Some(dir) = artifacts() else { return };
+    let native = ComputeEngine::open(Backend::Native, &dir).unwrap();
+    let pjrt = ComputeEngine::open(Backend::Pjrt, &dir).unwrap();
+    let m = native.model().clone();
+    let mut rng = Rng::new(33);
+    let images: Vec<Vec<f32>> = (0..3)
+        .map(|_| {
+            (0..m.image_size * m.image_size * m.in_channels)
+                .map(|_| rng.gauss_f32())
+                .collect()
+        })
+        .collect();
+    let fn_ = native.fe_forward(&images).unwrap();
+    let fp = pjrt.fe_forward(&images).unwrap();
+    for (bi, (a, b)) in fn_.iter().zip(&fp).enumerate() {
+        for (br, (fa, fb)) in a.iter().zip(b).enumerate() {
+            for (i, (x, y)) in fa.iter().zip(fb).enumerate() {
+                assert!(
+                    (x - y).abs() < 2e-3,
+                    "image {bi} branch {br} feat {i}: native {x} vs pjrt {y}"
+                );
+            }
+        }
+    }
+    // encode agreement on the final branch features
+    let feats: Vec<Vec<f32>> = fn_.iter().map(|b| b[b.len() - 1].clone()).collect();
+    let hn = native.encode(&feats).unwrap();
+    let hp = pjrt.encode(&feats).unwrap();
+    for (a, b) in hn.iter().zip(&hp) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-2, "encode: native {x} vs pjrt {y}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_batch8_equals_batch1() {
+    let Some(dir) = artifacts() else { return };
+    let pjrt = ComputeEngine::open(Backend::Pjrt, &dir).unwrap();
+    let m = pjrt.model().clone();
+    let mut rng = Rng::new(44);
+    let images: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            (0..m.image_size * m.image_size * m.in_channels)
+                .map(|_| rng.gauss_f32())
+                .collect()
+        })
+        .collect();
+    // 8 at once (fe_forward_b8) vs one-by-one (fe_forward_b1)
+    let batched = pjrt.fe_forward(&images).unwrap();
+    for (i, img) in images.iter().enumerate() {
+        let single = pjrt.fe_forward(std::slice::from_ref(img)).unwrap();
+        for (br, (a, b)) in batched[i].iter().zip(&single[0]).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 1e-3, "img {i} branch {br}: b8 {x} vs b1 {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_fsl_infer_matches_staged_path() {
+    let Some(dir) = artifacts() else { return };
+    let reg = ArtifactRegistry::open(&dir).unwrap();
+    let pjrt = ComputeEngine::open(Backend::Pjrt, &dir).unwrap();
+    let m = pjrt.model().clone();
+    let mut rng = Rng::new(55);
+    let image: Vec<f32> =
+        (0..m.image_size * m.image_size * m.in_channels).map(|_| rng.gauss_f32()).collect();
+    // staged: fe -> encode -> native L1 distances
+    let feats = pjrt.fe_forward(std::slice::from_ref(&image)).unwrap();
+    let hv = pjrt.encode(&[feats[0][m.n_branches() - 1].clone()]).unwrap();
+    // random class HVs
+    let cmax = 32;
+    let classes: Vec<f32> = (0..cmax * m.d).map(|_| rng.gauss_f32()).collect();
+    let staged: Vec<f64> = (0..cmax)
+        .map(|c| fsl_hdnn::hdc::distance::l1(&hv[0], &classes[c * m.d..(c + 1) * m.d]))
+        .collect();
+    // fused artifact
+    let out = reg
+        .exec_f32(
+            "fsl_infer_b1",
+            &[(&image, &[1, m.image_size, m.image_size, m.in_channels]),
+              (&classes, &[cmax, m.d])],
+        )
+        .unwrap();
+    for (c, want) in staged.iter().enumerate() {
+        let got = out[0][c] as f64;
+        assert!(
+            (got - want).abs() / want.max(1.0) < 1e-3,
+            "class {c}: fused {got} vs staged {want}"
+        );
+    }
+}

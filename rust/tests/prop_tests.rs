@@ -1,0 +1,334 @@
+//! Property-based tests over randomized inputs (in-tree mini-harness; the
+//! offline registry has no proptest). Each property runs across many
+//! random cases seeded deterministically — failures print the case seed.
+
+use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::coordinator::batcher::ClassBatcher;
+use fsl_hdnn::coordinator::early_exit::{EarlyExitController, EeDecision};
+use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
+use fsl_hdnn::fe::kmeans::{cluster_layer, kmeans_1d};
+use fsl_hdnn::hdc::{quant, CrpEncoder, HdcModel};
+use fsl_hdnn::sim::fe_engine::simulate_layer;
+use fsl_hdnn::sim::workload::ConvGeom;
+use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::util::prng::Rng;
+
+const CASES: u64 = 40;
+
+/// cRP encoding is linear for arbitrary (F, D, seed).
+#[test]
+fn prop_crp_linearity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case);
+        let f = 16 * (1 + rng.below(6));
+        let d = 16 * (1 + rng.below(12));
+        let enc = CrpEncoder::new(d, rng.next_u64());
+        let x: Vec<f32> = (0..f).map(|_| rng.gauss_f32()).collect();
+        let y: Vec<f32> = (0..f).map(|_| rng.gauss_f32()).collect();
+        let a = rng.range_f32(-3.0, 3.0);
+        let z: Vec<f32> = x.iter().zip(&y).map(|(p, q)| a * p + q).collect();
+        let (hx, hy, hz) = (enc.encode(&x), enc.encode(&y), enc.encode(&z));
+        for i in 0..d {
+            let want = a * hx[i] + hy[i];
+            assert!(
+                (hz[i] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "case {case}: linearity broken at {i}"
+            );
+        }
+    }
+}
+
+/// Zero-padding features never changes the encoding of the prefix.
+#[test]
+fn prop_crp_padding_invariance() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case);
+        let f = 16 * (1 + rng.below(4));
+        let pad_blocks = 1 + rng.below(3);
+        let d = 16 * (1 + rng.below(8));
+        let enc = CrpEncoder::new(d, rng.next_u64());
+        let x: Vec<f32> = (0..f).map(|_| rng.gauss_f32()).collect();
+        let mut xp = x.clone();
+        xp.extend(std::iter::repeat(0.0).take(16 * pad_blocks));
+        assert_eq!(enc.encode(&x), enc.encode(&xp), "case {case}");
+    }
+}
+
+/// Batcher conserves items, never mixes classes, never exceeds k per batch.
+#[test]
+fn prop_batcher_conservation() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case);
+        let k = 1 + rng.below(6);
+        let n_classes = 1 + rng.below(8);
+        let n_items = rng.below(60);
+        let mut b: ClassBatcher<(usize, usize)> = ClassBatcher::new(k);
+        let mut emitted = 0usize;
+        for i in 0..n_items {
+            let class = rng.below(n_classes);
+            if let Some(batch) = b.push(class, (class, i)) {
+                assert_eq!(batch.items.len(), k, "case {case}");
+                assert!(batch.items.iter().all(|(c, _)| *c == batch.class), "case {case}: mixed");
+                emitted += batch.items.len();
+            }
+        }
+        for batch in b.flush_all() {
+            assert!(batch.items.len() < k, "flush returns only partials");
+            assert!(batch.items.iter().all(|(c, _)| *c == batch.class));
+            emitted += batch.items.len();
+        }
+        assert_eq!(emitted, n_items, "case {case}: items lost or duplicated");
+    }
+}
+
+/// Batched HDC training == sequential training (any k, d, values).
+#[test]
+fn prop_hdc_batch_equals_sequential() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(4000 + case);
+        let d = 8 * (1 + rng.below(32));
+        let k = 1 + rng.below(8);
+        let hvs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| 10.0 * rng.gauss_f32()).collect())
+            .collect();
+        let mut seq = HdcModel::new(1, d);
+        for hv in &hvs {
+            seq.train_shot(0, hv);
+        }
+        let mut bat = HdcModel::new(1, d);
+        bat.train_batch(0, &hvs);
+        for i in 0..d {
+            let (a, b) = (seq.raw_class_hv(0)[i], bat.raw_class_hv(0)[i]);
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "case {case} idx {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// Quantization error shrinks monotonically with precision; 1-bit keeps sign.
+#[test]
+fn prop_quantization_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case);
+        let d = 16 * (1 + rng.below(16));
+        let hv: Vec<f32> = (0..d).map(|_| rng.gauss_f32() * rng.range_f32(0.1, 10.0)).collect();
+        // monotone chain from 2 bits up (the 1-bit mode uses a different,
+        // mean-magnitude scale and may beat the coarse ternary 2-bit grid)
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 8, 16] {
+            let (q, _) = quant::quantize(&hv, bits);
+            let mse: f64 = hv
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>()
+                / d as f64;
+            assert!(mse <= prev * 1.0001, "case {case}: bits {bits} worse than coarser");
+            prev = mse;
+        }
+        let (q1, _) = quant::quantize(&hv, 1);
+        for (a, b) in hv.iter().zip(&q1) {
+            assert!(a.signum() == b.signum() || *b == 0.0 || *a == 0.0);
+        }
+    }
+}
+
+/// Early-exit controller invariants: exits only after >= E_c counted blocks,
+/// never before block E_s + E_c - 1, and the exit prediction matches the
+/// last fed prediction.
+#[test]
+fn prop_early_exit_semantics() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(6000 + case);
+        let e_s = 1 + rng.below(3);
+        let e_c = 1 + rng.below(3);
+        let n_blocks = 4 + rng.below(4);
+        let mut ctl = EarlyExitController::new(EeConfig { e_s, e_c });
+        let mut last_pred = usize::MAX;
+        for b in 0..n_blocks {
+            let pred = rng.below(4);
+            match ctl.feed(b, pred) {
+                EeDecision::Exit(p) => {
+                    assert_eq!(p, pred, "case {case}: exit pred mismatch");
+                    assert!(
+                        b + 1 >= e_s + e_c - 1,
+                        "case {case}: exited at block {b} with E_s={e_s} E_c={e_c}"
+                    );
+                    // the last e_c fed predictions (from e_s on) must agree
+                    let t = &ctl.table;
+                    let counted: Vec<usize> = t
+                        .iter()
+                        .filter(|(blk, _)| blk + 1 >= e_s)
+                        .map(|(_, p)| *p)
+                        .collect();
+                    assert!(counted.len() >= e_c);
+                    assert!(counted[counted.len() - e_c..].iter().all(|&p| p == pred));
+                    break;
+                }
+                EeDecision::Continue => {
+                    last_pred = pred;
+                }
+            }
+        }
+        let _ = last_pred;
+    }
+}
+
+/// Clustered conv == dense conv with reconstructed weights, for random
+/// geometry (the Fig. 4(b) exactness claim as a property).
+#[test]
+fn prop_clustered_conv_exact() {
+    for case in 0..20 {
+        let mut rng = Rng::new(7000 + case);
+        let cin = [2usize, 4, 8][rng.below(3)];
+        let cout = 1 + rng.below(6);
+        let ch_sub = [1usize, 2, 4][rng.below(3)].min(cin);
+        let n = [2usize, 4, 8][rng.below(3)];
+        let hw = 4 + rng.below(5);
+        let stride = 1 + rng.below(2);
+        let k = 3;
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32()).collect();
+        let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
+        let wr = cl.reconstruct();
+        let x = Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let dense = conv2d(&x, &wr, cout, k, stride);
+        let clus = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, stride, ch_sub, n);
+        for (i, (a, b)) in dense.data.iter().zip(&clus.data).enumerate() {
+            assert!((a - b).abs() < 1e-3, "case {case} idx {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// k-means labels always point at the nearest centroid; error never grows
+/// when N doubles.
+#[test]
+fn prop_kmeans_nearest_and_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case);
+        let size = 30 + rng.below(200);
+        let v: Vec<f32> = (0..size).map(|_| rng.gauss_f32() * rng.range_f32(0.1, 5.0)).collect();
+        let mut prev = f64::INFINITY;
+        for n in [2usize, 4, 8] {
+            let (cents, labels) = kmeans_1d(&v, n, 12);
+            let mut mse = 0.0f64;
+            for (x, &l) in v.iter().zip(&labels) {
+                let dl = (x - cents[l as usize]).abs();
+                for c in &cents {
+                    assert!(dl <= (x - c).abs() + 1e-5, "case {case}: label not nearest");
+                }
+                mse += (dl * dl) as f64;
+            }
+            mse /= v.len() as f64;
+            assert!(mse <= prev + 1e-9, "case {case}: error grew with more centroids");
+            prev = mse;
+        }
+    }
+}
+
+/// Simulator sanity: cycles scale with work; batching never increases the
+/// per-image cycle count; stall fraction grows with frequency.
+#[test]
+fn prop_sim_monotonicity() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(9000 + case);
+        let geom = ConvGeom {
+            cout: 8 * (1 + rng.below(8)),
+            cin: 8 * (1 + rng.below(8)),
+            k: 3,
+            out: 4 + rng.below(28),
+            stride: 1,
+            stage: 0,
+        };
+        let cfg = ChipConfig::default();
+        let r1 = simulate_layer(&geom, &cfg, 64, 16, 1);
+        let r4 = simulate_layer(&geom, &cfg, 64, 16, 4);
+        assert_eq!(r4.accum_ops, 4 * r1.accum_ops, "case {case}");
+        assert!(
+            r4.total_cycles() <= 4 * r1.total_cycles(),
+            "case {case}: batching made things worse"
+        );
+        let bigger = ConvGeom { out: geom.out + 4, ..geom };
+        let rb = simulate_layer(&bigger, &cfg, 64, 16, 1);
+        assert!(rb.compute_cycles >= r1.compute_cycles, "case {case}: more pixels, fewer cycles");
+        let slow = ChipConfig { freq_mhz: 100.0, ..cfg.clone() };
+        let rs = simulate_layer(&geom, &slow, 64, 16, 1);
+        assert!(
+            rs.stall_cycles <= r1.stall_cycles,
+            "case {case}: stalls must shrink at lower frequency"
+        );
+    }
+}
+
+/// Session training is permutation-invariant across class order (the
+/// batcher may flush classes in any order).
+#[test]
+fn prop_session_class_order_invariance() {
+    use fsl_hdnn::coordinator::session::FslSession;
+    for case in 0..20 {
+        let mut rng = Rng::new(10_000 + case);
+        let d = 64;
+        let n_way = 2 + rng.below(4);
+        let shots: Vec<Vec<Vec<Vec<f32>>>> = (0..n_way)
+            .map(|_| {
+                (0..3)
+                    .map(|_| (0..4).map(|_| (0..d).map(|_| rng.gauss_f32()).collect()).collect())
+                    .collect()
+            })
+            .collect();
+        let mut fwd = FslSession::new(1, n_way, d, 4);
+        for (c, s) in shots.iter().enumerate() {
+            fwd.train_batch(c, s);
+        }
+        let mut rev = FslSession::new(2, n_way, d, 4);
+        for (c, s) in shots.iter().enumerate().rev() {
+            rev.train_batch(c, s);
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        assert_eq!(fwd.query_full(&q).prediction, rev.query_full(&q).prediction, "case {case}");
+    }
+}
+
+/// The shipped config presets parse and apply cleanly.
+#[test]
+fn shipped_config_presets_load() {
+    use fsl_hdnn::config::{toml::Doc, RunConfig};
+    for path in ["configs/paper_10way5shot.toml", "configs/low_power.toml"] {
+        let doc = Doc::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+            panic!("{path}: {e}");
+        });
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert!(rc.batched_training, "{path}: presets use batched training");
+        assert!(rc.chip.hv_bits <= 16);
+    }
+    // the paper preset pins the headline workload
+    let doc = Doc::load(std::path::Path::new("configs/paper_10way5shot.toml")).unwrap();
+    let mut rc = RunConfig::default();
+    rc.apply_toml(&doc).unwrap();
+    assert_eq!((rc.workload.n_way, rc.workload.k_shot), (10, 5));
+    assert_eq!(rc.ee, Some(fsl_hdnn::config::EeConfig { e_s: 2, e_c: 2 }));
+}
+
+/// Dataset presets stay calibrated to the paper's Fig. 15 bands
+/// (5-way 5-shot): cifar100 ~72%, flower102 ~94%, trafficsign ~78%,
+/// with the ordering FT >= FSL-HDnn > kNN.
+#[test]
+fn preset_accuracy_bands() {
+    use fsl_hdnn::data::DatasetPreset;
+    use fsl_hdnn::experiments::{eval_learner, sampler_for, Learner};
+    let bands = [
+        (DatasetPreset::Cifar100, 0.62, 0.85),
+        (DatasetPreset::Flower102, 0.88, 1.0),
+        (DatasetPreset::TrafficSign, 0.65, 0.88),
+    ];
+    for (preset, lo, hi) in bands {
+        let s = sampler_for(preset, 128, 5, 5, 8, 7);
+        let (hdc, _) = eval_learner(&s, Learner::FslHdnn { d: 4096, bits: 16 }, 8, 11);
+        assert!(
+            (lo..hi).contains(&hdc),
+            "{}: FSL-HDnn accuracy {hdc:.3} outside calibrated band [{lo}, {hi})",
+            preset.name()
+        );
+        let (knn, _) = eval_learner(&s, Learner::Knn, 8, 11);
+        assert!(hdc + 0.03 > knn, "{}: HDC must not lose to 1-NN", preset.name());
+    }
+}
