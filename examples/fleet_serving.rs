@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let n_devices: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let n_sessions: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(6);
     let dir = std::path::PathBuf::from("artifacts");
-    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
 
     let gen_trace = TraceGen { n_way: 5, k_shot: 5, queries_per_session: 15, ..Default::default() };
     let mut rng = Rng::new(31);
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let mut router = DeviceRouter::start(n_devices, gen_trace.k_shot, Placement::LeastLoaded,
         |_i| {
             let d = dir.clone();
-            move || ComputeEngine::open(Backend::Native, &d)
+            move || ComputeEngine::open_or_synthetic(Backend::Native, &d)
         })?;
 
     let images = ImageGen::new(model.image_size, 64, 5);

@@ -24,10 +24,13 @@ use fsl_hdnn::util::table::Table;
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let episodes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
-    let backend = Backend::from_name(args.get(2).map(|s| s.as_str()).unwrap_or("pjrt"))?;
+    // native by default so the driver runs from a clean checkout; pass
+    // `pjrt` explicitly once `make artifacts` has produced the modules and
+    // the crate is built with the `pjrt` feature
+    let backend = Backend::from_name(args.get(2).map(|s| s.as_str()).unwrap_or("native"))?;
     let (n_way, k_shot, queries_per_class) = (10, 5, 10);
     let dir = std::path::PathBuf::from("artifacts");
-    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
 
     println!("== FSL-HDnn ODL serving driver ==");
     println!(
@@ -36,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dir2 = dir.clone();
-    let coord = Coordinator::start(move || ComputeEngine::open(backend, &dir2), k_shot)?;
+    let coord = Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
     let gen = ImageGen::new(model.image_size, 64, 2024);
     let mut rng = Rng::new(2024);
     let ee = EeConfig::paper_default();

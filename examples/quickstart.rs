@@ -17,8 +17,9 @@ use fsl_hdnn::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from("artifacts");
-    // read geometry on the caller side; build the engine inside the worker
-    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    // read geometry on the caller side; build the engine inside the worker.
+    // Without `make artifacts` the native backend runs synthetic weights.
+    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
     println!("model: {0}x{0}x{1} image -> F={2}, D={3}", model.image_size,
              model.in_channels, model.feature_dim, model.d);
 
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
             ComputeEngine::open(Backend::Pjrt, &dir2)
                 .or_else(|e| {
                     eprintln!("PJRT unavailable ({e}), using native backend");
-                    ComputeEngine::open(Backend::Native, &dir2)
+                    ComputeEngine::open_or_synthetic(Backend::Native, &dir2)
                 })
         },
         k_shot,

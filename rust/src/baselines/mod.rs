@@ -1,11 +1,16 @@
-//! Baselines the paper compares against.
+//! Baselines the paper compares against (layer map in DESIGN.md).
 //!
-//! * algorithmic: kNN-L1 [17,18], partial fine-tuning (linear probe with
-//!   SGD), full fine-tuning (MLP head with backprop) — all consuming the
-//!   same frozen features as FSL-HDnn (Figs. 3, 15);
-//! * analytic: the training-cost model of eqs. (1), (2), (6) (Fig. 3b,
-//!   the 21x ops claim) and the prior ODL chips of Table I as published
-//!   cost models (Table I, Figs. 18, 19).
+//! * algorithmic: kNN-L1 [17,18] ([`knn`]), partial fine-tuning — a
+//!   linear probe with SGD ([`linear_probe`]) — and full fine-tuning — an
+//!   MLP head with backprop ([`full_ft`]) — all consuming the same frozen
+//!   features as FSL-HDnn (Figs. 3, 15);
+//! * analytic: the training-cost model of eqs. (1), (2), (6)
+//!   ([`complexity`]; Fig. 3b, the 21x ops claim) and the prior ODL chips
+//!   of Table I as published cost models ([`chips`]; Figs. 18, 19).
+//!
+//! Accuracy baselines run inside [`crate::experiments::eval_learner`] on
+//! the synthetic episode samplers; cost baselines are pure arithmetic, so
+//! every bench can regenerate the paper's comparison tables offline.
 
 pub mod chips;
 pub mod complexity;

@@ -1,10 +1,23 @@
-//! The on-device-learning coordinator — the paper's L3 system logic.
+//! The on-device-learning coordinator — the paper's L3 system logic
+//! (layer map in DESIGN.md).
 //!
 //! A few-shot session accumulates labeled shots, trains the HDC model in a
 //! single pass (batched per class, Fig. 12), and serves queries with the
-//! early-exit policy (Fig. 11). `server` wraps it all behind an
-//! mpsc-request event loop with a worker thread owning the compute engine,
+//! early-exit policy (Fig. 11). [`server`] wraps it all behind an
+//! mpsc-request event loop with a worker thread owning the compute engine
+//! (engines are built *inside* the worker: PJRT clients are not `Send`),
 //! so callers interact with the device the way a host driver would.
+//!
+//! Module tour:
+//! * [`session`] — per-session state: one [`crate::hdc::HdcModel`] per FE
+//!   branch, single-pass / batched training, early-exit queries;
+//! * [`batcher`] — groups same-class shots so the FE streams them under
+//!   one weight load (the Fig. 12 saving the simulator quantifies);
+//! * [`early_exit`] — the (E_s, E_c) consistency controller of Fig. 11;
+//! * [`server`] — the [`Coordinator`] event loop, chip-faithful class
+//!   memory admission, [`metrics`] accounting;
+//! * [`router`] — [`DeviceRouter`]: fans sessions over a fleet of
+//!   coordinators with least-loaded/round-robin placement and spill.
 
 pub mod batcher;
 pub mod early_exit;

@@ -23,7 +23,7 @@ pub struct FslSession {
     pub n_way: usize,
     pub d: usize,
     pub n_branches: usize,
-    /// branch_models[b] = HDC model fed by CONV block b's features
+    /// `branch_models[b]` = HDC model fed by CONV block b's features
     branch_models: Vec<HdcModel>,
     pub shots_seen: usize,
 }

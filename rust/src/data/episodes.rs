@@ -10,7 +10,7 @@ use crate::util::prng::Rng;
 pub struct Episode {
     pub n_way: usize,
     pub k_shot: usize,
-    /// support[c] = k feature vectors for episode-class c
+    /// `support[c]` = k feature vectors for episode-class c
     pub support: Vec<Vec<Vec<f32>>>,
     /// (feature, episode-class label)
     pub queries: Vec<(Vec<f32>, usize)>,

@@ -68,6 +68,47 @@ impl FeModel {
         FeModel { cfg, layers }
     }
 
+    /// Build an FE with deterministic synthetic weights for an arbitrary
+    /// [`ModelConfig`] — He-initialized convs seeded from
+    /// `cfg.master_seed`, with the same layer naming scheme the AOT
+    /// exporter uses (`stem`, `s{stage}b{block}_conv1/_conv2/_proj`).
+    ///
+    /// This makes [`crate::runtime::ComputeEngine`]'s native backend
+    /// constructible without an artifacts directory; the resulting
+    /// features are not the AOT model's but are class-separable on the
+    /// procedural image generator, which is what the examples and
+    /// integration paths need.
+    pub fn synthetic(cfg: ModelConfig) -> Self {
+        let mut rng = crate::util::prng::Rng::new(cfg.master_seed ^ 0x5E_7EC7);
+        let mut layers = BTreeMap::new();
+        let add = |layers: &mut BTreeMap<String, (Vec<f32>, usize, usize, usize)>,
+                   name: String,
+                   cout: usize,
+                   k: usize,
+                   cin: usize,
+                   rng: &mut crate::util::prng::Rng| {
+            let std = (2.0 / (k * k * cin) as f32).sqrt();
+            let w: Vec<f32> = (0..cout * k * k * cin).map(|_| std * rng.gauss_f32()).collect();
+            layers.insert(name, (w, cout, k, cin));
+        };
+        let mut cin = cfg.in_channels;
+        add(&mut layers, "stem".to_string(), cfg.widths[0], 3, cin, &mut rng);
+        cin = cfg.widths[0];
+        for (si, &w) in cfg.widths.iter().enumerate() {
+            for b in 0..cfg.blocks_per_stage {
+                add(&mut layers, format!("s{si}b{b}_conv1"), w, 3, cin, &mut rng);
+                add(&mut layers, format!("s{si}b{b}_conv2"), w, 3, w, &mut rng);
+                // projection shortcut when the block changes channel count
+                // (`forward` subsamples the skip when channels match)
+                if cin != w {
+                    add(&mut layers, format!("s{si}b{b}_proj"), w, 1, cin, &mut rng);
+                }
+                cin = w;
+            }
+        }
+        FeModel { cfg, layers }
+    }
+
     fn conv(&self, name: &str, x: &Tensor3, stride: usize) -> anyhow::Result<Tensor3> {
         let (w, cout, k, cin) = self
             .layers
@@ -232,5 +273,38 @@ mod tests {
     #[test]
     fn param_count_positive() {
         assert!(tiny_model(7).n_params() > 500);
+    }
+
+    #[test]
+    fn synthetic_model_runs_any_geometry() {
+        let cfg = ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8, 8],
+            blocks_per_stage: 2,
+            feature_dim: 16,
+            d: 64,
+            ..Default::default()
+        };
+        let m = FeModel::synthetic(cfg.clone());
+        let img = vec![0.3f32; 8 * 8 * 3];
+        let branches = m.forward(&img).unwrap();
+        assert_eq!(branches.len(), 3);
+        assert!(branches.iter().all(|b| b.len() == 16));
+        // deterministic in the master seed
+        let m2 = FeModel::synthetic(cfg);
+        assert_eq!(m.forward(&img).unwrap(), m2.forward(&img).unwrap());
+        // a different seed produces different features
+        let other = FeModel::synthetic(ModelConfig {
+            master_seed: 999,
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8, 8],
+            blocks_per_stage: 2,
+            feature_dim: 16,
+            d: 64,
+            ..Default::default()
+        });
+        assert_ne!(m.forward(&img).unwrap(), other.forward(&img).unwrap());
     }
 }

@@ -9,6 +9,10 @@
 //! Layer map (see `DESIGN.md`):
 //! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
+//!   Execution of artifacts is gated behind the `pjrt` cargo feature; the
+//!   native backend also builds straight from a
+//!   [`config::ModelConfig`] with no artifacts directory at all
+//!   ([`runtime::ComputeEngine::from_config`]).
 //! * [`coordinator`] — the ODL device logic: few-shot sessions, batched
 //!   single-pass training (Fig. 12), early-exit inference (Fig. 11).
 //! * [`hdc`], [`fe`] — native compute substrates mirroring the kernels
@@ -18,6 +22,10 @@
 //! * [`baselines`] — kNN / partial-FT / full-FT learners and the prior
 //!   ODL chips of Table I as analytic cost models.
 //! * [`data`] — synthetic few-shot datasets and episode samplers.
+//!
+//! The README's rust walkthrough compiles and runs under
+//! `cargo test --doc` (via a doctest-only module at the bottom of this
+//! file), so the documented quickstart can never drift from the real API.
 
 pub mod baselines;
 pub mod config;
@@ -32,3 +40,10 @@ pub mod util;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+/// The README's rust code blocks, compiled and run as doctests so the
+/// documented walkthrough can never drift from the crate's real API.
+/// Doctest-only: this module is invisible to `cargo doc` and rustc.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub mod readme_doctests {}

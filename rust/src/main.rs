@@ -94,14 +94,15 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
 
     let dir = artifacts_dir(args);
     // model geometry read on this thread; the engine itself is built
-    // inside the coordinator worker (PJRT clients are not Send)
-    let model = ComputeEngine::open(Backend::Native, &dir)?.model().clone();
+    // inside the coordinator worker (PJRT clients are not Send). With no
+    // artifacts directory the native backend runs on synthetic weights.
+    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
     println!(
         "backend={backend:?} model: {}x{}x{} -> F={} D={}",
         model.image_size, model.image_size, model.in_channels, model.feature_dim, model.d
     );
     let dir2 = dir.clone();
-    let coord = Coordinator::start(move || ComputeEngine::open(backend, &dir2), k_shot)?;
+    let coord = Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
     let gen = ImageGen::new(model.image_size, 64.max(n_way), seed);
     let mut rng = Rng::new(seed);
     let mut accs = Vec::new();

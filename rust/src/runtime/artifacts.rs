@@ -4,6 +4,13 @@
 //! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
 //! instruction ids, sidestepping the 64-bit-id protos that jax >= 0.5
 //! serializes and xla_extension 0.5.1 rejects (see DESIGN.md).
+//!
+//! The actual PJRT client lives behind the `pjrt` cargo feature because the
+//! xla-rs bindings are not in the offline vendored registry (DESIGN.md
+//! §PJRT gating). Without the feature this module still parses manifests
+//! and reports signatures — only [`ArtifactRegistry::exec_f32`] is
+//! unavailable, and it fails with a descriptive error instead of linking
+//! against a crate the build cannot resolve.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -11,6 +18,13 @@ use std::sync::Mutex;
 
 use crate::config::ModelConfig;
 use crate::util::json::Json;
+
+/// Compiled-executable cache entry. With the `pjrt` feature this is the
+/// loaded PJRT executable; without it the cache stays empty forever.
+#[cfg(feature = "pjrt")]
+type Executable = xla::PjRtLoadedExecutable;
+#[cfg(not(feature = "pjrt"))]
+type Executable = ();
 
 /// Shape+dtype signature of one artifact entry.
 #[derive(Clone, Debug)]
@@ -20,13 +34,15 @@ pub struct EntrySig {
     pub output_shapes: Vec<Vec<usize>>,
 }
 
-/// Loaded registry: PJRT client + lazily compiled executables.
+/// Loaded registry: manifest signatures plus (with the `pjrt` feature) a
+/// PJRT client and lazily compiled executables.
 pub struct ArtifactRegistry {
     pub dir: PathBuf,
     pub model: ModelConfig,
     entries: HashMap<String, EntrySig>,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    compiled: Mutex<HashMap<String, Executable>>,
 }
 
 impl std::fmt::Debug for ArtifactRegistry {
@@ -39,8 +55,16 @@ impl std::fmt::Debug for ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
-    /// Open `artifacts/` (parses manifest, creates the PJRT CPU client;
-    /// compilation happens on first use of each entry).
+    /// True when this build can execute artifacts (the `pjrt` feature is
+    /// enabled). Callers use this to skip rather than fail — see
+    /// `rust/tests/integration_pjrt.rs`.
+    pub fn pjrt_available() -> bool {
+        cfg!(feature = "pjrt")
+    }
+
+    /// Open `artifacts/` (parses manifest and, with the `pjrt` feature,
+    /// creates the PJRT CPU client; compilation happens on first use of
+    /// each entry).
     pub fn open(dir: &Path) -> anyhow::Result<Self> {
         let man_text = std::fs::read_to_string(dir.join("manifest.json"))
             .map_err(|e| anyhow::anyhow!("cannot read manifest.json in {dir:?}: {e} — run `make artifacts`"))?;
@@ -69,9 +93,17 @@ impl ArtifactRegistry {
                 EntrySig { file, input_shapes: shapes("inputs"), output_shapes: shapes("outputs") },
             );
         }
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(ArtifactRegistry { dir: dir.to_path_buf(), model, entries, client, compiled: Mutex::new(HashMap::new()) })
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            model,
+            entries,
+            #[cfg(feature = "pjrt")]
+            client,
+            compiled: Mutex::new(HashMap::new()),
+        })
     }
 
     pub fn entry_names(&self) -> Vec<String> {
@@ -85,6 +117,7 @@ impl ArtifactRegistry {
     }
 
     /// Compile (once) and cache an entry.
+    #[cfg(feature = "pjrt")]
     fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
         let mut compiled = self.compiled.lock().unwrap();
         if compiled.contains_key(name) {
@@ -108,9 +141,8 @@ impl ArtifactRegistry {
         Ok(())
     }
 
-    /// Execute an entry on f32 inputs; inputs are (data, dims) pairs that
-    /// must match the manifest signature. Returns flattened f32 outputs.
-    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+    /// Validate `inputs` against the manifest signature of `name`.
+    fn validate(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<()> {
         let sig = self
             .entries
             .get(name)
@@ -129,6 +161,18 @@ impl ArtifactRegistry {
             let n: usize = dims.iter().product();
             anyhow::ensure!(data.len() == n, "{name}: input {i} data len {} != {n}", data.len());
         }
+        Ok(())
+    }
+
+    /// Execute an entry on f32 inputs; inputs are (data, dims) pairs that
+    /// must match the manifest signature. Returns flattened f32 outputs.
+    ///
+    /// Without the `pjrt` feature, input validation still runs (shape
+    /// errors are reported the same way) but execution fails with a
+    /// descriptive "built without PJRT support" error.
+    #[cfg(feature = "pjrt")]
+    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.validate(name, inputs)?;
         self.ensure_compiled(name)?;
         let compiled = self.compiled.lock().unwrap();
         let exe = compiled.get(name).unwrap();
@@ -154,8 +198,68 @@ impl ArtifactRegistry {
             .collect()
     }
 
+    /// See the `pjrt`-enabled variant: this build validates, then reports
+    /// that execution is unavailable.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.validate(name, inputs)?;
+        anyhow::bail!(
+            "cannot execute artifact {name}: built without PJRT support \
+             (enable the `pjrt` cargo feature and vendor xla-rs — see DESIGN.md §PJRT gating)"
+        )
+    }
+
     /// Number of compiled (cached) executables — used by tests/metrics.
     pub fn compiled_count(&self) -> usize {
         self.compiled.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_mentions_make_artifacts() {
+        let err = ArtifactRegistry::open(Path::new("definitely/not/a/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn pjrt_availability_tracks_feature() {
+        assert_eq!(ArtifactRegistry::pjrt_available(), cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn registry_parses_minimal_manifest() {
+        // a synthetic artifacts dir exercising the manifest parser without
+        // any HLO files (they are only touched at exec time)
+        let dir = std::env::temp_dir().join(format!("fsl-hdnn-art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "config": {"image_size": 8, "in_channels": 3, "widths": [4, 8],
+                         "feature_dim": 8, "d": 64, "ch_sub": 4,
+                         "n_centroids": 4, "master_seed": 7},
+              "entries": [
+                {"name": "fe_forward_b1", "file": "fe_forward_b1.hlo.txt",
+                 "inputs": [{"shape": [1, 8, 8, 3]}],
+                 "outputs": [{"shape": [1, 2, 8]}]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.model.d, 64);
+        assert_eq!(reg.entry_names(), vec!["fe_forward_b1".to_string()]);
+        let sig = reg.signature("fe_forward_b1").unwrap();
+        assert_eq!(sig.input_shapes, vec![vec![1, 8, 8, 3]]);
+        assert_eq!(reg.compiled_count(), 0);
+        // validation errors surface identically with and without pjrt
+        let bad = vec![0f32; 4];
+        assert!(reg.exec_f32("fe_forward_b1", &[(&bad, &[1, 4])]).is_err());
+        assert!(reg.exec_f32("nope", &[]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -2,9 +2,13 @@
 //!
 //! * `Pjrt` — the production path: every FE/encode/distance call executes
 //!   an AOT-compiled artifact on the PJRT CPU client (the "device").
+//!   Requires both `make artifacts` and the `pjrt` cargo feature.
 //! * `Native` — the rust mirror (same weights, bit-compatible cRP): used
 //!   by the simulator, the baselines and as a fast fallback. Cross-checked
-//!   against the PJRT path by integration tests.
+//!   against the PJRT path by integration tests. A native engine can be
+//!   built from an artifacts directory ([`ComputeEngine::open`]) or from a
+//!   [`ModelConfig`] alone with deterministic synthetic weights
+//!   ([`ComputeEngine::from_config`]) — no `make artifacts` needed.
 
 use std::path::Path;
 
@@ -31,7 +35,8 @@ impl Backend {
 }
 
 /// The engine. Both variants load the same `artifacts/` directory so the
-/// weights and cRP seeds always agree.
+/// weights and cRP seeds always agree; the native variant can also run
+/// without artifacts on synthetic weights.
 pub enum ComputeEngine {
     Native { fe: FeModel, enc: CrpEncoder },
     Pjrt { reg: ArtifactRegistry, enc: CrpEncoder },
@@ -47,6 +52,8 @@ impl std::fmt::Debug for ComputeEngine {
 }
 
 impl ComputeEngine {
+    /// Open an engine over an artifacts directory (strict: missing
+    /// artifacts are an error for both backends).
     pub fn open(backend: Backend, artifacts_dir: &Path) -> anyhow::Result<Self> {
         match backend {
             Backend::Native => {
@@ -55,10 +62,50 @@ impl ComputeEngine {
                 Ok(ComputeEngine::Native { fe, enc })
             }
             Backend::Pjrt => {
+                anyhow::ensure!(
+                    ArtifactRegistry::pjrt_available(),
+                    "PJRT backend unavailable: built without the `pjrt` cargo feature \
+                     (see DESIGN.md §PJRT gating)"
+                );
                 let reg = ArtifactRegistry::open(artifacts_dir)?;
                 let enc = CrpEncoder::new(reg.model.d, reg.model.master_seed);
                 Ok(ComputeEngine::Pjrt { reg, enc })
             }
+        }
+    }
+
+    /// Build a native engine from a model configuration alone: the FE gets
+    /// deterministic synthetic (He-initialized) weights seeded from
+    /// `cfg.master_seed`, and the cRP encoder uses the same seed contract
+    /// as the artifacts. This is the path every bench, example and test
+    /// takes when `make artifacts` has not run.
+    pub fn from_config(cfg: ModelConfig) -> Self {
+        let enc = CrpEncoder::new(cfg.d, cfg.master_seed);
+        let fe = FeModel::synthetic(cfg);
+        ComputeEngine::Native { fe, enc }
+    }
+
+    /// Open `backend` over `artifacts_dir`, falling back to a synthetic
+    /// native engine (default [`ModelConfig`]) when the directory has no
+    /// artifacts. The fallback only fires when `manifest.json` is absent —
+    /// a *present but broken* artifacts directory (truncated weights,
+    /// malformed manifest) stays an error, so corruption can never be
+    /// silently papered over with synthetic weights. The PJRT backend
+    /// never falls back at all: a missing runtime is an error the caller
+    /// must see.
+    pub fn open_or_synthetic(backend: Backend, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        match backend {
+            Backend::Native => {
+                if artifacts_dir.join("manifest.json").exists() {
+                    return Self::open(Backend::Native, artifacts_dir);
+                }
+                eprintln!(
+                    "note: no artifacts in {artifacts_dir:?}; using synthetic native model \
+                     (run `make artifacts` for the AOT weights)"
+                );
+                Ok(Self::from_config(ModelConfig::default()))
+            }
+            Backend::Pjrt => Self::open(Backend::Pjrt, artifacts_dir),
         }
     }
 
@@ -153,5 +200,76 @@ impl ComputeEngine {
             ComputeEngine::Native { enc, .. } => enc,
             ComputeEngine::Pjrt { enc, .. } => enc,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8],
+            blocks_per_stage: 1,
+            feature_dim: 8,
+            d: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn backend_from_name_accepts_both_cases() {
+        assert_eq!(Backend::from_name("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::from_name("NATIVE").unwrap(), Backend::Native);
+        assert_eq!(Backend::from_name("Pjrt").unwrap(), Backend::Pjrt);
+    }
+
+    #[test]
+    fn backend_from_name_error_names_the_choices() {
+        let err = Backend::from_name("tpu").unwrap_err().to_string();
+        assert!(err.contains("tpu"), "{err}");
+        assert!(err.contains("native|pjrt"), "{err}");
+    }
+
+    #[test]
+    fn native_from_config_needs_no_artifacts() {
+        let engine = ComputeEngine::from_config(tiny_cfg());
+        assert_eq!(engine.backend(), Backend::Native);
+        let m = engine.model();
+        assert_eq!((m.image_size, m.feature_dim, m.d), (8, 8, 64));
+        let img = vec![0.25f32; 8 * 8 * 3];
+        let branches = engine.fe_forward(&[img]).unwrap();
+        assert_eq!(branches.len(), 1);
+        assert_eq!(branches[0].len(), 2, "one feature per CONV branch");
+        assert!(branches[0].iter().all(|f| f.len() == 8));
+        let hvs = engine.encode(&[branches[0][1].clone()]).unwrap();
+        assert_eq!(hvs[0].len(), 64);
+    }
+
+    #[test]
+    fn from_config_is_deterministic() {
+        let a = ComputeEngine::from_config(tiny_cfg());
+        let b = ComputeEngine::from_config(tiny_cfg());
+        let img = vec![0.5f32; 8 * 8 * 3];
+        assert_eq!(a.fe_forward(&[img.clone()]).unwrap(), b.fe_forward(&[img]).unwrap());
+    }
+
+    #[test]
+    fn open_native_without_artifacts_is_an_error() {
+        let missing = PathBuf::from("no/such/artifacts");
+        assert!(ComputeEngine::open(Backend::Native, &missing).is_err());
+    }
+
+    #[test]
+    fn open_or_synthetic_falls_back_for_native_only() {
+        let missing = PathBuf::from("no/such/artifacts");
+        let e = ComputeEngine::open_or_synthetic(Backend::Native, &missing).unwrap();
+        assert_eq!(e.backend(), Backend::Native);
+        assert_eq!(e.model(), &ModelConfig::default());
+        // PJRT must surface an error (unavailable feature or missing dir)
+        assert!(ComputeEngine::open_or_synthetic(Backend::Pjrt, &missing).is_err());
     }
 }

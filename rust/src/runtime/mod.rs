@@ -1,6 +1,12 @@
 //! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
 //! them from the coordinator's hot path. Python never runs here — the
 //! artifacts directory is the entire compile-path hand-off.
+//!
+//! Artifact *execution* requires the `pjrt` cargo feature (the xla-rs
+//! bindings are outside the offline registry — DESIGN.md §PJRT gating);
+//! manifest parsing, signatures and the native backend work without it,
+//! and [`ComputeEngine::from_config`] builds a native engine from
+//! configuration alone, with no artifacts directory at all.
 
 pub mod artifacts;
 pub mod engine;

@@ -15,9 +15,18 @@
 //! * a 40 nm energy model fitted to the measured corners
 //!   (59 mW @ 100 MHz/0.9 V, 305 mW @ 250 MHz/1.2 V, 6 mJ/image training).
 //!
-//! `workload` carries the ResNet-18 @ 224x224 layer table the paper
+//! [`workload`] carries the ResNet-18 @ 224x224 layer table the paper
 //! measures with; the simulator equally accepts the small AOT model's
-//! geometry (`FeModel::layer_geometries`).
+//! geometry ([`crate::fe::FeModel::layer_geometries`]).
+//!
+//! Two abstraction levels deliberately coexist (DESIGN.md): [`fe_engine`]
+//! and [`hdc_engine`] are fast *analytic* cycle/event models used by every
+//! bench, while [`pe`]/[`pe_array`] step a real 4x16 array cycle by cycle
+//! — the micro-architectural ground truth the analytic counts are
+//! validated against (and its outputs must equal
+//! [`crate::fe::conv::clustered_conv2d`] numerically). [`energy`] turns
+//! event tallies into millijoules at any (V, f) point on the measured
+//! curve; [`memory`] models the banked, gateable SRAMs of Fig. 7.
 
 pub mod chip;
 pub mod energy;

@@ -18,7 +18,7 @@ pub struct TileReport {
     pub cycles: u64,
     pub accum_ops: u64,
     pub mac_ops: u64,
-    /// output pixel values, indexed [pixel][channel] for the tile
+    /// output pixel values, indexed `[pixel][channel]` for the tile
     pub outputs: Tensor3,
     pub pe_utilization: f64,
 }

@@ -71,7 +71,7 @@ impl Json {
         }
     }
 
-    /// Array of numbers -> Vec<usize> (shape lists in the manifest).
+    /// Array of numbers -> `Vec<usize>` (shape lists in the manifest).
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

@@ -1,0 +1,43 @@
+//! Shared helpers for the integration test crates.
+//!
+//! Integration tests that depend on `make artifacts` (and, for PJRT
+//! execution, the `pjrt` cargo feature) cannot run from a clean checkout.
+//! Rust's libtest has no first-class skip, so the convention here is: call
+//! [`skip`] (which prints a distinct, greppable `SKIPPED` line to stderr)
+//! and return early. `cargo test -- --nocapture 2>&1 | grep SKIPPED` lists
+//! exactly which tests did not really run — a silently green test and a
+//! skipped one are no longer indistinguishable (DESIGN.md §Test skips).
+
+// each integration-test crate includes this module and uses a subset
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+/// The artifacts directory, if `make artifacts` has populated it.
+///
+/// Integration tests run with the package root (`rust/`) as CWD while
+/// `make artifacts` writes to the repository root, so both locations are
+/// probed.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    for cand in ["artifacts", "../artifacts"] {
+        let dir = PathBuf::from(cand);
+        if dir.join("manifest.json").exists() {
+            return Some(dir);
+        }
+    }
+    None
+}
+
+/// Report a skipped test distinctly. Prints one machine-greppable line.
+pub fn skip(test: &str, reason: &str) {
+    eprintln!("SKIPPED {test}: {reason}");
+}
+
+/// `artifacts_dir()` or a distinct skip report for `test`.
+pub fn artifacts_or_skip(test: &str) -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.is_none() {
+        skip(test, "no artifacts/ directory (run `make artifacts`)");
+    }
+    dir
+}

@@ -1,10 +1,11 @@
 //! Coordinator integration: full session lifecycle over the native
 //! backend, error paths, metrics accounting and early-exit behaviour.
 //!
-//! Skipped when `make artifacts` has not run (the engine loads weights
-//! from the artifacts directory).
+//! Skipped (with a distinct `SKIPPED` line, see tests/common/mod.rs) when
+//! `make artifacts` has not run: the learning-quality assertions here are
+//! calibrated against the AOT-exported weights, not the synthetic FE.
 
-use std::path::PathBuf;
+mod common;
 
 use fsl_hdnn::config::EeConfig;
 use fsl_hdnn::coordinator::{Coordinator, Request, Response};
@@ -12,24 +13,20 @@ use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
 use fsl_hdnn::util::prng::Rng;
 
-fn start_native() -> Option<Coordinator> {
-    let dir = PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
+fn start_native(test: &str) -> Option<Coordinator> {
+    let dir = common::artifacts_or_skip(test)?;
     Some(Coordinator::start(move || ComputeEngine::open(Backend::Native, &dir), 3).unwrap())
 }
 
 fn model_geometry() -> (usize, usize) {
-    let dir = PathBuf::from("artifacts");
+    let dir = common::artifacts_dir().expect("caller already checked artifacts presence");
     let m = ComputeEngine::open(Backend::Native, &dir).unwrap().model().clone();
     (m.image_size, m.in_channels)
 }
 
 #[test]
 fn session_lifecycle_and_learning() {
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("session_lifecycle_and_learning") else { return };
     let (size, chans) = model_geometry();
     let gen = ImageGen::new(size, 8, 5);
     let mut rng = Rng::new(5);
@@ -63,7 +60,7 @@ fn session_lifecycle_and_learning() {
 
 #[test]
 fn error_paths_reported_not_panicked() {
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("error_paths_reported_not_panicked") else { return };
     let (size, _) = model_geometry();
     // unknown session
     assert!(coord.add_shot(999, 0, vec![0.0; size * size * 3]).is_err());
@@ -82,7 +79,7 @@ fn error_paths_reported_not_panicked() {
 
 #[test]
 fn early_exit_uses_fewer_blocks_on_confident_queries() {
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("early_exit_uses_fewer_blocks_on_confident_queries") else { return };
     let (size, _) = model_geometry();
     let gen = ImageGen::new(size, 8, 11);
     let mut rng = Rng::new(11);
@@ -112,7 +109,7 @@ fn early_exit_uses_fewer_blocks_on_confident_queries() {
 
 #[test]
 fn metrics_count_operations() {
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("metrics_count_operations") else { return };
     let (size, _) = model_geometry();
     let gen = ImageGen::new(size, 4, 13);
     let mut rng = Rng::new(13);
@@ -134,7 +131,7 @@ fn metrics_count_operations() {
 
 #[test]
 fn concurrent_sessions_are_isolated() {
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("concurrent_sessions_are_isolated") else { return };
     let (size, _) = model_geometry();
     let gen = ImageGen::new(size, 8, 17);
     let mut rng = Rng::new(17);
@@ -163,11 +160,9 @@ fn concurrent_sessions_are_isolated() {
 #[test]
 fn router_places_and_isolates_sessions() {
     use fsl_hdnn::coordinator::{DeviceRouter, Placement};
-    let dir = PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(dir) = common::artifacts_or_skip("router_places_and_isolates_sessions") else {
         return;
-    }
+    };
     let (size, _) = model_geometry();
     let mut router = DeviceRouter::start(2, 2, Placement::LeastLoaded, |_i| {
         let d = dir.clone();
@@ -204,11 +199,9 @@ fn router_places_and_isolates_sessions() {
 #[test]
 fn router_spills_to_other_device_when_full() {
     use fsl_hdnn::coordinator::{DeviceRouter, Placement};
-    let dir = PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
+    let Some(dir) = common::artifacts_or_skip("router_spills_to_other_device_when_full") else {
         return;
-    }
+    };
     let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
         let d = dir.clone();
         move || ComputeEngine::open(Backend::Native, &d)
@@ -227,7 +220,7 @@ fn router_spills_to_other_device_when_full() {
 #[test]
 fn raw_feature_input_mode() {
     // Fig. 7: raw features can bypass the FE and feed the FSL classifier
-    let Some(coord) = start_native() else { return };
+    let Some(coord) = start_native("raw_feature_input_mode") else { return };
     let sid = coord.create_session(3, 16).unwrap();
     let mut rng = Rng::new(23);
     // well-separated feature prototypes

@@ -3,7 +3,10 @@
 //! time. This is the contract that makes native class HVs interchangeable
 //! with PJRT-produced ones.
 //!
-//! Skipped (with a message) when `make artifacts` has not run.
+//! Skipped (with a distinct `SKIPPED` line, see tests/common/mod.rs) when
+//! `make artifacts` has not run.
+
+mod common;
 
 use std::path::{Path, PathBuf};
 
@@ -11,14 +14,8 @@ use fsl_hdnn::fe::FeModel;
 use fsl_hdnn::hdc::{distance, lfsr, CrpEncoder};
 use fsl_hdnn::util::json::Json;
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
+fn artifacts(test: &str) -> Option<PathBuf> {
+    common::artifacts_or_skip(test)
 }
 
 fn read_bin(dir: &Path, name: &str) -> Vec<f32> {
@@ -41,7 +38,7 @@ fn max_abs_err(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn lfsr_matches_python_goldens() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = artifacts("lfsr_matches_python_goldens") else { return };
     let g = goldens_json(&dir);
     let seq = g.get("step_seq_from_ace1").unwrap().as_u64_vec().unwrap();
     let mut s = 0xACE1u16;
@@ -64,7 +61,7 @@ fn lfsr_matches_python_goldens() {
 
 #[test]
 fn native_fe_matches_python_features() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = artifacts("native_fe_matches_python_features") else { return };
     let fe = FeModel::load(&dir).unwrap();
     let g = goldens_json(&dir);
     let xs = g.get("shapes").unwrap().get("x").unwrap().as_usize_vec().unwrap();
@@ -83,7 +80,7 @@ fn native_fe_matches_python_features() {
 
 #[test]
 fn native_crp_matches_python_hv() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = artifacts("native_crp_matches_python_hv") else { return };
     let g = goldens_json(&dir);
     let master = g.get("master_seed").unwrap().as_u64().unwrap();
     let hv_shape = g.get("shapes").unwrap().get("hv").unwrap().as_usize_vec().unwrap();
@@ -104,7 +101,7 @@ fn native_crp_matches_python_hv() {
 
 #[test]
 fn native_distance_matches_python_table() {
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = artifacts("native_distance_matches_python_table") else { return };
     let g = goldens_json(&dir);
     let ds = g.get("shapes").unwrap().get("dist").unwrap().as_usize_vec().unwrap();
     let d = g.get("shapes").unwrap().get("hv").unwrap().as_usize_vec().unwrap()[1];
@@ -126,7 +123,7 @@ fn native_distance_matches_python_table() {
 #[test]
 fn native_classes_match_python_encodings() {
     // encode the 4 class features natively and compare to classes.bin
-    let Some(dir) = artifacts() else { return };
+    let Some(dir) = artifacts("native_classes_match_python_encodings") else { return };
     let g = goldens_json(&dir);
     let master = g.get("master_seed").unwrap().as_u64().unwrap();
     let cs = g.get("shapes").unwrap().get("classes").unwrap().as_usize_vec().unwrap();
