@@ -71,10 +71,17 @@ fn main() {
     // --- where the cycles go ---
     let r_nb = chip.train_episode(10, 5, false, false);
     let r_b = chip.train_episode(10, 5, true, false);
-    let mut t = Table::new("cycle accounting, 50-image training", &["mode", "total Mcycles", "PE util"]);
-    t.row(&["non-batched".into(), format!("{:.1}", r_nb.cycles as f64 / 1e6),
-        format!("{:.0}%", 100.0 * r_nb.pe_utilization)]);
-    t.row(&["batched".into(), format!("{:.1}", r_b.cycles as f64 / 1e6),
-        format!("{:.0}%", 100.0 * r_b.pe_utilization)]);
+    let mut t =
+        Table::new("cycle accounting, 50-image training", &["mode", "total Mcycles", "PE util"]);
+    t.row(&[
+        "non-batched".into(),
+        format!("{:.1}", r_nb.cycles as f64 / 1e6),
+        format!("{:.0}%", 100.0 * r_nb.pe_utilization),
+    ]);
+    t.row(&[
+        "batched".into(),
+        format!("{:.1}", r_b.cycles as f64 / 1e6),
+        format!("{:.0}%", 100.0 * r_b.pe_utilization),
+    ]);
     t.print();
 }

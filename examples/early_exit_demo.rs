@@ -18,8 +18,10 @@ fn main() -> anyhow::Result<()> {
     let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
     let (n_way, k_shot, queries) = (5, 5, 12);
     let dir2 = dir.clone();
-    let coord =
-        Coordinator::start(move || ComputeEngine::open_or_synthetic(Backend::Native, &dir2), k_shot)?;
+    let coord = Coordinator::start(
+        move || ComputeEngine::open_or_synthetic(Backend::Native, &dir2),
+        k_shot,
+    )?;
     let gen = ImageGen::new(model.image_size, 32, 99);
     let mut rng = Rng::new(99);
     let classes = rng.choose_k(gen.n_classes, n_way);

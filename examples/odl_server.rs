@@ -39,7 +39,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dir2 = dir.clone();
-    let coord = Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
+    let coord =
+        Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
     let gen = ImageGen::new(model.image_size, 64, 2024);
     let mut rng = Rng::new(2024);
     let ee = EeConfig::paper_default();

@@ -18,7 +18,13 @@ fn main() {
         let ds = SyntheticDataset::new(preset, 128, 21);
         let mut t = Table::new(
             &format!("Fig. 17 on {}: EE config vs depth & accuracy", preset.name()),
-            &["config (E_s-E_c)", "avg CONV layers", "layers skipped", "accuracy", "exit histogram"],
+            &[
+                "config (E_s-E_c)",
+                "avg CONV layers",
+                "layers skipped",
+                "accuracy",
+                "exit histogram",
+            ],
         );
         let (full_acc, _, _) = eval_early_exit(&ds, n_way, k_shot, queries, None, d, episodes, 31);
         t.row(&[

@@ -1,13 +1,16 @@
 //! Hot-path microbenchmarks (the §Perf targets in DESIGN.md): native cRP
-//! encode throughput, L1 distance search, clustered conv, FE forward and
-//! the chip simulator itself. Not a paper figure — the optimization
+//! encode throughput, L1 distance search, clustered conv, FE forward
+//! (serial and batch-parallel, `--workers N`, 0 = one per core) and the
+//! chip simulator itself. Not a paper figure — the optimization
 //! baseline/after log in EXPERIMENTS.md §Perf comes from here.
 
-use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::config::{ChipConfig, ModelConfig, ParallelConfig};
 use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
 use fsl_hdnn::fe::kmeans::cluster_layer;
 use fsl_hdnn::hdc::{distance, CrpEncoder, HdcModel};
+use fsl_hdnn::runtime::ComputeEngine;
 use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::args::arg_usize;
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::timer::{bench, black_box};
 
@@ -66,6 +69,46 @@ fn main() {
         black_box(clustered_conv2d(black_box(&img), &cl.idx, &cl.codebook, cout, k, 1, ch_sub, n));
     });
     println!("{r}");
+
+    // --- batched native FE forward + encode: serial vs worker-sharded ---
+    let par = ParallelConfig { workers: arg_usize("--workers", 0), min_batch_per_worker: 1 };
+    let serial_engine = ComputeEngine::from_config(ModelConfig::default());
+    let par_engine = ComputeEngine::from_config(ModelConfig::default()).with_parallelism(par);
+    let m = serial_engine.model().clone();
+    let images: Vec<Vec<f32>> = (0..8)
+        .map(|_| {
+            (0..m.image_size * m.image_size * m.in_channels).map(|_| rng.gauss_f32()).collect()
+        })
+        .collect();
+    let rs = bench("fe_forward batch=8 serial", 600.0, || {
+        black_box(serial_engine.fe_forward(black_box(&images)).unwrap());
+    });
+    println!("{rs}");
+    let nw = par.resolved_workers();
+    let rp = bench(&format!("fe_forward batch=8 workers={nw}"), 600.0, || {
+        black_box(par_engine.fe_forward(black_box(&images)).unwrap());
+    });
+    println!("{rp}");
+    assert_eq!(
+        serial_engine.fe_forward(&images).unwrap(),
+        par_engine.fe_forward(&images).unwrap(),
+        "parallel output must be bit-identical to serial"
+    );
+    println!(
+        "    -> {:.2}x speedup at {nw} workers (output bit-identical, asserted)",
+        rs.mean_ns / rp.mean_ns
+    );
+    let feats: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..m.feature_dim).map(|_| rng.gauss_f32()).collect()).collect();
+    let es = bench("encode batch=64 serial", 300.0, || {
+        black_box(serial_engine.encode(black_box(&feats)).unwrap());
+    });
+    println!("{es}");
+    let ep = bench(&format!("encode batch=64 workers={nw}"), 300.0, || {
+        black_box(par_engine.encode(black_box(&feats)).unwrap());
+    });
+    println!("{ep}");
+    println!("    -> {:.2}x speedup at {nw} workers", es.mean_ns / ep.mean_ns);
 
     // --- chip simulator speed (simulated cycles per wall second) ---
     let chip = Chip::paper(ChipConfig::default());

@@ -74,6 +74,52 @@ impl ModelConfig {
     }
 }
 
+/// Batch-parallel execution policy for the native backend: how `fe_forward`
+/// / `encode` batches are sharded across scoped worker threads
+/// (DESIGN.md §Threading model). Output is bit-identical to serial for any
+/// worker count, so this is purely a throughput knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// worker threads for batch sharding: 0 = auto (one per available
+    /// core), 1 = serial (default), N = exactly N workers
+    pub workers: usize,
+    /// target minimum items per worker: shard count is capped at
+    /// `batch / min_batch_per_worker`, so batches under twice this stay
+    /// serial (thread spawn costs more than it saves)
+    pub min_batch_per_worker: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { workers: 1, min_batch_per_worker: 2 }
+    }
+}
+
+impl ParallelConfig {
+    /// One worker per available core (the bench/CLI `--workers 0` setting).
+    pub fn auto() -> Self {
+        ParallelConfig { workers: 0, ..Default::default() }
+    }
+
+    /// `workers` with 0 resolved to the machine's available parallelism.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
+        }
+    }
+
+    /// Shard count for a batch of `n` items: capped at
+    /// `n / min_batch_per_worker` (never below 1 shard), so sharding only
+    /// kicks in once the batch can feed every worker about
+    /// `min_batch_per_worker` items — the tail chunk may still be shorter.
+    pub fn shards_for(&self, n: usize) -> usize {
+        let by_batch = n / self.min_batch_per_worker.max(1);
+        self.resolved_workers().min(by_batch).max(1)
+    }
+}
+
 /// Few-shot workload: N-way k-shot episodes with q queries per class.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -174,13 +220,15 @@ pub struct RunConfig {
     pub chip: ChipConfig,
     pub ee: Option<EeConfig>,
     pub batched_training: bool,
+    pub parallel: ParallelConfig,
 }
 
 impl RunConfig {
     /// Apply `key = value` pairs from a parsed TOML-subset document.
     pub fn apply_toml(&mut self, doc: &toml::Doc) -> anyhow::Result<()> {
         for (section, key, val) in doc.entries() {
-            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let path =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             match path.as_str() {
                 "model.d" => self.model.d = val.as_int()? as usize,
                 "model.image_size" => self.model.image_size = val.as_int()? as usize,
@@ -206,6 +254,10 @@ impl RunConfig {
                     e.e_c = val.as_int()? as usize;
                 }
                 "batched_training" => self.batched_training = val.as_bool()?,
+                "parallel.workers" => self.parallel.workers = val.as_int()? as usize,
+                "parallel.min_batch_per_worker" => {
+                    self.parallel.min_batch_per_worker = val.as_int()? as usize
+                }
                 other => anyhow::bail!("unknown config key: {other}"),
             }
         }
@@ -249,5 +301,42 @@ mod tests {
     fn apply_toml_rejects_unknown() {
         let doc = toml::Doc::parse("[model]\nbogus = 1\n").unwrap();
         assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn apply_toml_parallel_keys() {
+        let doc =
+            toml::Doc::parse("[parallel]\nworkers = 4\nmin_batch_per_worker = 3\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.parallel, ParallelConfig { workers: 4, min_batch_per_worker: 3 });
+    }
+
+    #[test]
+    fn parallel_defaults_are_serial() {
+        let p = ParallelConfig::default();
+        assert_eq!(p.workers, 1);
+        assert_eq!(p.resolved_workers(), 1);
+        assert_eq!(p.shards_for(1000), 1);
+    }
+
+    #[test]
+    fn shards_capped_by_min_batch_per_worker() {
+        let p = ParallelConfig { workers: 8, min_batch_per_worker: 2 };
+        assert_eq!(p.shards_for(0), 1, "empty batch still one (no-op) shard");
+        assert_eq!(p.shards_for(1), 1, "single item stays serial");
+        assert_eq!(p.shards_for(4), 2, "4 items / min 2 per worker = 2 shards");
+        assert_eq!(p.shards_for(16), 8, "worker count is the ceiling");
+        assert_eq!(p.shards_for(1000), 8);
+        // min_batch_per_worker = 0 is treated as 1 (no div-by-zero)
+        let p0 = ParallelConfig { workers: 3, min_batch_per_worker: 0 };
+        assert_eq!(p0.shards_for(2), 2);
+    }
+
+    #[test]
+    fn auto_resolves_to_at_least_one_worker() {
+        let p = ParallelConfig::auto();
+        assert_eq!(p.workers, 0);
+        assert!(p.resolved_workers() >= 1);
     }
 }

@@ -20,6 +20,10 @@ pub struct Metrics {
     pub queries_exited_early: u64,
     pub blocks_used_total: u64,
     pub errors: u64,
+    /// feature-mode inputs shorter than the model's F that were zero-padded
+    /// — legal but usually a client bug worth surfacing (empty features are
+    /// rejected outright: an all-zero HV would train a garbage prototype)
+    pub feature_pads: u64,
 }
 
 impl Metrics {
@@ -29,6 +33,28 @@ impl Metrics {
             Op::AddShot => self.add_shot.push(s),
             Op::Train => self.train.push(s),
             Op::Query => self.query.push(s),
+        }
+    }
+
+    /// Record `n` operations served by one batched call: each gets the
+    /// per-item share of the wall time, so batch and per-shot arrivals
+    /// report comparable per-op latencies and identical op counts.
+    pub fn record_batch(&mut self, op: Op, n: usize, seconds: f64) {
+        let per = seconds / n.max(1) as f64;
+        for _ in 0..n {
+            self.record(op, per);
+        }
+    }
+
+    /// Count a zero-padded short feature and warn once (the counter keeps
+    /// the full tally; the log line avoids per-request spam).
+    pub fn record_feature_pad(&mut self, got: usize, fdim: usize) {
+        self.feature_pads += 1;
+        if self.feature_pads == 1 {
+            eprintln!(
+                "warning: feature length {got} < model F={fdim}, zero-padding \
+                 (further pads counted in metrics.feature_pads only)"
+            );
         }
     }
 
@@ -46,6 +72,7 @@ impl Metrics {
             trains: self.train.n,
             queries: self.query.n,
             errors: self.errors,
+            feature_pads: self.feature_pads,
             add_shot_ms_mean: self.add_shot.mean(),
             train_ms_mean: self.train.mean(),
             query_ms_mean: self.query.mean(),
@@ -63,6 +90,7 @@ pub struct MetricsSnapshot {
     pub trains: u64,
     pub queries: u64,
     pub errors: u64,
+    pub feature_pads: u64,
     pub add_shot_ms_mean: f64,
     pub train_ms_mean: f64,
     pub query_ms_mean: f64,
@@ -95,5 +123,26 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.queries, 0);
         assert_eq!(s.query_ms_max, 0.0);
+        assert_eq!(s.feature_pads, 0);
+    }
+
+    #[test]
+    fn record_batch_counts_per_item() {
+        let mut m = Metrics::default();
+        m.record_batch(Op::AddShot, 5, 0.010);
+        let s = m.snapshot();
+        assert_eq!(s.shots, 5, "one op per batched item");
+        assert!((s.add_shot_ms_mean - 2.0).abs() < 1e-9, "per-item share of wall time");
+        // n = 0 records nothing (and must not divide by zero)
+        m.record_batch(Op::Train, 0, 1.0);
+        assert_eq!(m.snapshot().trains, 0);
+    }
+
+    #[test]
+    fn feature_pads_counted() {
+        let mut m = Metrics::default();
+        m.record_feature_pad(16, 128);
+        m.record_feature_pad(8, 128);
+        assert_eq!(m.snapshot().feature_pads, 2);
     }
 }

@@ -13,6 +13,13 @@ pub enum Request {
     /// batches same-class shots and trains when a class reaches k_shot
     /// or on `FinishTraining`.
     AddShot { session: u64, class: usize, image: Vec<f32> },
+    /// Add a whole class batch of labeled shots in one request (Fig. 12
+    /// batched single-pass training). The images flow through the class
+    /// batcher with the same k-shot flush semantics as per-shot arrival,
+    /// but full batches reach the engine's batched FE entry point in one
+    /// call — which the native backend shards across its worker pool.
+    /// Replies `ShotAccepted` covering the whole batch.
+    AddShotBatch { session: u64, class: usize, images: Vec<Vec<f32>> },
     /// Add one labeled shot given as a pre-extracted feature vector,
     /// bypassing the FE — Fig. 7: "either the features extracted by FE or
     /// the raw input data can serve as the input to the FSL classifier".

@@ -40,8 +40,12 @@ pub struct DeviceRouter {
 impl DeviceRouter {
     /// Spawn `n_devices` coordinators from a factory-of-factories (each
     /// device's engine is constructed inside its own worker thread).
-    pub fn start<F, G>(n_devices: usize, k_shot: usize, policy: Placement, make: F)
-        -> anyhow::Result<Self>
+    pub fn start<F, G>(
+        n_devices: usize,
+        k_shot: usize,
+        policy: Placement,
+        make: F,
+    ) -> anyhow::Result<Self>
     where
         F: Fn(usize) -> G,
         G: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
@@ -121,6 +125,19 @@ impl DeviceRouter {
     pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
         let r = self.route(session)?;
         self.devices[r.device].add_shot(r.local, class, image)
+    }
+
+    /// Route a whole class batch to the session's device in one request,
+    /// so batched single-pass training crosses the fleet boundary as one
+    /// message and hits the device's batched (worker-sharded) FE path.
+    pub fn add_shot_batch(
+        &self,
+        session: u64,
+        class: usize,
+        images: Vec<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        let r = self.route(session)?;
+        self.devices[r.device].add_shot_batch(r.local, class, images)
     }
 
     pub fn finish_training(&self, session: u64) -> anyhow::Result<usize> {

@@ -33,13 +33,23 @@ struct Worker {
 
 impl Worker {
     /// Encode one raw feature vector (pad/validate against the model's F).
-    fn encode_feature(&self, feature: &[f32]) -> anyhow::Result<Vec<f32>> {
+    /// Empty features are rejected — they would encode to a valid all-zero
+    /// HV and silently train a garbage class prototype — and short features
+    /// are zero-padded with the pad counted in the metrics.
+    fn encode_feature(&mut self, feature: &[f32]) -> anyhow::Result<Vec<f32>> {
         let fdim = self.engine.model().feature_dim;
+        anyhow::ensure!(
+            !feature.is_empty(),
+            "empty feature vector (an all-zero HV would train a garbage prototype)"
+        );
         anyhow::ensure!(
             feature.len() <= fdim,
             "feature length {} exceeds model F={fdim}",
             feature.len()
         );
+        if feature.len() < fdim {
+            self.metrics.record_feature_pad(feature.len(), fdim);
+        }
         let mut f = feature.to_vec();
         f.resize(fdim, 0.0);
         Ok(self.engine.encode(&[f])?.remove(0))
@@ -125,6 +135,43 @@ impl Worker {
                 }
                 let st = self.sessions.get(&session).unwrap();
                 self.metrics.record(Op::AddShot, t0.elapsed().as_secs_f64());
+                Response::ShotAccepted {
+                    session,
+                    pending: st.batcher.pending_shots(),
+                    trained_classes: st.session.shots_seen / self.k_shot.max(1),
+                }
+            }
+            Request::AddShotBatch { session, class, images } => {
+                let t0 = Instant::now();
+                let n = images.len();
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                if class >= st.session.n_way {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!(
+                        "class {class} out of range for {}-way session",
+                        st.session.n_way
+                    ));
+                }
+                // same k-shot flush semantics as per-shot arrival; full
+                // batches reach train_full_batch (and with it the engine's
+                // batched, worker-sharded FE path) in one call each
+                let mut full = Vec::new();
+                for image in images {
+                    if let Some(batch) = st.batcher.push(class, image) {
+                        full.push(batch);
+                    }
+                }
+                for batch in full {
+                    if let Err(e) = self.train_full_batch(session, batch.class, batch.items) {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                }
+                let st = self.sessions.get(&session).unwrap();
+                self.metrics.record_batch(Op::AddShot, n, t0.elapsed().as_secs_f64());
                 Response::ShotAccepted {
                     session,
                     pending: st.batcher.pending_shots(),
@@ -304,6 +351,22 @@ impl Coordinator {
 
     pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
         match self.call(Request::AddShot { session, class, image }) {
+            Response::ShotAccepted { .. } => Ok(()),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    /// Submit a whole class batch in one request (Fig. 12 batched
+    /// single-pass training); full k-shot groups train through the
+    /// engine's batched FE entry point.
+    pub fn add_shot_batch(
+        &self,
+        session: u64,
+        class: usize,
+        images: Vec<Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        match self.call(Request::AddShotBatch { session, class, images }) {
             Response::ShotAccepted { .. } => Ok(()),
             Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),

@@ -72,7 +72,9 @@ impl TraceGen {
                 events.push((t, TraceOp::Query { session_slot: slot, class: q % self.n_way }));
             }
         }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: replaying a trace with a non-finite timestamp must
+        // not panic the sort (NaNs order after +inf and stay at the tail)
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
         events
     }
 }

@@ -246,8 +246,10 @@ mod tests {
     #[test]
     fn early_exit_depth_monotone_in_ec() {
         let ds = SyntheticDataset::new(DatasetPreset::Flower102, 64, 5);
-        let (_, d1, _) = eval_early_exit(&ds, 5, 5, 4, Some(EeConfig { e_s: 1, e_c: 1 }), 512, 3, 7);
-        let (_, d3, _) = eval_early_exit(&ds, 5, 5, 4, Some(EeConfig { e_s: 1, e_c: 3 }), 512, 3, 7);
+        let (_, d1, _) =
+            eval_early_exit(&ds, 5, 5, 4, Some(EeConfig { e_s: 1, e_c: 1 }), 512, 3, 7);
+        let (_, d3, _) =
+            eval_early_exit(&ds, 5, 5, 4, Some(EeConfig { e_s: 1, e_c: 3 }), 512, 3, 7);
         assert!(d1 < d3, "stricter E_c must use more blocks: {d1} vs {d3}");
     }
 

@@ -69,7 +69,9 @@ pub fn kmeans_1d(values: &[f32], n: usize, iters: usize) -> (Vec<f32>, Vec<u8>) 
     if v.len() <= n {
         // degenerate: every value its own centroid (sorted order)
         let mut order: Vec<usize> = (0..v.len()).collect();
-        order.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        // total_cmp: a NaN weight (corrupt checkpoint, bad cast) must not
+        // panic the quantizer — NaNs sort to the end and cluster there
+        order.sort_by(|&a, &b| v[a].total_cmp(&v[b]));
         let mut cents = vec![0f64; n];
         let mut labels = vec![0u8; v.len()];
         for (slot, &i) in order.iter().enumerate() {
@@ -79,19 +81,26 @@ pub fn kmeans_1d(values: &[f32], n: usize, iters: usize) -> (Vec<f32>, Vec<u8>) 
         return (cents.iter().map(|&c| c as f32).collect(), labels);
     }
     let mut sorted = v.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let mut cents: Vec<f64> =
         (0..n).map(|i| quantile_sorted(&sorted, (i as f64 + 0.5) / n as f64)).collect();
-    let eps = 1e-12 + 1e-9 * (sorted[sorted.len() - 1] - sorted[0]);
+    // spread over the finite range only: a NaN at either end of the sorted
+    // values must not poison the tie-break epsilon
+    let lo = sorted.iter().find(|x| x.is_finite()).copied().unwrap_or(0.0);
+    let hi = sorted.iter().rev().find(|x| x.is_finite()).copied().unwrap_or(0.0);
+    let eps = 1e-12 + 1e-9 * (hi - lo);
     for i in 1..n {
         if cents[i] <= cents[i - 1] {
             cents[i] = cents[i - 1] + eps;
         }
     }
+    // NaN-robust nearest centroid: a NaN distance (NaN value or NaN
+    // centroid) never beats `bd`, so such pairs fall through to slot 0
+    // instead of corrupting the argmin
     let assign = |cents: &[f64], x: f64| -> usize {
         let mut best = 0;
-        let mut bd = (x - cents[0]).abs();
-        for (j, &c) in cents.iter().enumerate().skip(1) {
+        let mut bd = f64::INFINITY;
+        for (j, &c) in cents.iter().enumerate() {
             let d = (x - c).abs();
             if d < bd {
                 bd = d;
@@ -104,6 +113,11 @@ pub fn kmeans_1d(values: &[f32], n: usize, iters: usize) -> (Vec<f32>, Vec<u8>) 
         let mut sums = vec![0f64; n];
         let mut cnts = vec![0u64; n];
         for &x in &v {
+            // non-finite values keep their label but must not drag a
+            // centroid to NaN/inf
+            if !x.is_finite() {
+                continue;
+            }
             let j = assign(&cents, x);
             sums[j] += x;
             cnts[j] += 1;
@@ -119,9 +133,14 @@ pub fn kmeans_1d(values: &[f32], n: usize, iters: usize) -> (Vec<f32>, Vec<u8>) 
 }
 
 /// Cluster a conv layer's weights: `w` is (Cout, K, K, Cin) row-major.
-pub fn cluster_layer(w: &[f32], cout: usize, k: usize, cin: usize, ch_sub: usize, n: usize)
-    -> ClusteredLayer
-{
+pub fn cluster_layer(
+    w: &[f32],
+    cout: usize,
+    k: usize,
+    cin: usize,
+    ch_sub: usize,
+    n: usize,
+) -> ClusteredLayer {
     assert_eq!(w.len(), cout * k * k * cin);
     let ch_sub_eff = ch_sub.min(cin);
     let g = cin.div_ceil(ch_sub_eff);
@@ -192,6 +211,32 @@ mod tests {
         let (cents, labels) = kmeans_1d(&[3.0, 1.0], 4, 15);
         assert_eq!(cents[labels[0] as usize], 3.0);
         assert_eq!(cents[labels[1] as usize], 1.0);
+    }
+
+    #[test]
+    fn nan_weight_does_not_panic() {
+        // regression: the quantile-init sort used partial_cmp().unwrap(),
+        // so one NaN weight panicked the whole quantizer
+        let mut rng = Rng::new(9);
+        let mut v: Vec<f32> = (0..100).map(|_| rng.gauss_f32()).collect();
+        v[17] = f32::NAN;
+        let (cents, labels) = kmeans_1d(&v, 4, 10);
+        assert_eq!(labels.len(), v.len());
+        assert_eq!(cents.len(), 4);
+        // finite values still get a nearest finite centroid
+        assert!(v
+            .iter()
+            .zip(&labels)
+            .filter(|(x, _)| x.is_finite())
+            .any(|(_, &l)| cents[l as usize].is_finite()));
+        // degenerate (fewer values than centroids) path too
+        let (_c, l) = kmeans_1d(&[f32::NAN, 1.0], 4, 5);
+        assert_eq!(l.len(), 2);
+        // and a whole layer with one poisoned weight
+        let mut w = vec![0.1f32; 2 * 3 * 3 * 4];
+        w[5] = f32::NAN;
+        let cl = cluster_layer(&w, 2, 3, 4, 4, 4);
+        assert_eq!(cl.idx.len(), w.len());
     }
 
     #[test]

@@ -155,6 +155,19 @@ impl FeModel {
         Ok(branches)
     }
 
+    /// Batched forward pass, sharded across scoped worker threads
+    /// (`shards <= 1` runs serially on the caller's thread). Weights are
+    /// borrowed, never cloned — `forward` is `&self` — and the result is
+    /// bit-identical to calling [`FeModel::forward`] per image in order
+    /// (DESIGN.md §Threading model).
+    pub fn forward_batch(
+        &self,
+        images: &[Vec<f32>],
+        shards: usize,
+    ) -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
+        crate::util::parallel::shard_map(images, shards, |img| self.forward(img))
+    }
+
     /// Forward only through the first `n_blocks` stages (early-exit body
     /// computation): returns the branch features produced so far.
     pub fn forward_prefix(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
@@ -268,6 +281,28 @@ mod tests {
     fn rejects_wrong_image_size() {
         let m = tiny_model(6);
         assert!(m.forward(&vec![0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn forward_batch_bit_identical_to_serial() {
+        let m = tiny_model(8);
+        let mut rng = Rng::new(9);
+        let images: Vec<Vec<f32>> =
+            (0..7).map(|_| (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect()).collect();
+        let serial: Vec<_> = images.iter().map(|img| m.forward(img).unwrap()).collect();
+        for shards in [1, 2, 3, 7, 16] {
+            assert_eq!(m.forward_batch(&images, shards).unwrap(), serial, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_propagates_errors() {
+        let m = tiny_model(10);
+        let mut images = vec![vec![0.1f32; 8 * 8 * 3]; 5];
+        images[3] = vec![0.0; 4]; // wrong size mid-batch
+        for shards in [1, 2, 5] {
+            assert!(m.forward_batch(&images, shards).is_err(), "shards={shards}");
+        }
     }
 
     #[test]

@@ -85,6 +85,16 @@ impl CrpEncoder {
         self.encode(&xp)
     }
 
+    /// Batched [`CrpEncoder::encode_padded`], sharded across scoped worker
+    /// threads (`shards <= 1` stays serial). The encoder is stateless per
+    /// call — LFSR states are derived fresh for every row band — so shards
+    /// share `&self` and the output is bit-identical to the serial loop
+    /// for any shard count (DESIGN.md §Threading model).
+    pub fn encode_batch(&self, feats: &[Vec<f32>], shards: usize) -> Vec<Vec<f32>> {
+        crate::util::parallel::shard_map(feats, shards, |f| Ok(self.encode_padded(f)))
+            .expect("encode_padded is infallible")
+    }
+
     /// Number of LFSR "cycles" (16x16 blocks) one encode consumes — the
     /// chip-cycle analogue used by the simulator: D*F/256.
     pub fn blocks(&self, f: usize) -> u64 {
@@ -181,5 +191,17 @@ mod tests {
     fn blocks_count() {
         let enc = CrpEncoder::new(4096, 0);
         assert_eq!(enc.blocks(512), 8192);
+    }
+
+    #[test]
+    fn encode_batch_bit_identical_to_serial() {
+        let enc = CrpEncoder::new(128, 13);
+        let mut rng = Rng::new(5);
+        let feats: Vec<Vec<f32>> =
+            (0..9).map(|_| (0..48).map(|_| rng.gauss_f32()).collect()).collect();
+        let serial: Vec<Vec<f32>> = feats.iter().map(|f| enc.encode_padded(f)).collect();
+        for shards in [1, 2, 4, 9, 32] {
+            assert_eq!(enc.encode_batch(&feats, shards), serial, "shards={shards}");
+        }
     }
 }

@@ -9,6 +9,7 @@
 //!
 //! Examples:
 //!   fsl-hdnn episode --n-way 10 --k-shot 5 --episodes 3 --backend native
+//!   fsl-hdnn episode --workers 0 --batched true   # 0 = one worker per core
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
 //!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
 //!   fsl-hdnn check-artifacts
@@ -16,7 +17,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use fsl_hdnn::config::{ChipConfig, EeConfig};
+use fsl_hdnn::config::{ChipConfig, EeConfig, ParallelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
@@ -91,6 +92,15 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     let seed: u64 = args.get("seed", rc.workload.seed);
     let hv_bits: u32 = args.get("hv-bits", if rc.chip.hv_bits == 16 { 4 } else { rc.chip.hv_bits });
     let ee = args.ee().or(rc.ee);
+    // --workers: 0 = auto (one per core), 1 = serial; bit-identical output
+    // either way (DESIGN.md §Threading model)
+    let par = ParallelConfig {
+        workers: args.get("workers", rc.parallel.workers),
+        min_batch_per_worker: args.get("min-batch-per-worker", rc.parallel.min_batch_per_worker),
+    };
+    // --batched: send each class's shots as one request so batched
+    // single-pass training (Fig. 12) exercises the sharded FE path
+    let batched: bool = args.get("batched", rc.batched_training);
 
     let dir = artifacts_dir(args);
     // model geometry read on this thread; the engine itself is built
@@ -98,11 +108,19 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     // artifacts directory the native backend runs on synthetic weights.
     let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
     println!(
-        "backend={backend:?} model: {}x{}x{} -> F={} D={}",
-        model.image_size, model.image_size, model.in_channels, model.feature_dim, model.d
+        "backend={backend:?} model: {}x{}x{} -> F={} D={} | workers={} batched={batched}",
+        model.image_size,
+        model.image_size,
+        model.in_channels,
+        model.feature_dim,
+        model.d,
+        par.resolved_workers()
     );
     let dir2 = dir.clone();
-    let coord = Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
+    let coord = Coordinator::start(
+        move || Ok(ComputeEngine::open_or_synthetic(backend, &dir2)?.with_parallelism(par)),
+        k_shot,
+    )?;
     let gen = ImageGen::new(model.image_size, 64.max(n_way), seed);
     let mut rng = Rng::new(seed);
     let mut accs = Vec::new();
@@ -111,8 +129,14 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
         let classes = rng.choose_k(gen.n_classes, n_way);
         let sid = coord.create_session(n_way, hv_bits)?;
         for (label, &cls) in classes.iter().enumerate() {
-            for _ in 0..k_shot {
-                coord.add_shot(sid, label, gen.sample(cls, &mut rng))?;
+            if batched {
+                let shots: Vec<Vec<f32>> =
+                    (0..k_shot).map(|_| gen.sample(cls, &mut rng)).collect();
+                coord.add_shot_batch(sid, label, shots)?;
+            } else {
+                for _ in 0..k_shot {
+                    coord.add_shot(sid, label, gen.sample(cls, &mut rng))?;
+                }
             }
         }
         coord.finish_training(sid)?;

@@ -66,8 +66,9 @@ impl ArtifactRegistry {
     /// creates the PJRT CPU client; compilation happens on first use of
     /// each entry).
     pub fn open(dir: &Path) -> anyhow::Result<Self> {
-        let man_text = std::fs::read_to_string(dir.join("manifest.json"))
-            .map_err(|e| anyhow::anyhow!("cannot read manifest.json in {dir:?}: {e} — run `make artifacts`"))?;
+        let man_text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!("cannot read manifest.json in {dir:?}: {e} — run `make artifacts`")
+        })?;
         let man = Json::parse(&man_text)?;
         let model = ModelConfig::from_manifest(&man)?;
         let mut entries = HashMap::new();
@@ -171,7 +172,11 @@ impl ArtifactRegistry {
     /// errors are reported the same way) but execution fails with a
     /// descriptive "built without PJRT support" error.
     #[cfg(feature = "pjrt")]
-    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+    pub fn exec_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
         self.validate(name, inputs)?;
         self.ensure_compiled(name)?;
         let compiled = self.compiled.lock().unwrap();
@@ -201,7 +206,11 @@ impl ArtifactRegistry {
     /// See the `pjrt`-enabled variant: this build validates, then reports
     /// that execution is unavailable.
     #[cfg(not(feature = "pjrt"))]
-    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+    pub fn exec_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
         self.validate(name, inputs)?;
         anyhow::bail!(
             "cannot execute artifact {name}: built without PJRT support \

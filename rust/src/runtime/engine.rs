@@ -12,7 +12,7 @@
 
 use std::path::Path;
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, ParallelConfig};
 use crate::fe::FeModel;
 use crate::hdc::CrpEncoder;
 use crate::runtime::ArtifactRegistry;
@@ -37,8 +37,13 @@ impl Backend {
 /// The engine. Both variants load the same `artifacts/` directory so the
 /// weights and cRP seeds always agree; the native variant can also run
 /// without artifacts on synthetic weights.
+///
+/// The native variant carries a [`ParallelConfig`]: `fe_forward` / `encode`
+/// batches are sharded across scoped worker threads with bit-identical
+/// output for any worker count (DESIGN.md §Threading model). The default is
+/// serial; see [`ComputeEngine::with_parallelism`].
 pub enum ComputeEngine {
-    Native { fe: FeModel, enc: CrpEncoder },
+    Native { fe: FeModel, enc: CrpEncoder, par: ParallelConfig },
     Pjrt { reg: ArtifactRegistry, enc: CrpEncoder },
 }
 
@@ -59,7 +64,7 @@ impl ComputeEngine {
             Backend::Native => {
                 let fe = FeModel::load(artifacts_dir)?;
                 let enc = CrpEncoder::new(fe.cfg.d, fe.cfg.master_seed);
-                Ok(ComputeEngine::Native { fe, enc })
+                Ok(ComputeEngine::Native { fe, enc, par: ParallelConfig::default() })
             }
             Backend::Pjrt => {
                 anyhow::ensure!(
@@ -82,7 +87,30 @@ impl ComputeEngine {
     pub fn from_config(cfg: ModelConfig) -> Self {
         let enc = CrpEncoder::new(cfg.d, cfg.master_seed);
         let fe = FeModel::synthetic(cfg);
-        ComputeEngine::Native { fe, enc }
+        ComputeEngine::Native { fe, enc, par: ParallelConfig::default() }
+    }
+
+    /// Set the batch-parallel execution policy (native backend only — the
+    /// PJRT client owns its own threading). Parallel output is bit-identical
+    /// to serial, so this never changes results, only throughput.
+    pub fn with_parallelism(mut self, par: ParallelConfig) -> Self {
+        self.set_parallelism(par);
+        self
+    }
+
+    /// In-place variant of [`ComputeEngine::with_parallelism`].
+    pub fn set_parallelism(&mut self, par: ParallelConfig) {
+        if let ComputeEngine::Native { par: p, .. } = self {
+            *p = par;
+        }
+    }
+
+    /// The active batch-parallel policy (PJRT reports the serial default).
+    pub fn parallelism(&self) -> ParallelConfig {
+        match self {
+            ComputeEngine::Native { par, .. } => *par,
+            ComputeEngine::Pjrt { .. } => ParallelConfig::default(),
+        }
     }
 
     /// Open `backend` over `artifacts_dir`, falling back to a synthetic
@@ -125,10 +153,19 @@ impl ComputeEngine {
 
     /// FE forward for a batch of images (each flat H*W*C). Returns, per
     /// image, the `n_branches` branch features padded to `feature_dim`.
+    ///
+    /// Native: the batch is sharded across scoped worker threads per the
+    /// engine's [`ParallelConfig`]; output is bit-identical to serial.
+    /// PJRT: batches stream through the `fe_forward_b8` artifact; tails of
+    /// 2..=7 images are zero-padded up to the b8 entry and the padded rows
+    /// truncated — one batched execution instead of up to 7 serial b1 calls
+    /// (the software mirror of the chip's batched-training utilization fix,
+    /// Fig. 16). A single-image call keeps the b1 entry so query latency
+    /// never pays for 7 discarded rows.
     pub fn fe_forward(&self, images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
         match self {
-            ComputeEngine::Native { fe, .. } => {
-                images.iter().map(|img| fe.forward(img)).collect()
+            ComputeEngine::Native { fe, par, .. } => {
+                fe.forward_batch(images, par.shards_for(images.len()))
             }
             ComputeEngine::Pjrt { reg, .. } => {
                 let m = &reg.model;
@@ -138,15 +175,18 @@ impl ComputeEngine {
                 let mut out = Vec::with_capacity(images.len());
                 let mut i = 0;
                 while i < images.len() {
-                    let take = if images.len() - i >= 8 { 8 } else { 1 };
-                    let entry = format!("fe_forward_b{take}");
-                    let mut flat = Vec::with_capacity(take * s * s * c);
+                    let take = (images.len() - i).min(8);
+                    // pad 2..=7-image tails up to the b8 entry point
+                    let exec_batch = if take == 1 { 1 } else { 8 };
+                    let entry = format!("fe_forward_b{exec_batch}");
+                    let mut flat = Vec::with_capacity(exec_batch * s * s * c);
                     for img in &images[i..i + take] {
                         anyhow::ensure!(img.len() == s * s * c, "image size mismatch");
                         flat.extend_from_slice(img);
                     }
-                    let res = reg.exec_f32(&entry, &[(&flat, &[take, s, s, c])])?;
-                    let feats = &res[0]; // (take, nb, fdim)
+                    flat.resize(exec_batch * s * s * c, 0.0);
+                    let res = reg.exec_f32(&entry, &[(&flat, &[exec_batch, s, s, c])])?;
+                    let feats = &res[0]; // (exec_batch, nb, fdim); padded rows dropped
                     for b in 0..take {
                         let mut branches = Vec::with_capacity(nb);
                         for br in 0..nb {
@@ -163,10 +203,14 @@ impl ComputeEngine {
     }
 
     /// cRP-encode a batch of `feature_dim` features into D-dim HVs.
+    ///
+    /// Same batching policy as [`ComputeEngine::fe_forward`]: native shards
+    /// across the worker pool (bit-identical to serial), PJRT pads 2..=7
+    /// tails up to the `crp_encode_b8` entry and truncates.
     pub fn encode(&self, feats: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
         match self {
-            ComputeEngine::Native { enc, .. } => {
-                Ok(feats.iter().map(|f| enc.encode_padded(f)).collect())
+            ComputeEngine::Native { enc, par, .. } => {
+                Ok(enc.encode_batch(feats, par.shards_for(feats.len())))
             }
             ComputeEngine::Pjrt { reg, .. } => {
                 let m = &reg.model;
@@ -175,14 +219,16 @@ impl ComputeEngine {
                 let mut out = Vec::with_capacity(feats.len());
                 let mut i = 0;
                 while i < feats.len() {
-                    let take = if feats.len() - i >= 8 { 8 } else { 1 };
-                    let entry = format!("crp_encode_b{take}");
-                    let mut flat = Vec::with_capacity(take * fdim);
+                    let take = (feats.len() - i).min(8);
+                    let exec_batch = if take == 1 { 1 } else { 8 };
+                    let entry = format!("crp_encode_b{exec_batch}");
+                    let mut flat = Vec::with_capacity(exec_batch * fdim);
                     for f in &feats[i..i + take] {
                         anyhow::ensure!(f.len() == fdim, "feature dim mismatch");
                         flat.extend_from_slice(f);
                     }
-                    let res = reg.exec_f32(&entry, &[(&flat, &[take, fdim])])?;
+                    flat.resize(exec_batch * fdim, 0.0);
+                    let res = reg.exec_f32(&entry, &[(&flat, &[exec_batch, fdim])])?;
                     for b in 0..take {
                         out.push(res[0][b * d..(b + 1) * d].to_vec());
                     }
@@ -255,6 +301,66 @@ mod tests {
         let b = ComputeEngine::from_config(tiny_cfg());
         let img = vec![0.5f32; 8 * 8 * 3];
         assert_eq!(a.fe_forward(&[img.clone()]).unwrap(), b.fe_forward(&[img]).unwrap());
+    }
+
+    /// Deterministic pseudo-images without threading a PRNG through.
+    fn test_images(n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| (0..len).map(|j| ((i * 193 + j * 7) % 97) as f32 / 97.0 - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn parallel_fe_forward_and_encode_bit_identical_to_serial() {
+        // the acceptance invariant: any worker count, any (odd) batch size
+        let serial = ComputeEngine::from_config(tiny_cfg());
+        let images = test_images(11, 8 * 8 * 3);
+        let want_feats = serial.fe_forward(&images).unwrap();
+        let finals: Vec<Vec<f32>> =
+            want_feats.iter().map(|b| b.last().unwrap().clone()).collect();
+        let want_hvs = serial.encode(&finals).unwrap();
+        for workers in [1usize, 2, 7] {
+            let par = ComputeEngine::from_config(tiny_cfg())
+                .with_parallelism(ParallelConfig { workers, min_batch_per_worker: 1 });
+            for batch in [1usize, 3, 7, 11] {
+                assert_eq!(
+                    par.fe_forward(&images[..batch]).unwrap(),
+                    want_feats[..batch].to_vec(),
+                    "fe_forward workers={workers} batch={batch}"
+                );
+                assert_eq!(
+                    par.encode(&finals[..batch]).unwrap(),
+                    want_hvs[..batch].to_vec(),
+                    "encode workers={workers} batch={batch}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_auto_workers_also_bit_identical() {
+        let serial = ComputeEngine::from_config(tiny_cfg());
+        let auto = ComputeEngine::from_config(tiny_cfg()).with_parallelism(ParallelConfig::auto());
+        let images = test_images(9, 8 * 8 * 3);
+        assert_eq!(auto.fe_forward(&images).unwrap(), serial.fe_forward(&images).unwrap());
+    }
+
+    #[test]
+    fn parallel_errors_surface_from_any_shard() {
+        let par = ComputeEngine::from_config(tiny_cfg())
+            .with_parallelism(ParallelConfig { workers: 4, min_batch_per_worker: 1 });
+        let mut images = test_images(8, 8 * 8 * 3);
+        images[5] = vec![0.0; 3]; // wrong size, lands in a later shard
+        assert!(par.fe_forward(&images).is_err());
+    }
+
+    #[test]
+    fn parallelism_is_settable_on_native_only() {
+        let mut e = ComputeEngine::from_config(tiny_cfg());
+        assert_eq!(e.parallelism(), ParallelConfig::default());
+        let p = ParallelConfig { workers: 3, min_batch_per_worker: 4 };
+        e.set_parallelism(p);
+        assert_eq!(e.parallelism(), p);
     }
 
     #[test]

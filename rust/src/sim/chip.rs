@@ -65,8 +65,14 @@ impl Chip {
     }
 
     /// A chip running an arbitrary layer table (e.g. the small AOT model).
-    pub fn with_layers(cfg: ChipConfig, layers: Vec<ConvGeom>, feature_dim: usize, d: usize) -> Self {
-        Chip { cfg, energy: EnergyModel::default(), layers, feature_dim, d, ch_sub: 64, n_centroids: 16 }
+    pub fn with_layers(
+        cfg: ChipConfig,
+        layers: Vec<ConvGeom>,
+        feature_dim: usize,
+        d: usize,
+    ) -> Self {
+        let energy = EnergyModel::default();
+        Chip { cfg, energy, layers, feature_dim, d, ch_sub: 64, n_centroids: 16 }
     }
 
     fn seconds(&self, cycles: u64) -> f64 {
@@ -80,14 +86,25 @@ impl Chip {
     /// reloads weights. Early-exit training additionally encodes + updates
     /// all 4 branch HVs per image (Section V-A); plain training encodes
     /// the final feature only.
-    pub fn train_episode(&self, n_way: usize, k_shot: usize, batched: bool, ee_branches: bool) -> TrainReport {
+    pub fn train_episode(
+        &self,
+        n_way: usize,
+        k_shot: usize,
+        batched: bool,
+        ee_branches: bool,
+    ) -> TrainReport {
         let mut tally = EnergyTally::default();
         let images = (n_way * k_shot) as u64;
         // --- FE ---
         let fe_batch = if batched { k_shot as u64 } else { 1 };
         let passes = if batched { n_way as u64 } else { images };
-        let (reports, fe_tally) =
-            fe_engine::simulate_model(&self.layers, &self.cfg, self.ch_sub, self.n_centroids, fe_batch);
+        let (reports, fe_tally) = fe_engine::simulate_model(
+            &self.layers,
+            &self.cfg,
+            self.ch_sub,
+            self.n_centroids,
+            fe_batch,
+        );
         let fe_stalls: u64 = reports.iter().map(|r| r.stall_cycles).sum::<u64>() * passes;
         tally.add(&fe_tally.scaled(passes));
         // --- HDC encode + update ---
@@ -148,7 +165,11 @@ impl Chip {
 
     /// Average inference over an empirical exit-stage distribution
     /// (produced by the coordinator's EE logic on real episodes).
-    pub fn infer_with_exit_distribution(&self, n_classes: usize, exit_stages: &[usize]) -> InferReport {
+    pub fn infer_with_exit_distribution(
+        &self,
+        n_classes: usize,
+        exit_stages: &[usize],
+    ) -> InferReport {
         assert!(!exit_stages.is_empty());
         let mut acc = InferReport::default();
         for &s in exit_stages {

@@ -144,14 +144,18 @@ mod tests {
     use crate::fe::kmeans::cluster_layer;
     use crate::util::prng::Rng;
 
-    fn setup(seed: u64, cin: usize, cout: usize, hw: usize)
-        -> (Tensor3, Vec<u8>, Vec<f32>, usize, usize)
-    {
+    fn setup(
+        seed: u64,
+        cin: usize,
+        cout: usize,
+        hw: usize,
+    ) -> (Tensor3, Vec<u8>, Vec<f32>, usize, usize) {
         let mut rng = Rng::new(seed);
         let (ch_sub, n) = (cin.min(64), 8);
         let w: Vec<f32> = (0..cout * 9 * cin).map(|_| rng.gauss_f32()).collect();
         let cl = cluster_layer(&w, cout, 3, cin, ch_sub, n);
-        let x = Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let x =
+            Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
         (x, cl.idx, cl.codebook, ch_sub, n)
     }
 

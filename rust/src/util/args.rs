@@ -1,0 +1,25 @@
+//! Tiny `--key value` argument lookup for the bench binaries (benches are
+//! plain `harness = false` programs; the CLI proper has its own parser in
+//! `main.rs`).
+
+/// Value of `--name N` from the process arguments, or `default` when the
+/// flag is absent or unparsable.
+pub fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_flag_yields_default() {
+        // the test binary's own argv has no --no-such-flag
+        assert_eq!(arg_usize("--no-such-flag", 7), 7);
+    }
+}

@@ -1,10 +1,13 @@
-//! Self-contained infrastructure: PRNG, JSON, stats, tables, bf16, timing.
+//! Self-contained infrastructure: PRNG, JSON, stats, tables, bf16, timing,
+//! scoped-thread batch sharding.
 //!
 //! The build runs against a vendored offline registry with no serde / rand /
 //! criterion, so the small utilities those crates would provide live here.
 
+pub mod args;
 pub mod bf16;
 pub mod json;
+pub mod parallel;
 pub mod prng;
 pub mod stats;
 pub mod table;

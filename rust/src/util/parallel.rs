@@ -1,0 +1,100 @@
+//! Deterministic batch-parallel execution: shard an item batch across a
+//! `std::thread::scope` worker pool (anyhow-only dependency policy — no
+//! rayon) and stitch per-item results back in input order.
+//!
+//! The determinism contract (DESIGN.md §Threading model): every item is
+//! processed independently by a pure `&self` function, shards are
+//! *contiguous* chunks, and results are concatenated in chunk order — so
+//! the output is bit-identical to the serial loop for any shard count.
+//! No reductions happen across shard boundaries, which is what keeps
+//! floating-point results exactly reproducible.
+
+/// Apply `f` to every item, fanning the batch out over `shards` scoped
+/// worker threads. `shards <= 1` (or a batch of 0/1 items) runs the plain
+/// serial loop on the caller's thread — no threads are spawned.
+///
+/// Errors propagate like the serial loop's `collect::<Result<_>>`: the
+/// first failing item (in input order) wins. Worker panics resume on the
+/// caller's thread.
+pub fn shard_map<T, U, F>(items: &[T], shards: usize, f: F) -> anyhow::Result<Vec<U>>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> anyhow::Result<U> + Sync,
+{
+    if shards <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk_len = items.len().div_ceil(shards.min(items.len()));
+    let f = &f;
+    let mut chunk_results: Vec<anyhow::Result<Vec<U>>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk_len)
+            .map(|chunk| {
+                s.spawn(move || chunk.iter().map(f).collect::<anyhow::Result<Vec<U>>>())
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            chunk_results.push(r);
+        }
+    });
+    let mut out = Vec::with_capacity(items.len());
+    for r in chunk_results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_for_any_shard_count() {
+        let items: Vec<usize> = (0..23).collect();
+        let want: Vec<usize> = items.iter().map(|i| i * 3).collect();
+        for shards in [0, 1, 2, 3, 7, 23, 100] {
+            let got = shard_map(&items, shards, |&i| Ok(i * 3)).unwrap();
+            assert_eq!(got, want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_batches() {
+        let got = shard_map(&[] as &[u32], 8, |&i| Ok(i)).unwrap();
+        assert!(got.is_empty());
+        let got = shard_map(&[42u32], 8, |&i| Ok(i + 1)).unwrap();
+        assert_eq!(got, vec![43]);
+    }
+
+    #[test]
+    fn first_error_in_input_order_wins() {
+        let items: Vec<usize> = (0..10).collect();
+        for shards in [1, 3, 10] {
+            let err = shard_map(&items, shards, |&i| {
+                if i >= 4 {
+                    anyhow::bail!("item {i} failed")
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "item 4 failed", "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn results_match_serial_with_float_work() {
+        // f32 math per item: parallel stitching must be bit-identical
+        let items: Vec<Vec<f32>> =
+            (0..9).map(|i| (0..64).map(|j| (i * 64 + j) as f32 * 0.013).collect()).collect();
+        let work = |v: &Vec<f32>| -> anyhow::Result<f32> {
+            Ok(v.iter().fold(0f32, |a, &x| a * 0.9993 + x.sin()))
+        };
+        let serial = shard_map(&items, 1, work).unwrap();
+        for shards in [2, 4, 9] {
+            assert_eq!(shard_map(&items, shards, work).unwrap(), serial);
+        }
+    }
+}

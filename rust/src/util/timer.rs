@@ -67,7 +67,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_ms: f64, mut f: F) -> BenchResult {
         f();
         samples.push(t.elapsed().as_secs_f64() * 1e9);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / reps as f64;
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / reps as f64;
     BenchResult {

@@ -7,7 +7,7 @@
 
 mod common;
 
-use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::config::{EeConfig, ModelConfig, ParallelConfig};
 use fsl_hdnn::coordinator::{Coordinator, Request, Response};
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
@@ -16,6 +16,25 @@ use fsl_hdnn::util::prng::Rng;
 fn start_native(test: &str) -> Option<Coordinator> {
     let dir = common::artifacts_or_skip(test)?;
     Some(Coordinator::start(move || ComputeEngine::open(Backend::Native, &dir), 3).unwrap())
+}
+
+/// Artifact-free coordinator on the synthetic native engine — these tests
+/// run from a clean checkout (no `SKIPPED`).
+fn start_synthetic(k_shot: usize, par: ParallelConfig) -> Coordinator {
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4, 8],
+        blocks_per_stage: 1,
+        feature_dim: 8,
+        d: 64,
+        ..Default::default()
+    };
+    Coordinator::start(
+        move || Ok(ComputeEngine::from_config(cfg).with_parallelism(par)),
+        k_shot,
+    )
+    .unwrap()
 }
 
 fn model_geometry() -> (usize, usize) {
@@ -79,7 +98,9 @@ fn error_paths_reported_not_panicked() {
 
 #[test]
 fn early_exit_uses_fewer_blocks_on_confident_queries() {
-    let Some(coord) = start_native("early_exit_uses_fewer_blocks_on_confident_queries") else { return };
+    let Some(coord) = start_native("early_exit_uses_fewer_blocks_on_confident_queries") else {
+        return;
+    };
     let (size, _) = model_geometry();
     let gen = ImageGen::new(size, 8, 11);
     let mut rng = Rng::new(11);
@@ -215,6 +236,134 @@ fn router_spills_to_other_device_when_full() {
     assert_ne!(pa.device, pb.device, "second big session must spill");
     // a third cannot fit anywhere
     assert!(router.create_session(32, 4).is_err(), "fleet-wide backpressure");
+}
+
+#[test]
+fn class_batches_route_through_batched_training() {
+    // ClassBatcher -> batched-train integration: the same shots arriving
+    // per-shot (serial engine) and as class batches (worker-sharded
+    // engine) must produce identical trained sessions — queries agree
+    // bit-for-bit because the parallel path is bit-identical to serial.
+    let serial = start_synthetic(3, ParallelConfig::default());
+    let batched = start_synthetic(3, ParallelConfig { workers: 7, min_batch_per_worker: 1 });
+    let n_way = 3;
+    let mk_shots = |class: usize| -> Vec<Vec<f32>> {
+        let gen = ImageGen::new(8, 8, 29);
+        let mut rng = Rng::new(100 + class as u64);
+        (0..3).map(|_| gen.sample(class, &mut rng)).collect()
+    };
+    let s1 = serial.create_session(n_way, 16).unwrap();
+    let s2 = batched.create_session(n_way, 16).unwrap();
+    for class in 0..n_way {
+        for img in mk_shots(class) {
+            serial.add_shot(s1, class, img).unwrap();
+        }
+        // whole class batch in one request: k reached -> trains immediately
+        batched.add_shot_batch(s2, class, mk_shots(class)).unwrap();
+    }
+    assert_eq!(serial.finish_training(s1).unwrap(), 9);
+    assert_eq!(batched.finish_training(s2).unwrap(), 9);
+    // both coordinators saw 9 shots; the batch path used 3 requests
+    assert_eq!(serial.metrics().shots, 9);
+    assert_eq!(batched.metrics().shots, 9);
+    let gen = ImageGen::new(8, 8, 29);
+    let mut rng = Rng::new(777);
+    for i in 0..9 {
+        let img = gen.sample(i % n_way, &mut rng);
+        let a = serial.query(s1, img.clone(), None).unwrap();
+        let b = batched.query(s2, img, None).unwrap();
+        assert_eq!(a.prediction, b.prediction, "query {i}: batched/parallel must match serial");
+    }
+}
+
+#[test]
+fn oversized_class_batch_flushes_in_k_shot_groups() {
+    // 7 shots at k=3: two full batches train through the batched FE path,
+    // one shot stays pending until FinishTraining flushes it
+    let coord = start_synthetic(3, ParallelConfig { workers: 2, min_batch_per_worker: 1 });
+    let sid = coord.create_session(2, 16).unwrap();
+    let gen = ImageGen::new(8, 8, 31);
+    let mut rng = Rng::new(31);
+    let shots: Vec<Vec<f32>> = (0..7).map(|_| gen.sample(0, &mut rng)).collect();
+    coord.add_shot_batch(sid, 0, shots).unwrap();
+    match coord.call(Request::GetMetrics) {
+        Response::Metrics(m) => assert_eq!(m.shots, 7),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(coord.finish_training(sid).unwrap(), 7);
+}
+
+#[test]
+fn batch_error_paths_reported_not_panicked() {
+    let coord = start_synthetic(3, ParallelConfig::default());
+    // unknown session
+    assert!(coord.add_shot_batch(999, 0, vec![vec![0.0; 8 * 8 * 3]]).is_err());
+    // class out of range
+    let sid = coord.create_session(2, 16).unwrap();
+    assert!(coord.add_shot_batch(sid, 5, vec![vec![0.0; 8 * 8 * 3]]).is_err());
+    // wrong image size fails when the k-shot group flushes to the FE
+    let r = coord.add_shot_batch(sid, 0, vec![vec![0.0; 5]; 3]);
+    assert!(r.is_err(), "bad image must fail at FE time: {r:?}");
+    // coordinator still alive
+    assert!(coord.metrics().errors >= 3);
+}
+
+#[test]
+fn empty_feature_rejected_short_feature_pad_counted() {
+    // regression: an empty feature used to zero-pad into a valid all-zero
+    // HV and silently train a garbage class prototype
+    let coord = start_synthetic(3, ParallelConfig::default());
+    let sid = coord.create_session(2, 16).unwrap();
+    let empty_train =
+        coord.call(Request::AddFeatureShot { session: sid, class: 0, feature: vec![] });
+    assert!(matches!(empty_train, Response::Error(_)), "empty feature must be rejected");
+    let empty_query = coord.call(Request::QueryFeature { session: sid, feature: vec![] });
+    assert!(matches!(empty_query, Response::Error(_)));
+    let m = coord.metrics();
+    assert!(m.errors >= 2);
+    assert_eq!(m.feature_pads, 0, "rejections are not pads");
+    // short (but non-empty) features still work, with the pad counted
+    let short =
+        coord.call(Request::AddFeatureShot { session: sid, class: 0, feature: vec![0.5; 4] });
+    assert!(matches!(short, Response::ShotAccepted { .. }));
+    assert_eq!(coord.metrics().feature_pads, 1);
+    // exact-length features never count as pads (feature_dim = 8 here)
+    let exact =
+        coord.call(Request::AddFeatureShot { session: sid, class: 0, feature: vec![0.5; 8] });
+    assert!(matches!(exact, Response::ShotAccepted { .. }));
+    assert_eq!(coord.metrics().feature_pads, 1);
+}
+
+#[test]
+fn router_routes_class_batches() {
+    use fsl_hdnn::coordinator::{DeviceRouter, Placement};
+    // artifact-free: synthetic engines on both devices
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4, 8],
+        blocks_per_stage: 1,
+        feature_dim: 8,
+        d: 64,
+        ..Default::default()
+    };
+    let par = ParallelConfig { workers: 2, min_batch_per_worker: 1 };
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+        let c = cfg.clone();
+        move || Ok(ComputeEngine::from_config(c).with_parallelism(par))
+    })
+    .unwrap();
+    let gen = ImageGen::new(8, 8, 37);
+    let mut rng = Rng::new(37);
+    let sid = router.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        let shots: Vec<Vec<f32>> = (0..2).map(|_| gen.sample(class, &mut rng)).collect();
+        router.add_shot_batch(sid, class, shots).unwrap();
+    }
+    assert_eq!(router.finish_training(sid).unwrap(), 4);
+    let out = router.query(sid, gen.sample(0, &mut rng), None).unwrap();
+    assert!(out.prediction < 2);
+    assert!(router.add_shot_batch(999, 0, vec![]).is_err(), "unknown routed session");
 }
 
 #[test]

@@ -37,8 +37,16 @@ fn registry_loads_and_signatures_sane() {
     let Some(dir) = artifacts("registry_loads_and_signatures_sane") else { return };
     let reg = ArtifactRegistry::open(&dir).unwrap();
     let names = reg.entry_names();
-    for required in ["fe_forward_b1", "fe_forward_b8", "crp_encode_b1", "crp_encode_b8",
-                     "hdc_infer_b1", "hdc_train_k5", "fsl_infer_b1"] {
+    let required_entries = [
+        "fe_forward_b1",
+        "fe_forward_b8",
+        "crp_encode_b1",
+        "crp_encode_b8",
+        "hdc_infer_b1",
+        "hdc_train_k5",
+        "fsl_infer_b1",
+    ];
+    for required in required_entries {
         assert!(names.iter().any(|n| n == required), "missing artifact {required}");
     }
     let sig = reg.signature("fe_forward_b1").unwrap();

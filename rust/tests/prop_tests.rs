@@ -189,7 +189,8 @@ fn prop_clustered_conv_exact() {
         let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32()).collect();
         let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
         let wr = cl.reconstruct();
-        let x = Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let x =
+            Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
         let dense = conv2d(&x, &wr, cout, k, stride);
         let clus = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, stride, ch_sub, n);
         for (i, (a, b)) in dense.data.iter().zip(&clus.data).enumerate() {
