@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test bench doc fmt clippy artifacts clean
+.PHONY: verify build test bench bench-smoke doc fmt clippy artifacts clean
 
 ## tier-1 verify: must pass from a clean checkout (artifact-dependent
 ## tests self-skip with a distinct `SKIPPED` line, see DESIGN.md §Test skips)
@@ -20,6 +20,12 @@ test:
 ## bench list lives in rust/Cargo.toml's [[bench]] entries only
 bench:
 	$(CARGO) bench
+
+## bench-harness smoke (what CI runs): tiny budgets, all asserts live,
+## refreshes BENCH_hotpath.json at the repo root
+bench-smoke:
+	$(CARGO) bench --bench hotpath_micro -- --smoke
+	$(CARGO) bench --bench fig05_chsub_sweep -- --smoke
 
 doc:
 	$(CARGO) doc --no-deps

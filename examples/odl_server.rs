@@ -9,14 +9,16 @@
 //!     workload at the measured corners — the numbers Table I reports.
 //!
 //! Run with:  cargo run --release --example odl_server -- [episodes] [backend]
+//! Add `--clustered` to serve through the packed weight-clustered FE.
 
 use std::time::Instant;
 
-use fsl_hdnn::config::{ChipConfig, EeConfig};
+use fsl_hdnn::config::{ChipConfig, EeConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
 use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::args::arg_flag;
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::stats;
 use fsl_hdnn::util::table::Table;
@@ -27,20 +29,37 @@ fn main() -> anyhow::Result<()> {
     // native by default so the driver runs from a clean checkout; pass
     // `pjrt` explicitly once `make artifacts` has produced the modules and
     // the crate is built with the `pjrt` feature
-    let backend = Backend::from_name(args.get(2).map(|s| s.as_str()).unwrap_or("native"))?;
+    let backend = Backend::from_name(
+        args.get(2).map(|s| s.as_str()).filter(|s| !s.starts_with("--")).unwrap_or("native"),
+    )?;
+    let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
     let (n_way, k_shot, queries_per_class) = (10, 5, 10);
     let dir = std::path::PathBuf::from("artifacts");
-    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
+    let model = ComputeEngine::open_or_synthetic_with(
+        Backend::Native,
+        &dir,
+        ModelConfig { clustered: false, ..cfg.clone() },
+    )?
+    .model()
+    .clone();
 
+    // clustering is a native-backend knob; report what actually runs
+    let eff_clustered = backend == Backend::Native && cfg.clustered;
+    if cfg.clustered && !eff_clustered {
+        eprintln!("note: --clustered is a native-backend knob; PJRT ignores it");
+    }
     println!("== FSL-HDnn ODL serving driver ==");
     println!(
-        "backend={backend:?}, {episodes} episodes of {n_way}-way {k_shot}-shot, {} queries each",
+        "backend={backend:?}, {episodes} episodes of {n_way}-way {k_shot}-shot, {} queries \
+         each, clustered FE: {eff_clustered}",
         n_way * queries_per_class
     );
 
     let dir2 = dir.clone();
-    let coord =
-        Coordinator::start(move || ComputeEngine::open_or_synthetic(backend, &dir2), k_shot)?;
+    let coord = Coordinator::start(
+        move || ComputeEngine::open_or_synthetic_with(backend, &dir2, cfg),
+        k_shot,
+    )?;
     let gen = ImageGen::new(model.image_size, 64, 2024);
     let mut rng = Rng::new(2024);
     let ee = EeConfig::paper_default();

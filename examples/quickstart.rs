@@ -8,20 +8,34 @@
 //!   4. classify query images with and without early exit (Fig. 11).
 //!
 //! Run with:  cargo run --release --example quickstart
+//! Add `-- --clustered` to run the FE through the packed weight-clustered
+//! kernel (Fig. 4b) — the chip's cheap path — instead of the dense conv.
 
-use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::config::{EeConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
+use fsl_hdnn::util::args::arg_flag;
 use fsl_hdnn::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from("artifacts");
+    let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
     // read geometry on the caller side; build the engine inside the worker.
     // Without `make artifacts` the native backend runs synthetic weights.
-    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
-    println!("model: {0}x{0}x{1} image -> F={2}, D={3}", model.image_size,
-             model.in_channels, model.feature_dim, model.d);
+    let model = ComputeEngine::open_or_synthetic_with(
+        Backend::Native,
+        &dir,
+        ModelConfig { clustered: false, ..cfg.clone() },
+    )?
+    .model()
+    .clone();
+    // the clustered flag only applies if the native fallback runs; the
+    // PJRT-first path below says which backend was actually taken
+    println!(
+        "model: {0}x{0}x{1} image -> F={2}, D={3}, clustered FE (native only): {4}",
+        model.image_size, model.in_channels, model.feature_dim, model.d, cfg.clustered
+    );
 
     let (n_way, k_shot) = (5, 5);
     let dir2 = dir.clone();
@@ -30,7 +44,7 @@ fn main() -> anyhow::Result<()> {
             ComputeEngine::open(Backend::Pjrt, &dir2)
                 .or_else(|e| {
                     eprintln!("PJRT unavailable ({e}), using native backend");
-                    ComputeEngine::open_or_synthetic(Backend::Native, &dir2)
+                    ComputeEngine::open_or_synthetic_with(Backend::Native, &dir2, cfg)
                 })
         },
         k_shot,

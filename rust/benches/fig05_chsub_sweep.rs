@@ -4,14 +4,23 @@
 //! The error measurement clusters a mid-network ResNet-18-scale conv layer
 //! (Cin=Cout=128, K=3) and compares conv outputs on a probe activation
 //! against the INT8-quantized dense layer, exactly the Fig. 5 protocol.
+//! The sweep runs both clustered kernels — the reference and the packed
+//! fast path — asserting they agree, and logs the measured ns/op of each
+//! into `BENCH_hotpath.json` (`--smoke` shrinks timing budgets for CI).
 
-use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
+use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
 use fsl_hdnn::fe::kmeans::cluster_layer;
 use fsl_hdnn::fe::quant::{mse, quantize_int8};
+use fsl_hdnn::util::args::arg_flag;
+use fsl_hdnn::util::bench_log::BenchLog;
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::table::Table;
+use fsl_hdnn::util::timer::{bench, black_box};
 
 fn main() {
+    let smoke = arg_flag("--smoke");
+    let budget = if smoke { 1.0 } else { 80.0 };
+    let mut log = BenchLog::new("fig05_chsub_sweep");
     let (cin, cout, k, n) = (128usize, 128usize, 3usize, 16usize);
     let mut rng = Rng::new(5);
     let std = (2.0 / (k * k * cin) as f32).sqrt();
@@ -29,15 +38,35 @@ fn main() {
 
     let mut t = Table::new(
         "Fig. 5: FE error / compression / op-reduction vs Ch_sub (N=16, K=3)",
-        &["Ch_sub", "FE output MSE", "vs INT8 MSE", "compression", "op reduction"],
+        &["Ch_sub", "FE output MSE", "vs INT8 MSE", "compression", "op reduction", "packed vs ref"],
     );
     for ch_sub in [8usize, 16, 32, 64, 128] {
         let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
         let wr = cl.reconstruct();
+        let packed = cl.packed();
         let y_cl = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, 1, ch_sub, n);
-        // sanity: clustered datapath == dense reconstruction
+        // sanity: clustered datapath == dense reconstruction == fast path
         let y_rec = conv2d(&x, &wr, cout, k, 1);
         assert!(mse(&y_cl.data, &y_rec.data) < 1e-6, "clustered != reconstructed");
+        let y_fast = clustered_conv2d_packed(&x, &packed, &cl.codebook, 1);
+        assert!(mse(&y_cl.data, &y_fast.data) < 1e-6, "packed kernel != reference");
+        let rr = bench(&format!("clustered ref ch_sub={ch_sub}"), budget, || {
+            black_box(clustered_conv2d(
+                black_box(&x),
+                &cl.idx,
+                &cl.codebook,
+                cout,
+                k,
+                1,
+                ch_sub,
+                n,
+            ));
+        });
+        let rp = bench(&format!("clustered packed ch_sub={ch_sub}"), budget, || {
+            black_box(clustered_conv2d_packed(black_box(&x), &packed, &cl.codebook, 1));
+        });
+        log.record(&format!("clustered_ref_ch{ch_sub}"), rr.mean_ns, rr.throughput(1.0), 1);
+        log.record(&format!("clustered_packed_ch{ch_sub}"), rp.mean_ns, rp.throughput(1.0), 1);
         let fe_err = mse(&y_fp32.data, &y_cl.data);
         let compression = (cout * k * k * cin * 8) as f64 / cl.storage_bits() as f64;
         let dense_ops = 2.0 * (k * k * ch_sub.min(cin)) as f64;
@@ -48,6 +77,7 @@ fn main() {
             format!("{:.2}x", fe_err / int8_err),
             format!("{:.2}x", compression),
             format!("{:.2}x", dense_ops / clus_ops),
+            format!("{:.2}x", rr.mean_ns / rp.mean_ns),
         ]);
     }
     t.print();
@@ -60,4 +90,8 @@ fn main() {
     println!("principles against a weight-only INT8 baseline (16 vs 256 levels), so the");
     println!("paper's error metric must normalize differently. Shape (mild growth,");
     println!("saturation) holds. INT8 baseline output MSE = {int8_err:.3e}");
+    match log.write() {
+        Ok(path) => println!("bench trajectory written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench trajectory: {e}"),
+    }
 }

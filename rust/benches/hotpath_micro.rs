@@ -1,27 +1,37 @@
 //! Hot-path microbenchmarks (the §Perf targets in DESIGN.md): native cRP
-//! encode throughput, L1 distance search, clustered conv, FE forward
-//! (serial and batch-parallel, `--workers N`, 0 = one per core) and the
-//! chip simulator itself. Not a paper figure — the optimization
-//! baseline/after log in EXPERIMENTS.md §Perf comes from here.
+//! encode throughput, L1 distance search, the clustered-conv kernels
+//! (reference vs the packed fast path, at ResNet-18 stage geometries), FE
+//! forward (dense and clustered, serial and batch-parallel, `--workers N`,
+//! 0 = one per core) and the chip simulator itself. Not a paper figure —
+//! the optimization baseline/after log in EXPERIMENTS.md §Perf comes from
+//! here, and the headline numbers land in `BENCH_hotpath.json` at the repo
+//! root so the perf trajectory is tracked across PRs.
+//!
+//! `--smoke` shrinks every timing budget to ~1 ms so CI can exercise the
+//! whole harness (all asserts still run) without paying bench time.
 
 use fsl_hdnn::config::{ChipConfig, ModelConfig, ParallelConfig};
-use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
+use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
 use fsl_hdnn::fe::kmeans::cluster_layer;
 use fsl_hdnn::hdc::{distance, CrpEncoder, HdcModel};
 use fsl_hdnn::runtime::ComputeEngine;
 use fsl_hdnn::sim::Chip;
-use fsl_hdnn::util::args::arg_usize;
+use fsl_hdnn::util::args::{arg_flag, arg_usize};
+use fsl_hdnn::util::bench_log::BenchLog;
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::timer::{bench, black_box};
 
 fn main() {
+    let smoke = arg_flag("--smoke");
+    let budget = |ms: f64| if smoke { 1.0 } else { ms };
+    let mut log = BenchLog::new("hotpath_micro");
     let mut rng = Rng::new(1);
 
     // --- cRP encode (F=512 -> D=4096), the HDC hot loop ---
     let enc = CrpEncoder::new(4096, 0xF51_4D17);
     let x: Vec<f32> = (0..512).map(|_| rng.gauss_f32()).collect();
     let mut out = vec![0f32; 4096];
-    let r = bench("crp_encode F=512 D=4096", 300.0, || {
+    let r = bench("crp_encode F=512 D=4096", budget(300.0), || {
         enc.encode_into(black_box(&x), &mut out);
     });
     println!("{r}");
@@ -30,12 +40,13 @@ fn main() {
         r.throughput(512.0 * 4.0) / 1e6,
         r.throughput(4096.0) / 1e6
     );
+    log.record("crp_encode_f512_d4096", r.mean_ns, r.throughput(1.0), 1);
 
     // --- L1 distance search (32 classes x D=4096) ---
     let classes: Vec<Vec<f32>> =
         (0..32).map(|_| (0..4096).map(|_| rng.gauss_f32()).collect()).collect();
     let q: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
-    let r = bench("l1_distance 32 x D=4096", 200.0, || {
+    let r = bench("l1_distance 32 x D=4096", budget(200.0), || {
         let mut best = 0.0f64;
         for c in &classes {
             best += distance::l1(black_box(&q), c);
@@ -43,6 +54,7 @@ fn main() {
         black_box(best);
     });
     println!("{r}");
+    log.record("l1_distance_32xd4096", r.mean_ns, r.throughput(1.0), 1);
 
     // --- HDC train + predict round ---
     let mut model = HdcModel::new(10, 4096);
@@ -50,28 +62,70 @@ fn main() {
     for c in 0..10 {
         model.train_shot(c, &hv);
     }
-    let r = bench("hdc predict 10-way D=4096", 200.0, || {
+    let r = bench("hdc predict 10-way D=4096", budget(200.0), || {
         black_box(model.predict(black_box(&hv)));
     });
     println!("{r}");
+    log.record("hdc_predict_10way_d4096", r.mean_ns, r.throughput(1.0), 1);
 
-    // --- clustered conv vs dense conv (Cin=Cout=64 @ 16x16) ---
-    let (cin, cout, k, n, ch_sub) = (64usize, 64usize, 3usize, 16usize, 64usize);
-    let std = (2.0 / (k * k * cin) as f32).sqrt();
-    let w: Vec<f32> = (0..cout * k * k * cin).map(|_| std * rng.gauss_f32()).collect();
-    let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
-    let img = Tensor3::from_vec(16, 16, cin, (0..16 * 16 * cin).map(|_| rng.gauss_f32()).collect());
-    let r = bench("dense conv 64->64 @16x16", 300.0, || {
-        black_box(conv2d(black_box(&img), &w, cout, k, 1));
-    });
-    println!("{r}");
-    let r = bench("clustered conv 64->64 @16x16", 300.0, || {
-        black_box(clustered_conv2d(black_box(&img), &cl.idx, &cl.codebook, cout, k, 1, ch_sub, n));
-    });
-    println!("{r}");
+    // --- clustered conv: reference kernel vs the packed fast path, at
+    // ResNet-18 stage geometries (the acceptance target: packed >= 3x
+    // faster than the reference at these shapes) ---
+    let (k, n, ch_sub) = (3usize, 16usize, 64usize);
+    for (cin, cout, hw) in [(64usize, 64usize, 28usize), (128, 128, 14)] {
+        let std = (2.0 / (k * k * cin) as f32).sqrt();
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| std * rng.gauss_f32()).collect();
+        let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
+        let packed = cl.packed();
+        let img =
+            Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let geo = format!("{cin}->{cout} @{hw}x{hw}");
+        let rd = bench(&format!("dense conv {geo}"), budget(300.0), || {
+            black_box(conv2d(black_box(&img), &w, cout, k, 1));
+        });
+        println!("{rd}");
+        log.record(&format!("dense_conv_{cin}x{cout}_{hw}"), rd.mean_ns, rd.throughput(1.0), 1);
+        let rr = bench(&format!("clustered ref {geo}"), budget(300.0), || {
+            black_box(clustered_conv2d(
+                black_box(&img),
+                &cl.idx,
+                &cl.codebook,
+                cout,
+                k,
+                1,
+                ch_sub,
+                n,
+            ));
+        });
+        println!("{rr}");
+        log.record(&format!("clustered_ref_{cin}x{cout}_{hw}"), rr.mean_ns, rr.throughput(1.0), 1);
+        let rp = bench(&format!("clustered packed {geo}"), budget(300.0), || {
+            black_box(clustered_conv2d_packed(black_box(&img), &packed, &cl.codebook, 1));
+        });
+        println!("{rp}");
+        log.record(
+            &format!("clustered_packed_{cin}x{cout}_{hw}"),
+            rp.mean_ns,
+            rp.throughput(1.0),
+            1,
+        );
+        // numerics: the fast path must match the reference kernel
+        let want = clustered_conv2d(&img, &cl.idx, &cl.codebook, cout, k, 1, ch_sub, n);
+        let got = clustered_conv2d_packed(&img, &packed, &cl.codebook, 1);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "packed kernel diverged: {a} vs {b}");
+        }
+        println!(
+            "    -> packed vs reference: {:.2}x | packed vs dense: {:.2}x (outputs checked)",
+            rr.mean_ns / rp.mean_ns,
+            rd.mean_ns / rp.mean_ns
+        );
+    }
 
-    // --- batched native FE forward + encode: serial vs worker-sharded ---
+    // --- batched native FE forward + encode: serial vs worker-sharded,
+    // dense vs clustered ---
     let par = ParallelConfig { workers: arg_usize("--workers", 0), min_batch_per_worker: 1 };
+    let nw = par.resolved_workers();
     let serial_engine = ComputeEngine::from_config(ModelConfig::default());
     let par_engine = ComputeEngine::from_config(ModelConfig::default()).with_parallelism(par);
     let m = serial_engine.model().clone();
@@ -80,15 +134,16 @@ fn main() {
             (0..m.image_size * m.image_size * m.in_channels).map(|_| rng.gauss_f32()).collect()
         })
         .collect();
-    let rs = bench("fe_forward batch=8 serial", 600.0, || {
+    let rs = bench("fe_forward batch=8 serial", budget(600.0), || {
         black_box(serial_engine.fe_forward(black_box(&images)).unwrap());
     });
     println!("{rs}");
-    let nw = par.resolved_workers();
-    let rp = bench(&format!("fe_forward batch=8 workers={nw}"), 600.0, || {
+    log.record("fe_forward_dense_b8", rs.mean_ns, rs.throughput(8.0), 1);
+    let rp = bench(&format!("fe_forward batch=8 workers={nw}"), budget(600.0), || {
         black_box(par_engine.fe_forward(black_box(&images)).unwrap());
     });
     println!("{rp}");
+    log.record("fe_forward_dense_b8_sharded", rp.mean_ns, rp.throughput(8.0), nw);
     assert_eq!(
         serial_engine.fe_forward(&images).unwrap(),
         par_engine.fe_forward(&images).unwrap(),
@@ -98,22 +153,51 @@ fn main() {
         "    -> {:.2}x speedup at {nw} workers (output bit-identical, asserted)",
         rs.mean_ns / rp.mean_ns
     );
+
+    // clustered FE engine: the packed kernel end to end, same determinism
+    // contract (bit-identical across worker counts)
+    let ccfg = ModelConfig { clustered: true, ..ModelConfig::default() };
+    let cl_serial = ComputeEngine::from_config(ccfg.clone());
+    let cl_par = ComputeEngine::from_config(ccfg).with_parallelism(par);
+    let rc = bench("fe_forward clustered batch=8 serial", budget(600.0), || {
+        black_box(cl_serial.fe_forward(black_box(&images)).unwrap());
+    });
+    println!("{rc}");
+    log.record("fe_forward_clustered_b8", rc.mean_ns, rc.throughput(8.0), 1);
+    let rcp = bench(&format!("fe_forward clustered batch=8 workers={nw}"), budget(600.0), || {
+        black_box(cl_par.fe_forward(black_box(&images)).unwrap());
+    });
+    println!("{rcp}");
+    log.record("fe_forward_clustered_b8_sharded", rcp.mean_ns, rcp.throughput(8.0), nw);
+    assert_eq!(
+        cl_serial.fe_forward(&images).unwrap(),
+        cl_par.fe_forward(&images).unwrap(),
+        "clustered parallel output must be bit-identical to serial"
+    );
+    println!(
+        "    -> clustered vs dense serial: {:.2}x | {:.2}x speedup at {nw} workers",
+        rs.mean_ns / rc.mean_ns,
+        rc.mean_ns / rcp.mean_ns
+    );
+
     let feats: Vec<Vec<f32>> =
         (0..64).map(|_| (0..m.feature_dim).map(|_| rng.gauss_f32()).collect()).collect();
-    let es = bench("encode batch=64 serial", 300.0, || {
+    let es = bench("encode batch=64 serial", budget(300.0), || {
         black_box(serial_engine.encode(black_box(&feats)).unwrap());
     });
     println!("{es}");
-    let ep = bench(&format!("encode batch=64 workers={nw}"), 300.0, || {
+    log.record("encode_b64", es.mean_ns, es.throughput(64.0), 1);
+    let ep = bench(&format!("encode batch=64 workers={nw}"), budget(300.0), || {
         black_box(par_engine.encode(black_box(&feats)).unwrap());
     });
     println!("{ep}");
+    log.record("encode_b64_sharded", ep.mean_ns, ep.throughput(64.0), nw);
     println!("    -> {:.2}x speedup at {nw} workers", es.mean_ns / ep.mean_ns);
 
     // --- chip simulator speed (simulated cycles per wall second) ---
     let chip = Chip::paper(ChipConfig::default());
     let mut cycles = 0u64;
-    let r = bench("chip sim: 10-way 5-shot train episode", 300.0, || {
+    let r = bench("chip sim: 10-way 5-shot train episode", budget(300.0), || {
         let rep = chip.train_episode(10, 5, true, false);
         cycles = rep.cycles;
         black_box(rep);
@@ -123,4 +207,10 @@ fn main() {
         "    -> {:.1} M simulated cycles / wall-second",
         cycles as f64 / (r.mean_ns / 1e9) / 1e6
     );
+    log.record("chip_sim_train_episode", r.mean_ns, r.throughput(1.0), 1);
+
+    match log.write() {
+        Ok(path) => println!("bench trajectory written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench trajectory: {e}"),
+    }
 }

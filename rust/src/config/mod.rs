@@ -24,6 +24,10 @@ pub struct ModelConfig {
     pub ch_sub: usize,
     /// centroids per codebook N (paper: 16 -> 4-bit indices)
     pub n_centroids: usize,
+    /// run the FE through the packed weight-clustered kernel (Fig. 4b) —
+    /// the chip's cheap path. Quantizes every layer once at model build;
+    /// requires `2 <= n_centroids <= 16`
+    pub clustered: bool,
     /// cRP master seed (python/rust contract)
     pub master_seed: u64,
 }
@@ -39,6 +43,7 @@ impl Default for ModelConfig {
             d: 4096,
             ch_sub: 64,
             n_centroids: 16,
+            clustered: false,
             master_seed: 0xF51_4D17,
         }
     }
@@ -65,8 +70,24 @@ impl ModelConfig {
             d: req("d")? as usize,
             ch_sub: req("ch_sub")? as usize,
             n_centroids: req("n_centroids")? as usize,
+            // clustered execution is a load-time choice (CLI/TOML), not an
+            // artifact property — the manifest never sets it
+            clustered: false,
             master_seed: req("master_seed")? as u64,
         })
+    }
+
+    /// Regenerate the stage geometry from a base width: `stages` widths
+    /// doubling from `base_width`, with `feature_dim` following the widest
+    /// stage (branch features are padded to it, never truncated). This is
+    /// the synthetic-FE geometry knob behind `[model] base_width/stages`
+    /// and the CLI `--base-width/--stages` flags.
+    pub fn set_geometry(&mut self, base_width: usize, stages: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(base_width >= 1, "base_width must be >= 1");
+        anyhow::ensure!((1..=8).contains(&stages), "stages must be in 1..=8");
+        self.widths = (0..stages).map(|i| base_width << i).collect();
+        self.feature_dim = *self.widths.last().unwrap();
+        Ok(())
     }
 
     pub fn n_branches(&self) -> usize {
@@ -225,15 +246,31 @@ pub struct RunConfig {
 
 impl RunConfig {
     /// Apply `key = value` pairs from a parsed TOML-subset document.
+    /// The `[fe]` section carries the clustered-execution and
+    /// synthetic-geometry knobs (`fe.ch_sub` / `fe.n_centroids` alias the
+    /// `[model]` keys of the same name).
     pub fn apply_toml(&mut self, doc: &toml::Doc) -> anyhow::Result<()> {
+        // geometry regeneration is deferred so base_width/stages compose
+        // in any key order
+        let mut base_width: Option<usize> = None;
+        let mut stages: Option<usize> = None;
         for (section, key, val) in doc.entries() {
             let path =
                 if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             match path.as_str() {
                 "model.d" => self.model.d = val.as_int()? as usize,
-                "model.image_size" => self.model.image_size = val.as_int()? as usize,
-                "model.ch_sub" => self.model.ch_sub = val.as_int()? as usize,
-                "model.n_centroids" => self.model.n_centroids = val.as_int()? as usize,
+                "model.image_size" | "fe.image_size" => {
+                    self.model.image_size = val.as_int()? as usize
+                }
+                "model.in_channels" => self.model.in_channels = val.as_int()? as usize,
+                "model.blocks_per_stage" => self.model.blocks_per_stage = val.as_int()? as usize,
+                "model.base_width" => base_width = Some(val.as_int()? as usize),
+                "model.stages" => stages = Some(val.as_int()? as usize),
+                "model.ch_sub" | "fe.ch_sub" => self.model.ch_sub = val.as_int()? as usize,
+                "model.n_centroids" | "fe.n_centroids" => {
+                    self.model.n_centroids = val.as_int()? as usize
+                }
+                "model.clustered" | "fe.clustered" => self.model.clustered = val.as_bool()?,
                 "workload.n_way" => self.workload.n_way = val.as_int()? as usize,
                 "workload.k_shot" => self.workload.k_shot = val.as_int()? as usize,
                 "workload.queries_per_class" => {
@@ -261,6 +298,16 @@ impl RunConfig {
                 other => anyhow::bail!("unknown config key: {other}"),
             }
         }
+        if base_width.is_some() || stages.is_some() {
+            let bw = base_width.unwrap_or_else(|| self.model.widths.first().copied().unwrap_or(16));
+            let ns = stages.unwrap_or(self.model.widths.len());
+            self.model.set_geometry(bw, ns)?;
+        }
+        anyhow::ensure!(
+            !self.model.clustered || (2..=16).contains(&self.model.n_centroids),
+            "clustered FE needs 2 <= n_centroids <= 16, got {}",
+            self.model.n_centroids
+        );
         Ok(())
     }
 }
@@ -295,6 +342,52 @@ mod tests {
         assert_eq!(rc.ee, Some(EeConfig { e_s: 1, e_c: 3 }));
         assert!(rc.batched_training);
         assert_eq!(rc.chip.freq_mhz, 100.0);
+    }
+
+    #[test]
+    fn apply_toml_fe_section_clustered_knobs() {
+        let doc =
+            toml::Doc::parse("[fe]\nclustered = true\nch_sub = 32\nn_centroids = 8\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert!(rc.model.clustered);
+        assert_eq!((rc.model.ch_sub, rc.model.n_centroids), (32, 8));
+        // [model] spellings stay accepted
+        let doc = toml::Doc::parse("[model]\nclustered = false\nch_sub = 16\n").unwrap();
+        rc.apply_toml(&doc).unwrap();
+        assert!(!rc.model.clustered);
+        assert_eq!(rc.model.ch_sub, 16);
+    }
+
+    #[test]
+    fn apply_toml_rejects_unclusterable_n_centroids() {
+        let doc = toml::Doc::parse("[fe]\nclustered = true\nn_centroids = 32\n").unwrap();
+        let err = RunConfig::default().apply_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("n_centroids"), "{err}");
+        // 32 centroids are fine as long as execution stays dense
+        let doc = toml::Doc::parse("[fe]\nn_centroids = 32\n").unwrap();
+        RunConfig::default().apply_toml(&doc).unwrap();
+    }
+
+    #[test]
+    fn apply_toml_synthetic_geometry_knob() {
+        let doc =
+            toml::Doc::parse("[model]\nbase_width = 8\nstages = 3\nimage_size = 16\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.model.widths, vec![8, 16, 32]);
+        assert_eq!(rc.model.feature_dim, 32, "feature_dim follows the widest stage");
+        assert_eq!(rc.model.image_size, 16);
+        // stages alone rescales the default width count
+        let doc = toml::Doc::parse("[model]\nstages = 2\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.model.widths, vec![16, 32]);
+        // out-of-range geometry errors
+        let doc = toml::Doc::parse("[model]\nstages = 9\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+        let doc = toml::Doc::parse("[model]\nbase_width = 0\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -150,10 +150,13 @@ pub fn conv2d(x: &Tensor3, w: &[f32], cout: usize, k: usize, stride: usize) -> T
     out
 }
 
-/// Weight-clustered conv (Fig. 4b): phase 1 bins activations by weight
-/// index into per-(group, centroid) partial sums, phase 2 multiplies the
-/// bins by the codebook. Numerically equals `conv2d` with reconstructed
-/// weights (up to f32 association) — asserted by tests.
+/// Weight-clustered conv, **reference kernel** (Fig. 4b): phase 1 bins
+/// activations by weight index into per-(group, centroid) partial sums,
+/// phase 2 multiplies the bins by the codebook. Numerically equals
+/// `conv2d` with reconstructed weights (up to f32 association) — asserted
+/// by tests. This is the readable spec and the oracle that
+/// [`clustered_conv2d_packed`] (the fast path the native FE executes) is
+/// checked against; it is deliberately left unoptimized.
 ///
 /// `idx`: (Cout, K*K*Cin) centroid indices; `codebook`: (Cout, G, N).
 pub fn clustered_conv2d(
@@ -206,6 +209,164 @@ pub fn clustered_conv2d(
                     acc += b * c;
                 }
                 out.data[(oy * wo + ox) * cout + co] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Output-channel tile width for [`clustered_conv2d_packed`]: matches the
+/// chip's 16 PE columns and keeps the per-tile bin scratch (16 x G x N
+/// floats) inside L1. Even, so nibble pairs never straddle a tile edge.
+const COUT_TILE: usize = 16;
+
+/// Nibble-packed clustered-weight indices, laid out **tap-major**: for a
+/// flat tap `p = (ky*K + kx)*Cin + ci`, `data[p * cpb ..]` holds the
+/// centroid indices of *all* output channels (two channels per byte, even
+/// channel in the low nibble). The transpose is what makes the phase-1
+/// inner loop of [`clustered_conv2d_packed`] read contiguous bytes while
+/// each activation is loaded once per channel tile instead of once per
+/// output channel. `goff[p]` caches `(ci / ch_sub) * n` so the hot loop
+/// never divides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedIdx {
+    pub cout: usize,
+    pub k: usize,
+    pub cin: usize,
+    /// effective group size (already clamped to `cin`)
+    pub ch_sub: usize,
+    pub n: usize,
+    /// bytes per tap row: `ceil(cout / 2)`
+    cpb: usize,
+    /// (K*K*Cin, cpb) nibble pairs
+    data: Vec<u8>,
+    /// per-tap bin base offset `(ci / ch_sub) * n`
+    goff: Vec<u16>,
+}
+
+impl PackedIdx {
+    /// Pack a (Cout, K*K*Cin) index tensor (the layout of
+    /// [`crate::fe::kmeans::ClusteredLayer::idx`]). Requires `n <= 16`
+    /// (4-bit indices — the paper's N=16 codebooks are exactly this).
+    pub fn pack(idx: &[u8], cout: usize, k: usize, cin: usize, ch_sub: usize, n: usize) -> Self {
+        let kkc = k * k * cin;
+        assert_eq!(idx.len(), cout * kkc);
+        assert!((1..=16).contains(&n), "nibble packing needs 1 <= N <= 16, got {n}");
+        let ch_sub = ch_sub.min(cin).max(1);
+        let g = cin.div_ceil(ch_sub);
+        assert!(g * n <= u16::MAX as usize, "bin space {g}*{n} overflows the u16 offset table");
+        let cpb = cout.div_ceil(2);
+        let mut data = vec![0u8; kkc * cpb];
+        for co in 0..cout {
+            for p in 0..kkc {
+                let v = idx[co * kkc + p];
+                assert!((v as usize) < n, "index {v} out of range for N={n}");
+                let b = &mut data[p * cpb + co / 2];
+                *b |= if co % 2 == 0 { v } else { v << 4 };
+            }
+        }
+        let goff: Vec<u16> = (0..kkc).map(|p| (((p % cin) / ch_sub) * n) as u16).collect();
+        PackedIdx { cout, k, cin, ch_sub, n, cpb, data, goff }
+    }
+
+    /// Number of channel groups G.
+    pub fn groups(&self) -> usize {
+        self.cin.div_ceil(self.ch_sub)
+    }
+
+    /// Unpack back to the (Cout, K*K*Cin) u8 layout. Exact round-trip with
+    /// [`PackedIdx::pack`] — asserted by a regression test.
+    pub fn unpack(&self) -> Vec<u8> {
+        let kkc = self.k * self.k * self.cin;
+        let mut idx = vec![0u8; self.cout * kkc];
+        for co in 0..self.cout {
+            for p in 0..kkc {
+                let b = self.data[p * self.cpb + co / 2];
+                idx[co * kkc + p] = if co % 2 == 0 { b & 0x0F } else { b >> 4 };
+            }
+        }
+        idx
+    }
+
+    /// Packed index storage in bytes (half the u8 tensor).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Weight-clustered conv, **fast kernel** — the native FE hot path.
+/// Same two-phase dataflow as [`clustered_conv2d`] and numerically equal
+/// to it up to f32 association (phase 2 is multi-accumulated like
+/// `dot_f32`), but restructured for speed:
+///
+/// * output channels are processed in `COUT_TILE`-wide (16) tiles, so
+///   each activation is read once per tile instead of once per channel;
+/// * the index tensor is nibble-packed and tap-major ([`PackedIdx`]), so
+///   the inner channel loop walks contiguous bytes, two channels per byte;
+/// * padding is handled by the same trimmed contiguous-run structure as
+///   `conv2d` — no per-element bounds checks;
+/// * the `ci / ch_sub` group map is precomputed (`PackedIdx::goff`).
+pub fn clustered_conv2d_packed(
+    x: &Tensor3,
+    idx: &PackedIdx,
+    codebook: &[f32],
+    stride: usize,
+) -> Tensor3 {
+    let (cout, k, cin) = (idx.cout, idx.k, idx.cin);
+    assert_eq!(cin, x.c, "packed indices built for Cin={cin}, input has {}", x.c);
+    let gn = idx.groups() * idx.n;
+    assert_eq!(codebook.len(), cout * gn);
+    let (ho, pad_y) = same_pad(x.h, k, stride);
+    let (wo, pad_x) = same_pad(x.w, k, stride);
+    let cpb = idx.cpb;
+    let mut out = Tensor3::zeros(ho, wo, cout);
+    let mut bins = vec![0f32; COUT_TILE * gn];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let obase = (oy * wo + ox) * cout;
+            let mut t0 = 0;
+            while t0 < cout {
+                let tlen = COUT_TILE.min(cout - t0);
+                let pairs = tlen / 2;
+                bins[..tlen * gn].fill(0.0);
+                // phase 1: accumulate each in-bounds activation into the
+                // tile's (group, index) bins — one pass over the window
+                for ky in 0..k {
+                    let iy = oy as isize * stride as isize + ky as isize - pad_y;
+                    if iy < 0 || iy >= x.h as isize {
+                        continue;
+                    }
+                    let ix0 = ox as isize * stride as isize - pad_x;
+                    let kx_lo = (-ix0).clamp(0, k as isize) as usize;
+                    let kx_hi = ((x.w as isize - ix0).clamp(0, k as isize)) as usize;
+                    if kx_lo >= kx_hi {
+                        continue;
+                    }
+                    let run = kx_hi - kx_lo;
+                    let ibase = (iy as usize * x.w + (ix0 + kx_lo as isize) as usize) * cin;
+                    let xrow = &x.data[ibase..ibase + run * cin];
+                    let p0 = (ky * k + kx_lo) * cin;
+                    for (j, &a) in xrow.iter().enumerate() {
+                        let p = p0 + j;
+                        let boff = idx.goff[p] as usize;
+                        let row = &idx.data[p * cpb + t0 / 2..p * cpb + t0 / 2 + tlen.div_ceil(2)];
+                        for (tc, &byte) in row[..pairs].iter().enumerate() {
+                            bins[2 * tc * gn + boff + (byte & 0x0F) as usize] += a;
+                            bins[(2 * tc + 1) * gn + boff + (byte >> 4) as usize] += a;
+                        }
+                        if tlen % 2 == 1 {
+                            let byte = row[pairs];
+                            bins[(tlen - 1) * gn + boff + (byte & 0x0F) as usize] += a;
+                        }
+                    }
+                }
+                // phase 2: codebook MAC, multi-accumulated
+                for tc in 0..tlen {
+                    let co = t0 + tc;
+                    out.data[obase + co] =
+                        dot_f32(&bins[tc * gn..(tc + 1) * gn], &codebook[co * gn..(co + 1) * gn]);
+                }
+                t0 += tlen;
             }
         }
     }
@@ -286,6 +447,50 @@ mod tests {
             assert_eq!((dense.h, dense.w, dense.c), (clus.h, clus.w, clus.c));
             for (a, b) in dense.data.iter().zip(&clus.data) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_idx_roundtrips_exactly() {
+        // regression: nibble packing must round-trip the index tensor
+        // bit-exactly, including odd cout (unused high nibble in the last
+        // byte) and cin not divisible by ch_sub
+        let mut rng = Rng::new(11);
+        for (cout, k, cin, ch_sub, n) in
+            [(5usize, 3usize, 7usize, 4usize, 16usize), (4, 1, 3, 8, 3), (16, 3, 8, 2, 16)]
+        {
+            let idx: Vec<u8> = (0..cout * k * k * cin).map(|_| rng.below(n) as u8).collect();
+            let packed = PackedIdx::pack(&idx, cout, k, cin, ch_sub, n);
+            assert_eq!(packed.unpack(), idx, "cout={cout} cin={cin} n={n}");
+            assert_eq!(packed.bytes(), k * k * cin * cout.div_ceil(2));
+        }
+    }
+
+    #[test]
+    fn packed_kernel_matches_reference() {
+        // the fast path vs the reference kernel, across strides, odd cout
+        // (nibble tail), cin not divisible by ch_sub, and a tile-straddling
+        // cout > COUT_TILE
+        let mut rng = Rng::new(12);
+        let cases = [(8usize, 5usize, 4usize, 4usize), (6, 21, 4, 16), (3, 2, 8, 2)];
+        for (cin, cout, ch_sub, n) in cases {
+            let k = 3;
+            let x = rand_tensor(9, 7, cin, &mut rng);
+            let idx: Vec<u8> = (0..cout * k * k * cin).map(|_| rng.below(n) as u8).collect();
+            let g = cin.div_ceil(ch_sub.min(cin));
+            let cb: Vec<f32> = (0..cout * g * n).map(|_| rng.gauss_f32()).collect();
+            let packed = PackedIdx::pack(&idx, cout, k, cin, ch_sub, n);
+            for stride in [1, 2] {
+                let want = clustered_conv2d(&x, &idx, &cb, cout, k, stride, ch_sub, n);
+                let got = clustered_conv2d_packed(&x, &packed, &cb, stride);
+                assert_eq!((want.h, want.w, want.c), (got.h, got.w, got.c));
+                for (a, b) in want.data.iter().zip(&got.data) {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "cin={cin} cout={cout} stride={stride}: {a} vs {b}"
+                    );
+                }
             }
         }
     }

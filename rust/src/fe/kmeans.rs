@@ -37,6 +37,14 @@ impl ClusteredLayer {
         w
     }
 
+    /// Nibble-pack the index tensor for the fast kernel
+    /// ([`crate::fe::conv::clustered_conv2d_packed`]). Requires `n <= 16`.
+    pub fn packed(&self) -> crate::fe::conv::PackedIdx {
+        crate::fe::conv::PackedIdx::pack(
+            &self.idx, self.cout, self.k, self.cin, self.ch_sub, self.n,
+        )
+    }
+
     /// Storage cost in bits: indices (log2 N each) + codebooks (16-bit).
     pub fn storage_bits(&self) -> u64 {
         let idx_bits = (self.n as f64).log2().ceil() as u64;

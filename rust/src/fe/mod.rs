@@ -1,13 +1,14 @@
 //! Feature-extractor substrate: weight clustering (Fig. 4), the clustered
-//! convolution, an INT8 baseline, and the ResNet-18-shaped frozen FE that
-//! loads the AOT-exported weights (`artifacts/fe_weights.bin`) so the
-//! native path computes the same features as the PJRT artifacts.
+//! convolution (reference kernel + the nibble-packed fast kernel the
+//! native FE executes), an INT8 baseline, and the ResNet-18-shaped frozen
+//! FE that loads the AOT-exported weights (`artifacts/fe_weights.bin`) so
+//! the native path computes the same features as the PJRT artifacts.
 
 pub mod conv;
 pub mod kmeans;
 pub mod quant;
 pub mod resnet;
 
-pub use conv::{clustered_conv2d, conv2d, Tensor3};
+pub use conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, PackedIdx, Tensor3};
 pub use kmeans::{cluster_layer, ClusteredLayer};
 pub use resnet::FeModel;

@@ -5,20 +5,60 @@
 //! Structure mirrors `python/compile/resnet.py`: stem conv -> 4 stages x
 //! `blocks_per_stage` basic blocks (stride 2 from stage 1) -> per-stage
 //! global-avg-pool branch features padded to Fmax (Fig. 11 branch taps).
+//!
+//! Execution is driven by a **block plan** resolved once at model build
+//! (layer indices into a flat `Vec`), so the per-image hot loop never
+//! formats layer names or walks a map. When `cfg.clustered` is set, every
+//! layer is quantized through [`cluster_layer`] once at construction and
+//! `forward` runs the packed two-phase kernel
+//! ([`clustered_conv2d_packed`]) instead of the dense conv — the chip's
+//! cheap path (Fig. 4b) is then also the native fast path.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::config::ModelConfig;
-use crate::fe::conv::{conv2d, Tensor3};
+use crate::fe::conv::{clustered_conv2d_packed, conv2d, PackedIdx, Tensor3};
+use crate::fe::kmeans::{cluster_layer, ClusteredLayer};
 use crate::util::json::Json;
 
-/// Loaded FE: named conv weights + geometry.
+/// One conv layer: dense weights plus, once quantized, the packed
+/// clustered kernel the fast path executes.
+#[derive(Clone, Debug)]
+struct Layer {
+    name: String,
+    w: Vec<f32>,
+    cout: usize,
+    k: usize,
+    cin: usize,
+    clustered: Option<ClusteredKernel>,
+}
+
+#[derive(Clone, Debug)]
+struct ClusteredKernel {
+    idx: PackedIdx,
+    codebook: Vec<f32>,
+}
+
+/// One basic block of the execution plan: layer indices resolved at model
+/// build, so `forward` does plain `Vec` indexing per image.
+#[derive(Clone, Copy, Debug)]
+struct BlockPlan {
+    conv1: usize,
+    conv2: usize,
+    proj: Option<usize>,
+    stride: usize,
+}
+
+/// Loaded FE: conv layers + the precomputed block execution plan.
 #[derive(Clone, Debug)]
 pub struct FeModel {
     pub cfg: ModelConfig,
-    /// layer name -> (weights row-major (Cout,K,K,Cin), cout, k, cin)
-    layers: BTreeMap<String, (Vec<f32>, usize, usize, usize)>,
+    layers: Vec<Layer>,
+    stem: usize,
+    /// per stage, the blocks in execution order (branch tap after each
+    /// stage — Fig. 11)
+    stages: Vec<Vec<BlockPlan>>,
 }
 
 impl FeModel {
@@ -57,15 +97,44 @@ impl FeModel {
             layers.insert(name, (w, shape[0], shape[1], shape[3]));
         }
         anyhow::ensure!(off * 4 == blob.len(), "fe_weights.bin has trailing bytes");
-        Ok(FeModel { cfg, layers })
+        Self::from_parts(cfg, layers)
     }
 
-    /// Build from explicit weights (tests / synthetic configs).
+    /// Build from explicit weights (tests / synthetic configs), resolving
+    /// the block execution plan once. Errors if the layer set is missing a
+    /// conv the plan needs. When `cfg.clustered` is set the model is
+    /// quantized immediately (see [`FeModel::into_clustered`]).
     pub fn from_parts(
         cfg: ModelConfig,
         layers: BTreeMap<String, (Vec<f32>, usize, usize, usize)>,
-    ) -> Self {
-        FeModel { cfg, layers }
+    ) -> anyhow::Result<Self> {
+        let mut flat: Vec<Layer> = Vec::with_capacity(layers.len());
+        let mut index: BTreeMap<String, usize> = BTreeMap::new();
+        for (name, (w, cout, k, cin)) in layers {
+            index.insert(name.clone(), flat.len());
+            flat.push(Layer { name, w, cout, k, cin, clustered: None });
+        }
+        let lookup = |name: String| -> anyhow::Result<usize> {
+            index.get(&name).copied().ok_or_else(|| anyhow::anyhow!("missing FE layer {name}"))
+        };
+        let stem = lookup("stem".to_string())?;
+        let mut stages = Vec::with_capacity(cfg.widths.len());
+        for si in 0..cfg.widths.len() {
+            let stage_stride = if si == 0 { 1 } else { 2 };
+            let mut blocks = Vec::with_capacity(cfg.blocks_per_stage);
+            for b in 0..cfg.blocks_per_stage {
+                blocks.push(BlockPlan {
+                    conv1: lookup(format!("s{si}b{b}_conv1"))?,
+                    conv2: lookup(format!("s{si}b{b}_conv2"))?,
+                    proj: index.get(&format!("s{si}b{b}_proj")).copied(),
+                    stride: if b == 0 { stage_stride } else { 1 },
+                });
+            }
+            stages.push(blocks);
+        }
+        let clustered = cfg.clustered;
+        let model = FeModel { cfg, layers: flat, stem, stages };
+        Ok(if clustered { model.into_clustered() } else { model })
     }
 
     /// Build an FE with deterministic synthetic weights for an arbitrary
@@ -77,7 +146,7 @@ impl FeModel {
     /// constructible without an artifacts directory; the resulting
     /// features are not the AOT model's but are class-separable on the
     /// procedural image generator, which is what the examples and
-    /// integration paths need.
+    /// integration paths need. Honors `cfg.clustered`.
     pub fn synthetic(cfg: ModelConfig) -> Self {
         let mut rng = crate::util::prng::Rng::new(cfg.master_seed ^ 0x5E_7EC7);
         let mut layers = BTreeMap::new();
@@ -106,21 +175,77 @@ impl FeModel {
                 cin = w;
             }
         }
-        FeModel { cfg, layers }
+        Self::from_parts(cfg, layers).expect("synthetic FE emits every planned layer")
     }
 
-    fn conv(&self, name: &str, x: &Tensor3, stride: usize) -> anyhow::Result<Tensor3> {
-        let (w, cout, k, cin) = self
-            .layers
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("missing FE layer {name}"))?;
-        anyhow::ensure!(*cin == x.c, "{name}: cin {cin} != input {c}", c = x.c);
-        Ok(conv2d(x, w, *cout, *k, stride))
+    /// Quantize every layer through [`cluster_layer`] (Fig. 4a) once and
+    /// switch `forward` to the packed two-phase kernel; `cfg.ch_sub` /
+    /// `cfg.n_centroids` size the codebooks. Deterministic (Lloyd with
+    /// quantile init), so clustered forwards stay bit-identical across
+    /// worker counts. The dense weights are kept so
+    /// [`FeModel::dense_reconstruction`] can rebuild the numerical oracle.
+    ///
+    /// Panics unless `2 <= cfg.n_centroids <= 16` (nibble-packed indices);
+    /// config loaders validate this before construction.
+    pub fn into_clustered(mut self) -> Self {
+        assert!(
+            (2..=16).contains(&self.cfg.n_centroids),
+            "clustered FE needs 2 <= n_centroids <= 16 (nibble-packed indices), got {}",
+            self.cfg.n_centroids
+        );
+        for l in &mut self.layers {
+            let cl = cluster_layer(&l.w, l.cout, l.k, l.cin, self.cfg.ch_sub, self.cfg.n_centroids);
+            l.clustered = Some(ClusteredKernel { idx: cl.packed(), codebook: cl.codebook });
+        }
+        self.cfg.clustered = true;
+        self
     }
 
-    /// Forward pass: image (H*W*3 flat NHWC) -> 4 branch features, each
-    /// padded to `feature_dim`.
-    pub fn forward(&self, image: &[f32]) -> anyhow::Result<Vec<Vec<f32>>> {
+    /// Whether `forward` runs the packed clustered kernel.
+    pub fn is_clustered(&self) -> bool {
+        self.cfg.clustered
+    }
+
+    /// The numerical oracle for clustered execution: a **dense** FeModel
+    /// whose weights are reconstructed from each layer's codebook, so its
+    /// `forward` computes the clustered numerics through the reference
+    /// dense conv. Clustered forward == oracle forward (up to f32
+    /// association) is the equivalence contract asserted by tests.
+    pub fn dense_reconstruction(&self) -> FeModel {
+        let mut m = self.clone();
+        m.cfg.clustered = false;
+        for l in &mut m.layers {
+            if let Some(ck) = l.clustered.take() {
+                let cl = ClusteredLayer {
+                    cout: l.cout,
+                    k: l.k,
+                    cin: l.cin,
+                    ch_sub: ck.idx.ch_sub,
+                    n: ck.idx.n,
+                    idx: ck.idx.unpack(),
+                    codebook: ck.codebook,
+                };
+                l.w = cl.reconstruct();
+            }
+        }
+        m
+    }
+
+    /// Run one planned layer: packed clustered kernel when quantized,
+    /// dense conv otherwise.
+    fn run_layer(&self, li: usize, x: &Tensor3, stride: usize) -> anyhow::Result<Tensor3> {
+        let l = &self.layers[li];
+        anyhow::ensure!(l.cin == x.c, "{}: cin {} != input {}", l.name, l.cin, x.c);
+        Ok(match &l.clustered {
+            Some(ck) => clustered_conv2d_packed(x, &ck.idx, &ck.codebook, stride),
+            None => conv2d(x, &l.w, l.cout, l.k, stride),
+        })
+    }
+
+    /// Shared body of `forward` / `forward_prefix`: run the stem and the
+    /// first `n_stages` stages of the plan, tapping a branch feature after
+    /// each stage.
+    fn forward_stages(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
         let s = self.cfg.image_size;
         anyhow::ensure!(
             image.len() == s * s * self.cfg.in_channels,
@@ -129,22 +254,18 @@ impl FeModel {
             s * s * self.cfg.in_channels
         );
         let x = Tensor3::from_vec(s, s, self.cfg.in_channels, image.to_vec());
-        let mut h = self.conv("stem", &x, 1)?.relu();
+        let mut h = self.run_layer(self.stem, &x, 1)?.relu();
         let fmax = self.cfg.feature_dim;
-        let mut branches = Vec::with_capacity(self.cfg.widths.len());
-        for (si, _w) in self.cfg.widths.iter().enumerate() {
-            let stage_stride = if si == 0 { 1 } else { 2 };
-            for b in 0..self.cfg.blocks_per_stage {
-                let pre = format!("s{si}b{b}");
-                let st = if b == 0 { stage_stride } else { 1 };
-                let y = self.conv(&format!("{pre}_conv1"), &h, st)?.relu();
-                let y = self.conv(&format!("{pre}_conv2"), &y, 1)?;
-                let skip = if self.layers.contains_key(&format!("{pre}_proj")) {
-                    self.conv(&format!("{pre}_proj"), &h, st)?
-                } else if st != 1 {
-                    h.subsample(st)
-                } else {
-                    h.clone()
+        let n_stages = n_stages.min(self.stages.len());
+        let mut branches = Vec::with_capacity(n_stages);
+        for stage in &self.stages[..n_stages] {
+            for bp in stage {
+                let y = self.run_layer(bp.conv1, &h, bp.stride)?.relu();
+                let y = self.run_layer(bp.conv2, &y, 1)?;
+                let skip = match bp.proj {
+                    Some(pi) => self.run_layer(pi, &h, bp.stride)?,
+                    None if bp.stride != 1 => h.subsample(bp.stride),
+                    None => h.clone(),
                 };
                 h = y.add(&skip).relu();
             }
@@ -153,6 +274,12 @@ impl FeModel {
             branches.push(feat);
         }
         Ok(branches)
+    }
+
+    /// Forward pass: image (H*W*3 flat NHWC) -> 4 branch features, each
+    /// padded to `feature_dim`.
+    pub fn forward(&self, image: &[f32]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.forward_stages(image, self.stages.len())
     }
 
     /// Batched forward pass, sharded across scoped worker threads
@@ -168,48 +295,20 @@ impl FeModel {
         crate::util::parallel::shard_map(images, shards, |img| self.forward(img))
     }
 
-    /// Forward only through the first `n_blocks` stages (early-exit body
+    /// Forward only through the first `n_stages` stages (early-exit body
     /// computation): returns the branch features produced so far.
     pub fn forward_prefix(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
-        let s = self.cfg.image_size;
-        let x = Tensor3::from_vec(s, s, self.cfg.in_channels, image.to_vec());
-        let mut h = self.conv("stem", &x, 1)?.relu();
-        let fmax = self.cfg.feature_dim;
-        let mut branches = Vec::new();
-        for si in 0..n_stages.min(self.cfg.widths.len()) {
-            let stage_stride = if si == 0 { 1 } else { 2 };
-            for b in 0..self.cfg.blocks_per_stage {
-                let pre = format!("s{si}b{b}");
-                let st = if b == 0 { stage_stride } else { 1 };
-                let y = self.conv(&format!("{pre}_conv1"), &h, st)?.relu();
-                let y = self.conv(&format!("{pre}_conv2"), &y, 1)?;
-                let skip = if self.layers.contains_key(&format!("{pre}_proj")) {
-                    self.conv(&format!("{pre}_proj"), &h, st)?
-                } else if st != 1 {
-                    h.subsample(st)
-                } else {
-                    h.clone()
-                };
-                h = y.add(&skip).relu();
-            }
-            let mut feat = h.global_avg_pool();
-            feat.resize(fmax, 0.0);
-            branches.push(feat);
-        }
-        Ok(branches)
+        self.forward_stages(image, n_stages)
     }
 
     /// Total parameter count.
     pub fn n_params(&self) -> usize {
-        self.layers.values().map(|(w, ..)| w.len()).sum()
+        self.layers.iter().map(|l| l.w.len()).sum()
     }
 
     /// Layer geometries for the chip simulator: (name, cout, k, cin).
     pub fn layer_geometries(&self) -> Vec<(String, usize, usize, usize)> {
-        self.layers
-            .iter()
-            .map(|(n, (_, cout, k, cin))| (n.clone(), *cout, *k, *cin))
-            .collect()
+        self.layers.iter().map(|l| (l.name.clone(), l.cout, l.k, l.cin)).collect()
     }
 }
 
@@ -243,7 +342,7 @@ mod tests {
         add("s1b0_conv1", 8, 3, 4, &mut rng);
         add("s1b0_conv2", 8, 3, 8, &mut rng);
         add("s1b0_proj", 8, 1, 4, &mut rng);
-        FeModel::from_parts(cfg, layers)
+        FeModel::from_parts(cfg, layers).unwrap()
     }
 
     #[test]
@@ -278,9 +377,29 @@ mod tests {
     }
 
     #[test]
+    fn from_parts_rejects_missing_layer() {
+        // the execution plan is resolved at build: a layer set without a
+        // planned conv errors immediately instead of at forward time
+        let cfg = ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4],
+            blocks_per_stage: 1,
+            feature_dim: 4,
+            d: 64,
+            ..Default::default()
+        };
+        let mut layers = BTreeMap::new();
+        layers.insert("stem".to_string(), (vec![0.0; 4 * 9 * 3], 4, 3, 3));
+        let err = FeModel::from_parts(cfg, layers).unwrap_err().to_string();
+        assert!(err.contains("s0b0_conv1"), "{err}");
+    }
+
+    #[test]
     fn rejects_wrong_image_size() {
         let m = tiny_model(6);
         assert!(m.forward(&vec![0.0; 10]).is_err());
+        assert!(m.forward_prefix(&vec![0.0; 10], 1).is_err());
     }
 
     #[test]
@@ -308,6 +427,64 @@ mod tests {
     #[test]
     fn param_count_positive() {
         assert!(tiny_model(7).n_params() > 500);
+    }
+
+    #[test]
+    fn clustered_matches_dense_reconstruction_oracle() {
+        // tiny_model weights: clustered forward == oracle forward within
+        // f32 association, and the prefix path agrees with the full pass
+        let m = tiny_model(12).into_clustered();
+        assert!(m.is_clustered());
+        let oracle = m.dense_reconstruction();
+        assert!(!oracle.is_clustered());
+        let mut rng = Rng::new(13);
+        for _ in 0..3 {
+            let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect();
+            let got = m.forward(&img).unwrap();
+            let want = oracle.forward(&img).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (gb, wb) in got.iter().zip(&want) {
+                for (a, b) in gb.iter().zip(wb) {
+                    assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+                }
+            }
+            let prefix = m.forward_prefix(&img, 1).unwrap();
+            assert_eq!(prefix[0], got[0]);
+        }
+    }
+
+    #[test]
+    fn clustered_forward_batch_bit_identical_across_workers() {
+        let m = tiny_model(14).into_clustered();
+        let mut rng = Rng::new(15);
+        let images: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect()).collect();
+        let serial: Vec<_> = images.iter().map(|img| m.forward(img).unwrap()).collect();
+        for shards in [1, 2, 5, 8] {
+            assert_eq!(m.forward_batch(&images, shards).unwrap(), serial, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn synthetic_honors_clustered_config() {
+        let cfg = ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8],
+            blocks_per_stage: 1,
+            feature_dim: 8,
+            d: 64,
+            ch_sub: 4,
+            n_centroids: 8,
+            clustered: true,
+            ..Default::default()
+        };
+        let m = FeModel::synthetic(cfg.clone());
+        assert!(m.is_clustered());
+        // deterministic: same cfg -> same clustered features
+        let img = vec![0.3f32; 8 * 8 * 3];
+        let m2 = FeModel::synthetic(cfg);
+        assert_eq!(m.forward(&img).unwrap(), m2.forward(&img).unwrap());
     }
 
     #[test]

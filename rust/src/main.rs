@@ -10,6 +10,8 @@
 //! Examples:
 //!   fsl-hdnn episode --n-way 10 --k-shot 5 --episodes 3 --backend native
 //!   fsl-hdnn episode --workers 0 --batched true   # 0 = one worker per core
+//!   fsl-hdnn episode --clustered --ch-sub 64 --n-centroids 16  # Fig. 4b FE
+//!   fsl-hdnn episode --base-width 32 --stages 3 --image-size 64  # synthetic geometry
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
 //!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
 //!   fsl-hdnn check-artifacts
@@ -102,23 +104,52 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     // single-pass training (Fig. 12) exercises the sharded FE path
     let batched: bool = args.get("batched", rc.batched_training);
 
+    // synthetic-FE geometry + clustered-execution knobs ([fe]/[model] TOML
+    // sections, overridable here; geometry only applies when there are no
+    // artifacts — the manifest owns it otherwise)
+    let mut mc = rc.model.clone();
+    mc.image_size = args.get("image-size", mc.image_size);
+    mc.in_channels = args.get("in-channels", mc.in_channels);
+    mc.blocks_per_stage = args.get("blocks-per-stage", mc.blocks_per_stage);
+    if args.kv.contains_key("base-width") || args.kv.contains_key("stages") {
+        let bw = args.get("base-width", mc.widths.first().copied().unwrap_or(16));
+        let ns = args.get("stages", mc.widths.len());
+        mc.set_geometry(bw, ns)?;
+    }
+    mc.ch_sub = args.get("ch-sub", mc.ch_sub);
+    mc.n_centroids = args.get("n-centroids", mc.n_centroids);
+    // --clustered: quantize the FE once at load and run the packed
+    // weight-clustered kernel (Fig. 4b) — the chip's cheap path
+    mc.clustered = args.get("clustered", mc.clustered);
+
     let dir = artifacts_dir(args);
     // model geometry read on this thread; the engine itself is built
     // inside the coordinator worker (PJRT clients are not Send). With no
     // artifacts directory the native backend runs on synthetic weights.
-    let model = ComputeEngine::open_or_synthetic(Backend::Native, &dir)?.model().clone();
+    // The probe skips quantization — it only needs the geometry.
+    let probe_cfg = fsl_hdnn::config::ModelConfig { clustered: false, ..mc.clone() };
+    let model =
+        ComputeEngine::open_or_synthetic_with(Backend::Native, &dir, probe_cfg)?.model().clone();
+    // report what actually runs: clustering and worker sharding are
+    // native-backend knobs the PJRT path ignores
+    let (eff_workers, eff_clustered) = match backend {
+        Backend::Native => (par.resolved_workers(), mc.clustered),
+        Backend::Pjrt => (1, false),
+    };
+    if backend == Backend::Pjrt && (mc.clustered || par.workers != 1) {
+        eprintln!("note: --clustered/--workers are native-backend knobs; PJRT ignores them");
+    }
     println!(
-        "backend={backend:?} model: {}x{}x{} -> F={} D={} | workers={} batched={batched}",
-        model.image_size,
-        model.image_size,
-        model.in_channels,
-        model.feature_dim,
-        model.d,
-        par.resolved_workers()
+        "backend={backend:?} model: {}x{}x{} -> F={} D={} | workers={eff_workers} \
+         batched={batched} clustered={eff_clustered}",
+        model.image_size, model.image_size, model.in_channels, model.feature_dim, model.d
     );
     let dir2 = dir.clone();
+    let mc2 = mc.clone();
     let coord = Coordinator::start(
-        move || Ok(ComputeEngine::open_or_synthetic(backend, &dir2)?.with_parallelism(par)),
+        move || {
+            Ok(ComputeEngine::open_or_synthetic_with(backend, &dir2, mc2)?.with_parallelism(par))
+        },
         k_shot,
     )?;
     let gen = ImageGen::new(model.image_size, 64.max(n_way), seed);

@@ -83,7 +83,10 @@ impl ComputeEngine {
     /// deterministic synthetic (He-initialized) weights seeded from
     /// `cfg.master_seed`, and the cRP encoder uses the same seed contract
     /// as the artifacts. This is the path every bench, example and test
-    /// takes when `make artifacts` has not run.
+    /// takes when `make artifacts` has not run. When `cfg.clustered` is
+    /// set, every FE layer is quantized once here and `fe_forward` runs
+    /// the packed weight-clustered kernel (DESIGN.md §Clustered
+    /// execution).
     pub fn from_config(cfg: ModelConfig) -> Self {
         let enc = CrpEncoder::new(cfg.d, cfg.master_seed);
         let fe = FeModel::synthetic(cfg);
@@ -122,18 +125,53 @@ impl ComputeEngine {
     /// never falls back at all: a missing runtime is an error the caller
     /// must see.
     pub fn open_or_synthetic(backend: Backend, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        Self::open_or_synthetic_with(backend, artifacts_dir, ModelConfig::default())
+    }
+
+    /// Like [`ComputeEngine::open_or_synthetic`], but the synthetic
+    /// fallback uses the caller's [`ModelConfig`] instead of the default —
+    /// the CLI/TOML synthetic-geometry knob. With artifacts present the
+    /// manifest still owns the geometry, but `cfg.clustered` /
+    /// `cfg.ch_sub` / `cfg.n_centroids` are applied on top: quantized
+    /// execution is a load-time choice, not an artifact property.
+    pub fn open_or_synthetic_with(
+        backend: Backend,
+        artifacts_dir: &Path,
+        cfg: ModelConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !cfg.clustered || (2..=16).contains(&cfg.n_centroids),
+            "clustered FE needs 2 <= n_centroids <= 16, got {}",
+            cfg.n_centroids
+        );
         match backend {
             Backend::Native => {
                 if artifacts_dir.join("manifest.json").exists() {
-                    return Self::open(Backend::Native, artifacts_dir);
+                    let mut fe = FeModel::load(artifacts_dir)?;
+                    if cfg.clustered {
+                        fe.cfg.ch_sub = cfg.ch_sub;
+                        fe.cfg.n_centroids = cfg.n_centroids;
+                        fe = fe.into_clustered();
+                    }
+                    let enc = CrpEncoder::new(fe.cfg.d, fe.cfg.master_seed);
+                    return Ok(ComputeEngine::Native { fe, enc, par: ParallelConfig::default() });
                 }
                 eprintln!(
                     "note: no artifacts in {artifacts_dir:?}; using synthetic native model \
                      (run `make artifacts` for the AOT weights)"
                 );
-                Ok(Self::from_config(ModelConfig::default()))
+                Ok(Self::from_config(cfg))
             }
             Backend::Pjrt => Self::open(Backend::Pjrt, artifacts_dir),
+        }
+    }
+
+    /// Whether the FE runs the packed weight-clustered kernel (native
+    /// backend only — the PJRT artifacts bake their own weights in).
+    pub fn is_clustered(&self) -> bool {
+        match self {
+            ComputeEngine::Native { fe, .. } => fe.is_clustered(),
+            ComputeEngine::Pjrt { .. } => false,
         }
     }
 
@@ -361,6 +399,54 @@ mod tests {
         let p = ParallelConfig { workers: 3, min_batch_per_worker: 4 };
         e.set_parallelism(p);
         assert_eq!(e.parallelism(), p);
+    }
+
+    fn clustered_cfg() -> ModelConfig {
+        ModelConfig { clustered: true, ch_sub: 4, n_centroids: 8, ..tiny_cfg() }
+    }
+
+    #[test]
+    fn clustered_engine_runs_and_is_deterministic() {
+        let a = ComputeEngine::from_config(clustered_cfg());
+        assert!(a.is_clustered());
+        let b = ComputeEngine::from_config(clustered_cfg());
+        let images = test_images(3, 8 * 8 * 3);
+        let fa = a.fe_forward(&images).unwrap();
+        assert_eq!(fa, b.fe_forward(&images).unwrap());
+        // clustered features differ from the dense model's (quantized
+        // weights), but keep the same shape
+        let dense = ComputeEngine::from_config(tiny_cfg());
+        let fd = dense.fe_forward(&images).unwrap();
+        assert_eq!(fa.len(), fd.len());
+        assert_ne!(fa, fd);
+    }
+
+    #[test]
+    fn clustered_parallel_bit_identical_to_serial() {
+        let serial = ComputeEngine::from_config(clustered_cfg());
+        let images = test_images(9, 8 * 8 * 3);
+        let want = serial.fe_forward(&images).unwrap();
+        for workers in [2usize, 7] {
+            let par = ComputeEngine::from_config(clustered_cfg())
+                .with_parallelism(ParallelConfig { workers, min_batch_per_worker: 1 });
+            assert_eq!(par.fe_forward(&images).unwrap(), want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn open_or_synthetic_with_uses_caller_geometry() {
+        let missing = PathBuf::from("no/such/artifacts");
+        let cfg = clustered_cfg();
+        let e =
+            ComputeEngine::open_or_synthetic_with(Backend::Native, &missing, cfg.clone()).unwrap();
+        assert_eq!(e.model(), &FeModel::synthetic(cfg).cfg, "geometry + clustered flag kept");
+        assert!(e.is_clustered());
+        // invalid clustering knobs fail fast with a clean error
+        let bad = ModelConfig { n_centroids: 32, ..clustered_cfg() };
+        let err = ComputeEngine::open_or_synthetic_with(Backend::Native, &missing, bad)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("n_centroids"), "{err}");
     }
 
     #[test]

@@ -23,8 +23,10 @@
 //! and [`hdc_engine`] are fast *analytic* cycle/event models used by every
 //! bench, while [`pe`]/[`pe_array`] step a real 4x16 array cycle by cycle
 //! — the micro-architectural ground truth the analytic counts are
-//! validated against (and its outputs must equal
-//! [`crate::fe::conv::clustered_conv2d`] numerically). [`energy`] turns
+//! validated against (and its outputs must equal both
+//! [`crate::fe::conv::clustered_conv2d`] and the packed fast kernel
+//! [`crate::fe::conv::clustered_conv2d_packed`] numerically). [`energy`]
+//! turns
 //! event tallies into millijoules at any (V, f) point on the measured
 //! curve; [`memory`] models the banked, gateable SRAMs of Fig. 7.
 

@@ -1,7 +1,10 @@
 //! Cycle-stepped 4x16 PE-array simulation of one conv tile — the
 //! micro-architectural ground truth the analytic `fe_engine` model is
 //! validated against (and the numerical ground truth for the clustered
-//! dataflow: the array's outputs must equal `fe::conv::clustered_conv2d`).
+//! dataflow: the array's outputs must equal `fe::conv::clustered_conv2d`
+//! *and* the packed fast kernel `fe::conv::clustered_conv2d_packed` that
+//! the native FE actually executes — both cross-checks are tests here, so
+//! the cycle model can never drift from the shipped numerics).
 //!
 //! Mapping (Section IV-A1): PE columns own output channels, the 4 PE rows
 //! own 4 consecutive output rows, and each PE's 3 accumulation RFs walk 3
@@ -166,6 +169,20 @@ mod tests {
         let want = clustered_conv2d(&x, &idx, &cb, 6, 3, 1, ch_sub, n);
         assert_eq!(rep.outputs.data.len(), want.data.len());
         for (a, b) in rep.outputs.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn array_outputs_equal_packed_fast_kernel() {
+        // the cycle model vs the kernel the native FE actually runs
+        use crate::fe::conv::{clustered_conv2d_packed, PackedIdx};
+        let (x, idx, cb, ch_sub, n) = setup(5, 4, 6, 8);
+        let rep = simulate_tile(&x, &idx, &cb, 6, ch_sub, n, 4, 3);
+        let pidx = PackedIdx::pack(&idx, 6, 3, 4, ch_sub, n);
+        let fast = clustered_conv2d_packed(&x, &pidx, &cb, 1);
+        assert_eq!(rep.outputs.data.len(), fast.data.len());
+        for (a, b) in rep.outputs.data.iter().zip(&fast.data) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
     }

@@ -13,6 +13,17 @@ pub fn arg_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// True when `--name` is present (bare, or followed by anything but
+/// `false`). Lets benches take boolean switches like `--smoke` or
+/// `--clustered false`.
+pub fn arg_flag(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .map(|i| args.get(i + 1).map(|v| v != "false").unwrap_or(true))
+        .unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -21,5 +32,6 @@ mod tests {
     fn absent_flag_yields_default() {
         // the test binary's own argv has no --no-such-flag
         assert_eq!(arg_usize("--no-such-flag", 7), 7);
+        assert!(!arg_flag("--no-such-flag"));
     }
 }

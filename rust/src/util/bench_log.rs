@@ -1,0 +1,149 @@
+//! Machine-readable bench trajectory: benches record their headline
+//! numbers into `BENCH_hotpath.json` at the repository root so perf is
+//! tracked across PRs (EXPERIMENTS.md §Perf). Each bench owns one section
+//! keyed by its name; rewriting a section preserves every other bench's
+//! entries, so `hotpath_micro` and `fig05_chsub_sweep` can both append to
+//! the same file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Default trajectory file name at the repo root.
+pub const BENCH_FILE: &str = "BENCH_hotpath.json";
+
+/// One bench run's entries, merged into the trajectory file on `write`.
+pub struct BenchLog {
+    bench: String,
+    entries: Vec<Entry>,
+}
+
+struct Entry {
+    kernel: String,
+    ns_per_op: f64,
+    items_per_s: f64,
+    workers: usize,
+}
+
+impl BenchLog {
+    pub fn new(bench: &str) -> Self {
+        BenchLog { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one kernel measurement. `items_per_s` is the op throughput
+    /// in whatever unit the kernel processes (images/s for FE forwards,
+    /// ops/s for single-kernel cases); `workers` is the sharding width
+    /// (1 = serial).
+    pub fn record(&mut self, kernel: &str, ns_per_op: f64, items_per_s: f64, workers: usize) {
+        self.entries.push(Entry { kernel: kernel.to_string(), ns_per_op, items_per_s, workers });
+    }
+
+    /// Merge this bench's section into `BENCH_hotpath.json` at the repo
+    /// root and return the path written.
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        let path = repo_root().join(BENCH_FILE);
+        self.write_to(&path)?;
+        Ok(path)
+    }
+
+    /// Merge into an explicit file (tests). Sections from other benches
+    /// are preserved; this bench's section is replaced wholesale. An
+    /// unreadable or corrupt existing file is started fresh rather than
+    /// failing the bench.
+    pub fn write_to(&self, path: &Path) -> anyhow::Result<()> {
+        let mut benches: BTreeMap<String, Json> =
+            match std::fs::read_to_string(path).ok().and_then(|s| Json::parse(&s).ok()) {
+                Some(Json::Obj(mut m)) => match m.remove("benches") {
+                    Some(Json::Obj(b)) => b,
+                    _ => BTreeMap::new(),
+                },
+                _ => BTreeMap::new(),
+            };
+        let rows: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("kernel".to_string(), Json::Str(e.kernel.clone()));
+                o.insert("ns_per_op".to_string(), Json::Num(e.ns_per_op));
+                o.insert("items_per_s".to_string(), Json::Num(e.items_per_s));
+                o.insert("workers".to_string(), Json::Num(e.workers as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        benches.insert(self.bench.clone(), Json::Arr(rows));
+        let mut root = BTreeMap::new();
+        root.insert("benches".to_string(), Json::Obj(benches));
+        std::fs::write(path, Json::Obj(root).to_text())?;
+        Ok(())
+    }
+}
+
+/// The repository root: the nearest ancestor of the working directory
+/// holding `ROADMAP.md`. Cargo runs benches with the package dir (`rust/`)
+/// as cwd while `cargo run` from the root stays at the root — the walk
+/// covers both. Falls back to the cwd itself.
+fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    cwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fsl_hdnn_bench_log_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn sections_merge_and_replace() {
+        let path = tmp_path("merge");
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchLog::new("bench_a");
+        a.record("k1", 1000.0, 1e6, 1);
+        a.record("k2", 2000.0, 5e5, 4);
+        a.write_to(&path).unwrap();
+        // a second bench adds its own section without clobbering a's
+        let mut b = BenchLog::new("bench_b");
+        b.record("k3", 10.0, 1e8, 1);
+        b.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let benches = j.get("benches").unwrap();
+        assert_eq!(benches.get("bench_a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(benches.get("bench_b").unwrap().as_arr().unwrap().len(), 1);
+        // rewriting a replaces its section wholesale
+        let mut a2 = BenchLog::new("bench_a");
+        a2.record("k9", 7.5, 2e8, 2);
+        a2.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("benches").unwrap().get("bench_a").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("kernel").unwrap().as_str(), Some("k9"));
+        assert_eq!(rows[0].get("ns_per_op").unwrap().as_f64(), Some(7.5));
+        assert_eq!(rows[0].get("workers").unwrap().as_usize(), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_existing_file_is_started_fresh() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "not json {").unwrap();
+        let mut log = BenchLog::new("bench_c");
+        log.record("k", 1.0, 1.0, 1);
+        log.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(j.get("benches").unwrap().get("bench_c").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -79,6 +79,68 @@ impl Json {
     pub fn as_u64_vec(&self) -> Option<Vec<u64>> {
         self.as_arr()?.iter().map(|v| v.as_u64()).collect()
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize back to compact JSON text. Round-trips through
+    /// [`Json::parse`]; used to merge report files (e.g. the
+    /// `BENCH_hotpath.json` trajectory) without losing other writers'
+    /// sections.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        self.write_text(&mut out);
+        out
+    }
+
+    fn write_text(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(v) => {
+                if !v.is_finite() {
+                    // JSON has no NaN/inf literal; null keeps the output
+                    // parseable (a 0 ns bench mean would otherwise emit
+                    // `inf` and corrupt the whole report file)
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 1e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => {
+                let _ = write!(out, "\"{}\"", escape(s));
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_text(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{}\":", escape(k));
+                    v.write_text(out);
+                }
+                out.push('}');
+            }
+        }
+    }
 }
 
 struct Parser<'a> {
@@ -302,7 +364,10 @@ impl JsonWriter {
 
     pub fn num(&mut self, v: f64) -> &mut Self {
         self.pre();
-        if v.fract() == 0.0 && v.abs() < 1e15 {
+        if !v.is_finite() {
+            // same rule as Json::to_text: non-finite -> null, never `inf`
+            self.out.push_str("null");
+        } else if v.fract() == 0.0 && v.abs() < 1e15 {
             let _ = write!(self.out, "{}", v as i64);
         } else {
             let _ = write!(self.out, "{v}");
@@ -402,5 +467,31 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""\u0041b""#).unwrap();
         assert_eq!(j.as_str(), Some("Ab"));
+    }
+
+    #[test]
+    fn to_text_roundtrips() {
+        let src = r#"{"a": [1, 2.5, -300], "b": "x\ny", "c": true, "d": null, "e": {}}"#;
+        let j = Json::parse(src).unwrap();
+        let text = j.to_text();
+        assert_eq!(Json::parse(&text).unwrap(), j, "{text}");
+        assert_eq!(j.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("a").unwrap().as_bool(), None);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: `inf`/`NaN` are not JSON; a 0 ns bench mean must not
+        // corrupt the report file
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::Num(v).to_text();
+            assert_eq!(text, "null", "{v}");
+            assert!(Json::parse(&text).is_ok());
+            let mut w = JsonWriter::new();
+            w.obj();
+            w.field_num("x", v);
+            w.end_obj();
+            assert!(Json::parse(&w.finish()).is_ok());
+        }
     }
 }

@@ -1,10 +1,11 @@
 //! Self-contained infrastructure: PRNG, JSON, stats, tables, bf16, timing,
-//! scoped-thread batch sharding.
+//! scoped-thread batch sharding, machine-readable bench logging.
 //!
 //! The build runs against a vendored offline registry with no serde / rand /
 //! criterion, so the small utilities those crates would provide live here.
 
 pub mod args;
+pub mod bench_log;
 pub mod bf16;
 pub mod json;
 pub mod parallel;

@@ -21,6 +21,10 @@ fn start_native(test: &str) -> Option<Coordinator> {
 /// Artifact-free coordinator on the synthetic native engine — these tests
 /// run from a clean checkout (no `SKIPPED`).
 fn start_synthetic(k_shot: usize, par: ParallelConfig) -> Coordinator {
+    start_synthetic_cfg(k_shot, par, false)
+}
+
+fn start_synthetic_cfg(k_shot: usize, par: ParallelConfig, clustered: bool) -> Coordinator {
     let cfg = ModelConfig {
         image_size: 8,
         in_channels: 3,
@@ -28,6 +32,9 @@ fn start_synthetic(k_shot: usize, par: ParallelConfig) -> Coordinator {
         blocks_per_stage: 1,
         feature_dim: 8,
         d: 64,
+        ch_sub: 4,
+        n_centroids: 8,
+        clustered,
         ..Default::default()
     };
     Coordinator::start(
@@ -274,6 +281,46 @@ fn class_batches_route_through_batched_training() {
         let b = batched.query(s2, img, None).unwrap();
         assert_eq!(a.prediction, b.prediction, "query {i}: batched/parallel must match serial");
     }
+}
+
+#[test]
+fn clustered_engine_serves_sessions_end_to_end() {
+    // the packed weight-clustered FE through the full coordinator path:
+    // serial and worker-sharded clustered engines must answer identically
+    // (clustering is deterministic, sharding is bit-identical), and the
+    // quantized FE must still learn class structure above chance
+    let serial = start_synthetic_cfg(3, ParallelConfig::default(), true);
+    let sharded =
+        start_synthetic_cfg(3, ParallelConfig { workers: 5, min_batch_per_worker: 1 }, true);
+    let n_way = 3;
+    let s1 = serial.create_session(n_way, 16).unwrap();
+    let s2 = sharded.create_session(n_way, 16).unwrap();
+    let mk_shots = |class: usize| -> Vec<Vec<f32>> {
+        let gen = ImageGen::new(8, 8, 43);
+        let mut rng = Rng::new(200 + class as u64);
+        (0..3).map(|_| gen.sample(class, &mut rng)).collect()
+    };
+    for class in 0..n_way {
+        for img in mk_shots(class) {
+            serial.add_shot(s1, class, img).unwrap();
+        }
+        sharded.add_shot_batch(s2, class, mk_shots(class)).unwrap();
+    }
+    assert_eq!(serial.finish_training(s1).unwrap(), 9);
+    assert_eq!(sharded.finish_training(s2).unwrap(), 9);
+    let gen = ImageGen::new(8, 8, 43);
+    let mut rng = Rng::new(888);
+    let mut correct = 0;
+    let total = 12;
+    for i in 0..total {
+        let class = i % n_way;
+        let img = gen.sample(class, &mut rng);
+        let a = serial.query(s1, img.clone(), None).unwrap();
+        let b = sharded.query(s2, img, None).unwrap();
+        assert_eq!(a.prediction, b.prediction, "query {i}: sharded clustered must match serial");
+        correct += (a.prediction == class) as usize;
+    }
+    assert!(correct * n_way > total, "clustered FE must beat chance: {correct}/{total}");
 }
 
 #[test]

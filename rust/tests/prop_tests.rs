@@ -3,10 +3,12 @@
 //! random cases seeded deterministically — failures print the case seed.
 
 use fsl_hdnn::config::EeConfig;
+use fsl_hdnn::config::ModelConfig;
 use fsl_hdnn::coordinator::batcher::ClassBatcher;
 use fsl_hdnn::coordinator::early_exit::{EarlyExitController, EeDecision};
-use fsl_hdnn::fe::conv::{clustered_conv2d, conv2d, Tensor3};
+use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
 use fsl_hdnn::fe::kmeans::{cluster_layer, kmeans_1d};
+use fsl_hdnn::fe::FeModel;
 use fsl_hdnn::hdc::{quant, CrpEncoder, HdcModel};
 use fsl_hdnn::sim::fe_engine::simulate_layer;
 use fsl_hdnn::sim::workload::ConvGeom;
@@ -195,6 +197,92 @@ fn prop_clustered_conv_exact() {
         let clus = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, stride, ch_sub, n);
         for (i, (a, b)) in dense.data.iter().zip(&clus.data).enumerate() {
             assert!((a - b).abs() < 1e-3, "case {case} idx {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// The packed fast kernel == the reference clustered kernel == dense conv
+/// with reconstructed weights, across random geometry: strides 1 and 2,
+/// `cin` not divisible by `ch_sub`, odd image sizes, odd `cout` (nibble
+/// tail), and `cout` crossing the 16-wide tile boundary.
+#[test]
+fn prop_packed_kernel_matches_reference_and_oracle() {
+    for case in 0..20 {
+        let mut rng = Rng::new(11_000 + case);
+        let cin = 1 + rng.below(12);
+        let cout = 1 + rng.below(36);
+        let ch_sub = 1 + rng.below(8);
+        let n = 2 + rng.below(15); // 2..=16, the nibble-packable range
+        let hw = 3 + rng.below(8);
+        let stride = 1 + rng.below(2);
+        let k = 3;
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32()).collect();
+        let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
+        let packed = cl.packed();
+        assert_eq!(packed.unpack(), cl.idx, "case {case}: nibble packing must round-trip");
+        let x =
+            Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let reference = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, stride, cl.ch_sub, n);
+        let fast = clustered_conv2d_packed(&x, &packed, &cl.codebook, stride);
+        let oracle = conv2d(&x, &cl.reconstruct(), cout, k, stride);
+        assert_eq!((reference.h, reference.w, reference.c), (fast.h, fast.w, fast.c));
+        for (i, (a, b)) in reference.data.iter().zip(&fast.data).enumerate() {
+            assert!((a - b).abs() < 1e-3, "case {case} idx {i}: ref {a} vs packed {b}");
+        }
+        for (i, (a, b)) in oracle.data.iter().zip(&fast.data).enumerate() {
+            assert!((a - b).abs() < 1e-3, "case {case} idx {i}: oracle {a} vs packed {b}");
+        }
+    }
+}
+
+/// Clustered FeModel forward == the dense-reconstruction oracle across
+/// random synthetic geometries (odd image sizes, `cin` not divisible by
+/// `ch_sub`), and bit-identical across worker counts.
+#[test]
+fn prop_clustered_femodel_matches_dense_oracle() {
+    for case in 0..6 {
+        let mut rng = Rng::new(12_000 + case);
+        let cfg = ModelConfig {
+            image_size: 6 + rng.below(5),
+            in_channels: 1 + rng.below(3),
+            widths: vec![2 + rng.below(6), 4 + rng.below(8)],
+            blocks_per_stage: 1 + rng.below(2),
+            feature_dim: 16,
+            d: 32,
+            ch_sub: 1 + rng.below(5),
+            n_centroids: 2 + rng.below(15),
+            clustered: true,
+            master_seed: 0xF51_4D17 + case,
+        };
+        let m = FeModel::synthetic(cfg.clone());
+        assert!(m.is_clustered(), "case {case}");
+        let oracle = m.dense_reconstruction();
+        let images: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                (0..cfg.image_size * cfg.image_size * cfg.in_channels)
+                    .map(|_| rng.gauss_f32())
+                    .collect()
+            })
+            .collect();
+        let serial: Vec<_> = images.iter().map(|img| m.forward(img).unwrap()).collect();
+        for (img, got) in images.iter().zip(&serial) {
+            let want = oracle.forward(img).unwrap();
+            assert_eq!(got.len(), want.len(), "case {case}");
+            for (gb, wb) in got.iter().zip(&want) {
+                for (a, b) in gb.iter().zip(wb) {
+                    assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                        "case {case}: clustered {a} vs oracle {b}"
+                    );
+                }
+            }
+        }
+        for workers in [2usize, 3, 7] {
+            assert_eq!(
+                m.forward_batch(&images, workers).unwrap(),
+                serial,
+                "case {case} workers={workers}: clustered forward must be bit-identical"
+            );
         }
     }
 }
