@@ -26,6 +26,7 @@ bench:
 bench-smoke:
 	$(CARGO) bench --bench hotpath_micro -- --smoke
 	$(CARGO) bench --bench fig05_chsub_sweep -- --smoke
+	$(CARGO) bench --bench fig14_precision_sweep -- --smoke
 
 doc:
 	$(CARGO) doc --no-deps

@@ -9,30 +9,36 @@
 //!     workload at the measured corners — the numbers Table I reports.
 //!
 //! Run with:  cargo run --release --example odl_server -- [episodes] [backend]
-//! Add `--clustered` to serve through the packed weight-clustered FE.
+//! Add `--clustered` to serve through the packed weight-clustered FE,
+//! `--hv-bits N` / `--metric m` to pick the class-memory precision and
+//! distance metric of the packed HDC datapath.
 
 use std::time::Instant;
 
-use fsl_hdnn::config::{ChipConfig, EeConfig, ModelConfig};
+use fsl_hdnn::config::{ChipConfig, EeConfig, HdcConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::hdc::Distance;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
-use fsl_hdnn::sim::Chip;
-use fsl_hdnn::util::args::arg_flag;
+use fsl_hdnn::sim::{Chip, EnergyModel};
+use fsl_hdnn::util::args::{arg_flag, arg_str, arg_usize};
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::stats;
 use fsl_hdnn::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let episodes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
+    // positionals come before the first `--flag` (a value-taking flag like
+    // `--hv-bits 1` would otherwise put its value where a positional goes)
+    let pos: Vec<String> =
+        std::env::args().skip(1).take_while(|s| !s.starts_with("--")).collect();
+    let episodes: usize = pos.first().and_then(|s| s.parse().ok()).unwrap_or(5);
     // native by default so the driver runs from a clean checkout; pass
     // `pjrt` explicitly once `make artifacts` has produced the modules and
     // the crate is built with the `pjrt` feature
-    let backend = Backend::from_name(
-        args.get(2).map(|s| s.as_str()).filter(|s| !s.starts_with("--")).unwrap_or("native"),
-    )?;
+    let backend = Backend::from_name(pos.get(1).map(|s| s.as_str()).unwrap_or("native"))?;
     let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
+    let hv_bits = arg_usize("--hv-bits", HdcConfig::default().hv_bits as usize) as u32;
+    let metric = Distance::from_name(&arg_str("--metric", HdcConfig::default().metric.name()))?;
     let (n_way, k_shot, queries_per_class) = (10, 5, 10);
     let dir = std::path::PathBuf::from("artifacts");
     let model = ComputeEngine::open_or_synthetic_with(
@@ -51,8 +57,9 @@ fn main() -> anyhow::Result<()> {
     println!("== FSL-HDnn ODL serving driver ==");
     println!(
         "backend={backend:?}, {episodes} episodes of {n_way}-way {k_shot}-shot, {} queries \
-         each, clustered FE: {eff_clustered}",
-        n_way * queries_per_class
+         each, clustered FE: {eff_clustered}, class HVs {hv_bits}-bit / {}",
+        n_way * queries_per_class,
+        metric.name()
     );
 
     let dir2 = dir.clone();
@@ -68,10 +75,13 @@ fn main() -> anyhow::Result<()> {
     let mut train_wall_s = Vec::new();
     let mut query_wall_ms = Vec::new();
     let mut blocks = Vec::new();
+    // class-memory gating while a session is live (sessions are closed at
+    // episode end, so the final snapshot would show an empty memory)
+    let mut live_metrics = None;
     let t_total = Instant::now();
     for ep in 0..episodes {
         let classes = rng.choose_k(gen.n_classes, n_way);
-        let sid = coord.create_session(n_way, 4)?;
+        let sid = coord.create_session_with(n_way, hv_bits, metric)?;
         let t0 = Instant::now();
         for (label, &cls) in classes.iter().enumerate() {
             for _ in 0..k_shot {
@@ -100,6 +110,7 @@ fn main() -> anyhow::Result<()> {
             train_s,
             100.0 * acc
         );
+        live_metrics = Some(coord.metrics());
         coord.call(fsl_hdnn::coordinator::Request::CloseSession { session: sid });
     }
     let wall = t_total.elapsed().as_secs_f64();
@@ -118,6 +129,16 @@ fn main() -> anyhow::Result<()> {
     t.row(&["avg CONV blocks used (EE 2,2)".into(),
         format!("{:.2} / {}", stats::mean(&blocks), model.n_branches())]);
     t.row(&["early-exit rate".into(), format!("{:.0}%", 100.0 * m.early_exit_rate)]);
+    if let Some(lm) = live_metrics {
+        // the bank-gating story (Fig. 9): occupancy -> powered banks ->
+        // standby mW the energy model says gating saved
+        let em = EnergyModel::default();
+        let banks = lm.class_mem_active_banks + lm.class_mem_gated_banks;
+        let saved = em.class_mem_static_mw(lm.class_mem_gated_banks, 1.2, 250.0);
+        t.row(&["class memory (while serving)".into(),
+            format!("{} KB used, {}/{} banks gated (saves {:.1} mW standby)",
+                lm.class_mem_used_bits / 8192, lm.class_mem_gated_banks, banks, saved)]);
+    }
     t.row(&["total wall-clock".into(), format!("{wall:.1} s")]);
     t.print();
 

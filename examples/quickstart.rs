@@ -10,17 +10,23 @@
 //! Run with:  cargo run --release --example quickstart
 //! Add `-- --clustered` to run the FE through the packed weight-clustered
 //! kernel (Fig. 4b) — the chip's cheap path — instead of the dense conv.
+//! `--hv-bits N` (1..=16) picks the class-memory precision and
+//! `--metric l1|dot|cosine|hamming` the distance metric of the packed HDC
+//! datapath (`--hv-bits 1 --metric hamming` is the binary popcount path).
 
-use fsl_hdnn::config::{EeConfig, ModelConfig};
+use fsl_hdnn::config::{EeConfig, HdcConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::hdc::Distance;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
-use fsl_hdnn::util::args::arg_flag;
+use fsl_hdnn::util::args::{arg_flag, arg_str, arg_usize};
 use fsl_hdnn::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from("artifacts");
     let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
+    let hv_bits = arg_usize("--hv-bits", HdcConfig::default().hv_bits as usize) as u32;
+    let metric = Distance::from_name(&arg_str("--metric", HdcConfig::default().metric.name()))?;
     // read geometry on the caller side; build the engine inside the worker.
     // Without `make artifacts` the native backend runs synthetic weights.
     let model = ComputeEngine::open_or_synthetic_with(
@@ -33,8 +39,15 @@ fn main() -> anyhow::Result<()> {
     // the clustered flag only applies if the native fallback runs; the
     // PJRT-first path below says which backend was actually taken
     println!(
-        "model: {0}x{0}x{1} image -> F={2}, D={3}, clustered FE (native only): {4}",
-        model.image_size, model.in_channels, model.feature_dim, model.d, cfg.clustered
+        "model: {0}x{0}x{1} image -> F={2}, D={3}, clustered FE (native only): {4}, \
+         class HVs {5}-bit / {6}",
+        model.image_size,
+        model.in_channels,
+        model.feature_dim,
+        model.d,
+        cfg.clustered,
+        hv_bits,
+        metric.name()
     );
 
     let (n_way, k_shot) = (5, 5);
@@ -56,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     let classes = rng.choose_k(gen.n_classes, n_way);
 
     // --- single-pass training ---
-    let session = coord.create_session(n_way, 4)?;
+    let session = coord.create_session_with(n_way, hv_bits, metric)?;
     for (label, &cls) in classes.iter().enumerate() {
         for _ in 0..k_shot {
             coord.add_shot(session, label, gen.sample(cls, &mut rng))?;

@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks (the §Perf targets in DESIGN.md): native cRP
-//! encode throughput, L1 distance search, the clustered-conv kernels
-//! (reference vs the packed fast path, at ResNet-18 stage geometries), FE
-//! forward (dense and clustered, serial and batch-parallel, `--workers N`,
-//! 0 = one per core) and the chip simulator itself. Not a paper figure —
+//! encode throughput, L1 distance search, the packed class-memory HDC
+//! datapath vs the dequantized-f32 path (1-bit hamming popcount, 4-bit
+//! L1), the clustered-conv kernels (reference vs the packed fast path, at
+//! ResNet-18 stage geometries), FE forward (dense and clustered, serial
+//! and batch-parallel, `--workers N`, 0 = one per core) and the chip
+//! simulator itself. Not a paper figure —
 //! the optimization baseline/after log in EXPERIMENTS.md §Perf comes from
 //! here, and the headline numbers land in `BENCH_hotpath.json` at the repo
 //! root so the perf trajectory is tracked across PRs.
@@ -13,7 +15,7 @@
 use fsl_hdnn::config::{ChipConfig, ModelConfig, ParallelConfig};
 use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
 use fsl_hdnn::fe::kmeans::cluster_layer;
-use fsl_hdnn::hdc::{distance, CrpEncoder, HdcModel};
+use fsl_hdnn::hdc::{distance, quant, CrpEncoder, Distance, HdcModel};
 use fsl_hdnn::runtime::ComputeEngine;
 use fsl_hdnn::sim::Chip;
 use fsl_hdnn::util::args::{arg_flag, arg_usize};
@@ -56,7 +58,7 @@ fn main() {
     println!("{r}");
     log.record("l1_distance_32xd4096", r.mean_ns, r.throughput(1.0), 1);
 
-    // --- HDC train + predict round ---
+    // --- HDC train + predict round (the packed class-memory datapath) ---
     let mut model = HdcModel::new(10, 4096);
     let hv: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
     for c in 0..10 {
@@ -67,6 +69,51 @@ fn main() {
     });
     println!("{r}");
     log.record("hdc_predict_10way_d4096", r.mean_ns, r.throughput(1.0), 1);
+
+    // --- packed class memory vs the dequantized-f32 path (ISSUE 4): the
+    // headline is 1-bit hamming, where the integer domain is a popcount
+    // over u64 sign planes; 4-bit L1 shows the narrow-code streaming win.
+    // Both packed results are numerically checked against the oracle. ---
+    for (bits, metric) in [(1u32, Distance::Hamming), (4, Distance::L1)] {
+        let mut pm = HdcModel::new(32, 4096).with_precision(bits).with_metric(metric);
+        for c in 0..32 {
+            let chv: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
+            pm.train_shot(c, &chv);
+        }
+        let q: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
+        // correctness gate before timing
+        let got = pm.distances(&q);
+        let want = pm.distances_oracle(&q);
+        for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
+                "packed {bits}b {metric:?} diverged at class {c}: {a} vs {b}"
+            );
+        }
+        let tag = format!("{}_b{bits}", metric.name());
+        let rp = bench(&format!("hdc packed {metric:?} {bits}b 32 x D=4096"), budget(200.0), || {
+            black_box(pm.distances(black_box(&q)));
+        });
+        println!("{rp}");
+        log.record(&format!("hdc_{tag}_packed_32xd4096"), rp.mean_ns, rp.throughput(1.0), 1);
+        // fair f32 baseline: metric over the cached dequantized rows —
+        // what the pre-packed implementation executed per query
+        let rows = pm.dequantized_class_hvs();
+        let (qd, _) = quant::quantize(&q, bits);
+        let rf = bench(&format!("hdc f32    {metric:?} {bits}b 32 x D=4096"), budget(200.0), || {
+            let mut acc = 0.0f64;
+            for c in 0..32 {
+                acc += metric.eval(black_box(&qd), &rows[c * 4096..(c + 1) * 4096]);
+            }
+            black_box(acc);
+        });
+        println!("{rf}");
+        log.record(&format!("hdc_{tag}_f32_32xd4096"), rf.mean_ns, rf.throughput(1.0), 1);
+        let speedup = rf.mean_ns / rp.mean_ns;
+        // the packed-vs-f32 speedup row the perf trajectory tracks
+        log.record_ratio(&format!("hdc_{tag}_packed_vs_f32_speedup"), speedup);
+        println!("    -> packed vs f32: {speedup:.2}x (distances checked vs oracle)");
+    }
 
     // --- clustered conv: reference kernel vs the packed fast path, at
     // ResNet-18 stage geometries (the acceptance target: packed >= 3x

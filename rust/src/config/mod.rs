@@ -6,6 +6,7 @@
 
 pub mod toml;
 
+use crate::hdc::Distance;
 use crate::util::json::Json;
 
 /// Feature-extractor / model geometry (must match `artifacts/manifest.json`
@@ -141,6 +142,28 @@ impl ParallelConfig {
     }
 }
 
+/// HDC classifier knobs ([hdc] TOML section / `--hv-bits`, `--metric`):
+/// the class-memory precision sessions are created at and the distance
+/// metric the packed datapath runs. Distinct from `ChipConfig::hv_bits`,
+/// which parameterizes the chip simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HdcConfig {
+    /// class-HV precision for new sessions, 1..=16 bits (paper capacity:
+    /// 32 classes @ 16-bit, 128 @ 4-bit at D=4096)
+    pub hv_bits: u32,
+    /// distance metric (the chip's datapath is L1; hamming pairs with
+    /// 1-bit class HVs for the popcount fast path)
+    pub metric: Distance,
+}
+
+impl Default for HdcConfig {
+    fn default() -> Self {
+        // 4-bit is the paper's capacity sweet spot and what every example
+        // historically created sessions at
+        HdcConfig { hv_bits: 4, metric: Distance::L1 }
+    }
+}
+
 /// Few-shot workload: N-way k-shot episodes with q queries per class.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -239,6 +262,7 @@ pub struct RunConfig {
     pub model: ModelConfig,
     pub workload: WorkloadConfig,
     pub chip: ChipConfig,
+    pub hdc: HdcConfig,
     pub ee: Option<EeConfig>,
     pub batched_training: bool,
     pub parallel: ParallelConfig,
@@ -282,6 +306,15 @@ impl RunConfig {
                 "chip.freq_mhz" => self.chip.freq_mhz = val.as_float()?,
                 "chip.voltage" => self.chip.voltage = val.as_float()?,
                 "chip.hv_bits" => self.chip.hv_bits = val.as_int()? as u32,
+                "hdc.hv_bits" => {
+                    let bits = val.as_int()?;
+                    anyhow::ensure!(
+                        (1..=16).contains(&bits),
+                        "hdc.hv_bits must be 1..=16, got {bits}"
+                    );
+                    self.hdc.hv_bits = bits as u32;
+                }
+                "hdc.metric" => self.hdc.metric = Distance::from_name(val.as_str()?)?,
                 "ee.e_s" => {
                     let e = self.ee.get_or_insert(EeConfig::paper_default());
                     e.e_s = val.as_int()? as usize;
@@ -394,6 +427,30 @@ mod tests {
     fn apply_toml_rejects_unknown() {
         let doc = toml::Doc::parse("[model]\nbogus = 1\n").unwrap();
         assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn apply_toml_hdc_section() {
+        use crate::hdc::Distance;
+        let doc = toml::Doc::parse("[hdc]\nhv_bits = 1\nmetric = \"hamming\"\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.hdc, HdcConfig { hv_bits: 1, metric: Distance::Hamming });
+        // [chip] hv_bits stays the simulator knob, untouched
+        assert_eq!(rc.chip.hv_bits, ChipConfig::default().hv_bits);
+        // bad values fail with a clean error
+        let doc = toml::Doc::parse("[hdc]\nhv_bits = 17\n").unwrap();
+        let err = RunConfig::default().apply_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("1..=16"), "{err}");
+        let doc = toml::Doc::parse("[hdc]\nmetric = \"euclid\"\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn hdc_defaults_are_the_paper_sweet_spot() {
+        use crate::hdc::Distance;
+        let h = HdcConfig::default();
+        assert_eq!((h.hv_bits, h.metric), (4, Distance::L1));
     }
 
     #[test]

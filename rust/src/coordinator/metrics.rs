@@ -79,6 +79,11 @@ impl Metrics {
             query_ms_max: if self.query.n == 0 { 0.0 } else { self.query.max },
             early_exit_rate: self.queries_exited_early as f64 / q,
             avg_blocks_used: self.blocks_used_total as f64 / q,
+            // class-memory occupancy/gating are owned by the coordinator
+            // worker's ClassMemoryManager and filled in at GetMetrics time
+            class_mem_used_bits: 0,
+            class_mem_active_banks: 0,
+            class_mem_gated_banks: 0,
         }
     }
 }
@@ -97,6 +102,12 @@ pub struct MetricsSnapshot {
     pub query_ms_max: f64,
     pub early_exit_rate: f64,
     pub avg_blocks_used: f64,
+    /// class-memory occupancy (bits) across open sessions
+    pub class_mem_used_bits: u64,
+    /// banks that must stay powered for that occupancy (Fig. 9)
+    pub class_mem_active_banks: usize,
+    /// banks gated off — the energy model prices the standby saving
+    pub class_mem_gated_banks: usize,
 }
 
 #[cfg(test)]

@@ -3,12 +3,15 @@
 
 use crate::config::EeConfig;
 use crate::coordinator::session::QueryOutcome;
+use crate::hdc::Distance;
 
 /// Commands accepted by the coordinator.
 #[derive(Debug)]
 pub enum Request {
-    /// Create a few-shot session; replies `SessionCreated`.
-    CreateSession { n_way: usize, hv_bits: u32 },
+    /// Create a few-shot session at `hv_bits` class-memory precision with
+    /// the given distance metric; replies `SessionCreated` (or `Error`
+    /// when the session does not fit in class memory).
+    CreateSession { n_way: usize, hv_bits: u32, metric: Distance },
     /// Add one labeled shot (raw image, flat NHWC). The coordinator
     /// batches same-class shots and trains when a class reaches k_shot
     /// or on `FinishTraining`.

@@ -92,12 +92,22 @@ impl DeviceRouter {
     /// back to any device with room (backpressure surfaces only when the
     /// whole fleet is out of class memory).
     pub fn create_session(&mut self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
+        self.create_session_with(n_way, hv_bits, crate::hdc::Distance::L1)
+    }
+
+    /// [`DeviceRouter::create_session`] with an explicit distance metric.
+    pub fn create_session_with(
+        &mut self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: crate::hdc::Distance,
+    ) -> anyhow::Result<u64> {
         let first = self.pick_device();
         let n = self.devices.len();
         let mut last_err = None;
         for off in 0..n {
             let d = (first + off) % n;
-            match self.devices[d].create_session(n_way, hv_bits) {
+            match self.devices[d].create_session_with(n_way, hv_bits, metric) {
                 Ok(local) => {
                     let gid = self.next_global;
                     self.next_global += 1;

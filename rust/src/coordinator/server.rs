@@ -90,9 +90,18 @@ impl Worker {
 
     fn handle(&mut self, req: Request) -> Response {
         match req {
-            Request::CreateSession { n_way, hv_bits } => {
+            Request::CreateSession { n_way, hv_bits, metric } => {
+                // reject out-of-range precision here: it used to slip into
+                // the session and panic the worker at the first quantize
+                if !(1..=16).contains(&hv_bits) {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("hv_bits must be 1..=16, got {hv_bits}"));
+                }
                 let model = self.engine.model();
                 let id = self.next_id;
+                // sessions are admitted through the class-memory manager:
+                // what does not fit on chip (32 @ 16-bit, 128 @ 4-bit at
+                // D=4096, scaled by EE branches) is rejected like hardware
                 let alloc = Allocation {
                     session: id,
                     n_classes: n_way,
@@ -105,8 +114,9 @@ impl Worker {
                     return Response::Error(e.to_string());
                 }
                 self.next_id += 1;
-                let session =
-                    FslSession::new(id, n_way, model.d, model.n_branches()).with_precision(hv_bits);
+                let session = FslSession::new(id, n_way, model.d, model.n_branches())
+                    .with_precision(hv_bits)
+                    .with_metric(metric);
                 self.sessions.insert(
                     id,
                     SessionState { session, batcher: ClassBatcher::new(self.k_shot) },
@@ -271,7 +281,17 @@ impl Worker {
                     Response::Error(format!("unknown session {session}"))
                 }
             }
-            Request::GetMetrics => Response::Metrics(self.metrics.snapshot()),
+            Request::GetMetrics => {
+                let mut snap = self.metrics.snapshot();
+                // bank-gating view of the class memory (Fig. 9): occupancy
+                // decides how many of the 16 banks stay powered; the
+                // energy model turns gated banks into saved standby mW
+                // (sim::energy::EnergyModel::class_mem_static_mw)
+                snap.class_mem_used_bits = self.class_mem.used_bits();
+                snap.class_mem_active_banks = self.class_mem.active_banks();
+                snap.class_mem_gated_banks = self.class_mem.gated_banks();
+                Response::Metrics(snap)
+            }
             Request::Shutdown => Response::ShuttingDown,
         }
     }
@@ -343,8 +363,20 @@ impl Coordinator {
     /// Convenience wrappers -----------------------------------------------
 
     pub fn create_session(&self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
-        match self.call(Request::CreateSession { n_way, hv_bits }) {
+        self.create_session_with(n_way, hv_bits, crate::hdc::Distance::L1)
+    }
+
+    /// [`Coordinator::create_session`] with an explicit distance metric
+    /// (the chip's datapath is L1; hamming pairs with 1-bit class HVs).
+    pub fn create_session_with(
+        &self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: crate::hdc::Distance,
+    ) -> anyhow::Result<u64> {
+        match self.call(Request::CreateSession { n_way, hv_bits, metric }) {
             Response::SessionCreated { session } => Ok(session),
+            Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }

@@ -4,7 +4,7 @@
 
 use crate::config::EeConfig;
 use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
-use crate::hdc::{distance::argmin, HdcModel};
+use crate::hdc::{distance::argmin, Distance, HdcModel};
 
 /// Outcome of one query.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -47,6 +47,12 @@ impl FslSession {
         self
     }
 
+    pub fn with_metric(mut self, metric: Distance) -> Self {
+        self.branch_models =
+            self.branch_models.into_iter().map(|m| m.with_metric(metric)).collect();
+        self
+    }
+
     /// Single-pass training on one shot: `branch_hvs[b]` is the encoded HV
     /// of CONV block b's feature (all branches trained — EE training).
     pub fn train_shot(&mut self, class: usize, branch_hvs: &[Vec<f32>]) {
@@ -58,11 +64,23 @@ impl FslSession {
     }
 
     /// Batched single-pass training: all k same-class shots at once
-    /// (Fig. 12) — identical math to `train_shot` k times.
+    /// (Fig. 12) — bit-identical math to `train_shot` k times. Every shot
+    /// is validated up front (a malformed request used to raw-index
+    /// `shot[b]` and panic), and the per-branch views borrow the shot HVs
+    /// instead of cloning them (the old path copied O(k·B·D) floats).
     pub fn train_batch(&mut self, class: usize, shots_branch_hvs: &[Vec<Vec<f32>>]) {
+        for (s, shot) in shots_branch_hvs.iter().enumerate() {
+            assert_eq!(
+                shot.len(),
+                self.n_branches,
+                "shot {s}: {} branch HVs for a {}-branch session (one HV per branch)",
+                shot.len(),
+                self.n_branches
+            );
+        }
         for (b, m) in self.branch_models.iter_mut().enumerate() {
-            let hvs: Vec<Vec<f32>> =
-                shots_branch_hvs.iter().map(|shot| shot[b].clone()).collect();
+            let hvs: Vec<&[f32]> =
+                shots_branch_hvs.iter().map(|shot| shot[b].as_slice()).collect();
             m.train_batch(class, &hvs);
         }
         self.shots_seen += shots_branch_hvs.len();
@@ -165,14 +183,29 @@ mod tests {
         let mut bat = FslSession::new(2, 2, d, 2);
         bat.train_batch(0, &shots);
         assert_eq!(seq.shots_seen, bat.shots_seen);
+        // row-major batched accumulation is bit-identical to sequential
         let q = hv(&mut rng, &p);
-        assert_eq!(
-            seq.final_distances(&q)
-                .iter()
-                .zip(bat.final_distances(&q))
-                .all(|(a, b)| (a - b).abs() < 1e-3),
-            true
-        );
+        assert_eq!(seq.final_distances(&q), bat.final_distances(&q));
+    }
+
+    #[test]
+    #[should_panic(expected = "one HV per branch")]
+    fn batch_shot_arity_checked() {
+        // regression: a malformed shot used to raw-index shot[b] and panic
+        // with an opaque out-of-bounds message
+        let mut s = FslSession::new(1, 2, 16, 4);
+        let good: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 16]).collect();
+        let short: Vec<Vec<f32>> = (0..2).map(|_| vec![0.0; 16]).collect();
+        s.train_batch(0, &[good, short]);
+    }
+
+    #[test]
+    fn nan_distance_row_cannot_elect_class_zero() {
+        // regression: hdc::distance::argmin was NaN-blind — with
+        // dists[0] = NaN every comparison was false and class 0 won
+        assert_eq!(FslSession::predict_from_distances(&[f64::NAN, 5.0, 3.0]), 2);
+        assert_eq!(FslSession::predict_from_distances(&[f64::NAN, f64::NAN, 1.0, 2.0]), 2);
+        assert_eq!(FslSession::predict_from_distances(&[f64::NAN]), 0, "all-NaN falls back");
     }
 
     #[test]

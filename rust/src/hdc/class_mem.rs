@@ -131,6 +131,29 @@ mod tests {
     }
 
     #[test]
+    fn one_class_over_capacity_rejected() {
+        // Section IV-B3: 128 classes @ 4-bit (D=4096, single branch) fill
+        // the 256 KB exactly; 129 is one class over and must be rejected
+        let mut m = ClassMemoryManager::paper();
+        m.allocate(Allocation { session: 1, n_classes: 128, n_branches: 1, hv_bits: 4, d: 4096 })
+            .unwrap();
+        assert_eq!(m.free_bits(), 0, "128-way @ 4-bit is an exact fit");
+        m.release(1);
+        let e = m
+            .allocate(Allocation { session: 2, n_classes: 129, n_branches: 1, hv_bits: 4, d: 4096 })
+            .unwrap_err();
+        assert!(e.to_string().contains("exhausted"), "{e}");
+        // same boundary at 16-bit: 32 fits, 33 does not
+        m.allocate(Allocation { session: 3, n_classes: 32, n_branches: 1, hv_bits: 16, d: 4096 })
+            .unwrap();
+        assert_eq!(m.free_bits(), 0);
+        m.release(3);
+        assert!(m
+            .allocate(Allocation { session: 4, n_classes: 33, n_branches: 1, hv_bits: 16, d: 4096 })
+            .is_err());
+    }
+
+    #[test]
     fn rejects_oversubscription() {
         let mut m = ClassMemoryManager::paper();
         m.allocate(alloc(1, 32, 4, 4)).unwrap(); // fills it

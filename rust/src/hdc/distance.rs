@@ -16,6 +16,26 @@ pub enum Distance {
 }
 
 impl Distance {
+    /// Parse a metric name (CLI `--metric`, TOML `hdc.metric`).
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "l1" | "manhattan" => Ok(Distance::L1),
+            "dot" => Ok(Distance::Dot),
+            "cosine" => Ok(Distance::Cosine),
+            "hamming" => Ok(Distance::Hamming),
+            other => anyhow::bail!("unknown metric {other} (l1|dot|cosine|hamming)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distance::L1 => "l1",
+            Distance::Dot => "dot",
+            Distance::Cosine => "cosine",
+            Distance::Hamming => "hamming",
+        }
+    }
+
     pub fn eval(&self, q: &[f32], c: &[f32]) -> f64 {
         debug_assert_eq!(q.len(), c.len());
         match self {
@@ -75,11 +95,20 @@ pub fn l1(a: &[f32], b: &[f32]) -> f64 {
     s
 }
 
-/// Index of the smallest distance (ties -> lowest index).
+/// Index of the smallest distance (ties -> lowest index). NaN-robust
+/// (consistent with the PR 2 NaN-sort sweep): NaN candidates are skipped
+/// and a NaN incumbent always loses, so a NaN distance can never win —
+/// the old `d < dists[best]` comparison was false for *every* candidate
+/// once `dists[0]` was NaN, silently returning class 0 (note `total_cmp`
+/// alone would not fix the sign-bit-set NaN, which sorts *below* -inf).
+/// All-NaN input still returns 0 (there is no better answer).
 pub fn argmin(dists: &[f64]) -> usize {
     let mut best = 0;
     for (i, &d) in dists.iter().enumerate().skip(1) {
-        if d < dists[best] {
+        if d.is_nan() {
+            continue;
+        }
+        if dists[best].is_nan() || d < dists[best] {
             best = i;
         }
     }
@@ -123,6 +152,28 @@ mod tests {
     fn argmin_ties_low_index() {
         assert_eq!(argmin(&[3.0, 1.0, 1.0, 5.0]), 1);
         assert_eq!(argmin(&[0.5]), 0);
+    }
+
+    #[test]
+    fn argmin_is_nan_blind_no_more() {
+        // regression: a NaN at index 0 made every `d < dists[best]`
+        // comparison false, silently electing class 0
+        assert_eq!(argmin(&[f64::NAN, 5.0, 3.0]), 2);
+        assert_eq!(argmin(&[2.0, f64::NAN, 1.0]), 2);
+        assert_eq!(argmin(&[-f64::NAN, 1.0]), 1, "sign-bit NaN must not win either");
+        assert_eq!(argmin(&[f64::NAN, f64::NAN]), 0, "all-NaN falls back to 0");
+        assert_eq!(argmin(&[f64::NAN, f64::INFINITY]), 1, "inf beats NaN");
+    }
+
+    #[test]
+    fn metric_names_round_trip() {
+        for m in [Distance::L1, Distance::Dot, Distance::Cosine, Distance::Hamming] {
+            assert_eq!(Distance::from_name(m.name()).unwrap(), m);
+        }
+        assert_eq!(Distance::from_name("L1").unwrap(), Distance::L1);
+        assert_eq!(Distance::from_name("manhattan").unwrap(), Distance::L1);
+        let err = Distance::from_name("euclid").unwrap_err().to_string();
+        assert!(err.contains("euclid") && err.contains("hamming"), "{err}");
     }
 
     #[test]

@@ -10,8 +10,10 @@ pub mod crp;
 pub mod distance;
 pub mod lfsr;
 pub mod model;
+pub mod packed;
 pub mod quant;
 
 pub use crp::CrpEncoder;
 pub use distance::Distance;
 pub use model::HdcModel;
+pub use packed::PackedClassHvs;

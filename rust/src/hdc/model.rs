@@ -1,8 +1,19 @@
 //! HDC few-shot model: single-pass training (eq. 4) + distance inference
 //! (eq. 5), with the chip's class-memory precision options.
+//!
+//! Inference runs through the packed quantized class memory
+//! ([`crate::hdc::packed::PackedClassHvs`], rebuilt lazily after training
+//! touches a class HV): queries quantize once and compare in the integer
+//! domain, exactly like the chip's distance module. The readable
+//! dequantized-f32 evaluation stays available as
+//! [`HdcModel::distances_oracle`] — the numerical oracle the packed
+//! kernels are tested against (see `hdc/packed.rs` for the per-metric
+//! exactness contract).
 
 use super::distance::{argmin, Distance};
+use super::packed::PackedClassHvs;
 use super::quant;
+use crate::util::parallel::shard_map;
 
 /// A trained (or in-training) HDC classification model.
 #[derive(Clone, Debug)]
@@ -13,8 +24,8 @@ pub struct HdcModel {
     sums: Vec<f32>,
     /// shots accumulated per class
     pub counts: Vec<u32>,
-    /// quantized view used for inference (rebuilt lazily)
-    quantized: Option<Vec<f32>>,
+    /// packed quantized view used for inference (rebuilt lazily)
+    packed: Option<PackedClassHvs>,
     pub hv_bits: u32,
     pub metric: Distance,
 }
@@ -26,7 +37,7 @@ impl HdcModel {
             n_classes,
             sums: vec![0.0; n_classes * d],
             counts: vec![0; n_classes],
-            quantized: None,
+            packed: None,
             hv_bits: 16,
             metric: Distance::L1,
         }
@@ -34,11 +45,12 @@ impl HdcModel {
 
     pub fn with_precision(mut self, bits: u32) -> Self {
         self.hv_bits = bits;
-        self.quantized = None;
+        self.packed = None;
         self
     }
 
     pub fn with_metric(mut self, metric: Distance) -> Self {
+        // the packed store is metric-independent — no invalidation needed
         self.metric = metric;
         self
     }
@@ -52,48 +64,55 @@ impl HdcModel {
             *a += b;
         }
         self.counts[class] += 1;
-        self.quantized = None;
+        self.packed = None;
     }
 
-    /// Batched single-pass training (Fig. 12): aggregate all k same-class
-    /// shot HVs, then add once — identical math, one memory sweep.
-    pub fn train_batch(&mut self, class: usize, hvs: &[Vec<f32>]) {
-        assert!(class < self.n_classes);
+    /// Batched single-pass training (Fig. 12): bundle all k same-class
+    /// shot HVs in one sweep. Accumulation is row-major — shot by shot
+    /// into the class row, the same order `train_shot` uses — so the
+    /// result is **bit-identical** to k sequential `train_shot` calls
+    /// (the old column-major loop strode across every shot HV per element
+    /// and only matched within tolerance). Accepts `&[Vec<f32>]` or
+    /// borrowed `&[&[f32]]` rows, so callers never have to clone HVs.
+    pub fn train_batch<H: AsRef<[f32]>>(&mut self, class: usize, hvs: &[H]) {
+        assert!(class < self.n_classes, "class {class} out of range");
         if hvs.is_empty() {
             return;
         }
+        for hv in hvs {
+            assert_eq!(hv.as_ref().len(), self.d);
+        }
         let row = &mut self.sums[class * self.d..(class + 1) * self.d];
         for hv in hvs {
-            assert_eq!(hv.len(), self.d);
-        }
-        for i in 0..self.d {
-            let mut s = 0f32;
-            for hv in hvs {
-                s += hv[i];
+            for (a, b) in row.iter_mut().zip(hv.as_ref()) {
+                *a += b;
             }
-            row[i] += s;
         }
         self.counts[class] += hvs.len() as u32;
-        self.quantized = None;
+        self.packed = None;
     }
 
-    /// Class HVs normalized by shot count (centroid form) and quantized to
-    /// the configured class-memory precision.
-    fn class_hvs(&mut self) -> &[f32] {
-        if self.quantized.is_none() {
-            let mut q = Vec::with_capacity(self.n_classes * self.d);
-            for c in 0..self.n_classes {
-                let cnt = self.counts[c].max(1) as f32;
-                let row: Vec<f32> = self.sums[c * self.d..(c + 1) * self.d]
-                    .iter()
-                    .map(|v| v / cnt)
-                    .collect();
-                let (qr, _) = quant::quantize(&row, self.hv_bits);
-                q.extend(qr);
-            }
-            self.quantized = Some(q);
+    /// Class HVs normalized by shot count (centroid form), row-major.
+    fn normalized_rows(&self) -> Vec<f32> {
+        let mut rows = Vec::with_capacity(self.n_classes * self.d);
+        for c in 0..self.n_classes {
+            let cnt = self.counts[c].max(1) as f32;
+            rows.extend(self.sums[c * self.d..(c + 1) * self.d].iter().map(|v| v / cnt));
         }
-        self.quantized.as_ref().unwrap()
+        rows
+    }
+
+    /// The packed quantized class memory (rebuilt lazily after training).
+    pub fn packed(&mut self) -> &PackedClassHvs {
+        if self.packed.is_none() {
+            self.packed = Some(PackedClassHvs::from_rows(
+                &self.normalized_rows(),
+                self.n_classes,
+                self.d,
+                self.hv_bits,
+            ));
+        }
+        self.packed.as_ref().unwrap()
     }
 
     /// Raw (unquantized, unnormalized) class HV — e.g. for export.
@@ -101,21 +120,65 @@ impl HdcModel {
         &self.sums[class * self.d..(class + 1) * self.d]
     }
 
-    /// Distance from a query HV to every class HV.
+    /// The dequantized f32 view of the packed class memory, row-major —
+    /// what the pre-packed implementation materialized on every rebuild.
+    /// Benches time the plain metric over this as the fair f32 baseline;
+    /// tests use it for magnitude-aware tolerances.
+    pub fn dequantized_class_hvs(&mut self) -> Vec<f32> {
+        self.packed().dequantize_all()
+    }
+
+    /// Distance from a query HV to every class HV, through the packed
+    /// integer datapath (the query is quantized once to `hv_bits`).
     pub fn distances(&mut self, q: &[f32]) -> Vec<f64> {
         assert_eq!(q.len(), self.d);
-        let d = self.d;
         let metric = self.metric;
-        let n_classes = self.n_classes;
-        let hvs = self.class_hvs();
-        (0..n_classes)
-            .map(|c| metric.eval(q, &hvs[c * d..(c + 1) * d]))
+        let packed = self.packed();
+        packed.distances(&packed.quantize_query_for(q, metric), metric)
+    }
+
+    /// The readable reference: quantize the query and every class HV to
+    /// the dequantized f32 representation and evaluate the plain metric.
+    /// This is the numerical oracle for the packed datapath (multi-bit L1
+    /// and all Hamming distances match it bit-for-bit; dot and the 1-bit
+    /// popcount formulas within f32-association tolerance).
+    pub fn distances_oracle(&self, q: &[f32]) -> Vec<f64> {
+        assert_eq!(q.len(), self.d);
+        let (qd, _) = quant::quantize(q, self.hv_bits);
+        let rows = self.normalized_rows();
+        let d = self.d;
+        (0..self.n_classes)
+            .map(|c| {
+                let (cd, _) = quant::quantize(&rows[c * d..(c + 1) * d], self.hv_bits);
+                self.metric.eval(&qd, &cd)
+            })
             .collect()
+    }
+
+    /// Batched [`HdcModel::distances`], sharded over `shards` scoped
+    /// worker threads (`util::parallel::shard_map`). The packed view is
+    /// built once, then borrowed by every shard; output is bit-identical
+    /// to the serial loop for any shard count (DESIGN.md §Threading
+    /// model).
+    pub fn distances_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<Vec<f64>> {
+        let metric = self.metric;
+        let packed = self.packed();
+        // dimension mismatches panic inside quantize_query, like distances()
+        shard_map(queries, shards, |q| {
+            Ok(packed.distances(&packed.quantize_query_for(q, metric), metric))
+        })
+        .expect("packed distances are infallible")
     }
 
     /// Predict the class of a query HV.
     pub fn predict(&mut self, q: &[f32]) -> usize {
         argmin(&self.distances(q))
+    }
+
+    /// Batched [`HdcModel::predict`] over the sharded distance path —
+    /// bit-identical to serial for any shard count.
+    pub fn predict_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<usize> {
+        self.distances_batch(queries, shards).iter().map(|d| argmin(d)).collect()
     }
 
     /// True when every class has at least one shot.
@@ -154,7 +217,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_equals_sequential() {
+    fn batch_is_bit_identical_to_sequential() {
         let d = 64;
         let mut rng = Rng::new(2);
         let hvs: Vec<Vec<f32>> =
@@ -165,10 +228,66 @@ mod tests {
         }
         let mut bat = HdcModel::new(2, d);
         bat.train_batch(0, &hvs);
-        for i in 0..d {
-            assert!((seq.raw_class_hv(0)[i] - bat.raw_class_hv(0)[i]).abs() < 1e-4);
-        }
+        // row-major accumulation adds shots in the same order train_shot
+        // does, so the sums are bit-identical, not merely close
+        assert_eq!(seq.raw_class_hv(0), bat.raw_class_hv(0));
         assert_eq!(seq.counts, bat.counts);
+        // borrowed-slice batches take the same path
+        let views: Vec<&[f32]> = hvs.iter().map(|h| h.as_slice()).collect();
+        let mut bor = HdcModel::new(2, d);
+        bor.train_batch(0, &views);
+        assert_eq!(seq.raw_class_hv(0), bor.raw_class_hv(0));
+    }
+
+    #[test]
+    fn packed_distances_match_oracle() {
+        let d = 96;
+        let mut rng = Rng::new(7);
+        let mut m = HdcModel::new(3, d);
+        for c in 0..3 {
+            for _ in 0..3 {
+                let hv: Vec<f32> = (0..d).map(|_| 2.0 * rng.gauss_f32()).collect();
+                m.train_shot(c, &hv);
+            }
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        for bits in [1u32, 4, 8, 16] {
+            for metric in [Distance::L1, Distance::Dot, Distance::Hamming] {
+                m = m.with_precision(bits).with_metric(metric);
+                let got = m.distances(&q);
+                let want = m.distances_oracle(&q);
+                for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                        "bits={bits} {metric:?} class {c}: {a} vs {b}"
+                    );
+                }
+                assert_eq!(argmin(&got), argmin(&want), "bits={bits} {metric:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn distances_batch_bit_identical_to_serial() {
+        let d = 80;
+        let mut rng = Rng::new(8);
+        let mut m = HdcModel::new(4, d).with_precision(4);
+        for c in 0..4 {
+            let hv: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            m.train_shot(c, &hv);
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..9).map(|_| (0..d).map(|_| rng.gauss_f32()).collect()).collect();
+        let serial = m.distances_batch(&queries, 1);
+        let serial_preds = m.predict_batch(&queries, 1);
+        for shards in [2usize, 3, 7] {
+            assert_eq!(m.distances_batch(&queries, shards), serial, "shards={shards}");
+            assert_eq!(m.predict_batch(&queries, shards), serial_preds, "shards={shards}");
+        }
+        // the serial batch agrees with the one-query path
+        for (q, want) in queries.iter().zip(&serial) {
+            assert_eq!(&m.distances(q), want);
+        }
     }
 
     #[test]
@@ -192,6 +311,24 @@ mod tests {
                 }
             }
             assert_eq!(correct, 3, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn hamming_metric_classifies_binarized_classes() {
+        let d = 512;
+        let mut rng = Rng::new(9);
+        let protos: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..d).map(|_| 2.0 * rng.gauss_f32()).collect())
+            .collect();
+        let mut m = HdcModel::new(3, d).with_precision(1).with_metric(Distance::Hamming);
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..5 {
+                m.train_shot(c, &cluster_hv(&mut rng, p, 0.3));
+            }
+        }
+        for (c, p) in protos.iter().enumerate() {
+            assert_eq!(m.predict(&cluster_hv(&mut rng, p, 0.3)), c);
         }
     }
 

@@ -1,0 +1,563 @@
+//! Packed quantized class memory — the native HDC inference fast path.
+//!
+//! The chip's 256 KB class memory (Section IV-B4) stores class HVs at
+//! 1..16-bit precision and its distance module accumulates in the integer
+//! domain; the capacity *and* energy wins of low precision (Fig. 14a) come
+//! from never widening back to f32. This module mirrors that datapath in
+//! software, the same way `fe::conv::clustered_conv2d_packed` mirrors the
+//! Fig. 4b conv: a packed kernel plus the readable dequantized-f32 path
+//! ([`crate::hdc::HdcModel::distances_oracle`]) kept as the numerical
+//! oracle.
+//!
+//! Storage, chosen by `hv_bits`:
+//! * 1 bit — sign planes in `u64` words; every metric reduces to XOR +
+//!   popcount (the LDC/ImageHD-style binary fast path).
+//! * 2..=4 bits — signed nibbles, two codes per byte (the chip's 4-bit
+//!   class-HV mode).
+//! * 5..=8 / 9..=16 bits — `i8` / `i16` codes.
+//!
+//! Integer-domain accounting, per metric (the oracle contract each kernel
+//! keeps with the dequantized-f32 reference — tested in this module and in
+//! `prop_tests.rs`):
+//! * **Hamming** — exact integer mismatch count; *equal* to the oracle.
+//! * **Dot** — exact `i64` code-product accumulation, scaled once at the
+//!   end; within f32-association tolerance of the oracle (which rounds
+//!   each product to f32).
+//! * **L1, 1-bit** — popcount algebra (`n_match·|s_q−s_c| +
+//!   n_mismatch·(s_q+s_c)`); within accumulation-order tolerance.
+//! * **L1, multi-bit** — per-vector scales make integer-exact L1
+//!   impossible (the chip has one global precision domain; we keep scales
+//!   for f32 interchangeability), so the kernel streams the narrow codes
+//!   and dequantizes in-register with the *same* 4-lane accumulation as
+//!   `distance::l1` — bit-identical to the oracle, at a quarter (i8) to
+//!   half (i16) the memory traffic.
+//! * **Cosine** — off the chip's datapath; evaluated over a materialized
+//!   dequantized row (bit-identical to the oracle, not accelerated).
+//!
+//! Queries quantize **once** ([`PackedClassHvs::quantize_query`]) and every
+//! class comparison then runs in the code domain — unlike the pre-packed
+//! implementation, which dequantized the whole class memory to f32 on
+//! every rebuild and compared against the raw f32 query.
+
+use super::distance::Distance;
+use super::quant;
+
+/// A query HV quantized once to the class-memory precision.
+#[derive(Clone, Debug)]
+pub struct PackedQuery {
+    pub d: usize,
+    pub hv_bits: u32,
+    pub scale: f32,
+    /// integer codes (multi-bit precisions; empty at 1 bit)
+    codes: Vec<i16>,
+    /// dequantized view `code * scale` — streamed by the L1 kernel and the
+    /// cosine fallback
+    deq: Vec<f32>,
+    /// sign plane (1-bit precision; empty otherwise)
+    words: Vec<u64>,
+}
+
+/// Precision-specific backing store, one row per class.
+#[derive(Clone, Debug)]
+enum Store {
+    /// sign planes, `words_per_row` u64 words per class (padding bits 0)
+    B1 { words_per_row: usize, words: Vec<u64> },
+    /// signed nibbles, two codes per byte (low nibble = even element)
+    B4 { bytes_per_row: usize, bytes: Vec<u8> },
+    B8 { codes: Vec<i8> },
+    B16 { codes: Vec<i16> },
+}
+
+/// The packed class memory: every class HV quantized to `hv_bits` with a
+/// per-class scale, stored at its storage precision.
+#[derive(Clone, Debug)]
+pub struct PackedClassHvs {
+    pub n_classes: usize,
+    pub d: usize,
+    pub hv_bits: u32,
+    /// per-class quantization scale
+    scales: Vec<f32>,
+    store: Store,
+}
+
+/// Sign-extend the 4-bit code at element `i` of a nibble row.
+#[inline]
+fn nibble_at(row: &[u8], i: usize) -> i32 {
+    let b = row[i / 2];
+    let n = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+    (((n << 4) as i8) >> 4) as i32
+}
+
+/// Pack the sign plane of a dequantized row (bit set ⇔ value >= 0.0 — the
+/// same predicate `Distance::Hamming` applies, so ±0.0 rows agree too).
+fn pack_signs(codes: &[i32], scale: f32, words_per_row: usize) -> Vec<u64> {
+    let mut words = vec![0u64; words_per_row];
+    for (i, &c) in codes.iter().enumerate() {
+        if c as f32 * scale >= 0.0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+impl PackedClassHvs {
+    /// Quantize `n_classes` row-major f32 class HVs (`rows.len() == n*d`)
+    /// into the packed store.
+    pub fn from_rows(rows: &[f32], n_classes: usize, d: usize, hv_bits: u32) -> Self {
+        assert_eq!(rows.len(), n_classes * d, "rows must be n_classes x d");
+        assert!((1..=16).contains(&hv_bits), "HV precision is 1..=16 bits");
+        let mut scales = Vec::with_capacity(n_classes);
+        let quantized: Vec<Vec<i32>> = (0..n_classes)
+            .map(|c| {
+                let (codes, scale) = quant::quantize_codes(&rows[c * d..(c + 1) * d], hv_bits);
+                scales.push(scale);
+                codes
+            })
+            .collect();
+        let store = match hv_bits {
+            1 => {
+                let wpr = d.div_ceil(64);
+                let mut words = Vec::with_capacity(n_classes * wpr);
+                for (codes, &scale) in quantized.iter().zip(&scales) {
+                    words.extend(pack_signs(codes, scale, wpr));
+                }
+                Store::B1 { words_per_row: wpr, words }
+            }
+            2..=4 => {
+                let bpr = d.div_ceil(2);
+                let mut bytes = vec![0u8; n_classes * bpr];
+                for (c, codes) in quantized.iter().enumerate() {
+                    let row = &mut bytes[c * bpr..(c + 1) * bpr];
+                    for (i, &code) in codes.iter().enumerate() {
+                        let nib = (code as u8) & 0x0F;
+                        row[i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
+                    }
+                }
+                Store::B4 { bytes_per_row: bpr, bytes }
+            }
+            5..=8 => Store::B8 {
+                codes: quantized.iter().flat_map(|r| r.iter().map(|&c| c as i8)).collect(),
+            },
+            _ => Store::B16 {
+                codes: quantized.iter().flat_map(|r| r.iter().map(|&c| c as i16)).collect(),
+            },
+        };
+        PackedClassHvs { n_classes, d, hv_bits, scales, store }
+    }
+
+    /// Whether `metric` reads the query's dequantized f32 view (`deq`):
+    /// only the multi-bit L1 kernel and the cosine fallback do — every
+    /// popcount / integer-domain path works from the codes alone.
+    fn metric_needs_deq(&self, metric: Distance) -> bool {
+        metric == Distance::Cosine || (self.hv_bits > 1 && metric == Distance::L1)
+    }
+
+    /// Quantize a query once to the class-memory precision, usable with
+    /// any metric (the dequantized view is always materialized).
+    pub fn quantize_query(&self, q: &[f32]) -> PackedQuery {
+        self.build_query(q, true)
+    }
+
+    /// Like [`PackedClassHvs::quantize_query`], but skips the O(d)
+    /// dequantized f32 materialization when `metric` never reads it —
+    /// the allocation-light form the hot popcount/integer paths use.
+    pub fn quantize_query_for(&self, q: &[f32], metric: Distance) -> PackedQuery {
+        self.build_query(q, self.metric_needs_deq(metric))
+    }
+
+    fn build_query(&self, q: &[f32], with_deq: bool) -> PackedQuery {
+        assert_eq!(q.len(), self.d, "query dimension mismatch");
+        let (codes, scale) = quant::quantize_codes(q, self.hv_bits);
+        let deq: Vec<f32> = if with_deq {
+            codes.iter().map(|&c| c as f32 * scale).collect()
+        } else {
+            Vec::new()
+        };
+        let words = if self.hv_bits == 1 {
+            pack_signs(&codes, scale, self.d.div_ceil(64))
+        } else {
+            Vec::new()
+        };
+        let codes16 =
+            if self.hv_bits == 1 { Vec::new() } else { codes.iter().map(|&c| c as i16).collect() };
+        PackedQuery { d: self.d, hv_bits: self.hv_bits, scale, codes: codes16, deq, words }
+    }
+
+    /// Distance from a packed query to every class row.
+    pub fn distances(&self, pq: &PackedQuery, metric: Distance) -> Vec<f64> {
+        assert_eq!(pq.d, self.d, "query dimension mismatch");
+        assert_eq!(pq.hv_bits, self.hv_bits, "query quantized at a different precision");
+        assert!(
+            !self.metric_needs_deq(metric) || pq.deq.len() == self.d,
+            "query was packed without the dequantized view {metric:?} reads — \
+             use quantize_query or quantize_query_for({metric:?})"
+        );
+        (0..self.n_classes).map(|c| self.row_distance(c, pq, metric)).collect()
+    }
+
+    fn row_distance(&self, c: usize, pq: &PackedQuery, metric: Distance) -> f64 {
+        let sc = self.scales[c];
+        let sq = pq.scale;
+        if let Store::B1 { words_per_row, words } = &self.store {
+            let row = &words[c * words_per_row..(c + 1) * words_per_row];
+            let mis: u64 =
+                row.iter().zip(&pq.words).map(|(a, b)| (a ^ b).count_ones() as u64).sum();
+            let n_match = self.d as u64 - mis;
+            return match metric {
+                Distance::Hamming => mis as f64,
+                // ±s_q vs ±s_c: matches differ by |s_q - s_c|, mismatches
+                // by s_q + s_c (both rounded in f32 like the oracle's a-b)
+                Distance::L1 => {
+                    n_match as f64 * ((sq - sc).abs() as f64) + mis as f64 * ((sq + sc) as f64)
+                }
+                Distance::Dot => -((n_match as f64 - mis as f64) * ((sq * sc) as f64)),
+                Distance::Cosine => metric.eval(&pq.deq, &self.dequantize_row(c)),
+            };
+        }
+        match metric {
+            Distance::L1 => self.row_l1(c, &pq.deq, sc),
+            Distance::Dot => -(self.row_dot_codes(c, &pq.codes) as f64
+                * (sq as f64)
+                * (sc as f64)),
+            Distance::Hamming => self.row_sign_mismatches(c, &pq.codes) as f64,
+            Distance::Cosine => metric.eval(&pq.deq, &self.dequantize_row(c)),
+        }
+    }
+
+    /// Multi-bit L1: stream the narrow codes, dequantize in-register, and
+    /// accumulate with exactly `distance::l1`'s 4-lane structure so the
+    /// result is bit-identical to the f32 oracle.
+    fn row_l1(&self, c: usize, qd: &[f32], scale: f32) -> f64 {
+        #[inline]
+        fn l1_codes(qd: &[f32], scale: f32, code: impl Fn(usize) -> f32) -> f64 {
+            let mut acc = [0f64; 4];
+            let n4 = qd.len() / 4 * 4;
+            let mut i = 0;
+            while i < n4 {
+                acc[0] += (qd[i] - code(i) * scale).abs() as f64;
+                acc[1] += (qd[i + 1] - code(i + 1) * scale).abs() as f64;
+                acc[2] += (qd[i + 2] - code(i + 2) * scale).abs() as f64;
+                acc[3] += (qd[i + 3] - code(i + 3) * scale).abs() as f64;
+                i += 4;
+            }
+            let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+            for j in n4..qd.len() {
+                s += (qd[j] - code(j) * scale).abs() as f64;
+            }
+            s
+        }
+        let d = self.d;
+        match &self.store {
+            Store::B4 { bytes_per_row, bytes } => {
+                let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
+                l1_codes(qd, scale, |i| nibble_at(row, i) as f32)
+            }
+            Store::B8 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                l1_codes(qd, scale, |i| row[i] as f32)
+            }
+            Store::B16 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                l1_codes(qd, scale, |i| row[i] as f32)
+            }
+            Store::B1 { .. } => unreachable!("1-bit L1 uses the popcount path"),
+        }
+    }
+
+    /// Multi-bit dot: exact integer accumulation over the code domain.
+    fn row_dot_codes(&self, c: usize, qc: &[i16]) -> i64 {
+        let d = self.d;
+        match &self.store {
+            Store::B4 { bytes_per_row, bytes } => {
+                let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
+                qc.iter()
+                    .enumerate()
+                    .map(|(i, &q)| q as i64 * nibble_at(row, i) as i64)
+                    .sum()
+            }
+            Store::B8 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                qc.iter().zip(row).map(|(&q, &cc)| q as i64 * cc as i64).sum()
+            }
+            Store::B16 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                qc.iter().zip(row).map(|(&q, &cc)| q as i64 * cc as i64).sum()
+            }
+            Store::B1 { .. } => unreachable!("1-bit dot uses the popcount path"),
+        }
+    }
+
+    /// Multi-bit Hamming: sign mismatches in the code domain (`code >= 0`
+    /// ⇔ dequantized `>= 0.0`, since scales are non-negative) — exactly
+    /// the oracle's count.
+    fn row_sign_mismatches(&self, c: usize, qc: &[i16]) -> u64 {
+        #[inline]
+        fn count(qc: &[i16], code: impl Fn(usize) -> i32) -> u64 {
+            qc.iter().enumerate().filter(|&(i, &q)| (q >= 0) != (code(i) >= 0)).count() as u64
+        }
+        let d = self.d;
+        match &self.store {
+            Store::B4 { bytes_per_row, bytes } => {
+                let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
+                count(qc, |i| nibble_at(row, i))
+            }
+            Store::B8 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                count(qc, |i| row[i] as i32)
+            }
+            Store::B16 { codes } => {
+                let row = &codes[c * d..(c + 1) * d];
+                count(qc, |i| row[i] as i32)
+            }
+            Store::B1 { .. } => unreachable!("1-bit hamming uses the popcount path"),
+        }
+    }
+
+    /// Dequantize one class row back to the f32 view the oracle sees.
+    pub fn dequantize_row(&self, c: usize) -> Vec<f32> {
+        let d = self.d;
+        let scale = self.scales[c];
+        match &self.store {
+            Store::B1 { words_per_row, words } => {
+                let row = &words[c * words_per_row..(c + 1) * words_per_row];
+                (0..d)
+                    .map(|i| {
+                        if (row[i / 64] >> (i % 64)) & 1 == 1 {
+                            scale
+                        } else {
+                            -scale
+                        }
+                    })
+                    .collect()
+            }
+            Store::B4 { bytes_per_row, bytes } => {
+                let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
+                (0..d).map(|i| nibble_at(row, i) as f32 * scale).collect()
+            }
+            Store::B8 { codes } => {
+                codes[c * d..(c + 1) * d].iter().map(|&v| v as f32 * scale).collect()
+            }
+            Store::B16 { codes } => {
+                codes[c * d..(c + 1) * d].iter().map(|&v| v as f32 * scale).collect()
+            }
+        }
+    }
+
+    /// Dequantize every class row (row-major n_classes x d) — the oracle
+    /// view of the whole class memory.
+    pub fn dequantize_all(&self) -> Vec<f32> {
+        (0..self.n_classes).flat_map(|c| self.dequantize_row(c)).collect()
+    }
+
+    /// Logical storage per class HV — what the chip's class memory holds
+    /// (the `sim::hdc_engine` cross-check ties `distance_tally` to this).
+    pub fn storage_bits_per_class(&self) -> u64 {
+        quant::storage_bits(self.d, self.hv_bits)
+    }
+
+    /// Bits actually allocated per class row, including sub-word padding
+    /// (codes narrower than their container round up: 5..=7-bit codes cost
+    /// i8, 9..=15-bit cost i16).
+    pub fn allocated_bits_per_class(&self) -> u64 {
+        match &self.store {
+            Store::B1 { words_per_row, .. } => *words_per_row as u64 * 64,
+            Store::B4 { bytes_per_row, .. } => *bytes_per_row as u64 * 8,
+            Store::B8 { .. } => self.d as u64 * 8,
+            Store::B16 { .. } => self.d as u64 * 16,
+        }
+    }
+
+    /// 256-bit class-memory segments one query walks — 16 lanes per cycle
+    /// over every class row, the schedule `sim::hdc_engine::distance_tally`
+    /// charges cycles for.
+    pub fn segments_per_query(&self) -> u64 {
+        (self.d as u64).div_ceil(16) * self.n_classes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    const METRICS: [Distance; 4] =
+        [Distance::L1, Distance::Dot, Distance::Hamming, Distance::Cosine];
+
+    fn rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| 3.0 * rng.gauss_f32()).collect()
+    }
+
+    /// Oracle: quantize both sides to f32 and evaluate the plain metric.
+    fn oracle(rows: &[f32], n: usize, d: usize, bits: u32, q: &[f32], m: Distance) -> Vec<f64> {
+        let (qd, _) = quant::quantize(q, bits);
+        (0..n)
+            .map(|c| {
+                let (cd, _) = quant::quantize(&rows[c * d..(c + 1) * d], bits);
+                m.eval(&qd, &cd)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dequantize_reproduces_quantize() {
+        let mut rng = Rng::new(1);
+        for d in [37usize, 64, 130] {
+            let r = rows(&mut rng, 3, d);
+            for bits in [1u32, 2, 4, 6, 8, 12, 16] {
+                let p = PackedClassHvs::from_rows(&r, 3, d, bits);
+                for c in 0..3 {
+                    let (want, _) = quant::quantize(&r[c * d..(c + 1) * d], bits);
+                    let got = p.dequantize_row(c);
+                    assert_eq!(got.len(), want.len());
+                    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(a, b, "d={d} bits={bits} class {c} idx {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_distances_match_oracle_all_precisions_and_metrics() {
+        let mut rng = Rng::new(2);
+        for d in [37usize, 96] {
+            let r = rows(&mut rng, 4, d);
+            let q: Vec<f32> = (0..d).map(|_| 3.0 * rng.gauss_f32()).collect();
+            for bits in [1u32, 4, 8, 16] {
+                let p = PackedClassHvs::from_rows(&r, 4, d, bits);
+                let pq = p.quantize_query(&q);
+                for m in METRICS {
+                    let got = p.distances(&pq, m);
+                    let want = oracle(&r, 4, d, bits, &q, m);
+                    for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+                        // magnitude-aware tolerance: dot/1-bit paths round
+                        // the scale product once instead of per element
+                        let mag = p
+                            .dequantize_row(c)
+                            .iter()
+                            .zip(&pq.deq)
+                            .map(|(x, y)| (x.abs() * y.abs()) as f64)
+                            .sum::<f64>();
+                        let tol = 1e-6 * (1.0 + b.abs() + mag);
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "d={d} bits={bits} {m:?} class {c}: packed {a} vs oracle {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_bit_l1_and_hamming_are_bit_exact() {
+        let mut rng = Rng::new(3);
+        let d = 111; // odd: nibble tail + partial 4-lane tail
+        let r = rows(&mut rng, 3, d);
+        let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        for bits in [4u32, 8, 16] {
+            let p = PackedClassHvs::from_rows(&r, 3, d, bits);
+            let pq = p.quantize_query(&q);
+            assert_eq!(p.distances(&pq, Distance::L1), oracle(&r, 3, d, bits, &q, Distance::L1));
+            assert_eq!(
+                p.distances(&pq, Distance::Hamming),
+                oracle(&r, 3, d, bits, &q, Distance::Hamming)
+            );
+        }
+        // 1-bit Hamming is exact too (popcount == the oracle's sign count)
+        let p = PackedClassHvs::from_rows(&r, 3, d, 1);
+        let pq = p.quantize_query(&q);
+        assert_eq!(
+            p.distances(&pq, Distance::Hamming),
+            oracle(&r, 3, d, 1, &q, Distance::Hamming)
+        );
+    }
+
+    #[test]
+    fn one_bit_popcount_counts_padding_free() {
+        // d not a multiple of 64: padding bits must never contribute
+        let d = 70;
+        let r: Vec<f32> = (0..2 * d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let p = PackedClassHvs::from_rows(&r, 2, d, 1);
+        let q: Vec<f32> = (0..d).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let pq = p.quantize_query(&q);
+        let h = p.distances(&pq, Distance::Hamming);
+        assert_eq!(h, vec![0.0, 0.0], "identical sign patterns: zero mismatches");
+        let q_flipped: Vec<f32> = q.iter().map(|v| -v).collect();
+        let hf = p.distances(&p.quantize_query(&q_flipped), Distance::Hamming);
+        assert_eq!(hf, vec![d as f64, d as f64]);
+    }
+
+    #[test]
+    fn zero_rows_and_queries_are_safe() {
+        let d = 40;
+        let r = vec![0.0f32; 2 * d];
+        for bits in [1u32, 4, 8, 16] {
+            let p = PackedClassHvs::from_rows(&r, 2, d, bits);
+            let pq = p.quantize_query(&vec![0.0; d]);
+            for m in METRICS {
+                let ds = p.distances(&pq, m);
+                assert!(ds.iter().all(|v| v.is_finite()), "bits={bits} {m:?}: {ds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_accounting_matches_precision() {
+        let mut rng = Rng::new(4);
+        let (n, d) = (5usize, 4096usize);
+        let r = rows(&mut rng, n, d);
+        for bits in [1u32, 4, 8, 16] {
+            let p = PackedClassHvs::from_rows(&r, n, d, bits);
+            assert_eq!(p.storage_bits_per_class(), d as u64 * bits as u64);
+            // tight packing at the power-of-two precisions with d % 64 == 0
+            assert_eq!(p.allocated_bits_per_class(), p.storage_bits_per_class());
+            assert_eq!(p.segments_per_query(), (d as u64 / 16) * n as u64);
+        }
+        // in-between precisions round up to their container
+        let p6 = PackedClassHvs::from_rows(&r, n, d, 6);
+        assert_eq!(p6.storage_bits_per_class(), d as u64 * 6);
+        assert_eq!(p6.allocated_bits_per_class(), d as u64 * 8);
+    }
+
+    #[test]
+    fn metric_scoped_queries_skip_deq_but_still_agree() {
+        let mut rng = Rng::new(5);
+        let d = 90;
+        let r = rows(&mut rng, 3, d);
+        let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        let cases = [
+            (1u32, Distance::Hamming),
+            (1, Distance::L1),
+            (4, Distance::Hamming),
+            (8, Distance::Dot),
+        ];
+        for (bits, m) in cases {
+            let p = PackedClassHvs::from_rows(&r, 3, d, bits);
+            let lean = p.quantize_query_for(&q, m);
+            assert!(lean.deq.is_empty(), "bits={bits} {m:?}: integer path needs no deq");
+            assert_eq!(p.distances(&lean, m), p.distances(&p.quantize_query(&q), m));
+        }
+        // metrics that read the f32 view keep it
+        let p = PackedClassHvs::from_rows(&r, 3, d, 4);
+        assert_eq!(p.quantize_query_for(&q, Distance::L1).deq.len(), d);
+        assert_eq!(p.quantize_query_for(&q, Distance::Cosine).deq.len(), d);
+    }
+
+    #[test]
+    #[should_panic(expected = "dequantized view")]
+    fn deq_less_query_rejected_for_l1() {
+        let p = PackedClassHvs::from_rows(&[1.0f32; 16], 1, 16, 4);
+        let lean = p.quantize_query_for(&[0.5f32; 16], Distance::Hamming);
+        p.distances(&lean, Distance::L1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different precision")]
+    fn mismatched_query_precision_rejected() {
+        let p = PackedClassHvs::from_rows(&[1.0f32; 16], 1, 16, 4);
+        let p8 = PackedClassHvs::from_rows(&[1.0f32; 16], 1, 16, 8);
+        let pq = p8.quantize_query(&[0.5f32; 16]);
+        p.distances(&pq, Distance::L1);
+    }
+}

@@ -3,31 +3,38 @@
 //! fits more classes (32 @ 16-bit, 128 @ 4-bit at D=4096) and costs less
 //! energy per distance computation (Fig. 14a).
 
-/// Quantize an f32 HV to `bits`-bit signed integers (symmetric, per-vector
-/// scale), returning the dequantized f32 representation the distance
-/// datapath would see plus the scale.
-pub fn quantize(hv: &[f32], bits: u32) -> (Vec<f32>, f32) {
+/// Quantize an f32 HV to `bits`-bit signed integer codes (symmetric,
+/// per-vector scale). The dequantized representation is `code * scale`
+/// element-wise; this is what [`crate::hdc::packed::PackedClassHvs`]
+/// stores and what [`quantize`] materializes.
+pub fn quantize_codes(hv: &[f32], bits: u32) -> (Vec<i32>, f32) {
     assert!((1..=16).contains(&bits), "HV precision is 1..=16 bits");
     if bits == 1 {
         // sign binarization; scale keeps magnitudes comparable
         let mean_abs = hv.iter().map(|v| v.abs()).sum::<f32>() / hv.len().max(1) as f32;
-        let q: Vec<f32> = hv
-            .iter()
-            .map(|&v| if v >= 0.0 { mean_abs } else { -mean_abs })
-            .collect();
-        return (q, mean_abs);
+        let codes: Vec<i32> = hv.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect();
+        return (codes, mean_abs);
     }
     let max_abs = hv.iter().fold(0f32, |m, &v| m.max(v.abs()));
     if max_abs == 0.0 {
-        return (vec![0.0; hv.len()], 1.0);
+        return (vec![0; hv.len()], 1.0);
     }
     let qmax = ((1i64 << (bits - 1)) - 1) as f32;
     let scale = max_abs / qmax;
-    let q: Vec<f32> = hv
+    let codes: Vec<i32> = hv
         .iter()
-        .map(|&v| (v / scale).round().clamp(-qmax, qmax) * scale)
+        .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32)
         .collect();
-    (q, scale)
+    (codes, scale)
+}
+
+/// Quantize an f32 HV to `bits`-bit signed integers, returning the
+/// dequantized f32 representation the distance datapath would see plus the
+/// scale. `code as f32 * scale` reproduces the historical direct
+/// computation bit-for-bit (integral codes ≤ 2^15 are exact in f32).
+pub fn quantize(hv: &[f32], bits: u32) -> (Vec<f32>, f32) {
+    let (codes, scale) = quantize_codes(hv, bits);
+    (codes.iter().map(|&c| c as f32 * scale).collect(), scale)
 }
 
 /// Storage bits for one class HV at dimension `d`.
@@ -97,6 +104,24 @@ mod tests {
     fn zero_vector_safe() {
         let (q, _) = quantize(&[0.0; 8], 8);
         assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn codes_dequantize_to_quantize_output() {
+        // the integer-code view and the f32 view are the same quantizer:
+        // code * scale must reproduce quantize() exactly, at every precision
+        let mut rng = Rng::new(3);
+        let hv: Vec<f32> = (0..333).map(|_| 5.0 * rng.gauss_f32()).collect();
+        for bits in [1u32, 2, 4, 8, 12, 16] {
+            let (q, s) = quantize(&hv, bits);
+            let (codes, cs) = quantize_codes(&hv, bits);
+            assert_eq!(s, cs, "bits={bits}");
+            let qmax = if bits == 1 { 1 } else { (1i32 << (bits - 1)) - 1 };
+            for (i, (&code, &want)) in codes.iter().zip(&q).enumerate() {
+                assert!(code.abs() <= qmax, "bits={bits} idx {i}: code {code} out of range");
+                assert_eq!(code as f32 * cs, want, "bits={bits} idx {i}");
+            }
+        }
     }
 
     #[test]

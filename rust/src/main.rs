@@ -11,6 +11,7 @@
 //!   fsl-hdnn episode --n-way 10 --k-shot 5 --episodes 3 --backend native
 //!   fsl-hdnn episode --workers 0 --batched true   # 0 = one worker per core
 //!   fsl-hdnn episode --clustered --ch-sub 64 --n-centroids 16  # Fig. 4b FE
+//!   fsl-hdnn episode --hv-bits 1 --metric hamming # packed binary classifier
 //!   fsl-hdnn episode --base-width 32 --stages 3 --image-size 64  # synthetic geometry
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
 //!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
@@ -92,7 +93,13 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     let queries: usize = args.get("queries", rc.workload.queries_per_class);
     let episodes: usize = args.get("episodes", rc.workload.episodes.min(3));
     let seed: u64 = args.get("seed", rc.workload.seed);
-    let hv_bits: u32 = args.get("hv-bits", if rc.chip.hv_bits == 16 { 4 } else { rc.chip.hv_bits });
+    // --hv-bits / --metric: class-memory precision and distance metric for
+    // the packed HDC datapath ([hdc] TOML section)
+    let hv_bits: u32 = args.get("hv-bits", rc.hdc.hv_bits);
+    anyhow::ensure!((1..=16).contains(&hv_bits), "--hv-bits must be 1..=16, got {hv_bits}");
+    let metric = fsl_hdnn::hdc::Distance::from_name(
+        &args.get_str("metric", rc.hdc.metric.name()),
+    )?;
     let ee = args.ee().or(rc.ee);
     // --workers: 0 = auto (one per core), 1 = serial; bit-identical output
     // either way (DESIGN.md §Threading model)
@@ -141,8 +148,13 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     }
     println!(
         "backend={backend:?} model: {}x{}x{} -> F={} D={} | workers={eff_workers} \
-         batched={batched} clustered={eff_clustered}",
-        model.image_size, model.image_size, model.in_channels, model.feature_dim, model.d
+         batched={batched} clustered={eff_clustered} | hv_bits={hv_bits} metric={}",
+        model.image_size,
+        model.image_size,
+        model.in_channels,
+        model.feature_dim,
+        model.d,
+        metric.name()
     );
     let dir2 = dir.clone();
     let mc2 = mc.clone();
@@ -158,7 +170,7 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     let mut blocks = Vec::new();
     for ep in 0..episodes {
         let classes = rng.choose_k(gen.n_classes, n_way);
-        let sid = coord.create_session(n_way, hv_bits)?;
+        let sid = coord.create_session_with(n_way, hv_bits, metric)?;
         for (label, &cls) in classes.iter().enumerate() {
             if batched {
                 let shots: Vec<Vec<f32>> =

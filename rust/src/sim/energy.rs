@@ -33,6 +33,9 @@ pub struct EnergyModel {
     pub hdc_add_pj: f64,
     /// per-bit class-memory access
     pub class_bit_pj: f64,
+    /// standby energy per powered class-memory bank per cycle — what bank
+    /// gating (Fig. 9) saves when occupancy leaves banks dark
+    pub class_bank_idle_pj: f64,
     // --- baseline ---
     /// idle/clock-tree energy per cycle (pJ) — covers leakage + clocking
     pub idle_cycle_pj: f64,
@@ -55,6 +58,9 @@ impl Default for EnergyModel {
             lfsr_step_pj: 0.12,
             hdc_add_pj: 0.35,
             class_bit_pj: 0.9,
+            // 16 powered banks @ 250 MHz ≈ 24 mW standby — a plausible
+            // slice of the 305 mW peak that gating can claw back
+            class_bank_idle_pj: 6.0,
             idle_cycle_pj: 200.0,
             active_overhead_pj: 160.0,
         }
@@ -87,6 +93,16 @@ impl EnergyModel {
             + tally.active_cycles as f64 * self.active_overhead_pj
             + tally.total_cycles as f64 * self.idle_cycle_pj;
         pj * s * 1e-9
+    }
+
+    /// Static class-memory power (mW) with `active_banks` powered at
+    /// (voltage, freq) — the coordinator's `ClassMemoryManager` reports
+    /// `active_banks()`/`gated_banks()`, and the difference between a
+    /// fully-powered and a gated memory is the Fig. 9 saving.
+    pub fn class_mem_static_mw(&self, active_banks: usize, voltage: f64, freq_mhz: f64) -> f64 {
+        // pJ/cycle/bank * banks * cycles/s = pJ/s; 1 pJ/s = 1e-9 mW
+        active_banks as f64 * self.class_bank_idle_pj * freq_mhz * 1e6 * 1e-9
+            * self.vscale(voltage)
     }
 
     /// Average power (mW) given a tally executed at (voltage, freq).
@@ -182,5 +198,19 @@ mod tests {
     fn power_of_empty_tally_is_zero() {
         let m = EnergyModel::default();
         assert_eq!(m.avg_power_mw(&EnergyTally::default(), 1.2, 250.0), 0.0);
+    }
+
+    #[test]
+    fn bank_gating_saves_proportional_standby_power() {
+        let m = EnergyModel::default();
+        let full = m.class_mem_static_mw(16, 1.2, 250.0);
+        let half = m.class_mem_static_mw(8, 1.2, 250.0);
+        assert!((full - 2.0 * half).abs() < 1e-9, "gating 8 of 16 banks halves standby power");
+        assert_eq!(m.class_mem_static_mw(0, 1.2, 250.0), 0.0);
+        // the fully-powered memory sits in a plausible slice of the
+        // 305 mW measured peak (Section VI-B)
+        assert!(full > 5.0 && full < 60.0, "full-memory standby {full} mW");
+        // standby power scales down with voltage like every other event
+        assert!(m.class_mem_static_mw(16, 0.9, 100.0) < full);
     }
 }

@@ -8,6 +8,13 @@
 //!   class update, 16 parallel adders.
 //! * Conventional-RP baseline numbers for Fig. 10 (base matrix stored in
 //!   SRAM instead of generated).
+//!
+//! Like `sim::pe_array` for the conv datapath, the cycle model is
+//! cross-checked against the shipped numerics: `distance_tally`'s segment
+//! walk and class-memory traffic must equal what
+//! [`crate::hdc::packed::PackedClassHvs`] — the datapath the native
+//! classifier actually executes — reports for the same geometry, so cycle
+//! accounting can never drift from the packed implementation.
 
 use super::energy::EnergyTally;
 
@@ -131,5 +138,41 @@ mod tests {
         let t1 = train_update_tally(4096, 1, 16);
         let t5 = train_update_tally(4096, 5, 16);
         assert_eq!(t5.total_cycles, 5 * t1.total_cycles);
+    }
+
+    #[test]
+    fn distance_tally_matches_packed_datapath() {
+        // the cycle model vs the class memory the native classifier
+        // actually walks (hdc::packed) — the pe_array pattern for HDC
+        use crate::hdc::packed::PackedClassHvs;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(1);
+        let (classes, d) = (7usize, 4096usize);
+        let rows: Vec<f32> = (0..classes * d).map(|_| rng.gauss_f32()).collect();
+        for bits in [1u32, 4, 8, 16] {
+            let p = PackedClassHvs::from_rows(&rows, classes, d, bits);
+            let t = distance_tally(d, classes, bits);
+            // one 16-lane segment per active cycle, every class row walked
+            assert_eq!(t.active_cycles, p.segments_per_query(), "bits={bits}");
+            // class-memory traffic equals the packed store's logical bits
+            assert_eq!(
+                t.class_bits,
+                classes as u64 * p.storage_bits_per_class(),
+                "bits={bits}"
+            );
+            // at the chip's power-of-two precisions the software store is
+            // tight: it allocates exactly what the tally charges
+            assert_eq!(p.allocated_bits_per_class(), p.storage_bits_per_class(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn odd_dimension_segments_round_up_together() {
+        use crate::hdc::packed::PackedClassHvs;
+        let (classes, d) = (3usize, 100usize); // not a multiple of 16
+        let rows = vec![0.5f32; classes * d];
+        let p = PackedClassHvs::from_rows(&rows, classes, d, 4);
+        let t = distance_tally(d, classes, 4);
+        assert_eq!(t.active_cycles, p.segments_per_query());
     }
 }

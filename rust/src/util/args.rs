@@ -13,6 +13,17 @@ pub fn arg_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Value of `--name s` from the process arguments, or `default` when the
+/// flag is absent.
+pub fn arg_str(name: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
 /// True when `--name` is present (bare, or followed by anything but
 /// `false`). Lets benches take boolean switches like `--smoke` or
 /// `--clustered false`.
@@ -32,6 +43,7 @@ mod tests {
     fn absent_flag_yields_default() {
         // the test binary's own argv has no --no-such-flag
         assert_eq!(arg_usize("--no-such-flag", 7), 7);
+        assert_eq!(arg_str("--no-such-flag", "l1"), "l1");
         assert!(!arg_flag("--no-such-flag"));
     }
 }

@@ -19,11 +19,13 @@ pub struct BenchLog {
     entries: Vec<Entry>,
 }
 
-struct Entry {
-    kernel: String,
-    ns_per_op: f64,
-    items_per_s: f64,
-    workers: usize,
+enum Entry {
+    /// a timed kernel measurement
+    Timing { kernel: String, ns_per_op: f64, items_per_s: f64, workers: usize },
+    /// a derived unitless ratio (e.g. packed-vs-f32 speedup) — kept out of
+    /// the ns_per_op/items_per_s fields so trajectory tooling never reads
+    /// a ratio as a throughput
+    Ratio { kernel: String, ratio: f64 },
 }
 
 impl BenchLog {
@@ -36,7 +38,19 @@ impl BenchLog {
     /// ops/s for single-kernel cases); `workers` is the sharding width
     /// (1 = serial).
     pub fn record(&mut self, kernel: &str, ns_per_op: f64, items_per_s: f64, workers: usize) {
-        self.entries.push(Entry { kernel: kernel.to_string(), ns_per_op, items_per_s, workers });
+        self.entries.push(Entry::Timing {
+            kernel: kernel.to_string(),
+            ns_per_op,
+            items_per_s,
+            workers,
+        });
+    }
+
+    /// Record a derived unitless ratio (e.g. a packed-vs-f32 speedup).
+    /// Written as `{kernel, ratio}` so it can never be mistaken for a
+    /// timing row.
+    pub fn record_ratio(&mut self, kernel: &str, ratio: f64) {
+        self.entries.push(Entry::Ratio { kernel: kernel.to_string(), ratio });
     }
 
     /// Merge this bench's section into `BENCH_hotpath.json` at the repo
@@ -65,10 +79,18 @@ impl BenchLog {
             .iter()
             .map(|e| {
                 let mut o = BTreeMap::new();
-                o.insert("kernel".to_string(), Json::Str(e.kernel.clone()));
-                o.insert("ns_per_op".to_string(), Json::Num(e.ns_per_op));
-                o.insert("items_per_s".to_string(), Json::Num(e.items_per_s));
-                o.insert("workers".to_string(), Json::Num(e.workers as f64));
+                match e {
+                    Entry::Timing { kernel, ns_per_op, items_per_s, workers } => {
+                        o.insert("kernel".to_string(), Json::Str(kernel.clone()));
+                        o.insert("ns_per_op".to_string(), Json::Num(*ns_per_op));
+                        o.insert("items_per_s".to_string(), Json::Num(*items_per_s));
+                        o.insert("workers".to_string(), Json::Num(*workers as f64));
+                    }
+                    Entry::Ratio { kernel, ratio } => {
+                        o.insert("kernel".to_string(), Json::Str(kernel.clone()));
+                        o.insert("ratio".to_string(), Json::Num(*ratio));
+                    }
+                }
                 Json::Obj(o)
             })
             .collect();
@@ -132,6 +154,24 @@ mod tests {
         assert_eq!(rows[0].get("kernel").unwrap().as_str(), Some("k9"));
         assert_eq!(rows[0].get("ns_per_op").unwrap().as_f64(), Some(7.5));
         assert_eq!(rows[0].get("workers").unwrap().as_usize(), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ratio_rows_use_the_ratio_field() {
+        let path = tmp_path("ratio");
+        let _ = std::fs::remove_file(&path);
+        let mut log = BenchLog::new("bench_r");
+        log.record("timed", 100.0, 1e7, 1);
+        log.record_ratio("timed_speedup", 3.25);
+        log.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("benches").unwrap().get("bench_r").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("ratio").unwrap().as_f64(), Some(3.25));
+        // a ratio row never carries timing fields, and vice versa
+        assert!(rows[1].get("ns_per_op").is_none());
+        assert!(rows[0].get("ratio").is_none());
         let _ = std::fs::remove_file(&path);
     }
 

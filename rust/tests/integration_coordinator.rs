@@ -324,6 +324,82 @@ fn clustered_engine_serves_sessions_end_to_end() {
 }
 
 #[test]
+fn paper_capacity_128way_4bit_and_129_rejected() {
+    // ISSUE 4 acceptance: the paper's capacity table (Section IV-B3) at
+    // D=4096, single branch — 128-way @ 4-bit fills the 256 KB class
+    // memory exactly; 129-way is rejected through ClassMemoryManager
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4],
+        blocks_per_stage: 1,
+        feature_dim: 4,
+        d: 4096,
+        ..Default::default()
+    };
+    let coord = {
+        let c = cfg.clone();
+        Coordinator::start(move || Ok(ComputeEngine::from_config(c)), 1).unwrap()
+    };
+    let sid = coord.create_session(128, 4).unwrap();
+    // the memory is now exactly full: nothing more fits at any precision
+    let err = coord.create_session(1, 1).unwrap_err().to_string();
+    assert!(err.contains("exhausted"), "{err}");
+    let m = coord.metrics();
+    assert_eq!(m.class_mem_used_bits, 128 * 4096 * 4, "128-way @ 4-bit is an exact fit");
+    assert_eq!(m.class_mem_gated_banks, 0, "a full memory powers every bank");
+    coord.call(Request::CloseSession { session: sid });
+    // one class over capacity never fits, even on an empty device
+    let err = coord.create_session(129, 4).unwrap_err().to_string();
+    assert!(err.contains("exhausted"), "129-way @ 4-bit must be rejected: {err}");
+    // the 16-bit boundary from the same table: 32 fits, 33 does not
+    let sid = coord.create_session(32, 16).unwrap();
+    assert!(coord.create_session(1, 16).is_err());
+    coord.call(Request::CloseSession { session: sid });
+    assert!(coord.create_session(33, 16).is_err());
+    // and after the exact-fit session is gone, bank gating resumes
+    let _small = coord.create_session(2, 4).unwrap();
+    let m = coord.metrics();
+    assert!(m.class_mem_gated_banks > 0, "a near-empty memory gates banks: {m:?}");
+}
+
+#[test]
+fn hamming_metric_sessions_serve_queries() {
+    // the packed 1-bit popcount path end to end through the coordinator
+    // (D=256 keeps the binarized code distance well above sampling noise)
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4, 8],
+        blocks_per_stage: 1,
+        feature_dim: 8,
+        d: 256,
+        ..Default::default()
+    };
+    let coord = {
+        let c = cfg.clone();
+        Coordinator::start(move || Ok(ComputeEngine::from_config(c)), 3).unwrap()
+    };
+    let sid = coord.create_session_with(2, 1, fsl_hdnn::hdc::Distance::Hamming).unwrap();
+    let gen = ImageGen::new(8, 8, 53);
+    let mut rng = Rng::new(53);
+    for class in 0..2 {
+        for _ in 0..3 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    let mut correct = 0;
+    let total = 12;
+    for i in 0..total {
+        let class = i % 2;
+        let out = coord.query(sid, gen.sample(class, &mut rng), None).unwrap();
+        correct += (out.prediction == class) as usize;
+    }
+    assert!(correct * 2 > total, "binary hamming session must beat chance: {correct}/{total}");
+}
+
+#[test]
 fn oversized_class_batch_flushes_in_k_shot_groups() {
     // 7 shots at k=3: two full batches train through the batched FE path,
     // one shot stays pending until FinishTraining flushes it
@@ -338,6 +414,17 @@ fn oversized_class_batch_flushes_in_k_shot_groups() {
         other => panic!("unexpected {other:?}"),
     }
     assert_eq!(coord.finish_training(sid).unwrap(), 7);
+}
+
+#[test]
+fn out_of_range_hv_bits_rejected_not_panicked() {
+    let coord = start_synthetic(3, ParallelConfig::default());
+    for bits in [0u32, 17, 64] {
+        let err = coord.create_session(2, bits).unwrap_err().to_string();
+        assert!(err.contains("1..=16"), "bits={bits}: {err}");
+    }
+    // the worker survived and still serves valid requests
+    assert!(coord.create_session(2, 16).is_ok());
 }
 
 #[test]

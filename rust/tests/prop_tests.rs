@@ -83,7 +83,9 @@ fn prop_batcher_conservation() {
     }
 }
 
-/// Batched HDC training == sequential training (any k, d, values).
+/// Batched HDC training == sequential training (any k, d, values) — the
+/// row-major accumulation adds shots in `train_shot` order, so the sums
+/// are bit-identical, not merely close.
 #[test]
 fn prop_hdc_batch_equals_sequential() {
     for case in 0..CASES {
@@ -99,9 +101,73 @@ fn prop_hdc_batch_equals_sequential() {
         }
         let mut bat = HdcModel::new(1, d);
         bat.train_batch(0, &hvs);
-        for i in 0..d {
-            let (a, b) = (seq.raw_class_hv(0)[i], bat.raw_class_hv(0)[i]);
-            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "case {case} idx {i}: {a} vs {b}");
+        assert_eq!(seq.raw_class_hv(0), bat.raw_class_hv(0), "case {case}: bit-identical sums");
+        assert_eq!(seq.counts, bat.counts, "case {case}");
+    }
+}
+
+/// The packed class-memory datapath == the dequantized-f32 oracle:
+/// distances agree within f32-association tolerance (multi-bit L1 and
+/// hamming exactly), predictions agree, and the sharded batch path is
+/// bit-identical to serial — across the full precision x metric x
+/// dimension x worker grid (ISSUE 4 acceptance).
+#[test]
+fn prop_packed_matches_dequantized_oracle() {
+    use fsl_hdnn::hdc::{distance::argmin, Distance};
+    for &d in &[64usize, 4096] {
+        let cases = if d == 4096 { 2 } else { 8 };
+        for case in 0..cases {
+            let mut rng = Rng::new(13_000 + d as u64 * 31 + case);
+            let n_classes = 3 + rng.below(3);
+            let mut shots: Vec<(usize, Vec<f32>)> = Vec::new();
+            for c in 0..n_classes {
+                for _ in 0..(1 + rng.below(3)) {
+                    shots.push((c, (0..d).map(|_| 3.0 * rng.gauss_f32()).collect()));
+                }
+            }
+            let queries: Vec<Vec<f32>> =
+                (0..7).map(|_| (0..d).map(|_| 3.0 * rng.gauss_f32()).collect()).collect();
+            for bits in [1u32, 4, 8, 16] {
+                for metric in [Distance::L1, Distance::Hamming, Distance::Dot] {
+                    let mut m =
+                        HdcModel::new(n_classes, d).with_precision(bits).with_metric(metric);
+                    for (c, hv) in &shots {
+                        m.train_shot(*c, hv);
+                    }
+                    let serial = m.distances_batch(&queries, 1);
+                    for (q, packed) in queries.iter().zip(&serial) {
+                        let want = m.distances_oracle(q);
+                        // magnitude-aware tolerance: the dot kernel rounds
+                        // the scale product once instead of per element
+                        let qmag: f64 = q.iter().map(|v| v.abs() as f64).sum();
+                        for (c, (a, b)) in packed.iter().zip(&want).enumerate() {
+                            assert!(
+                                (a - b).abs() <= 1e-6 * (1.0 + b.abs() + 8.0 * qmag),
+                                "d={d} case {case} bits={bits} {metric:?} class {c}: \
+                                 packed {a} vs oracle {b}"
+                            );
+                        }
+                        assert_eq!(
+                            argmin(packed),
+                            argmin(&want),
+                            "d={d} case {case} bits={bits} {metric:?}: predictions diverged"
+                        );
+                        // multi-bit L1 and every hamming distance are
+                        // bit-exact by construction
+                        if metric == Distance::Hamming || (metric == Distance::L1 && bits > 1) {
+                            assert_eq!(packed, &want, "d={d} bits={bits} {metric:?}");
+                        }
+                    }
+                    for workers in [2usize, 7] {
+                        assert_eq!(
+                            m.distances_batch(&queries, workers),
+                            serial,
+                            "d={d} case {case} bits={bits} {metric:?} workers={workers}: \
+                             sharded distances must be bit-identical to serial"
+                        );
+                    }
+                }
+            }
         }
     }
 }
@@ -388,7 +454,15 @@ fn shipped_config_presets_load() {
         rc.apply_toml(&doc).unwrap_or_else(|e| panic!("{path}: {e}"));
         assert!(rc.batched_training, "{path}: presets use batched training");
         assert!(rc.chip.hv_bits <= 16);
+        // both presets pin the session-side HDC knobs and keep them in
+        // step with the simulator-side chip precision
+        assert_eq!(rc.hdc.hv_bits, rc.chip.hv_bits, "{path}: [hdc] and [chip] hv_bits agree");
     }
+    let doc = Doc::load(std::path::Path::new("configs/low_power.toml")).unwrap();
+    let mut rc = RunConfig::default();
+    rc.apply_toml(&doc).unwrap();
+    assert_eq!(rc.hdc.hv_bits, 1, "low-power corner runs binary class HVs");
+    assert_eq!(rc.hdc.metric, fsl_hdnn::hdc::Distance::Hamming);
     // the paper preset pins the headline workload
     let doc = Doc::load(std::path::Path::new("configs/paper_10way5shot.toml")).unwrap();
     let mut rc = RunConfig::default();
