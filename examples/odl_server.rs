@@ -11,7 +11,10 @@
 //! Run with:  cargo run --release --example odl_server -- [episodes] [backend]
 //! Add `--clustered` to serve through the packed weight-clustered FE,
 //! `--hv-bits N` / `--metric m` to pick the class-memory precision and
-//! distance metric of the packed HDC datapath.
+//! distance metric of the packed HDC datapath, `--ee E_S,E_C` to move the
+//! early-exit operating point (default 2,2). Queries run the staged
+//! inference loop, so the reported `FE layers skipped` were never
+//! computed, and the energy table prices each exit depth separately.
 
 use std::time::Instant;
 
@@ -69,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     let gen = ImageGen::new(model.image_size, 64, 2024);
     let mut rng = Rng::new(2024);
-    let ee = EeConfig::paper_default();
+    let ee = EeConfig::parse(&arg_str("--ee", "2,2"))?;
 
     let mut accs = Vec::new();
     let mut train_wall_s = Vec::new();
@@ -126,9 +129,18 @@ fn main() -> anyhow::Result<()> {
     t.row(&["query latency p50 / p95".into(),
         format!("{:.1} / {:.1} ms", stats::percentile(&query_wall_ms, 50.0),
             stats::percentile(&query_wall_ms, 95.0))]);
-    t.row(&["avg CONV blocks used (EE 2,2)".into(),
+    t.row(&[format!("avg CONV blocks used (EE {},{})", ee.e_s, ee.e_c),
         format!("{:.2} / {}", stats::mean(&blocks), model.n_branches())]);
     t.row(&["early-exit rate".into(), format!("{:.0}%", 100.0 * m.early_exit_rate)]);
+    // staged inference work counters: the skipped layers were truncated
+    // out of the FE, not replayed post hoc
+    let fe_total = m.fe_layers_executed + m.fe_layers_skipped;
+    t.row(&["FE layers executed / skipped".into(),
+        format!("{} / {} ({:.0}% skipped)", m.fe_layers_executed, m.fe_layers_skipped,
+            100.0 * m.fe_layers_skipped as f64 / fe_total.max(1) as f64)]);
+    t.row(&["branch HVs encoded".into(), m.branch_hvs_encoded.to_string()]);
+    t.row(&["queries by exit depth (1..)".into(),
+        format!("{:?}", &m.query_depth_hist[..model.n_branches().min(8)])]);
     if let Some(lm) = live_metrics {
         // the bank-gating story (Fig. 9): occupancy -> powered banks ->
         // standby mW the energy model says gating saved
@@ -157,6 +169,16 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} images/s", 1e3 / train.latency_ms_per_image)]);
     t2.row(&["inference latency (measured EE mix)".into(), format!("{:.2} ms", infer.latency_ms)]);
     t2.row(&["inference energy (measured EE mix)".into(), format!("{:.3} mJ", infer.energy_mj)]);
+    // energy-per-query split by exit depth: each depth priced separately,
+    // weighted by the coordinator's live exit histogram
+    let depth_table = chip.infer_depth_table(n_way);
+    for (s, r) in depth_table.iter().enumerate() {
+        let count = m.query_depth_hist.get(s).copied().unwrap_or(0);
+        if count > 0 {
+            t2.row(&[format!("  @ exit block {} (x{count} queries)", s + 1),
+                format!("{:.2} ms / {:.3} mJ each", r.latency_ms, r.energy_mj)]);
+        }
+    }
     t2.row(&["avg power".into(), format!("{:.0} mW", train.avg_power_mw)]);
     t2.print();
     Ok(())

@@ -13,6 +13,10 @@
 //! `--hv-bits N` (1..=16) picks the class-memory precision and
 //! `--metric l1|dot|cosine|hamming` the distance metric of the packed HDC
 //! datapath (`--hv-bits 1 --metric hamming` is the binary popcount path).
+//! `--ee E_S,E_C` picks the early-exit operating point (default the
+//! paper's 2,2); queries run the staged loop, so an exit at block b means
+//! the remaining FE stages are never computed — the printed layer
+//! counters prove it.
 
 use fsl_hdnn::config::{EeConfig, HdcConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
@@ -27,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
     let hv_bits = arg_usize("--hv-bits", HdcConfig::default().hv_bits as usize) as u32;
     let metric = Distance::from_name(&arg_str("--metric", HdcConfig::default().metric.name()))?;
+    let ee = EeConfig::parse(&arg_str("--ee", "2,2"))?;
     // read geometry on the caller side; build the engine inside the worker.
     // Without `make artifacts` the native backend runs synthetic weights.
     let model = ComputeEngine::open_or_synthetic_with(
@@ -87,23 +92,38 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..queries {
             let img = gen.sample(cls, &mut rng);
             let full = coord.query(session, img.clone(), None)?;
-            let ee = coord.query(session, img, Some(EeConfig::paper_default()))?;
+            let out = coord.query(session, img, Some(ee))?;
             correct_full += (full.prediction == label) as usize;
-            correct_ee += (ee.prediction == label) as usize;
-            blocks_ee += ee.blocks_used;
+            correct_ee += (out.prediction == label) as usize;
+            blocks_ee += out.blocks_used;
         }
     }
     let total = n_way * queries;
     println!(
-        "accuracy: full {:.1}% | early-exit (E_s=2,E_c=2) {:.1}% using {:.2}/4 blocks on average",
+        "accuracy: full {:.1}% | early-exit (E_s={},E_c={}) {:.1}% using {:.2}/{} blocks \
+         on average",
         100.0 * correct_full as f64 / total as f64,
+        ee.e_s,
+        ee.e_c,
         100.0 * correct_ee as f64 / total as f64,
-        blocks_ee as f64 / total as f64
+        blocks_ee as f64 / total as f64,
+        model.n_branches()
     );
     let m = coord.metrics();
     println!(
         "device latency: add_shot {:.2} ms, query {:.2} ms (early-exit rate {:.0}%)",
         m.add_shot_ms_mean, m.query_ms_mean, 100.0 * m.early_exit_rate
+    );
+    // staged inference: these counters report FE work that actually ran —
+    // the skipped layers were never computed, not replayed post hoc
+    let fe_total = m.fe_layers_executed + m.fe_layers_skipped;
+    println!(
+        "staged FE work: {} conv layers executed, {} skipped by early exit ({:.0}%), \
+         {} branch HVs encoded",
+        m.fe_layers_executed,
+        m.fe_layers_skipped,
+        100.0 * m.fe_layers_skipped as f64 / fe_total.max(1) as f64,
+        m.branch_hvs_encoded
     );
     Ok(())
 }

@@ -1,20 +1,53 @@
 //! Fig. 17 — average CONV layers executed and FSL accuracy for each
-//! early-exit configuration (E_s, E_c), per dataset preset. Each of the
+//! early-exit configuration (E_s, E_c), per dataset preset; each of the
 //! 4 CONV blocks of ResNet-18 contains ~4-5 CONV layers (Fig. 11).
+//!
+//! Two parts:
+//! 1. the accuracy/depth sweep over the calibrated synthetic branch
+//!    features (the paper-shape protocol, `experiments::eval_early_exit`);
+//! 2. the **measured staged hot path**: a live coordinator serving the
+//!    same (E_s, E_c) grid through `Request::Query` /
+//!    `Request::QueryBatch`, with measured per-query latency, the
+//!    provable `fe_layers_executed` / `branch_hvs_encoded` counters
+//!    (early exit truncates real FE compute — DESIGN.md §Staged
+//!    inference) and the chip simulator's energy-per-query split by exit
+//!    depth. Headline numbers land in `BENCH_hotpath.json`.
+//!
+//! `--smoke` shrinks the workload to CI size; every numeric assert
+//! (counter accounting, batch-vs-serial bit-identity) still runs.
 
-use fsl_hdnn::config::EeConfig;
+use std::time::Instant;
+
+use fsl_hdnn::config::{ChipConfig, EeConfig, ModelConfig};
+use fsl_hdnn::coordinator::Coordinator;
+use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::data::{DatasetPreset, SyntheticDataset};
 use fsl_hdnn::experiments::eval_early_exit;
+use fsl_hdnn::runtime::ComputeEngine;
 use fsl_hdnn::sim::workload::{prefix, resnet18_224};
+use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::args::arg_flag;
+use fsl_hdnn::util::bench_log::BenchLog;
+use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::table::Table;
 
 fn main() {
-    let (n_way, k_shot, queries, episodes, d) = (5, 5, 8, 6, 2048);
+    let smoke = arg_flag("--smoke");
+    let mut log = BenchLog::new("fig17_early_exit");
+
+    // --- part 1: accuracy vs depth over calibrated branch features ---
+    let (n_way, k_shot) = (5, 5);
+    let (queries, episodes, d) = if smoke { (2, 1, 256) } else { (8, 6, 2048) };
     let layers = resnet18_224();
     let total_layers = layers.len();
     let layers_at_stage: Vec<usize> = (0..4).map(|s| prefix(&layers, s).len()).collect();
 
-    for preset in [DatasetPreset::Cifar100, DatasetPreset::Flower102, DatasetPreset::TrafficSign] {
+    let presets: &[DatasetPreset] = if smoke {
+        &[DatasetPreset::Flower102]
+    } else {
+        &[DatasetPreset::Cifar100, DatasetPreset::Flower102, DatasetPreset::TrafficSign]
+    };
+    for &preset in presets {
         let ds = SyntheticDataset::new(preset, 128, 21);
         let mut t = Table::new(
             &format!("Fig. 17 on {}: EE config vs depth & accuracy", preset.name()),
@@ -57,7 +90,177 @@ fn main() {
         t.print();
         println!();
     }
-    println!("paper shape check: (1,2) skips up to ~45% of layers at a ~3.5% accuracy cost;");
+
+    // --- part 2: the measured staged hot path -------------------------
+    // A live coordinator on the synthetic native engine; every query runs
+    // the staged loop, so the layer/encode counters report what actually
+    // executed and early exit shows up as measured latency, not as an
+    // after-the-fact replay.
+    let cfg = if smoke {
+        // same 4-branch shape, CI-sized geometry (asserts are identical)
+        ModelConfig {
+            image_size: 16,
+            widths: vec![8, 16, 32, 64],
+            blocks_per_stage: 1,
+            feature_dim: 64,
+            d: 512,
+            ..Default::default()
+        }
+    } else {
+        ModelConfig::default()
+    };
+    let probe = ComputeEngine::from_config(cfg.clone());
+    let plan_layers = probe.fe_plan_layers();
+    let n_branches = probe.model().n_branches();
+    let coord = {
+        let c = cfg.clone();
+        Coordinator::start(move || Ok(ComputeEngine::from_config(c)), k_shot).unwrap()
+    };
+    let gen = ImageGen::new(cfg.image_size, 32, 17);
+    let mut rng = Rng::new(17);
+    let classes = rng.choose_k(gen.n_classes, n_way);
+    let sid = coord.create_session(n_way, 4).unwrap();
+    for (label, &cls) in classes.iter().enumerate() {
+        let shots: Vec<Vec<f32>> = (0..k_shot).map(|_| gen.sample(cls, &mut rng)).collect();
+        coord.add_shot_batch(sid, label, shots).unwrap();
+    }
+    coord.finish_training(sid).unwrap();
+    let per_class = if smoke { 2 } else { 8 };
+    let mut queryset: Vec<(Vec<f32>, usize)> = Vec::new();
+    for (label, &cls) in classes.iter().enumerate() {
+        let mut r = Rng::new(900 + cls as u64);
+        for _ in 0..per_class {
+            queryset.push((gen.sample(cls, &mut r), label));
+        }
+    }
+
+    // counter accounting, asserted per query class (the ISSUE acceptance:
+    // an exit at block b executes only stages 0..=b and encodes b+1 HVs)
+    let before = coord.metrics();
+    let out_full = coord.query(sid, queryset[0].0.clone(), None).unwrap();
+    let mid = coord.metrics();
+    assert_eq!(out_full.blocks_used, n_branches);
+    assert_eq!(
+        mid.fe_layers_executed - before.fe_layers_executed,
+        plan_layers as u64,
+        "a no-EE query runs the whole plan"
+    );
+    assert_eq!(
+        mid.branch_hvs_encoded - before.branch_hvs_encoded,
+        1,
+        "a no-EE query encodes only the final branch"
+    );
+    let ee22 = EeConfig::paper_default();
+    let out_ee = coord.query(sid, queryset[0].0.clone(), Some(ee22)).unwrap();
+    let after = coord.metrics();
+    assert_eq!(
+        after.fe_layers_executed - mid.fe_layers_executed,
+        probe.fe_layers_through(out_ee.blocks_used) as u64,
+        "an exit at block {} executes exactly the prefix plan",
+        out_ee.blocks_used
+    );
+    assert_eq!(
+        after.branch_hvs_encoded - mid.branch_hvs_encoded,
+        out_ee.blocks_used as u64,
+        "an exit at block b encodes exactly b+1 branch HVs"
+    );
+
+    // ragged QueryBatch must be bit-identical to the serial loop
+    let imgs: Vec<Vec<f32>> = queryset.iter().map(|(i, _)| i.clone()).collect();
+    let serial: Vec<_> =
+        imgs.iter().map(|i| coord.query(sid, i.clone(), Some(ee22)).unwrap()).collect();
+    let batched = coord.query_batch(sid, imgs.clone(), Some(ee22)).unwrap();
+    assert_eq!(batched, serial, "QueryBatch must match serial Query outcomes");
+
+    // the measured table: per config, wall latency + counted layers +
+    // chip-sim energy weighted by the live exit histogram
+    let chip = Chip::paper(ChipConfig::default());
+    let depth_table = chip.infer_depth_table(n_way);
+    let full_sim = chip.infer_image(n_way, None);
+    let mut t = Table::new(
+        "measured staged serving (native engine; energy from the chip sim @250 MHz/1.2 V)",
+        &[
+            "config (E_s-E_c)",
+            "ms/query (measured)",
+            "avg FE layers (counted)",
+            "layers skipped",
+            "sim energy mJ/query",
+            "accuracy",
+        ],
+    );
+    let mut rows: Vec<(String, Option<EeConfig>)> = vec![("no EE".into(), None)];
+    for (e_s, e_c) in [(1usize, 1usize), (1, 2), (2, 2), (2, 3)] {
+        rows.push((format!("{e_s}-{e_c}"), Some(EeConfig { e_s, e_c })));
+    }
+    let mut full_ms = 0.0;
+    let mut ee22_ms = 0.0;
+    let mut ee22_mj = 0.0;
+    let full_mj = full_sim.energy_mj;
+    for (name, ee) in rows {
+        let m0 = coord.metrics();
+        let t0 = Instant::now();
+        let outs = coord.query_batch(sid, imgs.clone(), ee).unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / outs.len() as f64;
+        let m1 = coord.metrics();
+        let layers = (m1.fe_layers_executed - m0.fe_layers_executed) as f64 / outs.len() as f64;
+        let correct = outs.iter().zip(&queryset).filter(|(o, (_, l))| o.prediction == *l).count();
+        let mj = match ee {
+            None => full_sim.energy_mj,
+            Some(_) => {
+                outs.iter()
+                    .map(|o| depth_table[o.blocks_used - 1].energy_mj)
+                    .sum::<f64>()
+                    / outs.len() as f64
+            }
+        };
+        if ee.is_none() {
+            full_ms = ms;
+        } else if ee == Some(ee22) {
+            ee22_ms = ms;
+            ee22_mj = mj;
+        }
+        t.row(&[
+            name,
+            format!("{ms:.2}"),
+            format!("{layers:.1}/{plan_layers}"),
+            format!("{:.0}%", 100.0 * (1.0 - layers / plan_layers as f64)),
+            format!("{mj:.3}"),
+            format!("{:.1}%", 100.0 * correct as f64 / outs.len() as f64),
+        ]);
+    }
+    t.print();
+
+    // the tracked hot-path numbers (EXPERIMENTS.md §Perf fill-in rows)
+    log.record("query_full_staged", full_ms * 1e6, 1e3 / full_ms, 1);
+    log.record("query_ee_2_2_staged", ee22_ms * 1e6, 1e3 / ee22_ms, 1);
+    log.record_ratio("ee_2_2_vs_full_latency_speedup", full_ms / ee22_ms);
+    log.record_ratio("ee_2_2_vs_full_sim_energy", ee22_mj / full_mj);
+    let m = coord.metrics();
+    let frac = m.fe_layers_skipped as f64
+        / (m.fe_layers_executed + m.fe_layers_skipped).max(1) as f64;
+    log.record_ratio("fe_layers_skipped_frac", frac);
+    println!(
+        "\nEE 2-2 vs full: {:.2}x measured latency, {:.2}x sim energy, \
+         {:.0}% of FE layers skipped across the run",
+        full_ms / ee22_ms,
+        ee22_mj / full_mj,
+        100.0 * frac
+    );
+    // saving requires queries to actually exit; the counter asserts above
+    // are the deterministic gate, this one documents the energy win
+    if m.early_exit_rate > 0.5 {
+        assert!(
+            ee22_mj < full_mj,
+            "with most queries exiting, EE energy must beat the full pass: \
+             {ee22_mj} vs {full_mj} mJ"
+        );
+    }
+
+    match log.write() {
+        Ok(path) => println!("bench trajectory written to {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench trajectory: {e}"),
+    }
+    println!("\npaper shape check: (1,2) skips up to ~45% of layers at a ~3.5% accuracy cost;");
     println!("(1,3) keeps near-optimal accuracy skipping 15-20%; (2,2) is the sweet spot:");
     println!("20-25% skipped at <1% loss");
 }

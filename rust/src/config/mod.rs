@@ -94,6 +94,29 @@ impl ModelConfig {
     pub fn n_branches(&self) -> usize {
         self.widths.len()
     }
+
+    /// Conv layers (stem + block convs + projection shortcuts) the
+    /// standard block plan executes through the first `n_stages` stages —
+    /// the accounting unit of the `fe_layers_executed` /
+    /// `fe_layers_skipped` metrics. Mirrors the layer set
+    /// `FeModel::synthetic` builds (a projection wherever a block changes
+    /// channel count); the native backend reports its real plan instead,
+    /// this formula covers the PJRT backend whose plan lives inside the
+    /// artifact.
+    pub fn conv_layers_through(&self, n_stages: usize) -> usize {
+        let mut layers = 1; // stem
+        let mut cin = self.widths.first().copied().unwrap_or(0); // stem output
+        for &w in self.widths.iter().take(n_stages) {
+            for _ in 0..self.blocks_per_stage {
+                layers += 2;
+                if cin != w {
+                    layers += 1; // projection shortcut
+                }
+                cin = w;
+            }
+        }
+        layers
+    }
 }
 
 /// Batch-parallel execution policy for the native backend: how `fe_forward`
@@ -201,6 +224,29 @@ impl EeConfig {
     /// The paper's chosen operating point (Fig. 17): E_s=2, E_c=2.
     pub fn paper_default() -> Self {
         EeConfig { e_s: 2, e_c: 2 }
+    }
+
+    /// Validate a client-supplied configuration. Both fields are 1-based
+    /// and must be >= 1; the coordinator rejects invalid configs with
+    /// `Response::Error` instead of letting
+    /// [`crate::coordinator::EarlyExitController::new`] panic its worker
+    /// thread (the same bug class as out-of-range `hv_bits`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.e_s >= 1, "ee.e_s must be >= 1 (1-based block index), got 0");
+        anyhow::ensure!(self.e_c >= 1, "ee.e_c must be >= 1 consecutive agreements, got 0");
+        Ok(())
+    }
+
+    /// Parse the `--ee E_S,E_C` flag the examples and CLI take (e.g.
+    /// `"2,2"`), validated before it ever reaches a request.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        anyhow::ensure!(parts.len() == 2, "--ee expects E_S,E_C (e.g. 2,2), got {s:?}");
+        let e_s = parts[0].parse().map_err(|_| anyhow::anyhow!("bad E_S in --ee {s:?}"))?;
+        let e_c = parts[1].parse().map_err(|_| anyhow::anyhow!("bad E_C in --ee {s:?}"))?;
+        let ee = EeConfig { e_s, e_c };
+        ee.validate()?;
+        Ok(ee)
     }
 }
 
@@ -421,6 +467,39 @@ mod tests {
         assert!(RunConfig::default().apply_toml(&doc).is_err());
         let doc = toml::Doc::parse("[model]\nbase_width = 0\n").unwrap();
         assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn conv_layers_through_counts_the_standard_plan() {
+        // default geometry: widths [16,32,64,128] x 2 blocks; stage 0 has
+        // no projection (stem already outputs 16 channels), stages 1..3
+        // project on their first block
+        let m = ModelConfig::default();
+        assert_eq!(m.conv_layers_through(0), 1, "stem only");
+        assert_eq!(m.conv_layers_through(1), 5);
+        assert_eq!(m.conv_layers_through(2), 10);
+        assert_eq!(m.conv_layers_through(4), 20);
+        // clamped past the last stage
+        assert_eq!(m.conv_layers_through(99), 20);
+    }
+
+    #[test]
+    fn ee_config_validation() {
+        assert!(EeConfig::paper_default().validate().is_ok());
+        assert!(EeConfig { e_s: 1, e_c: 1 }.validate().is_ok());
+        let err = EeConfig { e_s: 0, e_c: 2 }.validate().unwrap_err().to_string();
+        assert!(err.contains("e_s"), "{err}");
+        let err = EeConfig { e_s: 2, e_c: 0 }.validate().unwrap_err().to_string();
+        assert!(err.contains("e_c"), "{err}");
+    }
+
+    #[test]
+    fn ee_config_parse_flag_syntax() {
+        assert_eq!(EeConfig::parse("2,2").unwrap(), EeConfig::paper_default());
+        assert_eq!(EeConfig::parse(" 1 , 3 ").unwrap(), EeConfig { e_s: 1, e_c: 3 });
+        for bad in ["2", "2,2,2", "a,1", "0,2", "1,0", ""] {
+            assert!(EeConfig::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

@@ -34,6 +34,16 @@ impl EarlyExitController {
         EarlyExitController { cfg, table: Vec::new(), consecutive: 0, last_pred: None }
     }
 
+    /// Validating constructor for client-supplied configs: returns an
+    /// error instead of panicking. The coordinator runs every
+    /// `Request::Query{,Batch}` config through this (or
+    /// [`EeConfig::validate`]) so a bad (E_s, E_c) becomes a
+    /// `Response::Error`, never a dead worker thread.
+    pub fn try_new(cfg: EeConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Self::new(cfg))
+    }
+
     /// Feed the prediction of CONV block `block` (0-based). Returns the
     /// decision; callers must feed blocks in order.
     pub fn feed(&mut self, block: usize, pred: usize) -> EeDecision {
@@ -141,5 +151,18 @@ mod tests {
     #[should_panic(expected = "E_s is 1-based")]
     fn rejects_zero_es() {
         ee(0, 1);
+    }
+
+    #[test]
+    fn try_new_reports_instead_of_panicking() {
+        let err = EarlyExitController::try_new(EeConfig { e_s: 0, e_c: 1 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("e_s"), "{err}");
+        let err = EarlyExitController::try_new(EeConfig { e_s: 1, e_c: 0 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("e_c"), "{err}");
+        assert!(EarlyExitController::try_new(EeConfig::paper_default()).is_ok());
     }
 }

@@ -11,6 +11,11 @@ pub enum Op {
     Query,
 }
 
+/// Exit-depth histogram bins: queries that used `bin + 1` CONV blocks.
+/// Sized for the deepest synthetic geometry (`[model] stages` is capped at
+/// 8); deeper models clamp into the last bin.
+pub const DEPTH_BINS: usize = 8;
+
 /// Live metrics owned by the worker thread.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -19,6 +24,18 @@ pub struct Metrics {
     pub query: OnlineStats,
     pub queries_exited_early: u64,
     pub blocks_used_total: u64,
+    /// per-exit-depth query counts: `query_depth_hist[b]` = queries that
+    /// used b+1 CONV blocks (the Fig. 17 exit histogram, live)
+    pub query_depth_hist: [u64; DEPTH_BINS],
+    /// FE conv layers actually executed across queries — with staged
+    /// inference an early exit truncates real compute, so this is a work
+    /// counter, not an inference from `blocks_used`
+    pub fe_layers_executed: u64,
+    /// FE conv layers early exit skipped (plan total minus executed)
+    pub fe_layers_skipped: u64,
+    /// branch HVs cRP-encoded for queries (an exit at block b encodes
+    /// exactly b+1; a no-EE query encodes only the final branch)
+    pub branch_hvs_encoded: u64,
     pub errors: u64,
     /// feature-mode inputs shorter than the model's F that were zero-padded
     /// — legal but usually a client bug worth surfacing (empty features are
@@ -60,9 +77,29 @@ impl Metrics {
 
     pub fn record_query_depth(&mut self, blocks_used: usize, exited_early: bool) {
         self.blocks_used_total += blocks_used as u64;
+        self.query_depth_hist[blocks_used.saturating_sub(1).min(DEPTH_BINS - 1)] += 1;
         if exited_early {
             self.queries_exited_early += 1;
         }
+    }
+
+    /// Depth accounting for FE-bypassing feature queries: they count into
+    /// the blocks average (the classifier used the final branch) but NOT
+    /// into `query_depth_hist` — the histogram weights FE energy by exit
+    /// depth, and a query that ran zero FE stages must not be priced as a
+    /// full FE pass.
+    pub fn record_feature_query_depth(&mut self, blocks_used: usize) {
+        self.blocks_used_total += blocks_used as u64;
+    }
+
+    /// Account the work one query (or one batch of queries) actually
+    /// executed: conv layers run, conv layers the exit skipped, branch HVs
+    /// encoded. Fed from the staged executor's counters, so the numbers
+    /// prove what ran rather than inferring it from `blocks_used`.
+    pub fn record_query_work(&mut self, layers_executed: u64, layers_skipped: u64, hvs: u64) {
+        self.fe_layers_executed += layers_executed;
+        self.fe_layers_skipped += layers_skipped;
+        self.branch_hvs_encoded += hvs;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -79,6 +116,10 @@ impl Metrics {
             query_ms_max: if self.query.n == 0 { 0.0 } else { self.query.max },
             early_exit_rate: self.queries_exited_early as f64 / q,
             avg_blocks_used: self.blocks_used_total as f64 / q,
+            query_depth_hist: self.query_depth_hist,
+            fe_layers_executed: self.fe_layers_executed,
+            fe_layers_skipped: self.fe_layers_skipped,
+            branch_hvs_encoded: self.branch_hvs_encoded,
             // class-memory occupancy/gating are owned by the coordinator
             // worker's ClassMemoryManager and filled in at GetMetrics time
             class_mem_used_bits: 0,
@@ -102,6 +143,14 @@ pub struct MetricsSnapshot {
     pub query_ms_max: f64,
     pub early_exit_rate: f64,
     pub avg_blocks_used: f64,
+    /// queries per exit depth: bin b = queries that used b+1 CONV blocks
+    pub query_depth_hist: [u64; DEPTH_BINS],
+    /// FE conv layers actually executed across all queries
+    pub fe_layers_executed: u64,
+    /// FE conv layers early exit skipped (never computed, not post-hoc)
+    pub fe_layers_skipped: u64,
+    /// branch HVs cRP-encoded for queries (exit at block b ⇒ b+1 encodes)
+    pub branch_hvs_encoded: u64,
     /// class-memory occupancy (bits) across open sessions
     pub class_mem_used_bits: u64,
     /// banks that must stay powered for that occupancy (Fig. 9)
@@ -147,6 +196,32 @@ mod tests {
         // n = 0 records nothing (and must not divide by zero)
         m.record_batch(Op::Train, 0, 1.0);
         assert_eq!(m.snapshot().trains, 0);
+    }
+
+    #[test]
+    fn depth_histogram_and_work_counters() {
+        let mut m = Metrics::default();
+        m.record_query_depth(2, true);
+        m.record_query_depth(2, true);
+        m.record_query_depth(4, false);
+        m.record_query_depth(99, false); // deeper than DEPTH_BINS clamps
+        let mut want = [0u64; DEPTH_BINS];
+        want[1] = 2;
+        want[3] = 1;
+        want[DEPTH_BINS - 1] = 1;
+        assert_eq!(m.snapshot().query_depth_hist, want);
+        // FE-bypassing feature queries count blocks but never enter the
+        // histogram that prices FE energy by exit depth
+        m.record_feature_query_depth(4);
+        assert_eq!(m.snapshot().query_depth_hist, want);
+        assert_eq!(m.blocks_used_total, 2 + 2 + 4 + 99 + 4);
+        // work counters accumulate what the staged executor reports
+        m.record_query_work(7, 13, 2);
+        m.record_query_work(20, 0, 1);
+        let s = m.snapshot();
+        assert_eq!(s.fe_layers_executed, 27);
+        assert_eq!(s.fe_layers_skipped, 13);
+        assert_eq!(s.branch_hvs_encoded, 3);
     }
 
     #[test]

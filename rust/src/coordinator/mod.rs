@@ -3,7 +3,10 @@
 //!
 //! A few-shot session accumulates labeled shots, trains the HDC model in a
 //! single pass (batched per class, Fig. 12), and serves queries with the
-//! early-exit policy (Fig. 11). [`server`] wraps it all behind an
+//! early-exit policy (Fig. 11) — **staged**: FE stages, per-branch encode
+//! and the (E_s, E_c) controller interleave, so an exit truncates real FE
+//! compute instead of being decided post hoc (DESIGN.md §Staged
+//! inference). [`server`] wraps it all behind an
 //! mpsc-request event loop with a worker thread owning the compute engine
 //! (engines are built *inside* the worker: PJRT clients are not `Send`),
 //! so callers interact with the device the way a host driver would.

@@ -32,8 +32,19 @@ pub enum Request {
     QueryFeature { session: u64, feature: Vec<f32> },
     /// Flush partial batches and finish single-pass training.
     FinishTraining { session: u64 },
-    /// Classify an image; `ee` enables early exit.
+    /// Classify an image; `ee` enables early exit. Runs the staged
+    /// inference loop: FE stages interleave with per-branch encode +
+    /// predict, so an exit at block *b* means stages *b+1..* are never
+    /// computed (DESIGN.md §Staged inference).
     Query { session: u64, image: Vec<f32>, ee: Option<EeConfig> },
+    /// Classify a whole batch of images in one request, with the same
+    /// staged early-exit semantics per image. The batch is processed
+    /// stage by stage over a **ragged survivor set** — images that exit
+    /// drop out, so later stages run on an ever-smaller batch sharded
+    /// across the engine's worker pool. Outcomes are bit-identical to
+    /// issuing serial `Query` requests for any worker count. Replies
+    /// `QueryBatchResult` with one outcome per image in input order.
+    QueryBatch { session: u64, images: Vec<Vec<f32>>, ee: Option<EeConfig> },
     /// Drop a session.
     CloseSession { session: u64 },
     /// Snapshot metrics.
@@ -49,6 +60,7 @@ pub enum Response {
     ShotAccepted { session: u64, pending: usize, trained_classes: usize },
     TrainingDone { session: u64, shots: usize },
     QueryResult { session: u64, outcome: QueryOutcome },
+    QueryBatchResult { session: u64, outcomes: Vec<QueryOutcome> },
     SessionClosed { session: u64 },
     Metrics(crate::coordinator::metrics::MetricsSnapshot),
     ShuttingDown,
@@ -61,6 +73,14 @@ impl Response {
         match self {
             Response::QueryResult { outcome, .. } => outcome,
             other => panic!("expected QueryResult, got {other:?}"),
+        }
+    }
+
+    /// Convenience for tests: unwrap a batched query result.
+    pub fn expect_query_batch(self) -> Vec<QueryOutcome> {
+        match self {
+            Response::QueryBatchResult { outcomes, .. } => outcomes,
+            other => panic!("expected QueryBatchResult, got {other:?}"),
         }
     }
 }

@@ -165,6 +165,19 @@ impl DeviceRouter {
         self.devices[r.device].query(r.local, image, ee)
     }
 
+    /// Route a whole query batch to the session's device in one request —
+    /// the inference mirror of [`DeviceRouter::add_shot_batch`]: the
+    /// device runs the staged ragged-survivor loop over its worker pool.
+    pub fn query_batch(
+        &self,
+        session: u64,
+        images: Vec<Vec<f32>>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<Vec<QueryOutcome>> {
+        let r = self.route(session)?;
+        self.devices[r.device].query_batch(r.local, images, ee)
+    }
+
     pub fn close_session(&mut self, session: u64) -> anyhow::Result<()> {
         let r = self.route(session)?;
         self.devices[r.device]

@@ -9,11 +9,13 @@ use std::time::Instant;
 
 use crate::config::EeConfig;
 use crate::coordinator::batcher::ClassBatcher;
+use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
 use crate::coordinator::metrics::{Metrics, Op};
 use crate::coordinator::request::{Request, Response};
-use crate::coordinator::session::FslSession;
+use crate::coordinator::session::{FslSession, QueryOutcome};
 use crate::hdc::class_mem::{Allocation, ClassMemoryManager};
-use crate::runtime::ComputeEngine;
+use crate::runtime::{ComputeEngine, FeStageExec};
+use crate::util::parallel::{shard_map, shard_map_mut};
 
 struct SessionState {
     session: FslSession,
@@ -86,6 +88,125 @@ impl Worker {
             .ok_or_else(|| anyhow::anyhow!("unknown session {session_id}"))?;
         st.session.train_batch(class, &shots_hvs);
         Ok(())
+    }
+
+    /// Staged early-exit inference (DESIGN.md §Staged inference): FE
+    /// stages, per-branch encode and the (E_s, E_c) controller
+    /// interleave, so an exit at block *b* means stages *b+1..* are
+    /// **never computed** and only *b+1* branch HVs are ever encoded.
+    /// Without `ee`, every stage runs but only the final branch feature
+    /// is encoded (the other branches feed nothing). Predictions are
+    /// bit-identical to the post-hoc path
+    /// ([`FslSession::query_early_exit`] over pre-extracted HVs).
+    ///
+    /// Batches run stage by stage over a **ragged survivor set**: every
+    /// round steps the surviving images' FE executors one stage (sharded
+    /// over the worker pool), encodes their branch features as one batch,
+    /// classifies them through the shared branch model, and feeds each
+    /// image's controller — images that exit drop out, so the batch
+    /// shrinks as it deepens. Outcomes are bit-identical to serial
+    /// one-image calls in input order, for any worker count (DESIGN.md
+    /// §Threading model); `Request::Query` IS the one-image call, so the
+    /// two requests share this single decision path.
+    ///
+    /// Split borrows (engine / session / metrics are disjoint `Worker`
+    /// fields) keep the staged executors borrowing the engine while the
+    /// session predicts.
+    fn query_batch_staged(
+        engine: &ComputeEngine,
+        session: &mut FslSession,
+        metrics: &mut Metrics,
+        images: &[Vec<f32>],
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<Vec<QueryOutcome>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let par = engine.parallelism();
+        // stems run up front; the native fan-out captures the FeModel
+        // (always Sync) rather than the engine, which with the `pjrt`
+        // feature owns a thread-bound client — that backend instead takes
+        // one batched whole-prefix fe_forward behind the same seam
+        let mut execs: Vec<FeStageExec> = match engine {
+            ComputeEngine::Native { fe, .. } => {
+                shard_map(images, par.shards_for(images.len()), |img| fe.stage_start(img))?
+                    .into_iter()
+                    .map(FeStageExec::Native)
+                    .collect()
+            }
+            ComputeEngine::Pjrt { .. } => {
+                let m = engine.model();
+                let layers_total = m.conv_layers_through(m.n_branches());
+                engine
+                    .fe_forward(images)?
+                    .into_iter()
+                    .map(|feats| FeStageExec::Whole { feats, next: 0, layers_total })
+                    .collect()
+            }
+        };
+        let n_stages = execs[0].n_stages();
+        let mut ctls: Vec<Option<EarlyExitController>> =
+            images.iter().map(|_| ee.map(EarlyExitController::new)).collect();
+        let mut outcomes: Vec<Option<QueryOutcome>> = vec![None; images.len()];
+        let mut hvs_encoded = 0u64;
+        for stage in 0..n_stages {
+            let last = stage + 1 == n_stages;
+            // the ragged survivor set: images still in flight, input order
+            let alive: Vec<usize> =
+                (0..images.len()).filter(|&i| outcomes[i].is_none()).collect();
+            if alive.is_empty() {
+                break;
+            }
+            let mut survivors: Vec<&mut FeStageExec> = execs
+                .iter_mut()
+                .zip(&outcomes)
+                .filter_map(|(e, o)| o.is_none().then_some(e))
+                .collect();
+            let feats: Vec<Vec<f32>> =
+                shard_map_mut(&mut survivors, par.shards_for(alive.len()), |e| {
+                    e.step()?.ok_or_else(|| anyhow::anyhow!("FE plan exhausted mid-batch"))
+                })?;
+            if ee.is_none() && !last {
+                continue; // no-EE: nothing to encode until the final stage
+            }
+            let hvs = engine.encode(&feats)?;
+            hvs_encoded += hvs.len() as u64;
+            let preds = session.predict_branch_batch(stage, &hvs, par.shards_for(hvs.len()));
+            for (k, &i) in alive.iter().enumerate() {
+                let pred = preds[k];
+                match &mut ctls[i] {
+                    Some(c) => {
+                        if let EeDecision::Exit(p) = c.feed(stage, pred) {
+                            outcomes[i] = Some(QueryOutcome {
+                                prediction: p,
+                                blocks_used: stage + 1,
+                                exited_early: !last,
+                            });
+                        } else if last {
+                            outcomes[i] = Some(QueryOutcome {
+                                prediction: pred,
+                                blocks_used: n_stages,
+                                exited_early: false,
+                            });
+                        }
+                    }
+                    None => {
+                        outcomes[i] = Some(QueryOutcome {
+                            prediction: pred,
+                            blocks_used: n_stages,
+                            exited_early: false,
+                        });
+                    }
+                }
+            }
+        }
+        let executed: u64 = execs.iter().map(|e| e.layers_run() as u64).sum();
+        let plan = engine.fe_plan_layers() as u64 * images.len() as u64;
+        metrics.record_query_work(executed, plan.saturating_sub(executed), hvs_encoded);
+        outcomes
+            .into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("query left without outcome")))
+            .collect()
     }
 
     fn handle(&mut self, req: Request) -> Response {
@@ -231,8 +352,12 @@ impl Worker {
                     return Response::Error(format!("unknown session {session}"));
                 };
                 let outcome = st.session.query_full(&hv);
+                // feature-mode queries bypass the FE entirely: one encode,
+                // zero conv layers, and no entry in the exit-depth
+                // histogram (which prices FE work by depth)
+                self.metrics.record_query_work(0, 0, 1);
                 self.metrics.record(Op::Query, t0.elapsed().as_secs_f64());
-                self.metrics.record_query_depth(outcome.blocks_used, outcome.exited_early);
+                self.metrics.record_feature_query_depth(outcome.blocks_used);
                 Response::QueryResult { session, outcome }
             }
             Request::FinishTraining { session } => {
@@ -254,24 +379,68 @@ impl Worker {
             }
             Request::Query { session, image, ee } => {
                 let t0 = Instant::now();
-                let hvs = match self.extract_hvs(std::slice::from_ref(&image)) {
-                    Ok(h) => h,
+                // client-supplied (E_s, E_c) is validated at the request
+                // boundary: a zero field used to panic the worker thread
+                // inside EarlyExitController::new (the hv_bits bug class)
+                if let Some(cfg) = &ee {
+                    if let Err(e) = cfg.validate() {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                }
+                let Some(st) = self.sessions.get_mut(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("unknown session {session}"));
+                };
+                // one image through the shared staged decision path
+                let outcome = match Self::query_batch_staged(
+                    &self.engine,
+                    &mut st.session,
+                    &mut self.metrics,
+                    std::slice::from_ref(&image),
+                    ee,
+                ) {
+                    Ok(mut o) => o.remove(0),
                     Err(e) => {
                         self.metrics.errors += 1;
                         return Response::Error(e.to_string());
                     }
                 };
+                self.metrics.record(Op::Query, t0.elapsed().as_secs_f64());
+                self.metrics.record_query_depth(outcome.blocks_used, outcome.exited_early);
+                Response::QueryResult { session, outcome }
+            }
+            Request::QueryBatch { session, images, ee } => {
+                let t0 = Instant::now();
+                if let Some(cfg) = &ee {
+                    if let Err(e) = cfg.validate() {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
+                }
+                let n = images.len();
                 let Some(st) = self.sessions.get_mut(&session) else {
                     self.metrics.errors += 1;
                     return Response::Error(format!("unknown session {session}"));
                 };
-                let outcome = match ee {
-                    Some(cfg) => st.session.query_early_exit(&hvs[0], cfg),
-                    None => st.session.query_full(&hvs[0][hvs[0].len() - 1]),
+                let outcomes = match Self::query_batch_staged(
+                    &self.engine,
+                    &mut st.session,
+                    &mut self.metrics,
+                    &images,
+                    ee,
+                ) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        return Response::Error(e.to_string());
+                    }
                 };
-                self.metrics.record(Op::Query, t0.elapsed().as_secs_f64());
-                self.metrics.record_query_depth(outcome.blocks_used, outcome.exited_early);
-                Response::QueryResult { session, outcome }
+                self.metrics.record_batch(Op::Query, n, t0.elapsed().as_secs_f64());
+                for o in &outcomes {
+                    self.metrics.record_query_depth(o.blocks_used, o.exited_early);
+                }
+                Response::QueryBatchResult { session, outcomes }
             }
             Request::CloseSession { session } => {
                 if self.sessions.remove(&session).is_some() {
@@ -421,6 +590,22 @@ impl Coordinator {
     ) -> anyhow::Result<crate::coordinator::session::QueryOutcome> {
         match self.call(Request::Query { session, image, ee }) {
             Response::QueryResult { outcome, .. } => Ok(outcome),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    /// Classify a whole batch in one request: staged early exit per image
+    /// over the ragged survivor set, bit-identical to serial
+    /// [`Coordinator::query`] calls (outcomes in input order).
+    pub fn query_batch(
+        &self,
+        session: u64,
+        images: Vec<Vec<f32>>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<Vec<crate::coordinator::session::QueryOutcome>> {
+        match self.call(Request::QueryBatch { session, images, ee }) {
+            Response::QueryBatchResult { outcomes, .. } => Ok(outcomes),
             Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }

@@ -96,10 +96,33 @@ impl FslSession {
         QueryOutcome { prediction: pred, blocks_used: self.n_branches, exited_early: false }
     }
 
-    /// Query with early exit: `branch_hvs` are fed block by block; the
-    /// controller stops as soon as (E_s, E_c) is satisfied. In hardware
-    /// the remaining blocks are never computed — callers use
-    /// `blocks_used` to account saved FE work.
+    /// Prediction of CONV block `b`'s classifier for one encoded HV — the
+    /// per-stage step of the coordinator's staged inference loop
+    /// (DESIGN.md §Staged inference).
+    pub fn predict_branch(&mut self, b: usize, hv: &[f32]) -> usize {
+        self.branch_models[b].predict(hv)
+    }
+
+    /// Batched [`FslSession::predict_branch`] for a ragged survivor set:
+    /// every HV is classified by the *same* branch model `b`, sharded over
+    /// the worker pool with output bit-identical to the serial loop
+    /// (DESIGN.md §Threading model).
+    pub fn predict_branch_batch(
+        &mut self,
+        b: usize,
+        hvs: &[Vec<f32>],
+        shards: usize,
+    ) -> Vec<usize> {
+        self.branch_models[b].predict_batch(hvs, shards)
+    }
+
+    /// Query with early exit over **pre-computed** branch HVs: the
+    /// controller stops as soon as (E_s, E_c) is satisfied. This is the
+    /// post-hoc reference path (all features already extracted — what the
+    /// coordinator executed before the staged refactor); the serving path
+    /// in `coordinator::server` interleaves FE stages with these same
+    /// predictions so the skipped tail is never computed, and property
+    /// tests hold the two bit-identical.
     pub fn query_early_exit(&mut self, branch_hvs: &[Vec<f32>], ee: EeConfig) -> QueryOutcome {
         assert_eq!(branch_hvs.len(), self.n_branches);
         let mut ctl = EarlyExitController::new(ee);
@@ -206,6 +229,31 @@ mod tests {
         assert_eq!(FslSession::predict_from_distances(&[f64::NAN, 5.0, 3.0]), 2);
         assert_eq!(FslSession::predict_from_distances(&[f64::NAN, f64::NAN, 1.0, 2.0]), 2);
         assert_eq!(FslSession::predict_from_distances(&[f64::NAN]), 0, "all-NaN falls back");
+    }
+
+    #[test]
+    fn predict_branch_matches_query_paths() {
+        let d = 64;
+        let mut rng = Rng::new(9);
+        let ps = protos(&mut rng, 2, d);
+        let mut s = FslSession::new(1, 2, d, 2);
+        for (c, p) in ps.iter().enumerate() {
+            for _ in 0..4 {
+                let hvs: Vec<Vec<f32>> = (0..2).map(|_| hv(&mut rng, p)).collect();
+                s.train_shot(c, &hvs);
+            }
+        }
+        let q = hv(&mut rng, &ps[1]);
+        // the final branch's predict_branch IS query_full's prediction
+        assert_eq!(s.predict_branch(1, &q), s.query_full(&q).prediction);
+        // batched branch prediction is bit-identical to the serial loop
+        let qs: Vec<Vec<f32>> = (0..5).map(|_| hv(&mut rng, &ps[0])).collect();
+        for b in 0..2 {
+            let serial: Vec<usize> = qs.iter().map(|x| s.predict_branch(b, x)).collect();
+            for shards in [1, 2, 7] {
+                assert_eq!(s.predict_branch_batch(b, &qs, shards), serial, "b={b}");
+            }
+        }
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod resnet;
 
 pub use conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, PackedIdx, Tensor3};
 pub use kmeans::{cluster_layer, ClusteredLayer};
-pub use resnet::FeModel;
+pub use resnet::{FeModel, StagedForward};

@@ -13,6 +13,11 @@
 //! `forward` runs the packed two-phase kernel
 //! ([`clustered_conv2d_packed`]) instead of the dense conv — the chip's
 //! cheap path (Fig. 4b) is then also the native fast path.
+//!
+//! All forwards run through the resumable [`StagedForward`] executor
+//! ([`FeModel::stage_start`] + `step`), so the early-exit loop can stop
+//! the FE *between* stages and the skipped tail is provably never
+//! computed (DESIGN.md §Staged inference).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -242,10 +247,15 @@ impl FeModel {
         })
     }
 
-    /// Shared body of `forward` / `forward_prefix`: run the stem and the
-    /// first `n_stages` stages of the plan, tapping a branch feature after
-    /// each stage.
-    fn forward_stages(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+    /// Begin a resumable staged forward pass (Section V-A): runs the stem
+    /// and returns an executor whose [`StagedForward::step`] runs one
+    /// stage's blocks at a time, yielding that stage's branch feature.
+    /// Stopping after stage *b* means stages *b+1..* are **never
+    /// computed** — the early-exit truncation the chip gets for free by
+    /// streaming the FE block by block. `forward` / `forward_prefix` are
+    /// reimplemented on top of this executor, so there is exactly one
+    /// forward code path and a stepped pass is bit-identical to both.
+    pub fn stage_start(&self, image: &[f32]) -> anyhow::Result<StagedForward<'_>> {
         let s = self.cfg.image_size;
         anyhow::ensure!(
             image.len() == s * s * self.cfg.in_channels,
@@ -254,26 +264,38 @@ impl FeModel {
             s * s * self.cfg.in_channels
         );
         let x = Tensor3::from_vec(s, s, self.cfg.in_channels, image.to_vec());
-        let mut h = self.run_layer(self.stem, &x, 1)?.relu();
-        let fmax = self.cfg.feature_dim;
+        let h = self.run_layer(self.stem, &x, 1)?.relu();
+        Ok(StagedForward { model: self, h, next_stage: 0, layers_run: 1 })
+    }
+
+    /// Shared body of `forward` / `forward_prefix`: one staged executor
+    /// stepped through the first `n_stages` stages of the plan, tapping a
+    /// branch feature after each stage.
+    fn forward_stages(&self, image: &[f32], n_stages: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut exec = self.stage_start(image)?;
         let n_stages = n_stages.min(self.stages.len());
         let mut branches = Vec::with_capacity(n_stages);
-        for stage in &self.stages[..n_stages] {
-            for bp in stage {
-                let y = self.run_layer(bp.conv1, &h, bp.stride)?.relu();
-                let y = self.run_layer(bp.conv2, &y, 1)?;
-                let skip = match bp.proj {
-                    Some(pi) => self.run_layer(pi, &h, bp.stride)?,
-                    None if bp.stride != 1 => h.subsample(bp.stride),
-                    None => h.clone(),
-                };
-                h = y.add(&skip).relu();
-            }
-            let mut feat = h.global_avg_pool();
-            feat.resize(fmax, 0.0);
+        while exec.stages_run() < n_stages {
+            let feat = exec.step()?.expect("plan has n_stages stages");
             branches.push(feat);
         }
         Ok(branches)
+    }
+
+    /// Conv layers (stem + block convs + projection shortcuts) executed
+    /// through the first `n_stages` stages of the plan — the unit of the
+    /// coordinator's `fe_layers_executed` / `fe_layers_skipped` counters.
+    pub fn layers_through_stage(&self, n_stages: usize) -> usize {
+        1 + self.stages[..n_stages.min(self.stages.len())]
+            .iter()
+            .flatten()
+            .map(|bp| 2 + bp.proj.is_some() as usize)
+            .sum::<usize>()
+    }
+
+    /// Total planned conv layers (= `layers_through_stage` of every stage).
+    pub fn n_layers(&self) -> usize {
+        self.layers_through_stage(self.stages.len())
     }
 
     /// Forward pass: image (H*W*3 flat NHWC) -> 4 branch features, each
@@ -309,6 +331,75 @@ impl FeModel {
     /// Layer geometries for the chip simulator: (name, cout, k, cin).
     pub fn layer_geometries(&self) -> Vec<(String, usize, usize, usize)> {
         self.layers.iter().map(|l| (l.name.clone(), l.cout, l.k, l.cin)).collect()
+    }
+}
+
+/// A resumable staged forward pass: holds the activation between stages so
+/// the early-exit controller can decide *between* stages whether the next
+/// one runs at all. Created by [`FeModel::stage_start`] (which runs the
+/// stem); each [`StagedForward::step`] runs one stage's blocks and yields
+/// that stage's branch feature, padded to `feature_dim`.
+///
+/// The executor borrows the model (weights are never cloned), so stepping
+/// is `&mut self` on the executor but `&self` on the model — a batch of
+/// executors can be stepped in parallel under the DESIGN.md §Threading
+/// model contract.
+#[derive(Clone, Debug)]
+pub struct StagedForward<'m> {
+    model: &'m FeModel,
+    /// activation after the stem / the last completed stage
+    h: Tensor3,
+    next_stage: usize,
+    /// conv layers executed so far (stem counts as one)
+    layers_run: usize,
+}
+
+impl StagedForward<'_> {
+    /// Stages in the plan (= branch count).
+    pub fn n_stages(&self) -> usize {
+        self.model.stages.len()
+    }
+
+    /// Stages completed so far (0 right after `stage_start`).
+    pub fn stages_run(&self) -> usize {
+        self.next_stage
+    }
+
+    /// Whether every stage has run.
+    pub fn is_done(&self) -> bool {
+        self.next_stage >= self.model.stages.len()
+    }
+
+    /// Conv layers executed so far (stem + block convs + projections) —
+    /// the provable-work counter behind `fe_layers_executed`.
+    pub fn layers_run(&self) -> usize {
+        self.layers_run
+    }
+
+    /// Run the next stage's blocks and return its branch feature (padded
+    /// to `feature_dim`), or `None` when every stage has already run.
+    pub fn step(&mut self) -> anyhow::Result<Option<Vec<f32>>> {
+        let Some(stage) = self.model.stages.get(self.next_stage) else {
+            return Ok(None);
+        };
+        for bp in stage {
+            let y = self.model.run_layer(bp.conv1, &self.h, bp.stride)?.relu();
+            let y = self.model.run_layer(bp.conv2, &y, 1)?;
+            self.layers_run += 2;
+            let skip = match bp.proj {
+                Some(pi) => {
+                    self.layers_run += 1;
+                    self.model.run_layer(pi, &self.h, bp.stride)?
+                }
+                None if bp.stride != 1 => self.h.subsample(bp.stride),
+                None => self.h.clone(),
+            };
+            self.h = y.add(&skip).relu();
+        }
+        self.next_stage += 1;
+        let mut feat = self.h.global_avg_pool();
+        feat.resize(self.model.cfg.feature_dim, 0.0);
+        Ok(Some(feat))
     }
 }
 
@@ -427,6 +518,52 @@ mod tests {
     #[test]
     fn param_count_positive() {
         assert!(tiny_model(7).n_params() > 500);
+    }
+
+    #[test]
+    fn staged_steps_match_forward_and_count_layers() {
+        // tiny_model plan: stem(1) + s0b0(2 convs) + s1b0(2 convs + proj)
+        let m = tiny_model(20);
+        assert_eq!(m.n_layers(), 6);
+        assert_eq!(m.layers_through_stage(0), 1);
+        assert_eq!(m.layers_through_stage(1), 3);
+        assert_eq!(m.layers_through_stage(2), 6);
+        let mut rng = Rng::new(21);
+        let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect();
+        let full = m.forward(&img).unwrap();
+        let mut exec = m.stage_start(&img).unwrap();
+        assert_eq!((exec.n_stages(), exec.stages_run(), exec.layers_run()), (2, 0, 1));
+        assert!(!exec.is_done());
+        let f0 = exec.step().unwrap().unwrap();
+        assert_eq!(f0, full[0], "stage 0 branch must equal the full pass");
+        assert_eq!(exec.layers_run(), m.layers_through_stage(1));
+        let f1 = exec.step().unwrap().unwrap();
+        assert_eq!(f1, full[1]);
+        assert_eq!(exec.layers_run(), m.n_layers());
+        assert!(exec.is_done());
+        // stepping past the plan is a clean None, not an error
+        assert!(exec.step().unwrap().is_none());
+        assert_eq!(exec.layers_run(), m.n_layers(), "exhausted executor runs nothing");
+    }
+
+    #[test]
+    fn staged_rejects_wrong_image_size() {
+        let m = tiny_model(22);
+        assert!(m.stage_start(&[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn staged_clustered_matches_forward() {
+        let m = tiny_model(23).into_clustered();
+        let mut rng = Rng::new(24);
+        let img: Vec<f32> = (0..8 * 8 * 3).map(|_| rng.gauss_f32()).collect();
+        let full = m.forward(&img).unwrap();
+        let mut exec = m.stage_start(&img).unwrap();
+        let mut stepped = Vec::new();
+        while let Some(f) = exec.step().unwrap() {
+            stepped.push(f);
+        }
+        assert_eq!(stepped, full, "clustered staged pass must be bit-identical to forward");
     }
 
     #[test]

@@ -64,15 +64,11 @@ impl Args {
         self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
-    fn ee(&self) -> Option<EeConfig> {
-        self.kv.get("ee").map(|s| {
-            let parts: Vec<usize> =
-                s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
-            match parts.as_slice() {
-                [e_s, e_c] => EeConfig { e_s: *e_s, e_c: *e_c },
-                _ => EeConfig::paper_default(),
-            }
-        })
+    /// `--ee E_S,E_C` through the shared validated parser — malformed
+    /// input is an error, not a silent fall-back to the paper default
+    /// (the examples' `--ee` flags parse identically).
+    fn ee(&self) -> anyhow::Result<Option<EeConfig>> {
+        self.kv.get("ee").map(|s| EeConfig::parse(s)).transpose()
     }
 }
 
@@ -100,7 +96,7 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     let metric = fsl_hdnn::hdc::Distance::from_name(
         &args.get_str("metric", rc.hdc.metric.name()),
     )?;
-    let ee = args.ee().or(rc.ee);
+    let ee = args.ee()?.or(rc.ee);
     // --workers: 0 = auto (one per core), 1 = serial; bit-identical output
     // either way (DESIGN.md §Threading model)
     let par = ParallelConfig {

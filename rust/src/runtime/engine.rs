@@ -13,9 +13,77 @@
 use std::path::Path;
 
 use crate::config::{ModelConfig, ParallelConfig};
-use crate::fe::FeModel;
+use crate::fe::{FeModel, StagedForward};
 use crate::hdc::CrpEncoder;
 use crate::runtime::ArtifactRegistry;
+
+/// One in-flight staged FE pass — the backend seam of the early-exit
+/// inference loop (DESIGN.md §Staged inference). Created by
+/// [`ComputeEngine::fe_stage_start`]; each [`FeStageExec::step`] yields
+/// the next stage's branch feature.
+///
+/// * `Native` wraps [`StagedForward`]: stopping after stage *b* means the
+///   remaining stages are **never computed** — early exit truncates real
+///   FE work.
+/// * `Whole` is the PJRT / whole-prefix fallback: the artifact's
+///   `fe_forward` entry computes every branch in one execution, so the
+///   features are materialized up front and `step` merely replays them.
+///   The API shape is identical; only the work saved differs (and
+///   [`FeStageExec::layers_run`] reports it honestly).
+pub enum FeStageExec<'e> {
+    Native(StagedForward<'e>),
+    Whole { feats: Vec<Vec<f32>>, next: usize, layers_total: usize },
+}
+
+impl FeStageExec<'_> {
+    /// Stages in the plan (= branch count).
+    pub fn n_stages(&self) -> usize {
+        match self {
+            FeStageExec::Native(s) => s.n_stages(),
+            FeStageExec::Whole { feats, .. } => feats.len(),
+        }
+    }
+
+    /// Stages stepped so far.
+    pub fn stages_run(&self) -> usize {
+        match self {
+            FeStageExec::Native(s) => s.stages_run(),
+            FeStageExec::Whole { next, .. } => *next,
+        }
+    }
+
+    /// Whether every stage has been stepped.
+    pub fn is_done(&self) -> bool {
+        self.stages_run() >= self.n_stages()
+    }
+
+    /// Conv layers actually executed for this pass. Native: the staged
+    /// executor's running count (grows with each step). Whole-prefix: the
+    /// full plan, however early the caller stops — that backend really did
+    /// run everything, and the metric must say so.
+    pub fn layers_run(&self) -> usize {
+        match self {
+            FeStageExec::Native(s) => s.layers_run(),
+            FeStageExec::Whole { layers_total, .. } => *layers_total,
+        }
+    }
+
+    /// Yield the next stage's branch feature (padded to `feature_dim`),
+    /// or `None` when every stage has been stepped.
+    pub fn step(&mut self) -> anyhow::Result<Option<Vec<f32>>> {
+        match self {
+            FeStageExec::Native(s) => s.step(),
+            FeStageExec::Whole { feats, next, .. } => {
+                if *next >= feats.len() {
+                    return Ok(None);
+                }
+                let f = std::mem::take(&mut feats[*next]);
+                *next += 1;
+                Ok(Some(f))
+            }
+        }
+    }
+}
 
 /// Backend selection for the coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -277,6 +345,54 @@ impl ComputeEngine {
         }
     }
 
+    /// Begin a staged FE pass for one image (DESIGN.md §Staged inference).
+    /// Native: runs the stem only; every further stage is paid for by an
+    /// explicit [`FeStageExec::step`], so an early exit after stage *b*
+    /// provably skips stages *b+1..*. PJRT: falls back to one whole-prefix
+    /// `fe_forward` execution behind the same seam (the AOT entry points
+    /// compute all branches at once).
+    pub fn fe_stage_start(&self, image: &[f32]) -> anyhow::Result<FeStageExec<'_>> {
+        match self {
+            ComputeEngine::Native { fe, .. } => Ok(FeStageExec::Native(fe.stage_start(image)?)),
+            ComputeEngine::Pjrt { .. } => {
+                let feats = self.fe_forward(&[image.to_vec()])?.remove(0);
+                let m = self.model();
+                let layers_total = m.conv_layers_through(m.n_branches());
+                Ok(FeStageExec::Whole { feats, next: 0, layers_total })
+            }
+        }
+    }
+
+    /// cRP-encode a single branch feature — the per-stage encode of the
+    /// early-exit loop. Exactly [`ComputeEngine::encode`] on a batch of
+    /// one, so a staged query's HVs are bit-identical to the batched
+    /// whole-image path.
+    pub fn encode_one(&self, feat: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(self.encode(&[feat.to_vec()])?.remove(0))
+    }
+
+    /// Total conv layers in the FE plan — the denominator of the
+    /// `fe_layers_executed` / `fe_layers_skipped` accounting. Native
+    /// reports its real block plan; PJRT derives the standard plan from
+    /// the model geometry.
+    pub fn fe_plan_layers(&self) -> usize {
+        match self {
+            ComputeEngine::Native { fe, .. } => fe.n_layers(),
+            ComputeEngine::Pjrt { reg, .. } => {
+                reg.model.conv_layers_through(reg.model.n_branches())
+            }
+        }
+    }
+
+    /// Conv layers the plan executes through the first `n_stages` stages
+    /// (what a query exiting at that depth costs on the native backend).
+    pub fn fe_layers_through(&self, n_stages: usize) -> usize {
+        match self {
+            ComputeEngine::Native { fe, .. } => fe.layers_through_stage(n_stages),
+            ComputeEngine::Pjrt { reg, .. } => reg.model.conv_layers_through(n_stages),
+        }
+    }
+
     /// The native encoder is always available (HV post-processing,
     /// baselines) regardless of backend.
     pub fn native_encoder(&self) -> &CrpEncoder {
@@ -447,6 +563,60 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("n_centroids"), "{err}");
+    }
+
+    #[test]
+    fn staged_exec_matches_fe_forward_and_counts_layers() {
+        let e = ComputeEngine::from_config(tiny_cfg());
+        let img = test_images(1, 8 * 8 * 3).remove(0);
+        let want = e.fe_forward(&[img.clone()]).unwrap().remove(0);
+        let mut exec = e.fe_stage_start(&img).unwrap();
+        assert_eq!(exec.n_stages(), 2);
+        assert_eq!(exec.layers_run(), 1, "stem only before the first step");
+        let f0 = exec.step().unwrap().unwrap();
+        assert_eq!(f0, want[0], "staged stage 0 must be bit-identical to fe_forward");
+        assert!(!exec.is_done());
+        let f1 = exec.step().unwrap().unwrap();
+        assert_eq!(f1, want[1]);
+        assert!(exec.is_done());
+        assert!(exec.step().unwrap().is_none());
+        assert_eq!(exec.layers_run(), e.fe_plan_layers());
+        // plan accounting agrees between the real plan and the geometry
+        // formula (tiny_cfg: stem + s0b0 (2) + s1b0 (2 + proj) = 6)
+        let m = e.model();
+        assert_eq!(e.fe_plan_layers(), 6);
+        assert_eq!(e.fe_plan_layers(), m.conv_layers_through(m.n_branches()));
+        assert_eq!(e.fe_layers_through(1), 3);
+        assert_eq!(e.fe_layers_through(1), m.conv_layers_through(1));
+    }
+
+    #[test]
+    fn staged_exec_clustered_matches_fe_forward() {
+        let e = ComputeEngine::from_config(clustered_cfg());
+        let img = test_images(1, 8 * 8 * 3).remove(0);
+        let want = e.fe_forward(&[img.clone()]).unwrap().remove(0);
+        let mut exec = e.fe_stage_start(&img).unwrap();
+        let mut got = Vec::new();
+        while let Some(f) = exec.step().unwrap() {
+            got.push(f);
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn encode_one_matches_batched_encode() {
+        let e = ComputeEngine::from_config(tiny_cfg());
+        let feats = test_images(3, 8);
+        let want = e.encode(&feats).unwrap();
+        for (f, w) in feats.iter().zip(&want) {
+            assert_eq!(&e.encode_one(f).unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn staged_exec_rejects_wrong_image_size() {
+        let e = ComputeEngine::from_config(tiny_cfg());
+        assert!(e.fe_stage_start(&[0.0; 5]).is_err());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod artifacts;
 pub mod engine;
 
 pub use artifacts::ArtifactRegistry;
-pub use engine::ComputeEngine;
+pub use engine::{ComputeEngine, FeStageExec};

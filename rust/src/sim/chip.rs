@@ -39,7 +39,7 @@ pub struct TrainReport {
 }
 
 /// Result of simulating inference for one image.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct InferReport {
     pub cycles: u64,
     pub latency_ms: f64,
@@ -215,6 +215,16 @@ impl Chip {
         total_ops / (report.energy_mj * 1e-3) / 1e12
     }
 
+    /// Per-exit-depth inference costs: entry *s* prices one image that
+    /// exits after CONV block `s` (0-based) — the energy-per-query split
+    /// by exit depth. The serving driver and `fig17_early_exit` weight
+    /// this table by the coordinator's live `query_depth_hist` to price
+    /// what the staged path actually executed.
+    pub fn infer_depth_table(&self, n_classes: usize) -> Vec<InferReport> {
+        let n_stages = self.layers.iter().map(|l| l.stage + 1).max().unwrap_or(0);
+        (0..n_stages).map(|s| self.infer_image(n_classes, Some(s))).collect()
+    }
+
     /// Check that every EE config's class HVs fit the class memory
     /// (Section V-A: 4*C*D*B bits vs 256 KB).
     pub fn ee_class_memory_fits(&self, n_classes: usize) -> bool {
@@ -310,6 +320,21 @@ mod tests {
             if s < 3 {
                 assert!(r.latency_ms < full.latency_ms);
             }
+        }
+    }
+
+    #[test]
+    fn depth_table_prices_each_exit_depth() {
+        let c = chip();
+        let table = c.infer_depth_table(10);
+        assert_eq!(table.len(), 4, "ResNet-18 has 4 CONV blocks");
+        for (s, r) in table.iter().enumerate() {
+            assert_eq!(*r, c.infer_image(10, Some(s)), "depth {s}");
+        }
+        // deeper exits cost strictly more energy and layers
+        for w in table.windows(2) {
+            assert!(w[1].energy_mj > w[0].energy_mj);
+            assert!(w[1].conv_layers_run > w[0].conv_layers_run);
         }
     }
 

@@ -47,6 +47,42 @@ where
     Ok(out)
 }
 
+/// [`shard_map`] over **mutable** items: each worker owns a contiguous
+/// `chunks_mut` slice, so `f` may advance per-item state (the ragged
+/// early-exit batch steps a [`crate::fe::StagedForward`] per survivor).
+/// Same determinism contract — items are independent, shards contiguous,
+/// results stitched in chunk order, first error in input order wins.
+pub fn shard_map_mut<T, U, F>(items: &mut [T], shards: usize, f: F) -> anyhow::Result<Vec<U>>
+where
+    T: Send,
+    U: Send,
+    F: Fn(&mut T) -> anyhow::Result<U> + Sync,
+{
+    if shards <= 1 || items.len() <= 1 {
+        return items.iter_mut().map(f).collect();
+    }
+    let chunk_len = items.len().div_ceil(shards.min(items.len()));
+    let f = &f;
+    let mut chunk_results: Vec<anyhow::Result<Vec<U>>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk_len)
+            .map(|chunk| {
+                s.spawn(move || chunk.iter_mut().map(f).collect::<anyhow::Result<Vec<U>>>())
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+            chunk_results.push(r);
+        }
+    });
+    let mut out = Vec::with_capacity(items.len());
+    for r in chunk_results {
+        out.extend(r?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +117,44 @@ mod tests {
             })
             .unwrap_err();
             assert_eq!(err.to_string(), "item 4 failed", "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shard_map_mut_mutates_and_preserves_order() {
+        // each item advances its own counter; results and final state must
+        // match the serial loop for any shard count
+        let want_state: Vec<u32> = (0..17u32).map(|i| i + 3).collect();
+        // acc over x+1, x+2, x+3 = 3x + 6
+        let want_out: Vec<u32> = (0..17u32).map(|i| 3 * i + 6).collect();
+        for shards in [0, 1, 2, 5, 17, 40] {
+            let mut items: Vec<u32> = (0..17).collect();
+            let got = shard_map_mut(&mut items, shards, |x| {
+                let mut acc = 0;
+                for _ in 0..3 {
+                    *x += 1;
+                    acc += *x;
+                }
+                Ok(acc)
+            })
+            .unwrap();
+            assert_eq!(items, want_state, "shards={shards}");
+            assert_eq!(got, want_out, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn shard_map_mut_first_error_in_input_order_wins() {
+        for shards in [1, 3, 9] {
+            let mut items: Vec<usize> = (0..9).collect();
+            let err = shard_map_mut(&mut items, shards, |i| {
+                if *i >= 5 {
+                    anyhow::bail!("item {i} failed")
+                }
+                Ok(*i)
+            })
+            .unwrap_err();
+            assert_eq!(err.to_string(), "item 5 failed", "shards={shards}");
         }
     }
 

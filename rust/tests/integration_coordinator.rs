@@ -24,8 +24,10 @@ fn start_synthetic(k_shot: usize, par: ParallelConfig) -> Coordinator {
     start_synthetic_cfg(k_shot, par, false)
 }
 
-fn start_synthetic_cfg(k_shot: usize, par: ParallelConfig, clustered: bool) -> Coordinator {
-    let cfg = ModelConfig {
+/// The tiny synthetic geometry the artifact-free tests run on (2 branches;
+/// plan: stem + s0b0's 2 convs + s1b0's 2 convs + projection = 6 layers).
+fn synthetic_cfg(clustered: bool) -> ModelConfig {
+    ModelConfig {
         image_size: 8,
         in_channels: 3,
         widths: vec![4, 8],
@@ -36,7 +38,11 @@ fn start_synthetic_cfg(k_shot: usize, par: ParallelConfig, clustered: bool) -> C
         n_centroids: 8,
         clustered,
         ..Default::default()
-    };
+    }
+}
+
+fn start_synthetic_cfg(k_shot: usize, par: ParallelConfig, clustered: bool) -> Coordinator {
+    let cfg = synthetic_cfg(clustered);
     Coordinator::start(
         move || Ok(ComputeEngine::from_config(cfg).with_parallelism(par)),
         k_shot,
@@ -498,6 +504,222 @@ fn router_routes_class_batches() {
     let out = router.query(sid, gen.sample(0, &mut rng), None).unwrap();
     assert!(out.prediction < 2);
     assert!(router.add_shot_batch(999, 0, vec![]).is_err(), "unknown routed session");
+}
+
+#[test]
+fn early_exit_truncates_fe_compute_provably() {
+    // the ISSUE 5 acceptance: an EE query that exits at block b executes
+    // only stages 0..=b and encodes only b+1 branch HVs — asserted via
+    // the layer-execution counters, not by timing
+    let probe = ComputeEngine::from_config(synthetic_cfg(false));
+    let plan = probe.fe_plan_layers() as u64;
+    let coord = start_synthetic(3, ParallelConfig::default());
+    let gen = ImageGen::new(8, 8, 71);
+    let mut rng = Rng::new(71);
+    let sid = coord.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        for _ in 0..3 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    let m0 = coord.metrics();
+    assert_eq!(
+        (m0.fe_layers_executed, m0.fe_layers_skipped, m0.branch_hvs_encoded),
+        (0, 0, 0),
+        "training never touches the query work counters"
+    );
+    // (1,1) exits deterministically at block 1: only stage 0 ever runs
+    let out = coord.query(sid, gen.sample(0, &mut rng), Some(EeConfig { e_s: 1, e_c: 1 })).unwrap();
+    assert_eq!(out.blocks_used, 1);
+    assert!(out.exited_early);
+    let m1 = coord.metrics();
+    assert_eq!(m1.fe_layers_executed, probe.fe_layers_through(1) as u64);
+    assert_eq!(m1.fe_layers_skipped, plan - probe.fe_layers_through(1) as u64);
+    assert_eq!(m1.branch_hvs_encoded, 1, "exit at block 1 encodes exactly 1 HV");
+    // a no-EE query runs the whole plan but encodes only the final branch
+    // (the other branch HVs used to be 3 wasted cRP encodes per query)
+    let out = coord.query(sid, gen.sample(1, &mut rng), None).unwrap();
+    assert_eq!(out.blocks_used, 2);
+    let m2 = coord.metrics();
+    assert_eq!(m2.fe_layers_executed - m1.fe_layers_executed, plan);
+    assert_eq!(m2.fe_layers_skipped, m1.fe_layers_skipped, "a full pass skips nothing");
+    assert_eq!(m2.branch_hvs_encoded - m1.branch_hvs_encoded, 1);
+    // the per-exit-depth histogram recorded one query at each depth
+    assert_eq!(m2.query_depth_hist[0], 1);
+    assert_eq!(m2.query_depth_hist[1], 1);
+    assert_eq!(m2.query_depth_hist[2..].iter().sum::<u64>(), 0);
+}
+
+#[test]
+fn staged_query_bit_identical_to_posthoc_reference() {
+    // the refactor's central contract: interleaving FE stages with the
+    // controller changes the work done, never the answer. A local session
+    // trained on the same deterministic engine replays the pre-refactor
+    // post-hoc path (all HVs extracted, then query_early_exit).
+    use fsl_hdnn::coordinator::FslSession;
+    let cfg = synthetic_cfg(false);
+    let engine = ComputeEngine::from_config(cfg.clone());
+    let coord = start_synthetic(3, ParallelConfig::default());
+    let sid = coord.create_session(3, 16).unwrap();
+    let mut local = FslSession::new(0, 3, engine.model().d, engine.model().n_branches())
+        .with_precision(16)
+        .with_metric(fsl_hdnn::hdc::Distance::L1);
+    let gen = ImageGen::new(8, 8, 83);
+    let mut rng = Rng::new(83);
+    for class in 0..3 {
+        for _ in 0..3 {
+            let img = gen.sample(class, &mut rng);
+            coord.add_shot(sid, class, img.clone()).unwrap();
+            let feats = engine.fe_forward(&[img]).unwrap().remove(0);
+            let hvs = engine.encode(&feats).unwrap();
+            local.train_shot(class, &hvs);
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    for q in 0..6 {
+        let img = gen.sample(q % 3, &mut rng);
+        let feats = engine.fe_forward(&[img.clone()]).unwrap().remove(0);
+        let hvs = engine.encode(&feats).unwrap();
+        for ee in [None, Some(EeConfig { e_s: 1, e_c: 1 }), Some(EeConfig { e_s: 1, e_c: 2 })] {
+            let want = match ee {
+                Some(c) => local.query_early_exit(&hvs, c),
+                None => local.query_full(hvs.last().unwrap()),
+            };
+            let got = coord.query(sid, img.clone(), ee).unwrap();
+            assert_eq!(got, want, "q={q} ee={ee:?}: staged != post-hoc");
+        }
+    }
+}
+
+#[test]
+fn query_batch_bit_identical_to_serial_across_worker_counts() {
+    // ragged survivor batching (the batch shrinks stage by stage as
+    // images exit) must answer exactly like serial queries, at any worker
+    // count — the established determinism contract, now for inference
+    let n_way = 3;
+    let mk_shots = |class: usize| -> Vec<Vec<f32>> {
+        let gen = ImageGen::new(8, 8, 61);
+        let mut rng = Rng::new(300 + class as u64);
+        (0..3).map(|_| gen.sample(class, &mut rng)).collect()
+    };
+    let serial = start_synthetic(3, ParallelConfig::default());
+    let s_serial = serial.create_session(n_way, 16).unwrap();
+    for class in 0..n_way {
+        for img in mk_shots(class) {
+            serial.add_shot(s_serial, class, img).unwrap();
+        }
+    }
+    serial.finish_training(s_serial).unwrap();
+    let gen = ImageGen::new(8, 8, 61);
+    let mut rng = Rng::new(61);
+    let images: Vec<Vec<f32>> = (0..7).map(|i| gen.sample(i % n_way, &mut rng)).collect();
+    for ee in [
+        None,
+        Some(EeConfig { e_s: 1, e_c: 1 }),
+        Some(EeConfig { e_s: 1, e_c: 2 }),
+        Some(EeConfig::paper_default()),
+    ] {
+        let want: Vec<_> =
+            images.iter().map(|img| serial.query(s_serial, img.clone(), ee).unwrap()).collect();
+        for workers in [1usize, 2, 7] {
+            let coord = start_synthetic(3, ParallelConfig { workers, min_batch_per_worker: 1 });
+            let sid = coord.create_session(n_way, 16).unwrap();
+            for class in 0..n_way {
+                for img in mk_shots(class) {
+                    coord.add_shot(sid, class, img).unwrap();
+                }
+            }
+            coord.finish_training(sid).unwrap();
+            let got = coord.query_batch(sid, images.clone(), ee).unwrap();
+            assert_eq!(got, want, "workers={workers} ee={ee:?}");
+        }
+    }
+}
+
+#[test]
+fn invalid_ee_config_rejected_not_panicked() {
+    // EarlyExitController::new asserts on E_s/E_c = 0; a client-supplied
+    // config must become Response::Error, never a dead worker (the same
+    // bug class as PR 4's out-of-range hv_bits fix)
+    let coord = start_synthetic(2, ParallelConfig::default());
+    let gen = ImageGen::new(8, 8, 91);
+    let mut rng = Rng::new(91);
+    let sid = coord.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        for _ in 0..2 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    let img = gen.sample(0, &mut rng);
+    for (e_s, e_c) in [(0usize, 2usize), (2, 0), (0, 0)] {
+        let err = coord
+            .query(sid, img.clone(), Some(EeConfig { e_s, e_c }))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("e_s") || err.contains("e_c"), "({e_s},{e_c}): {err}");
+        let err = coord
+            .query_batch(sid, vec![img.clone()], Some(EeConfig { e_s, e_c }))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("e_s") || err.contains("e_c"), "batch ({e_s},{e_c}): {err}");
+    }
+    // the worker survived: valid queries still served, errors counted
+    assert!(coord.query(sid, img, Some(EeConfig::paper_default())).is_ok());
+    assert!(coord.metrics().errors >= 6);
+}
+
+#[test]
+fn query_batch_error_paths_and_empty_batch() {
+    let coord = start_synthetic(2, ParallelConfig { workers: 2, min_batch_per_worker: 1 });
+    let gen = ImageGen::new(8, 8, 93);
+    let mut rng = Rng::new(93);
+    let sid = coord.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        for _ in 0..2 {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    let img = gen.sample(0, &mut rng);
+    // unknown session
+    assert!(coord.query_batch(999, vec![img.clone()], None).is_err());
+    // malformed image mid-batch fails the whole batch with a real error
+    let mut imgs = vec![img.clone(); 4];
+    imgs[2] = vec![0.0; 5];
+    assert!(coord.query_batch(sid, imgs, None).is_err());
+    // empty batch is a clean no-op
+    assert_eq!(coord.query_batch(sid, vec![], None).unwrap().len(), 0);
+    // coordinator still alive
+    assert!(coord.query_batch(sid, vec![img], Some(EeConfig::paper_default())).is_ok());
+}
+
+#[test]
+fn router_routes_query_batches() {
+    use fsl_hdnn::coordinator::{DeviceRouter, Placement};
+    let cfg = synthetic_cfg(false);
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+        let c = cfg.clone();
+        move || Ok(ComputeEngine::from_config(c))
+    })
+    .unwrap();
+    let gen = ImageGen::new(8, 8, 95);
+    let mut rng = Rng::new(95);
+    let sid = router.create_session(2, 16).unwrap();
+    for class in 0..2 {
+        let shots: Vec<Vec<f32>> = (0..2).map(|_| gen.sample(class, &mut rng)).collect();
+        router.add_shot_batch(sid, class, shots).unwrap();
+    }
+    router.finish_training(sid).unwrap();
+    let images: Vec<Vec<f32>> = (0..3).map(|i| gen.sample(i % 2, &mut rng)).collect();
+    let serial: Vec<_> = images
+        .iter()
+        .map(|img| router.query(sid, img.clone(), Some(EeConfig::paper_default())).unwrap())
+        .collect();
+    let batched = router.query_batch(sid, images, Some(EeConfig::paper_default())).unwrap();
+    assert_eq!(batched, serial);
+    assert!(router.query_batch(999, vec![], None).is_err(), "unknown routed session");
 }
 
 #[test]

@@ -241,6 +241,54 @@ fn prop_early_exit_semantics() {
     }
 }
 
+/// A staged forward stepped to stage k is bit-identical to
+/// `forward_prefix(_, k)` and to a prefix of `forward`, across
+/// clustered/dense models and odd geometries — the one-code-path contract
+/// behind staged early-exit inference (DESIGN.md §Staged inference). The
+/// executor's layer counter must also match the plan arithmetic.
+#[test]
+fn prop_staged_forward_bit_identical_to_prefix_of_forward() {
+    for case in 0..12u64 {
+        let mut rng = Rng::new(9000 + case);
+        let stages = 2 + (case as usize % 2);
+        let widths: Vec<usize> = (0..stages).map(|_| 2 + rng.below(6)).collect();
+        let cfg = ModelConfig {
+            image_size: 8 + 4 * rng.below(2),
+            in_channels: 1 + rng.below(3),
+            widths: widths.clone(),
+            blocks_per_stage: 1 + rng.below(2),
+            feature_dim: *widths.iter().max().unwrap(),
+            d: 64,
+            ch_sub: 4,
+            n_centroids: 4 + rng.below(5),
+            clustered: case % 3 == 0,
+            master_seed: 77 + case,
+        };
+        let m = FeModel::synthetic(cfg.clone());
+        let img: Vec<f32> = (0..cfg.image_size * cfg.image_size * cfg.in_channels)
+            .map(|_| rng.gauss_f32())
+            .collect();
+        let full = m.forward(&img).unwrap();
+        assert_eq!(full.len(), stages, "case {case}");
+        for k in 0..=stages {
+            let prefix = m.forward_prefix(&img, k).unwrap();
+            assert_eq!(prefix, full[..k].to_vec(), "case {case} k={k}: prefix != forward");
+            let mut exec = m.stage_start(&img).unwrap();
+            for (s, want) in full.iter().take(k).enumerate() {
+                let got = exec.step().unwrap().unwrap();
+                assert_eq!(&got, want, "case {case} k={k}: staged stage {s} diverged");
+            }
+            assert_eq!(
+                exec.layers_run(),
+                m.layers_through_stage(k),
+                "case {case} k={k}: layer counter != plan"
+            );
+        }
+        // plan totals agree with the geometry formula the PJRT seam uses
+        assert_eq!(m.n_layers(), cfg.conv_layers_through(stages), "case {case}");
+    }
+}
+
 /// Clustered conv == dense conv with reconstructed weights, for random
 /// geometry (the Fig. 4(b) exactness claim as a property).
 #[test]
