@@ -22,12 +22,14 @@ bench:
 	$(CARGO) bench
 
 ## bench-harness smoke (what CI runs): tiny budgets, all asserts live,
-## refreshes BENCH_hotpath.json at the repo root
+## refreshes BENCH_hotpath.json at the repo root (including the `serving`
+## section from the gateway load generator)
 bench-smoke:
 	$(CARGO) bench --bench hotpath_micro -- --smoke
 	$(CARGO) bench --bench fig05_chsub_sweep -- --smoke
 	$(CARGO) bench --bench fig14_precision_sweep -- --smoke
 	$(CARGO) bench --bench fig17_early_exit -- --smoke
+	$(CARGO) run --release --example load_gen -- --smoke
 
 doc:
 	$(CARGO) doc --no-deps

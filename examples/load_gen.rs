@@ -1,0 +1,250 @@
+//! Serving load generator: N concurrent clients against the TCP gateway,
+//! reporting p50/p99 query latency and aggregate QPS — the serving-path
+//! counterpart of the kernel microbenches, written into the `serving`
+//! section of `BENCH_hotpath.json` (EXPERIMENTS.md §Perf).
+//!
+//! Each client connects a [`WireClient`] to a loopback [`Gateway`], runs
+//! one few-shot session (create → train → query stream) and times every
+//! query round trip. A `Busy` response (admission-control shed) is
+//! counted and retried after a short backoff, so the shed path shows up
+//! in the report instead of failing the run. An in-process single-client
+//! baseline row prices the wire + gateway overhead.
+//!
+//! Run with:  cargo run --release --example load_gen -- \
+//!              [--clients N] [--queries N] [--workers N] [--high-water N]
+//! `--smoke` (CI, `make bench-smoke`): 2 clients x 20 queries on the tiny
+//! synthetic geometry, with sanity asserts on the recorded rows.
+
+use std::time::{Duration, Instant};
+
+use fsl_hdnn::config::{EeConfig, ModelConfig, ParallelConfig, ServingConfig};
+use fsl_hdnn::coordinator::{Coordinator, Gateway, Response, WireClient};
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::runtime::engine::ComputeEngine;
+use fsl_hdnn::util::args::{arg_flag, arg_usize};
+use fsl_hdnn::util::bench_log::BenchLog;
+use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::stats;
+
+const N_WAY: usize = 3;
+const K_SHOT: usize = 2;
+
+/// One client's measured run: per-query latencies and sheds survived.
+struct ClientRun {
+    latencies_ms: Vec<f64>,
+    sheds_seen: u64,
+}
+
+/// Issue one request through `call`, retrying `Busy` sheds with a short
+/// backoff (counted into `sheds`) — exactly the client behaviour the
+/// admission-control contract prescribes.
+fn call_admitted<E: std::fmt::Debug>(
+    call: &mut impl FnMut(fsl_hdnn::coordinator::Request) -> Result<Response, E>,
+    sheds: &mut u64,
+    req: fsl_hdnn::coordinator::Request,
+) -> Response {
+    loop {
+        match call(req.clone()).expect("transport failed") {
+            Response::Busy { .. } => {
+                *sheds += 1;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            other => return other,
+        }
+    }
+}
+
+/// Train one session and time `queries` query round trips through `call`.
+/// Shared by the wire clients and the in-process baseline so both rows
+/// measure exactly the same workload.
+fn run_session<E: std::fmt::Debug>(
+    queries: usize,
+    seed: u64,
+    image_size: usize,
+    mut call: impl FnMut(fsl_hdnn::coordinator::Request) -> Result<Response, E>,
+) -> ClientRun {
+    let gen = ImageGen::new(image_size, 8, seed);
+    let mut rng = Rng::new(seed);
+    let mut sheds_seen = 0u64;
+    let sid = match call_admitted(
+        &mut call,
+        &mut sheds_seen,
+        fsl_hdnn::coordinator::Request::CreateSession {
+            n_way: N_WAY,
+            hv_bits: 16,
+            metric: fsl_hdnn::hdc::Distance::L1,
+        },
+    ) {
+        Response::SessionCreated { session } => session,
+        other => panic!("create failed: {other:?}"),
+    };
+    for class in 0..N_WAY {
+        for _ in 0..K_SHOT {
+            let req = fsl_hdnn::coordinator::Request::AddShot {
+                session: sid,
+                class,
+                image: gen.sample(class, &mut rng),
+            };
+            let resp = call_admitted(&mut call, &mut sheds_seen, req);
+            assert!(matches!(resp, Response::ShotAccepted { .. }), "{resp:?}");
+        }
+    }
+    let resp = call_admitted(
+        &mut call,
+        &mut sheds_seen,
+        fsl_hdnn::coordinator::Request::FinishTraining { session: sid },
+    );
+    assert!(matches!(resp, Response::TrainingDone { .. }), "{resp:?}");
+
+    let ee = Some(EeConfig { e_s: 1, e_c: 1 });
+    let mut latencies_ms = Vec::with_capacity(queries);
+    for q in 0..queries {
+        let image = gen.sample(q % N_WAY, &mut rng);
+        // time the successful attempt only: a shed-and-retry is backoff,
+        // not service latency — it shows up in the shed count instead
+        loop {
+            let t0 = Instant::now();
+            let req =
+                fsl_hdnn::coordinator::Request::Query { session: sid, image: image.clone(), ee };
+            match call(req).expect("transport failed") {
+                Response::QueryResult { .. } => {
+                    latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    break;
+                }
+                Response::Busy { .. } => {
+                    sheds_seen += 1;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                other => panic!("query failed: {other:?}"),
+            }
+        }
+    }
+    let resp = call_admitted(
+        &mut call,
+        &mut sheds_seen,
+        fsl_hdnn::coordinator::Request::CloseSession { session: sid },
+    );
+    assert!(matches!(resp, Response::SessionClosed { .. }), "{resp:?}");
+    ClientRun { latencies_ms, sheds_seen }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = arg_flag("--smoke");
+    let clients = arg_usize("--clients", if smoke { 2 } else { 4 });
+    let queries = arg_usize("--queries", if smoke { 20 } else { 200 });
+    let workers = arg_usize("--workers", 0); // 0 = one per core
+    let high_water = arg_usize("--high-water", ServingConfig::default().high_water);
+
+    // smoke runs the tiny synthetic geometry so CI stays fast; the full
+    // run uses the default model (synthetic weights without artifacts)
+    let cfg = if smoke {
+        ModelConfig {
+            image_size: 8,
+            in_channels: 3,
+            widths: vec![4, 8],
+            blocks_per_stage: 1,
+            feature_dim: 8,
+            d: 64,
+            ch_sub: 4,
+            n_centroids: 8,
+            ..Default::default()
+        }
+    } else {
+        ModelConfig::default()
+    };
+    let image_size = cfg.image_size;
+    let par = ParallelConfig { workers, min_batch_per_worker: 1 };
+    let coord = Coordinator::start(
+        move || Ok(ComputeEngine::from_config(cfg).with_parallelism(par)),
+        K_SHOT,
+    )?;
+    let serving = ServingConfig { high_water, ..Default::default() };
+    let gateway = Gateway::bind(coord.client(), &serving)?;
+    let addr = gateway.local_addr();
+    println!(
+        "load_gen: {clients} clients x {queries} queries via {addr} \
+         (workers={}, high_water={high_water}{})",
+        par.resolved_workers(),
+        if smoke { ", smoke" } else { "" }
+    );
+
+    // --- concurrent wire clients ---------------------------------------
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut wc = WireClient::connect(addr).expect("connect");
+                run_session(queries, 7000 + c as u64, image_size, |req| wc.call(&req))
+            })
+        })
+        .collect();
+    let runs: Vec<ClientRun> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut all_ms: Vec<f64> = runs.iter().flat_map(|r| r.latencies_ms.iter().copied()).collect();
+    let sheds_seen: u64 = runs.iter().map(|r| r.sheds_seen).sum();
+    all_ms.sort_by(f64::total_cmp);
+    let total_queries = (clients * queries) as f64;
+    let qps = total_queries / wall_s;
+    let (p50, p99) = (stats::percentile(&all_ms, 50.0), stats::percentile(&all_ms, 99.0));
+    let shed_metric = coord.metrics().requests_shed;
+    println!(
+        "gateway : p50 {p50:.3} ms | p99 {p99:.3} ms | mean {:.3} ms | {qps:.0} qps \
+         | shed {shed_metric}",
+        stats::mean(&all_ms)
+    );
+
+    // --- in-process baseline (same workload, one client, no wire) ------
+    let t1 = Instant::now();
+    let base = run_session(queries, 7000, image_size, |req| {
+        Ok::<Response, std::convert::Infallible>(coord.call(req))
+    });
+    let base_wall_s = t1.elapsed().as_secs_f64();
+    let mut base_ms = base.latencies_ms.clone();
+    base_ms.sort_by(f64::total_cmp);
+    let base_p50 = stats::percentile(&base_ms, 50.0);
+    let base_p99 = stats::percentile(&base_ms, 99.0);
+    println!(
+        "in-proc : p50 {base_p50:.3} ms | p99 {base_p99:.3} ms | mean {:.3} ms | {:.0} qps",
+        stats::mean(&base_ms),
+        queries as f64 / base_wall_s
+    );
+
+    let mut log = BenchLog::new("serving");
+    log.record_values(
+        "gateway_query_latency",
+        &[
+            ("p50_ms", p50),
+            ("p99_ms", p99),
+            ("mean_ms", stats::mean(&all_ms)),
+            ("qps", qps),
+            ("clients", clients as f64),
+            ("workers", par.resolved_workers() as f64),
+            ("requests_shed", shed_metric as f64),
+        ],
+    );
+    log.record_values(
+        "inproc_query_latency",
+        &[
+            ("p50_ms", base_p50),
+            ("p99_ms", base_p99),
+            ("mean_ms", stats::mean(&base_ms)),
+            ("qps", queries as f64 / base_wall_s),
+            ("clients", 1.0),
+            ("workers", par.resolved_workers() as f64),
+        ],
+    );
+    let path = log.write()?;
+    println!("wrote serving section -> {}", path.display());
+
+    if smoke {
+        // CI sanity: every query answered, latencies sane, and the shed
+        // counter consistent with what the clients saw
+        assert_eq!(all_ms.len(), clients * queries, "every query must be answered");
+        assert!(p50 > 0.0 && p99 >= p50, "percentiles must be ordered: {p50} / {p99}");
+        assert!(base_p50 > 0.0, "baseline must measure real work");
+        assert_eq!(shed_metric, sheds_seen, "gateway sheds == Busy responses clients saw");
+        println!("smoke OK");
+    }
+    Ok(())
+}

@@ -241,6 +241,40 @@ fn main() {
     log.record("encode_b64_sharded", ep.mean_ns, ep.throughput(64.0), nw);
     println!("    -> {:.2}x speedup at {nw} workers", es.mean_ns / ep.mean_ns);
 
+    // --- persistent-pool dispatch overhead: the fixed cost every sharded
+    // batch call pays now that long-lived workers replace per-call thread
+    // spawning, against what std::thread::scope paid for the same fan-out
+    // (DESIGN.md §Serving runtime) ---
+    let pool = fsl_hdnn::runtime::WorkerPool::new(nw);
+    let rpool = bench(&format!("pool run_scoped {nw} no-op jobs"), budget(100.0), || {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..nw)
+            .map(|_| {
+                Box::new(|| {
+                    black_box(0u64);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+    });
+    println!("{rpool}");
+    log.record("pool_dispatch_noop", rpool.mean_ns, rpool.throughput(nw as f64), nw);
+    let rspawn = bench(&format!("thread::scope spawn {nw} no-op jobs"), budget(100.0), || {
+        std::thread::scope(|s| {
+            for _ in 0..nw {
+                s.spawn(|| {
+                    black_box(0u64);
+                });
+            }
+        });
+    });
+    println!("{rspawn}");
+    log.record("thread_scope_spawn_noop", rspawn.mean_ns, rspawn.throughput(nw as f64), nw);
+    log.record_ratio("pool_vs_spawn_dispatch_speedup", rspawn.mean_ns / rpool.mean_ns);
+    println!(
+        "    -> pool dispatch vs per-call scoped spawn: {:.2}x",
+        rspawn.mean_ns / rpool.mean_ns
+    );
+
     // --- chip simulator speed (simulated cycles per wall second) ---
     let chip = Chip::paper(ChipConfig::default());
     let mut cycles = 0u64;

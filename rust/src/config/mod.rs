@@ -302,6 +302,37 @@ impl ChipConfig {
     }
 }
 
+/// TCP-serving knobs (`[serving]` TOML section / `fsl-hdnn serve` flags):
+/// where the gateway listens, when its admission control sheds load, and
+/// how large a wire frame it accepts (DESIGN.md §Serving runtime).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServingConfig {
+    /// bind address; port 0 picks an ephemeral port (the default binds
+    /// loopback so a bare `serve` never exposes a public socket)
+    pub addr: String,
+    /// admission high-water mark: a request arriving while the serving
+    /// queue depth (outstanding coordinator requests + queued pool tasks)
+    /// *exceeds* this is refused with `Response::Busy { queue_depth }`
+    pub high_water: usize,
+    /// largest accepted frame payload in bytes; an oversized length
+    /// prefix is a framing error and closes the connection
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            addr: "127.0.0.1:0".into(),
+            // deep enough that a coordinator briefly behind on a batch
+            // does not shed, shallow enough to bound queue latency
+            high_water: 64,
+            // a 224x224x3 image is ~1.7 MB as JSON; 64 MB covers large
+            // query batches while still rejecting nonsense prefixes
+            max_frame_bytes: 64 << 20,
+        }
+    }
+}
+
 /// Top-level run configuration assembled by the CLI / examples.
 #[derive(Clone, Debug, Default)]
 pub struct RunConfig {
@@ -312,6 +343,7 @@ pub struct RunConfig {
     pub ee: Option<EeConfig>,
     pub batched_training: bool,
     pub parallel: ParallelConfig,
+    pub serving: ServingConfig,
 }
 
 impl RunConfig {
@@ -373,6 +405,16 @@ impl RunConfig {
                 "parallel.workers" => self.parallel.workers = val.as_int()? as usize,
                 "parallel.min_batch_per_worker" => {
                     self.parallel.min_batch_per_worker = val.as_int()? as usize
+                }
+                "serving.addr" => self.serving.addr = val.as_str()?.to_string(),
+                "serving.high_water" => self.serving.high_water = val.as_int()? as usize,
+                "serving.max_frame_bytes" => {
+                    let bytes = val.as_int()?;
+                    anyhow::ensure!(
+                        (1..=u32::MAX as i64).contains(&bytes),
+                        "serving.max_frame_bytes must fit the u32 length prefix, got {bytes}"
+                    );
+                    self.serving.max_frame_bytes = bytes as usize;
                 }
                 other => anyhow::bail!("unknown config key: {other}"),
             }
@@ -560,6 +602,32 @@ mod tests {
         // min_batch_per_worker = 0 is treated as 1 (no div-by-zero)
         let p0 = ParallelConfig { workers: 3, min_batch_per_worker: 0 };
         assert_eq!(p0.shards_for(2), 2);
+    }
+
+    #[test]
+    fn apply_toml_serving_keys() {
+        let doc = toml::Doc::parse(
+            "[serving]\naddr = \"0.0.0.0:7433\"\nhigh_water = 8\nmax_frame_bytes = 1048576\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.serving.addr, "0.0.0.0:7433");
+        assert_eq!(rc.serving.high_water, 8);
+        assert_eq!(rc.serving.max_frame_bytes, 1 << 20);
+        // a frame cap that cannot be length-prefixed in u32 is rejected
+        let doc = toml::Doc::parse("[serving]\nmax_frame_bytes = 0\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+        let doc = toml::Doc::parse("[serving]\nmax_frame_bytes = 4294967296\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serving_defaults_bind_loopback() {
+        let s = ServingConfig::default();
+        assert!(s.addr.starts_with("127.0.0.1:"), "default must never expose a public socket");
+        assert!(s.high_water >= 1);
+        assert!(s.max_frame_bytes <= u32::MAX as usize);
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! TCP gateway in front of the [`Coordinator`]: an accept loop, one
+//! thread per connection speaking the length-prefixed [`wire`] format,
+//! and admission control that sheds load with [`Response::Busy`] when the
+//! serving queue runs past the `[serving]` high-water mark (DESIGN.md
+//! §Serving runtime).
+//!
+//! The gateway never owns the coordinator — it holds a cloneable
+//! [`CoordinatorClient`], so worker shutdown stays a `Coordinator::drop`
+//! concern. [`Gateway::stop`] (also run on drop) closes the listener and
+//! every live connection and joins all gateway threads; no detached
+//! threads survive.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::{EeConfig, ServingConfig};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::server::CoordinatorClient;
+use crate::coordinator::session::QueryOutcome;
+use crate::coordinator::wire;
+use crate::hdc::Distance;
+
+/// One live client connection: a handle for `stop` to close the socket
+/// out from under the blocked `read_frame`, plus the serving thread.
+struct Conn {
+    stream: TcpStream,
+    handle: JoinHandle<()>,
+}
+
+/// A running TCP front end for one coordinator.
+pub struct Gateway {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `cfg.addr` and start serving `client`. With the default
+    /// `addr = "127.0.0.1:0"` the OS picks a free loopback port — read it
+    /// back with [`Gateway::local_addr`].
+    pub fn bind(client: CoordinatorClient, cfg: &ServingConfig) -> anyhow::Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new().name("fsl-gateway-accept".into()).spawn(move || {
+                accept_loop(&listener, &client, &cfg, &stop, &conns);
+            })?
+        };
+        Ok(Gateway { addr, stop, conns, accept: Some(accept) })
+    }
+
+    /// The bound address (the resolved port when `cfg.addr` ended in `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every live connection, join all gateway
+    /// threads. Idempotent; also runs on drop.
+    pub fn stop(&mut self) {
+        if self.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // the accept loop blocks in `accept()`; a throwaway self-connect
+        // wakes it so it can observe the flag and exit
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let drained: Vec<Conn> = {
+            let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            conns.drain(..).collect()
+        };
+        for c in drained {
+            // unblocks the handler's read_frame with EOF
+            let _ = c.stream.shutdown(Shutdown::Both);
+            let _ = c.handle.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    client: &CoordinatorClient,
+    cfg: &ServingConfig,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<Vec<Conn>>>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue; // transient accept error (e.g. ECONNABORTED)
+            }
+        };
+        if stop.load(Ordering::Acquire) {
+            return; // the self-connect wake-up, or a client racing stop
+        }
+        let _ = stream.set_nodelay(true);
+        let Ok(for_stop) = stream.try_clone() else { continue };
+        let client = client.clone();
+        let cfg = cfg.clone();
+        let spawned = std::thread::Builder::new()
+            .name("fsl-gateway-conn".into())
+            .spawn(move || handle_conn(stream, &client, &cfg));
+        let Ok(handle) = spawned else { continue };
+        let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
+        // reap connections that already hung up, so a long-lived gateway
+        // does not accumulate one dead entry per past client
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].handle.is_finished() {
+                let c = conns.swap_remove(i);
+                let _ = c.handle.join();
+            } else {
+                i += 1;
+            }
+        }
+        conns.push(Conn { stream: for_stop, handle });
+    }
+}
+
+/// Serve one connection until EOF, a framing error, or gateway stop.
+fn handle_conn(mut stream: TcpStream, client: &CoordinatorClient, cfg: &ServingConfig) {
+    loop {
+        let frame = match wire::read_frame(&mut stream, cfg.max_frame_bytes) {
+            Ok(Some(f)) => f,
+            Ok(None) => return, // clean EOF at a frame boundary
+            Err(e) => {
+                // the stream is desynchronized (truncated/oversized
+                // frame): answer best-effort and close — replying to
+                // misaligned bytes would corrupt every later exchange
+                let resp = Response::Error(format!("framing error: {e}"));
+                let _ = wire::write_frame(
+                    &mut stream,
+                    &wire::encode_response(&resp),
+                    cfg.max_frame_bytes,
+                );
+                return;
+            }
+        };
+        // a complete frame that fails to decode leaves the stream aligned:
+        // reply Error and keep the connection
+        let resp = match wire::decode_request(&frame) {
+            Err(e) => Response::Error(format!("bad request: {e}")),
+            // shutdown stays a local-owner operation (Coordinator::drop);
+            // accepting it from any TCP peer would let one client kill the
+            // device for everyone
+            Ok(Request::Shutdown) => {
+                Response::Error("shutdown is not accepted over the wire".into())
+            }
+            Ok(req) => {
+                let depth = client.load().queue_depth();
+                if depth > cfg.high_water {
+                    client.load().note_shed();
+                    Response::Busy { queue_depth: depth }
+                } else {
+                    client.call(req)
+                }
+            }
+        };
+        let payload = wire::encode_response(&resp);
+        if wire::write_frame(&mut stream, &payload, cfg.max_frame_bytes).is_err() {
+            return; // peer went away mid-reply
+        }
+    }
+}
+
+/// Blocking client for the gateway's wire protocol — the remote
+/// counterpart of [`crate::coordinator::Coordinator`]'s convenience
+/// methods, one frame round trip per call.
+pub struct WireClient {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+}
+
+impl WireClient {
+    /// Connect with the default frame cap ([`ServingConfig::default`]).
+    pub fn connect(addr: impl ToSocketAddrs) -> anyhow::Result<WireClient> {
+        Self::connect_with(addr, ServingConfig::default().max_frame_bytes)
+    }
+
+    /// Connect with an explicit frame cap (must match the server's to
+    /// move frames near the cap in either direction).
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        max_frame_bytes: usize,
+    ) -> anyhow::Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(WireClient { stream, max_frame_bytes })
+    }
+
+    /// One request/response round trip over the wire.
+    pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
+        wire::write_frame(&mut self.stream, &wire::encode_request(req), self.max_frame_bytes)?;
+        match wire::read_frame(&mut self.stream, self.max_frame_bytes)? {
+            Some(frame) => wire::decode_response(&frame),
+            None => anyhow::bail!("gateway closed the connection"),
+        }
+    }
+
+    /// Convenience wrappers mirroring [`crate::coordinator::Coordinator`]'s,
+    /// so a serving script can swap in-process for remote unchanged.
+    pub fn create_session(&mut self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
+        self.create_session_with(n_way, hv_bits, Distance::L1)
+    }
+
+    pub fn create_session_with(
+        &mut self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: Distance,
+    ) -> anyhow::Result<u64> {
+        match self.call(&Request::CreateSession { n_way, hv_bits, metric })? {
+            Response::SessionCreated { session } => Ok(session),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn add_shot(&mut self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
+        match self.call(&Request::AddShot { session, class, image })? {
+            Response::ShotAccepted { .. } => Ok(()),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn finish_training(&mut self, session: u64) -> anyhow::Result<usize> {
+        match self.call(&Request::FinishTraining { session })? {
+            Response::TrainingDone { shots, .. } => Ok(shots),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn query(
+        &mut self,
+        session: u64,
+        image: Vec<f32>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<QueryOutcome> {
+        match self.call(&Request::Query { session, image, ee })? {
+            Response::QueryResult { outcome, .. } => Ok(outcome),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn query_batch(
+        &mut self,
+        session: u64,
+        images: Vec<Vec<f32>>,
+        ee: Option<EeConfig>,
+    ) -> anyhow::Result<Vec<QueryOutcome>> {
+        match self.call(&Request::QueryBatch { session, images, ee })? {
+            Response::QueryBatchResult { outcomes, .. } => Ok(outcomes),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn close_session(&mut self, session: u64) -> anyhow::Result<()> {
+        match self.call(&Request::CloseSession { session })? {
+            Response::SessionClosed { .. } => Ok(()),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+
+    pub fn metrics(&mut self) -> anyhow::Result<MetricsSnapshot> {
+        match self.call(&Request::GetMetrics)? {
+            Response::Metrics(m) => Ok(m),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
+    }
+}

@@ -121,10 +121,12 @@ impl Metrics {
             fe_layers_skipped: self.fe_layers_skipped,
             branch_hvs_encoded: self.branch_hvs_encoded,
             // class-memory occupancy/gating are owned by the coordinator
-            // worker's ClassMemoryManager and filled in at GetMetrics time
+            // worker's ClassMemoryManager, and the shed counter by the
+            // serving load signal — both filled in at GetMetrics time
             class_mem_used_bits: 0,
             class_mem_active_banks: 0,
             class_mem_gated_banks: 0,
+            requests_shed: 0,
         }
     }
 }
@@ -157,6 +159,10 @@ pub struct MetricsSnapshot {
     pub class_mem_active_banks: usize,
     /// banks gated off — the energy model prices the standby saving
     pub class_mem_gated_banks: usize,
+    /// requests refused with `Response::Busy` by the TCP gateway's
+    /// admission control; counted by the gateway (the shed happens before
+    /// the worker ever sees the request) and filled in at `GetMetrics`
+    pub requests_shed: u64,
 }
 
 #[cfg(test)]

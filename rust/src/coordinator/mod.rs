@@ -18,20 +18,30 @@
 //!   one weight load (the Fig. 12 saving the simulator quantifies);
 //! * [`early_exit`] — the (E_s, E_c) consistency controller of Fig. 11;
 //! * [`server`] — the [`Coordinator`] event loop, chip-faithful class
-//!   memory admission, [`metrics`] accounting;
+//!   memory admission, [`metrics`] accounting; since PR 6 its worker owns
+//!   the persistent [`crate::runtime::WorkerPool`] batch sharding runs on
+//!   and a [`ServingLoad`] signal for admission control;
 //! * [`router`] — [`DeviceRouter`]: fans sessions over a fleet of
-//!   coordinators with least-loaded/round-robin placement and spill.
+//!   coordinators with least-loaded/round-robin placement and spill;
+//! * [`wire`] — length-prefixed JSON wire codec for [`Request`] /
+//!   [`Response`] (no new deps — `util::json` only);
+//! * [`gateway`] — the TCP front end: accept loop, per-connection
+//!   framing, and load shedding with `Response::Busy` past the
+//!   `[serving]` high-water mark (DESIGN.md §Serving runtime).
 
 pub mod batcher;
 pub mod early_exit;
+pub mod gateway;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod session;
+pub mod wire;
 
 pub use early_exit::EarlyExitController;
+pub use gateway::{Gateway, WireClient};
 pub use request::{Request, Response};
 pub use router::{DeviceRouter, Placement};
-pub use server::Coordinator;
+pub use server::{Coordinator, CoordinatorClient, ServingLoad};
 pub use session::FslSession;

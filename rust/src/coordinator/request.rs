@@ -5,8 +5,10 @@ use crate::config::EeConfig;
 use crate::coordinator::session::QueryOutcome;
 use crate::hdc::Distance;
 
-/// Commands accepted by the coordinator.
-#[derive(Debug)]
+/// Commands accepted by the coordinator. `Clone + PartialEq` so the wire
+/// codec (`coordinator::wire`) can be round-trip tested variant by
+/// variant.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Create a few-shot session at `hv_bits` class-memory precision with
     /// the given distance metric; replies `SessionCreated` (or `Error`
@@ -54,7 +56,7 @@ pub enum Request {
 }
 
 /// Replies.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     SessionCreated { session: u64 },
     ShotAccepted { session: u64, pending: usize, trained_classes: usize },
@@ -64,6 +66,12 @@ pub enum Response {
     SessionClosed { session: u64 },
     Metrics(crate::coordinator::metrics::MetricsSnapshot),
     ShuttingDown,
+    /// Load shed at the gateway's admission gate: the serving queue
+    /// (outstanding coordinator requests + pooled tasks) exceeded the
+    /// configured high-water mark when this request arrived. The request
+    /// was **not** executed; `queue_depth` is the depth that triggered the
+    /// shed, so clients can back off proportionally and retry.
+    Busy { queue_depth: usize },
     Error(String),
 }
 

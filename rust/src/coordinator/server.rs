@@ -1,9 +1,20 @@
 //! The coordinator event loop: a worker thread owns the compute engine
 //! (PJRT or native) and all session state; clients talk over an mpsc
 //! channel exactly like a host driving the device.
+//!
+//! The worker also owns the persistent [`WorkerPool`] its batch sharding
+//! runs on (installed with `pool::with_pool` around the event loop, so
+//! every `shard_map` it triggers dispatches there), and a [`ServingLoad`]
+//! signal shared with [`CoordinatorClient`] handles and the TCP gateway —
+//! the admission-control input (DESIGN.md §Serving runtime). Dropping the
+//! `Coordinator` joins the worker thread, which drops the pool, which
+//! drains every queue and joins every pool thread: no detached threads
+//! survive.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -14,8 +25,67 @@ use crate::coordinator::metrics::{Metrics, Op};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::session::{FslSession, QueryOutcome};
 use crate::hdc::class_mem::{Allocation, ClassMemoryManager};
-use crate::runtime::{ComputeEngine, FeStageExec};
+use crate::runtime::{pool, ComputeEngine, FeStageExec, WorkerPool};
 use crate::util::parallel::{shard_map, shard_map_mut};
+
+/// Live load signal shared by the coordinator handle, its clients and the
+/// TCP gateway: outstanding requests (queued on the channel or in
+/// service) plus tasks sitting in the worker pool's queues. The gateway
+/// sheds with `Response::Busy` when [`ServingLoad::queue_depth`] exceeds
+/// the configured high-water mark, and counts each shed here so
+/// `GetMetrics` can report `requests_shed`.
+#[derive(Debug, Default)]
+pub struct ServingLoad {
+    /// requests admitted and not yet answered (one [`LoadSlot`] each)
+    requests: AtomicUsize,
+    /// the coordinator pool's queued-task gauge (see
+    /// [`WorkerPool::with_gauge`]); zero when the engine runs serial
+    pool_tasks: Arc<AtomicUsize>,
+    shed: AtomicU64,
+}
+
+impl ServingLoad {
+    /// Current serving queue depth: admitted-but-unanswered requests plus
+    /// pool tasks submitted and not yet finished.
+    pub fn queue_depth(&self) -> usize {
+        self.requests.load(Ordering::Acquire) + self.pool_tasks.load(Ordering::Acquire)
+    }
+
+    /// Count one request as outstanding until the returned slot drops.
+    /// Every [`CoordinatorClient::call`] holds a slot for its duration;
+    /// tests hold slots directly to model a backed-up queue without
+    /// timing races.
+    pub fn occupy(&self) -> LoadSlot<'_> {
+        self.requests.fetch_add(1, Ordering::AcqRel);
+        LoadSlot(self)
+    }
+
+    /// Record one request refused with `Response::Busy`.
+    pub fn note_shed(&self) {
+        self.shed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Total requests refused with `Response::Busy` so far.
+    pub fn requests_shed(&self) -> u64 {
+        self.shed.load(Ordering::Acquire)
+    }
+
+    /// The gauge the coordinator's worker pool reports queued tasks into.
+    /// Exposed so a serving stack embedding its own [`WorkerPool`] (tests,
+    /// future multi-pool fleets) can feed the same admission signal.
+    pub fn pool_gauge(&self) -> Arc<AtomicUsize> {
+        self.pool_tasks.clone()
+    }
+}
+
+/// RAII token for one outstanding request (see [`ServingLoad::occupy`]).
+pub struct LoadSlot<'a>(&'a ServingLoad);
+
+impl Drop for LoadSlot<'_> {
+    fn drop(&mut self) {
+        self.0.requests.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 struct SessionState {
     session: FslSession,
@@ -31,6 +101,9 @@ struct Worker {
     /// models the chip's 256 KB class memory: sessions that do not fit on
     /// the device are rejected exactly like the hardware would
     class_mem: ClassMemoryManager,
+    /// shared load signal — read here only to surface `requests_shed`
+    /// (counted by the gateway) in metrics snapshots
+    load: Arc<ServingLoad>,
 }
 
 impl Worker {
@@ -207,6 +280,21 @@ impl Worker {
             .into_iter()
             .map(|o| o.ok_or_else(|| anyhow::anyhow!("query left without outcome")))
             .collect()
+    }
+
+    /// Serve requests until `Shutdown` arrives or every sender is gone.
+    /// Runs inside `pool::with_pool` when the engine is parallel, so all
+    /// `shard_map` calls made while handling requests dispatch to the
+    /// coordinator-owned pool.
+    fn event_loop(&mut self, rx: std::sync::mpsc::Receiver<(Request, Sender<Response>)>) {
+        while let Ok((req, reply)) = rx.recv() {
+            let shutdown = matches!(req, Request::Shutdown);
+            let resp = self.handle(req);
+            let _ = reply.send(resp);
+            if shutdown {
+                break;
+            }
+        }
     }
 
     fn handle(&mut self, req: Request) -> Response {
@@ -459,6 +547,10 @@ impl Worker {
                 snap.class_mem_used_bits = self.class_mem.used_bits();
                 snap.class_mem_active_banks = self.class_mem.active_banks();
                 snap.class_mem_gated_banks = self.class_mem.gated_banks();
+                // admission control happens at the gateway, before the
+                // worker ever sees a request — the count lives in the
+                // shared load signal, not in worker-owned Metrics
+                snap.requests_shed = self.load.requests_shed();
                 Response::Metrics(snap)
             }
             Request::Shutdown => Response::ShuttingDown,
@@ -468,20 +560,55 @@ impl Worker {
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    tx: Sender<(Request, Sender<Response>)>,
+    client: CoordinatorClient,
     handle: Option<JoinHandle<()>>,
+}
+
+/// Cloneable client handle: the request channel plus the shared load
+/// signal. This is what the TCP gateway's connection handlers hold — they
+/// must outlive no part of the `Coordinator` itself, which keeps worker
+/// shutdown (a `Coordinator::drop` concern) in exactly one place.
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: Sender<(Request, Sender<Response>)>,
+    load: Arc<ServingLoad>,
+}
+
+impl CoordinatorClient {
+    /// Synchronous request/response. Holds a [`LoadSlot`] for the full
+    /// round trip, so the serving queue depth counts in-service requests.
+    pub fn call(&self, req: Request) -> Response {
+        let _slot = self.load.occupy();
+        let (rtx, rrx) = channel();
+        if self.tx.send((req, rtx)).is_err() {
+            return Response::Error("coordinator stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+    }
+
+    /// The load signal admission control reads (shared with the
+    /// coordinator that created this client).
+    pub fn load(&self) -> &ServingLoad {
+        &self.load
+    }
 }
 
 impl Coordinator {
     /// Spawn the worker thread. The engine is *constructed inside* the
     /// worker (PJRT clients are not `Send`); `factory` runs there once and
     /// any construction error is reported back before `start` returns.
+    /// When the engine's [`crate::config::ParallelConfig`] resolves to
+    /// more than one worker, the thread also builds the persistent
+    /// [`WorkerPool`] its `shard_map` calls run on and installs it for the
+    /// lifetime of the event loop.
     pub fn start<F>(factory: F, k_shot: usize) -> anyhow::Result<Self>
     where
         F: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
     {
         let (tx, rx) = channel::<(Request, Sender<Response>)>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let load = Arc::new(ServingLoad::default());
+        let worker_load = load.clone();
         let handle = std::thread::spawn(move || {
             let engine = match factory() {
                 Ok(e) => {
@@ -493,6 +620,7 @@ impl Coordinator {
                     return;
                 }
             };
+            let shards = engine.parallelism().resolved_workers();
             let mut worker = Worker {
                 engine,
                 k_shot,
@@ -500,18 +628,24 @@ impl Coordinator {
                 next_id: 1,
                 metrics: Metrics::default(),
                 class_mem: ClassMemoryManager::paper(),
+                load: worker_load.clone(),
             };
-            while let Ok((req, reply)) = rx.recv() {
-                let shutdown = matches!(req, Request::Shutdown);
-                let resp = worker.handle(req);
-                let _ = reply.send(resp);
-                if shutdown {
-                    break;
-                }
+            if shards > 1 {
+                // the long-lived pool replaces per-call thread spawning;
+                // owned by this thread, so the drop below (after the event
+                // loop exits) drains its queues and joins its workers —
+                // that is what `Coordinator::drop` waits on via the thread
+                // join
+                let pool = WorkerPool::with_gauge(shards, worker_load.pool_gauge());
+                pool::with_pool(&pool, || worker.event_loop(rx));
+            } else {
+                worker.event_loop(rx);
             }
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Coordinator { tx, handle: Some(handle) }),
+            Ok(Ok(())) => {
+                Ok(Coordinator { client: CoordinatorClient { tx, load }, handle: Some(handle) })
+            }
             Ok(Err(e)) => {
                 let _ = handle.join();
                 anyhow::bail!("engine construction failed: {e}")
@@ -522,11 +656,19 @@ impl Coordinator {
 
     /// Synchronous request/response.
     pub fn call(&self, req: Request) -> Response {
-        let (rtx, rrx) = channel();
-        if self.tx.send((req, rtx)).is_err() {
-            return Response::Error("coordinator stopped".into());
-        }
-        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+        self.client.call(req)
+    }
+
+    /// A cloneable client (request channel + load signal) for the TCP
+    /// gateway and anything else that must issue requests without owning
+    /// the coordinator's lifetime.
+    pub fn client(&self) -> CoordinatorClient {
+        self.client.clone()
+    }
+
+    /// The serving load signal (admission control, tests).
+    pub fn serving_load(&self) -> Arc<ServingLoad> {
+        self.client.load.clone()
     }
 
     /// Convenience wrappers -----------------------------------------------
@@ -622,7 +764,10 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         let (rtx, _rrx) = channel();
-        let _ = self.tx.send((Request::Shutdown, rtx));
+        let _ = self.client.tx.send((Request::Shutdown, rtx));
+        // joining the worker thread transitively joins the pool: the event
+        // loop returns, `with_pool` unwinds, and the pool's Drop drains
+        // every task queue and joins every long-lived worker
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }

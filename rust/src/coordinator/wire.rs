@@ -1,0 +1,632 @@
+//! Length-prefixed JSON wire format for [`Request`] / [`Response`] — the
+//! serialization layer under the TCP gateway (DESIGN.md §Serving runtime).
+//! Built on `util::json` only: the offline registry policy (anyhow is the
+//! sole external crate) rules out serde.
+//!
+//! Framing: a 4-byte big-endian `u32` payload length, then that many
+//! bytes of UTF-8 JSON. Every message is an object with a `"type"` tag
+//! (`snake_case` of the variant name) plus the variant's fields.
+//!
+//! Exactness: `f32` image/feature data round-trips bit-exactly for all
+//! finite values — each `f32` widens losslessly to `f64`, prints via
+//! Rust's shortest-roundtrip float formatting, reparses to the same
+//! `f64`, and narrows back to the original `f32`. Non-finite floats are
+//! the documented exception: JSON has no NaN/inf literal, `util::json`
+//! writes them as `null`, and decode rejects the frame — a query carrying
+//! NaN pixels fails loudly at the boundary instead of corrupting a
+//! session. Session ids and counters are exact below 2^53 (ids are
+//! sequential from 1, so this never binds in practice).
+
+use std::io::{Read, Write};
+
+use crate::config::EeConfig;
+use crate::coordinator::metrics::{MetricsSnapshot, DEPTH_BINS};
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::session::QueryOutcome;
+use crate::hdc::Distance;
+use crate::util::json::{Json, JsonWriter};
+
+/// Write one frame: 4-byte big-endian length prefix + payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8], max_bytes: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        payload.len() <= max_bytes && payload.len() <= u32::MAX as usize,
+        "frame of {} bytes exceeds the {max_bytes}-byte cap",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary (the
+/// peer closed between messages). Errors — truncated header, truncated
+/// payload, or a length prefix over `max_bytes` — leave the stream
+/// desynchronized; the connection handler answers best-effort and closes.
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> anyhow::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut hdr[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            anyhow::bail!("truncated frame header ({got}/4 bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_be_bytes(hdr) as usize;
+    anyhow::ensure!(len <= max_bytes, "oversized frame: {len} bytes exceeds the cap {max_bytes}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| anyhow::anyhow!("truncated frame payload: {e}"))?;
+    Ok(Some(buf))
+}
+
+// --- encoding ------------------------------------------------------------
+
+fn f32_arr(w: &mut JsonWriter, key: &str, v: &[f32]) {
+    w.key(key).arr();
+    for &x in v {
+        w.num(f64::from(x));
+    }
+    w.end_arr();
+}
+
+fn f32_mat(w: &mut JsonWriter, key: &str, vs: &[Vec<f32>]) {
+    w.key(key).arr();
+    for v in vs {
+        w.arr();
+        for &x in v {
+            w.num(f64::from(x));
+        }
+        w.end_arr();
+    }
+    w.end_arr();
+}
+
+fn ee_field(w: &mut JsonWriter, ee: &Option<EeConfig>) {
+    if let Some(e) = ee {
+        w.key("ee").obj();
+        w.field_num("e_s", e.e_s as f64);
+        w.field_num("e_c", e.e_c as f64);
+        w.end_obj();
+    }
+}
+
+fn outcome_obj(w: &mut JsonWriter, o: &QueryOutcome) {
+    w.obj();
+    w.field_num("prediction", o.prediction as f64);
+    w.field_num("blocks_used", o.blocks_used as f64);
+    w.key("exited_early").bool_val(o.exited_early);
+    w.end_obj();
+}
+
+/// Serialize a request to its JSON payload (no frame prefix).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut w = JsonWriter::new();
+    w.obj();
+    match req {
+        Request::CreateSession { n_way, hv_bits, metric } => {
+            w.field_str("type", "create_session");
+            w.field_num("n_way", *n_way as f64);
+            w.field_num("hv_bits", f64::from(*hv_bits));
+            w.field_str("metric", metric.name());
+        }
+        Request::AddShot { session, class, image } => {
+            w.field_str("type", "add_shot");
+            w.field_num("session", *session as f64);
+            w.field_num("class", *class as f64);
+            f32_arr(&mut w, "image", image);
+        }
+        Request::AddShotBatch { session, class, images } => {
+            w.field_str("type", "add_shot_batch");
+            w.field_num("session", *session as f64);
+            w.field_num("class", *class as f64);
+            f32_mat(&mut w, "images", images);
+        }
+        Request::AddFeatureShot { session, class, feature } => {
+            w.field_str("type", "add_feature_shot");
+            w.field_num("session", *session as f64);
+            w.field_num("class", *class as f64);
+            f32_arr(&mut w, "feature", feature);
+        }
+        Request::QueryFeature { session, feature } => {
+            w.field_str("type", "query_feature");
+            w.field_num("session", *session as f64);
+            f32_arr(&mut w, "feature", feature);
+        }
+        Request::FinishTraining { session } => {
+            w.field_str("type", "finish_training");
+            w.field_num("session", *session as f64);
+        }
+        Request::Query { session, image, ee } => {
+            w.field_str("type", "query");
+            w.field_num("session", *session as f64);
+            f32_arr(&mut w, "image", image);
+            ee_field(&mut w, ee);
+        }
+        Request::QueryBatch { session, images, ee } => {
+            w.field_str("type", "query_batch");
+            w.field_num("session", *session as f64);
+            f32_mat(&mut w, "images", images);
+            ee_field(&mut w, ee);
+        }
+        Request::CloseSession { session } => {
+            w.field_str("type", "close_session");
+            w.field_num("session", *session as f64);
+        }
+        Request::GetMetrics => {
+            w.field_str("type", "get_metrics");
+        }
+        Request::Shutdown => {
+            w.field_str("type", "shutdown");
+        }
+    }
+    w.end_obj();
+    w.finish().into_bytes()
+}
+
+/// Serialize a response to its JSON payload (no frame prefix).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut w = JsonWriter::new();
+    w.obj();
+    match resp {
+        Response::SessionCreated { session } => {
+            w.field_str("type", "session_created");
+            w.field_num("session", *session as f64);
+        }
+        Response::ShotAccepted { session, pending, trained_classes } => {
+            w.field_str("type", "shot_accepted");
+            w.field_num("session", *session as f64);
+            w.field_num("pending", *pending as f64);
+            w.field_num("trained_classes", *trained_classes as f64);
+        }
+        Response::TrainingDone { session, shots } => {
+            w.field_str("type", "training_done");
+            w.field_num("session", *session as f64);
+            w.field_num("shots", *shots as f64);
+        }
+        Response::QueryResult { session, outcome } => {
+            w.field_str("type", "query_result");
+            w.field_num("session", *session as f64);
+            w.key("outcome");
+            outcome_obj(&mut w, outcome);
+        }
+        Response::QueryBatchResult { session, outcomes } => {
+            w.field_str("type", "query_batch_result");
+            w.field_num("session", *session as f64);
+            w.key("outcomes").arr();
+            for o in outcomes {
+                outcome_obj(&mut w, o);
+            }
+            w.end_arr();
+        }
+        Response::SessionClosed { session } => {
+            w.field_str("type", "session_closed");
+            w.field_num("session", *session as f64);
+        }
+        Response::Metrics(m) => {
+            w.field_str("type", "metrics");
+            w.field_num("shots", m.shots as f64);
+            w.field_num("trains", m.trains as f64);
+            w.field_num("queries", m.queries as f64);
+            w.field_num("errors", m.errors as f64);
+            w.field_num("feature_pads", m.feature_pads as f64);
+            w.field_num("add_shot_ms_mean", m.add_shot_ms_mean);
+            w.field_num("train_ms_mean", m.train_ms_mean);
+            w.field_num("query_ms_mean", m.query_ms_mean);
+            w.field_num("query_ms_max", m.query_ms_max);
+            w.field_num("early_exit_rate", m.early_exit_rate);
+            w.field_num("avg_blocks_used", m.avg_blocks_used);
+            w.key("query_depth_hist").arr();
+            for &b in &m.query_depth_hist {
+                w.num(b as f64);
+            }
+            w.end_arr();
+            w.field_num("fe_layers_executed", m.fe_layers_executed as f64);
+            w.field_num("fe_layers_skipped", m.fe_layers_skipped as f64);
+            w.field_num("branch_hvs_encoded", m.branch_hvs_encoded as f64);
+            w.field_num("class_mem_used_bits", m.class_mem_used_bits as f64);
+            w.field_num("class_mem_active_banks", m.class_mem_active_banks as f64);
+            w.field_num("class_mem_gated_banks", m.class_mem_gated_banks as f64);
+            w.field_num("requests_shed", m.requests_shed as f64);
+        }
+        Response::ShuttingDown => {
+            w.field_str("type", "shutting_down");
+        }
+        Response::Busy { queue_depth } => {
+            w.field_str("type", "busy");
+            w.field_num("queue_depth", *queue_depth as f64);
+        }
+        Response::Error(msg) => {
+            w.field_str("type", "error");
+            w.field_str("message", msg);
+        }
+    }
+    w.end_obj();
+    w.finish().into_bytes()
+}
+
+// --- decoding ------------------------------------------------------------
+
+fn get_f64(j: &Json, key: &str) -> anyhow::Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-numeric field {key:?}"))
+}
+
+fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    Ok(get_f64(j, key)? as usize)
+}
+
+fn get_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    Ok(get_f64(j, key)? as u64)
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-string field {key:?}"))
+}
+
+fn get_bool(j: &Json, key: &str) -> anyhow::Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-bool field {key:?}"))
+}
+
+fn f32_vec_of(v: &Json, what: &str) -> anyhow::Result<Vec<f32>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what} must be an array"))?
+        .iter()
+        .map(|x| {
+            // a NaN/inf f32 was serialized as null — reject it here
+            x.as_f64().map(|f| f as f32).ok_or_else(|| {
+                anyhow::anyhow!("non-numeric element in {what} (NaN/inf is not wire-encodable)")
+            })
+        })
+        .collect()
+}
+
+fn get_f32_vec(j: &Json, key: &str) -> anyhow::Result<Vec<f32>> {
+    f32_vec_of(j.get(key).ok_or_else(|| anyhow::anyhow!("missing field {key:?}"))?, key)
+}
+
+fn get_f32_mat(j: &Json, key: &str) -> anyhow::Result<Vec<Vec<f32>>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing or non-array field {key:?}"))?
+        .iter()
+        .map(|row| f32_vec_of(row, key))
+        .collect()
+}
+
+fn get_ee(j: &Json) -> anyhow::Result<Option<EeConfig>> {
+    match j.get("ee") {
+        None | Some(Json::Null) => Ok(None),
+        Some(o) => {
+            Ok(Some(EeConfig { e_s: get_usize(o, "e_s")?, e_c: get_usize(o, "e_c")? }))
+        }
+    }
+}
+
+fn outcome_of(j: &Json) -> anyhow::Result<QueryOutcome> {
+    Ok(QueryOutcome {
+        prediction: get_usize(j, "prediction")?,
+        blocks_used: get_usize(j, "blocks_used")?,
+        exited_early: get_bool(j, "exited_early")?,
+    })
+}
+
+fn parse_payload(payload: &[u8]) -> anyhow::Result<Json> {
+    Json::parse(std::str::from_utf8(payload)?)
+}
+
+/// Decode a request payload. Never panics: garbage, wrong shapes and
+/// unknown type tags all come back as errors.
+pub fn decode_request(payload: &[u8]) -> anyhow::Result<Request> {
+    let j = parse_payload(payload)?;
+    let ty = get_str(&j, "type")?;
+    match ty {
+        "create_session" => Ok(Request::CreateSession {
+            n_way: get_usize(&j, "n_way")?,
+            hv_bits: get_u64(&j, "hv_bits")? as u32,
+            metric: Distance::from_name(get_str(&j, "metric")?)?,
+        }),
+        "add_shot" => Ok(Request::AddShot {
+            session: get_u64(&j, "session")?,
+            class: get_usize(&j, "class")?,
+            image: get_f32_vec(&j, "image")?,
+        }),
+        "add_shot_batch" => Ok(Request::AddShotBatch {
+            session: get_u64(&j, "session")?,
+            class: get_usize(&j, "class")?,
+            images: get_f32_mat(&j, "images")?,
+        }),
+        "add_feature_shot" => Ok(Request::AddFeatureShot {
+            session: get_u64(&j, "session")?,
+            class: get_usize(&j, "class")?,
+            feature: get_f32_vec(&j, "feature")?,
+        }),
+        "query_feature" => Ok(Request::QueryFeature {
+            session: get_u64(&j, "session")?,
+            feature: get_f32_vec(&j, "feature")?,
+        }),
+        "finish_training" => Ok(Request::FinishTraining { session: get_u64(&j, "session")? }),
+        "query" => Ok(Request::Query {
+            session: get_u64(&j, "session")?,
+            image: get_f32_vec(&j, "image")?,
+            ee: get_ee(&j)?,
+        }),
+        "query_batch" => Ok(Request::QueryBatch {
+            session: get_u64(&j, "session")?,
+            images: get_f32_mat(&j, "images")?,
+            ee: get_ee(&j)?,
+        }),
+        "close_session" => Ok(Request::CloseSession { session: get_u64(&j, "session")? }),
+        "get_metrics" => Ok(Request::GetMetrics),
+        "shutdown" => Ok(Request::Shutdown),
+        other => anyhow::bail!("unknown request type {other:?}"),
+    }
+}
+
+/// Decode a response payload. Never panics (see [`decode_request`]).
+pub fn decode_response(payload: &[u8]) -> anyhow::Result<Response> {
+    let j = parse_payload(payload)?;
+    let ty = get_str(&j, "type")?;
+    match ty {
+        "session_created" => Ok(Response::SessionCreated { session: get_u64(&j, "session")? }),
+        "shot_accepted" => Ok(Response::ShotAccepted {
+            session: get_u64(&j, "session")?,
+            pending: get_usize(&j, "pending")?,
+            trained_classes: get_usize(&j, "trained_classes")?,
+        }),
+        "training_done" => Ok(Response::TrainingDone {
+            session: get_u64(&j, "session")?,
+            shots: get_usize(&j, "shots")?,
+        }),
+        "query_result" => Ok(Response::QueryResult {
+            session: get_u64(&j, "session")?,
+            outcome: outcome_of(
+                j.get("outcome").ok_or_else(|| anyhow::anyhow!("missing field \"outcome\""))?,
+            )?,
+        }),
+        "query_batch_result" => Ok(Response::QueryBatchResult {
+            session: get_u64(&j, "session")?,
+            outcomes: j
+                .get("outcomes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("missing or non-array field \"outcomes\""))?
+                .iter()
+                .map(outcome_of)
+                .collect::<anyhow::Result<_>>()?,
+        }),
+        "session_closed" => Ok(Response::SessionClosed { session: get_u64(&j, "session")? }),
+        "metrics" => {
+            let hist_j = j
+                .get("query_depth_hist")
+                .and_then(Json::as_u64_vec)
+                .ok_or_else(|| anyhow::anyhow!("missing or bad query_depth_hist"))?;
+            anyhow::ensure!(
+                hist_j.len() == DEPTH_BINS,
+                "query_depth_hist has {} bins, expected {DEPTH_BINS}",
+                hist_j.len()
+            );
+            let mut query_depth_hist = [0u64; DEPTH_BINS];
+            query_depth_hist.copy_from_slice(&hist_j);
+            Ok(Response::Metrics(MetricsSnapshot {
+                shots: get_u64(&j, "shots")?,
+                trains: get_u64(&j, "trains")?,
+                queries: get_u64(&j, "queries")?,
+                errors: get_u64(&j, "errors")?,
+                feature_pads: get_u64(&j, "feature_pads")?,
+                add_shot_ms_mean: get_f64(&j, "add_shot_ms_mean")?,
+                train_ms_mean: get_f64(&j, "train_ms_mean")?,
+                query_ms_mean: get_f64(&j, "query_ms_mean")?,
+                query_ms_max: get_f64(&j, "query_ms_max")?,
+                early_exit_rate: get_f64(&j, "early_exit_rate")?,
+                avg_blocks_used: get_f64(&j, "avg_blocks_used")?,
+                query_depth_hist,
+                fe_layers_executed: get_u64(&j, "fe_layers_executed")?,
+                fe_layers_skipped: get_u64(&j, "fe_layers_skipped")?,
+                branch_hvs_encoded: get_u64(&j, "branch_hvs_encoded")?,
+                class_mem_used_bits: get_u64(&j, "class_mem_used_bits")?,
+                class_mem_active_banks: get_usize(&j, "class_mem_active_banks")?,
+                class_mem_gated_banks: get_usize(&j, "class_mem_gated_banks")?,
+                requests_shed: get_u64(&j, "requests_shed")?,
+            }))
+        }
+        "shutting_down" => Ok(Response::ShuttingDown),
+        "busy" => Ok(Response::Busy { queue_depth: get_usize(&j, "queue_depth")? }),
+        "error" => Ok(Response::Error(get_str(&j, "message")?.to_string())),
+        other => anyhow::bail!("unknown response type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const CAP: usize = 1 << 20;
+
+    fn roundtrip_req(req: Request) {
+        let bytes = encode_request(&req);
+        let back = decode_request(&bytes)
+            .unwrap_or_else(|e| panic!("decode failed for {req:?}: {e} ({bytes:?})"));
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let bytes = encode_response(&resp);
+        let back = decode_response(&bytes)
+            .unwrap_or_else(|e| panic!("decode failed for {resp:?}: {e}"));
+        assert_eq!(back, resp);
+    }
+
+    /// f32 values that stress the float-exactness contract: subnormals,
+    /// extremes, negative zero, values with no short decimal form.
+    fn tricky_f32s() -> Vec<f32> {
+        vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            0.1,
+            std::f32::consts::PI,
+            f32::MAX,
+            f32::MIN,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            1.0e-44,                 // smallest subnormals
+            -3.402_822e38,
+            1.000_000_1,
+        ]
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips_exactly() {
+        let img = tricky_f32s();
+        let mat = vec![img.clone(), vec![], vec![42.5]];
+        let ee = Some(EeConfig { e_s: 2, e_c: 3 });
+        for metric in [Distance::L1, Distance::Dot, Distance::Cosine, Distance::Hamming] {
+            roundtrip_req(Request::CreateSession { n_way: 10, hv_bits: 4, metric });
+        }
+        roundtrip_req(Request::AddShot { session: 1, class: 3, image: img.clone() });
+        roundtrip_req(Request::AddShotBatch { session: 2, class: 0, images: mat.clone() });
+        roundtrip_req(Request::AddFeatureShot { session: 3, class: 9, feature: img.clone() });
+        roundtrip_req(Request::QueryFeature { session: 4, feature: vec![] });
+        roundtrip_req(Request::FinishTraining { session: 5 });
+        roundtrip_req(Request::Query { session: 6, image: img.clone(), ee });
+        roundtrip_req(Request::Query { session: 6, image: img, ee: None });
+        roundtrip_req(Request::QueryBatch { session: 7, images: mat.clone(), ee });
+        roundtrip_req(Request::QueryBatch { session: 7, images: mat, ee: None });
+        roundtrip_req(Request::CloseSession { session: u64::MAX >> 12 });
+        roundtrip_req(Request::GetMetrics);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips_exactly() {
+        let o = QueryOutcome { prediction: 3, blocks_used: 2, exited_early: true };
+        let o2 = QueryOutcome { prediction: 0, blocks_used: 4, exited_early: false };
+        roundtrip_resp(Response::SessionCreated { session: 11 });
+        roundtrip_resp(Response::ShotAccepted { session: 1, pending: 2, trained_classes: 3 });
+        roundtrip_resp(Response::TrainingDone { session: 1, shots: 50 });
+        roundtrip_resp(Response::QueryResult { session: 1, outcome: o.clone() });
+        roundtrip_resp(Response::QueryBatchResult { session: 1, outcomes: vec![o, o2] });
+        roundtrip_resp(Response::QueryBatchResult { session: 1, outcomes: vec![] });
+        roundtrip_resp(Response::SessionClosed { session: 9 });
+        let mut m = MetricsSnapshot {
+            shots: 10,
+            trains: 2,
+            queries: 31,
+            errors: 1,
+            feature_pads: 4,
+            add_shot_ms_mean: 0.125,
+            train_ms_mean: 3.5,
+            query_ms_mean: 0.013671875,
+            query_ms_max: 17.75,
+            early_exit_rate: 0.25,
+            avg_blocks_used: 2.5,
+            fe_layers_executed: 1000,
+            fe_layers_skipped: 200,
+            branch_hvs_encoded: 77,
+            class_mem_used_bits: 1 << 20,
+            class_mem_active_banks: 5,
+            class_mem_gated_banks: 11,
+            requests_shed: 6,
+            ..Default::default()
+        };
+        m.query_depth_hist = [1, 2, 3, 4, 5, 6, 7, 8];
+        roundtrip_resp(Response::Metrics(m));
+        roundtrip_resp(Response::Metrics(MetricsSnapshot::default()));
+        roundtrip_resp(Response::ShuttingDown);
+        roundtrip_resp(Response::Busy { queue_depth: 129 });
+        roundtrip_resp(Response::Error("bad \"quoted\" \n multiline".into()));
+    }
+
+    #[test]
+    fn float_means_roundtrip_bitwise_via_shortest_repr() {
+        // non-dyadic f64 means (latencies) must survive the text format
+        for v in [0.1, 1.0 / 3.0, 2.5e-7, 123456.789012345, f64::MIN_POSITIVE] {
+            let m = MetricsSnapshot { query_ms_mean: v, ..Default::default() };
+            let back = decode_response(&encode_response(&Response::Metrics(m))).unwrap();
+            match back {
+                Response::Metrics(b) => {
+                    assert_eq!(b.query_ms_mean.to_bits(), v.to_bits(), "{v}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_fail_decode_instead_of_corrupting() {
+        // util::json writes NaN/inf as null; the decoder must refuse the
+        // frame rather than hand the worker a zeroed pixel
+        let req = Request::Query { session: 1, image: vec![1.0, f32::NAN], ee: None };
+        let err = decode_request(&encode_request(&req)).unwrap_err().to_string();
+        assert!(err.contains("NaN"), "{err}");
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_stream() {
+        let mut buf = Vec::new();
+        let reqs = [
+            Request::GetMetrics,
+            Request::AddShot { session: 1, class: 0, image: vec![0.5; 16] },
+            Request::Shutdown,
+        ];
+        for r in &reqs {
+            write_frame(&mut buf, &encode_request(r), CAP).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for want in &reqs {
+            let frame = read_frame(&mut cur, CAP).unwrap().expect("frame present");
+            assert_eq!(&decode_request(&frame).unwrap(), want);
+        }
+        assert!(read_frame(&mut cur, CAP).unwrap().is_none(), "clean EOF after the last frame");
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error_without_panicking() {
+        // EOF mid-header
+        let mut cur = Cursor::new(vec![0u8, 0]);
+        assert!(read_frame(&mut cur, CAP).unwrap_err().to_string().contains("header"));
+        // EOF mid-payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"type\":\"get_metrics\"}", CAP).unwrap();
+        buf.truncate(buf.len() - 5);
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur, CAP).unwrap_err().to_string().contains("payload"));
+        // length prefix over the cap (e.g. a peer speaking a different
+        // protocol): rejected before allocating the claimed buffer
+        let mut cur = Cursor::new(u32::MAX.to_be_bytes().to_vec());
+        assert!(read_frame(&mut cur, CAP).unwrap_err().to_string().contains("oversized"));
+        // writer side refuses frames it could not prefix
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &[0u8; 32], 16).is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_error_without_panicking() {
+        for garbage in [
+            &b"not json at all"[..],
+            b"{",
+            b"[1,2,3]",
+            b"{\"no_type\":1}",
+            b"{\"type\":\"warp_drive\"}",
+            b"{\"type\":\"query\"}",                     // missing fields
+            b"{\"type\":\"add_shot\",\"session\":\"x\"}", // wrong field type
+            b"\xff\xfe\x00",                            // invalid UTF-8
+        ] {
+            assert!(decode_request(garbage).is_err(), "{garbage:?}");
+            assert!(decode_response(garbage).is_err(), "{garbage:?}");
+        }
+        // a response tag is not a request tag and vice versa
+        assert!(decode_request(b"{\"type\":\"busy\",\"queue_depth\":1}").is_err());
+        assert!(decode_response(b"{\"type\":\"get_metrics\"}").is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //!
 //! Subcommands:
 //!   episode         run N-way k-shot ODL episodes through the coordinator
+//!   serve           expose one coordinator over the TCP gateway
 //!   sim             chip-simulator report (training / inference)
 //!   check-artifacts load artifacts, execute them, compare vs goldens
 //!   info            print model / chip configuration
@@ -14,6 +15,7 @@
 //!   fsl-hdnn episode --hv-bits 1 --metric hamming # packed binary classifier
 //!   fsl-hdnn episode --base-width 32 --stages 3 --image-size 64  # synthetic geometry
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
+//!   fsl-hdnn serve --addr 127.0.0.1:7878 --workers 0 --high-water 64
 //!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
 //!   fsl-hdnn check-artifacts
 
@@ -208,6 +210,63 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve`: one coordinator behind the TCP gateway, until killed. The
+/// `[serving]` TOML section supplies defaults; `--addr`, `--high-water`
+/// and `--max-frame-bytes` override. Model/engine knobs mirror `episode`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut rc = fsl_hdnn::config::RunConfig::default();
+    if let Some(path) = args.kv.get("config") {
+        let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
+        rc.apply_toml(&doc)?;
+    }
+    let backend = Backend::from_name(&args.get_str("backend", "native"))?;
+    let k_shot: usize = args.get("k-shot", rc.workload.k_shot);
+    let par = ParallelConfig {
+        workers: args.get("workers", rc.parallel.workers),
+        min_batch_per_worker: args.get("min-batch-per-worker", rc.parallel.min_batch_per_worker),
+    };
+    let mut serving = rc.serving.clone();
+    serving.addr = args.get_str("addr", &serving.addr);
+    serving.high_water = args.get("high-water", serving.high_water);
+    serving.max_frame_bytes = args.get("max-frame-bytes", serving.max_frame_bytes);
+    let mut mc = rc.model.clone();
+    mc.clustered = args.get("clustered", mc.clustered);
+    let dir = artifacts_dir(args);
+    let coord = Coordinator::start(
+        move || {
+            Ok(ComputeEngine::open_or_synthetic_with(backend, &dir, mc)?.with_parallelism(par))
+        },
+        k_shot,
+    )?;
+    let gateway = fsl_hdnn::coordinator::Gateway::bind(coord.client(), &serving)?;
+    println!(
+        "serving on {} (workers={}, high_water={}, k_shot={k_shot})",
+        gateway.local_addr(),
+        par.resolved_workers(),
+        serving.high_water
+    );
+    // serve until the process is killed; `gateway` and `coord` stay owned
+    // for the whole loop so their drop-time shutdown chains remain intact.
+    // --metrics-every N prints a snapshot every N seconds instead of
+    // parking silently.
+    let every: u64 = args.get("metrics-every", 0);
+    loop {
+        if every == 0 {
+            std::thread::park();
+        } else {
+            std::thread::sleep(std::time::Duration::from_secs(every));
+            let m = coord.metrics();
+            println!(
+                "queries={} query_ms_mean={:.3} shed={} depth={}",
+                m.queries,
+                m.query_ms_mean,
+                m.requests_shed,
+                coord.serving_load().queue_depth()
+            );
+        }
+    }
+}
+
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let cfg = ChipConfig {
         freq_mhz: args.get("freq", 250.0),
@@ -318,12 +377,13 @@ fn main() {
     let args = Args::parse();
     let result = match args.cmd.as_str() {
         "episode" => cmd_episode(&args),
+        "serve" => cmd_serve(&args),
         "sim" => cmd_sim(&args),
         "check-artifacts" => cmd_check_artifacts(&args),
         "info" => cmd_info(&args),
         _ => {
             println!(
-                "usage: fsl-hdnn <episode|sim|check-artifacts|info> [--key value ...]\n\
+                "usage: fsl-hdnn <episode|serve|sim|check-artifacts|info> [--key value ...]\n\
                  see doc comments in rust/src/main.rs"
             );
             Ok(())

@@ -107,9 +107,11 @@ impl Backend {
 /// without artifacts on synthetic weights.
 ///
 /// The native variant carries a [`ParallelConfig`]: `fe_forward` / `encode`
-/// batches are sharded across scoped worker threads with bit-identical
-/// output for any worker count (DESIGN.md §Threading model). The default is
-/// serial; see [`ComputeEngine::with_parallelism`].
+/// batches are sharded across the persistent worker pool
+/// (`runtime::pool::WorkerPool` — long-lived channel-fed threads, no
+/// per-call spawns) with bit-identical output for any worker count
+/// (DESIGN.md §Threading model). The default is serial; see
+/// [`ComputeEngine::with_parallelism`].
 pub enum ComputeEngine {
     Native { fe: FeModel, enc: CrpEncoder, par: ParallelConfig },
     Pjrt { reg: ArtifactRegistry, enc: CrpEncoder },
@@ -260,8 +262,8 @@ impl ComputeEngine {
     /// FE forward for a batch of images (each flat H*W*C). Returns, per
     /// image, the `n_branches` branch features padded to `feature_dim`.
     ///
-    /// Native: the batch is sharded across scoped worker threads per the
-    /// engine's [`ParallelConfig`]; output is bit-identical to serial.
+    /// Native: the batch is sharded across the persistent worker pool per
+    /// the engine's [`ParallelConfig`]; output is bit-identical to serial.
     /// PJRT: batches stream through the `fe_forward_b8` artifact; tails of
     /// 2..=7 images are zero-padded up to the b8 entry and the padded rows
     /// truncated — one batched execution instead of up to 7 serial b1 calls

@@ -7,9 +7,15 @@
 //! manifest parsing, signatures and the native backend work without it,
 //! and [`ComputeEngine::from_config`] builds a native engine from
 //! configuration alone, with no artifacts directory at all.
+//!
+//! [`pool`] is the persistent worker runtime the native backend's batch
+//! sharding executes on (DESIGN.md §Serving runtime): long-lived workers
+//! with per-worker mpsc queues, replacing per-call thread spawns.
 
 pub mod artifacts;
 pub mod engine;
+pub mod pool;
 
 pub use artifacts::ArtifactRegistry;
 pub use engine::{ComputeEngine, FeStageExec};
+pub use pool::WorkerPool;

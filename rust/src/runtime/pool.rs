@@ -1,0 +1,396 @@
+//! Persistent worker runtime: long-lived threads, each owning an mpsc task
+//! queue (the kubecl `Worker`/`InnerWorker` shape), replacing the
+//! per-call `std::thread::scope` spawns that `util::parallel::shard_map`
+//! used through PR 5. Spawning a thread costs tens of microseconds; a
+//! queue send costs well under one — at serving rates the spawn tax was
+//! the dominant per-batch overhead.
+//!
+//! Three pieces:
+//! * [`WorkerPool`] — N workers, each with its own queue; tasks are
+//!   dispatched round-robin. Dropping the pool drops every sender first,
+//!   so each worker *drains its remaining queue* and exits, then all
+//!   threads are joined — no detached threads, no abandoned tasks.
+//! * [`WorkerPool::run_scoped`] — fork-join over borrowed data on the
+//!   persistent workers. This is what `shard_map` builds on: it blocks
+//!   until every job has signalled completion, which is what makes the
+//!   (carefully scoped) lifetime transmute sound.
+//! * [`with_pool`] / [`global`] — pool selection without threading a pool
+//!   handle through every signature: the coordinator worker installs its
+//!   own pool for the duration of its event loop (so `Coordinator::drop`
+//!   joins those workers); direct callers fall back to a process-wide
+//!   pool sized to the machine, which lives for the process like rayon's.
+//!
+//! The determinism contract (DESIGN.md §Threading model) is unaffected:
+//! the pool only changes *where* shard closures run, never how batches
+//! are chunked or stitched.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, OnceLock};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+thread_local! {
+    /// Set for the lifetime of every pool worker thread. A nested
+    /// `run_scoped` from inside a worker runs its jobs inline: a worker
+    /// queueing behind the very call it is executing would deadlock.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Pool installed for the current thread by [`with_pool`]; null means
+    /// "use [`global`]". Raw pointer, never read outside the `with_pool`
+    /// frame that set it (the guard restores the previous value on exit).
+    static CURRENT_POOL: Cell<*const WorkerPool> = const { Cell::new(std::ptr::null()) };
+}
+
+struct WorkerHandle {
+    /// `None` once shutdown has begun; dropping the sender is what makes
+    /// the worker's `recv` loop terminate after draining its queue.
+    tx: Option<Sender<Task>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A fixed set of long-lived worker threads, each owning one task queue.
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    /// round-robin dispatch cursor
+    next: AtomicUsize,
+    /// tasks submitted but not yet finished, across all queues — the load
+    /// signal the serving gateway's admission control reads
+    queued: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers (clamped to at least 1).
+    pub fn new(n: usize) -> Self {
+        Self::with_gauge(n, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// [`WorkerPool::new`] with a caller-owned queue-depth gauge, so an
+    /// embedding serving stack (`coordinator::server::ServingLoad`) can
+    /// watch pool backlog without polling the pool itself.
+    pub fn with_gauge(n: usize, queued: Arc<AtomicUsize>) -> Self {
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let (tx, rx) = channel::<Task>();
+                let gauge = queued.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("fsl-pool-{i}"))
+                    .spawn(move || {
+                        IS_POOL_WORKER.with(|f| f.set(true));
+                        // recv() serves every queued task before erroring
+                        // once all senders are gone, so shutdown drains
+                        // in-flight work instead of abandoning it
+                        while let Ok(task) = rx.recv() {
+                            // a panicking task must not kill the long-lived
+                            // worker or wedge the gauge; run_scoped catches
+                            // first and re-raises on the submitting thread
+                            let _ = catch_unwind(AssertUnwindSafe(task));
+                            gauge.fetch_sub(1, Ordering::AcqRel);
+                        }
+                    })
+                    .expect("spawn pool worker");
+                WorkerHandle { tx: Some(tx), handle: Some(handle) }
+            })
+            .collect();
+        WorkerPool { workers, next: AtomicUsize::new(0), queued }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Tasks submitted but not yet finished (queued + in service).
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Fire-and-forget: run `task` on some worker. Panics inside the task
+    /// are swallowed (the worker survives); use [`WorkerPool::run_scoped`]
+    /// when completion or panics must reach the caller.
+    pub fn submit(&self, task: impl FnOnce() + Send + 'static) {
+        self.dispatch(Box::new(task));
+    }
+
+    fn dispatch(&self, task: Task) {
+        self.queued.fetch_add(1, Ordering::AcqRel);
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        let tx = self.workers[i].tx.as_ref().expect("dispatch after shutdown");
+        if let Err(e) = tx.send(task) {
+            // unreachable in practice (a worker only exits when its sender
+            // drops), but losing a task would hang run_scoped forever —
+            // run it inline instead
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            (e.0)();
+        }
+    }
+
+    /// Fork-join over borrowed data: run every job to completion on the
+    /// pool, blocking until the last one finishes. The first job panic is
+    /// re-raised on the calling thread *after* all jobs have completed
+    /// (so no job is ever left running against dropped borrows). Called
+    /// from inside a pool worker, jobs run inline serially — see
+    /// `IS_POOL_WORKER`.
+    pub fn run_scoped<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if IS_POOL_WORKER.with(|f| f.get()) {
+            return run_inline(jobs);
+        }
+        let n = jobs.len();
+        let (done_tx, done_rx) = channel::<Option<PanicPayload>>();
+        for job in jobs {
+            let done = done_tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 's> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(job));
+                let _ = done.send(r.err());
+            });
+            // SAFETY: the loop below blocks until every job has sent its
+            // completion signal (sent unconditionally — panics are caught
+            // inside `wrapped`), so the non-'static borrows captured by
+            // the job cannot be invalidated while the pool can still run
+            // it. This is the classic scoped-pool erasure; the 'static
+            // lie never escapes this function.
+            let task =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, Task>(wrapped) };
+            self.dispatch(task);
+        }
+        drop(done_tx);
+        let mut first_panic: Option<PanicPayload> = None;
+        for _ in 0..n {
+            match done_rx.recv() {
+                Ok(p) => {
+                    if first_panic.is_none() {
+                        first_panic = p;
+                    }
+                }
+                // every job signals exactly once; a missing signal means a
+                // worker thread died, and unblocking with a hard error
+                // beats hanging the caller forever
+                Err(_) => panic!("worker pool: a worker died mid-scope"),
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // drop every sender first: each worker drains what is already in
+        // its queue, then its recv() errors and the thread exits
+        for w in &mut self.workers {
+            w.tx.take();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                // workers never panic outside caught task code, but a join
+                // error must not double-panic Drop
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn run_inline(jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let mut first_panic: Option<PanicPayload> = None;
+    for job in jobs {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+            if first_panic.is_none() {
+                first_panic = Some(p);
+            }
+        }
+    }
+    if let Some(p) = first_panic {
+        resume_unwind(p);
+    }
+}
+
+/// The process-wide fallback pool, one worker per available core, created
+/// on first use. Like rayon's global pool it lives for the process;
+/// callers that need joined shutdown (the coordinator) install their own
+/// pool with [`with_pool`] instead.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        WorkerPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+/// Install `pool` as the current thread's pool for the duration of `f`:
+/// `shard_map` calls made on this thread (and only this thread) dispatch
+/// to it instead of the global pool. Restores the previous installation
+/// on exit, including on panic.
+pub fn with_pool<R>(pool: &WorkerPool, f: impl FnOnce() -> R) -> R {
+    struct Restore(*const WorkerPool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT_POOL.with(|c| c.set(self.0));
+        }
+    }
+    let prev = CURRENT_POOL.with(|c| c.replace(pool as *const WorkerPool));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Run `f` against the current thread's installed pool, or the global one.
+pub(crate) fn with_current<R>(f: impl FnOnce(&WorkerPool) -> R) -> R {
+    let p = CURRENT_POOL.with(|c| c.get());
+    if p.is_null() {
+        f(global())
+    } else {
+        // SAFETY: a non-null CURRENT_POOL was set by a `with_pool` frame
+        // still on this thread's stack (its guard restores the slot before
+        // the pool borrow it holds can end), so the pointee is alive.
+        f(unsafe { &*p })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Condvar, Mutex};
+
+    #[test]
+    fn submit_runs_tasks_and_drop_drains_the_queue() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(2);
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // drop joins every worker after its queue drains: all 50 must have
+        // run even if none had started yet
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn run_scoped_joins_jobs_over_borrowed_data() {
+        let pool = WorkerPool::new(3);
+        let mut slots = vec![0usize; 7];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| Box::new(move || *s = i * i) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(slots, vec![0, 1, 4, 9, 16, 25, 36]);
+        assert_eq!(pool.queue_depth(), 0, "all scoped work accounted for");
+    }
+
+    #[test]
+    fn run_scoped_propagates_panics_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("job {i} exploded")
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }));
+        assert!(r.is_err(), "the job panic must reach the caller");
+        // the workers caught the panic and live on
+        let mut out = vec![0; 3];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .iter_mut()
+            .map(|s| Box::new(move || *s = 7) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(out, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn nested_run_scoped_inlines_instead_of_deadlocking() {
+        // a 1-worker pool is the acid test: the outer job occupies the only
+        // worker, so a queued inner job could never start
+        let pool = Arc::new(WorkerPool::new(1));
+        let mut outer_done = false;
+        let p2 = pool.clone();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            let mut inner = vec![0usize; 4];
+            let inner_jobs: Vec<Box<dyn FnOnce() + Send + '_>> = inner
+                .iter_mut()
+                .enumerate()
+                .map(|(i, s)| Box::new(move || *s = i + 1) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            p2.run_scoped(inner_jobs);
+            assert_eq!(inner, vec![1, 2, 3, 4]);
+            outer_done = true;
+        })];
+        pool.run_scoped(jobs);
+        assert!(outer_done);
+    }
+
+    #[test]
+    fn queue_depth_counts_queued_and_in_service_tasks() {
+        let pool = WorkerPool::new(1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        for _ in 0..3 {
+            let g = gate.clone();
+            pool.submit(move || {
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        // depth counts at submit time: one task blocked in service on the
+        // single worker, two waiting behind it
+        assert_eq!(pool.queue_depth(), 3);
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+        for _ in 0..200 {
+            if pool.queue_depth() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(pool.queue_depth(), 0, "depth returns to zero after the queue drains");
+    }
+
+    #[test]
+    fn hundred_pools_create_and_drop_without_leaking_work() {
+        // regression for the worker-pool shutdown contract: every pool
+        // joins its threads and drains its queue on drop, so this loop
+        // neither hangs, panics, nor loses tasks
+        let ran = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let pool = WorkerPool::new(2);
+            for _ in 0..4 {
+                let r = ran.clone();
+                pool.submit(move || {
+                    r.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        assert_eq!(ran.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn with_pool_installs_and_restores_the_current_pool() {
+        let pool = WorkerPool::new(2);
+        let installed = with_pool(&pool, || with_current(|c| std::ptr::eq(c, &pool)));
+        assert!(installed, "inside with_pool, shard_map dispatches to the installed pool");
+        // nesting restores the outer installation, not the global fallback
+        let outer = WorkerPool::new(1);
+        with_pool(&outer, || {
+            with_pool(&pool, || assert!(with_current(|c| std::ptr::eq(c, &pool))));
+            assert!(with_current(|c| std::ptr::eq(c, &outer)));
+        });
+        assert!(with_current(|c| std::ptr::eq(c, global())), "outside, the global pool serves");
+    }
+}

@@ -26,6 +26,10 @@ enum Entry {
     /// the ns_per_op/items_per_s fields so trajectory tooling never reads
     /// a ratio as a throughput
     Ratio { kernel: String, ratio: f64 },
+    /// named free-form values (e.g. a latency-percentile row from the
+    /// serving load generator: p50_ms/p99_ms/qps) — each (name, value)
+    /// pair becomes its own field next to `kernel`
+    Values { kernel: String, values: Vec<(String, f64)> },
 }
 
 impl BenchLog {
@@ -51,6 +55,19 @@ impl BenchLog {
     /// timing row.
     pub fn record_ratio(&mut self, kernel: &str, ratio: f64) {
         self.entries.push(Entry::Ratio { kernel: kernel.to_string(), ratio });
+    }
+
+    /// Record a row of named values — the shape for measurements that are
+    /// neither a single timing nor a ratio, like the serving load
+    /// generator's `{p50_ms, p99_ms, qps, clients}` latency rows. Each
+    /// pair becomes its own JSON field next to `kernel`; the names
+    /// `ns_per_op`, `items_per_s`, `workers` and `ratio` stay reserved for
+    /// the typed entries so trajectory tooling can keep keying on them.
+    pub fn record_values(&mut self, kernel: &str, values: &[(&str, f64)]) {
+        self.entries.push(Entry::Values {
+            kernel: kernel.to_string(),
+            values: values.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
     }
 
     /// Merge this bench's section into `BENCH_hotpath.json` at the repo
@@ -89,6 +106,12 @@ impl BenchLog {
                     Entry::Ratio { kernel, ratio } => {
                         o.insert("kernel".to_string(), Json::Str(kernel.clone()));
                         o.insert("ratio".to_string(), Json::Num(*ratio));
+                    }
+                    Entry::Values { kernel, values } => {
+                        o.insert("kernel".to_string(), Json::Str(kernel.clone()));
+                        for (k, v) in values {
+                            o.insert(k.clone(), Json::Num(*v));
+                        }
                     }
                 }
                 Json::Obj(o)
@@ -172,6 +195,23 @@ mod tests {
         // a ratio row never carries timing fields, and vice versa
         assert!(rows[1].get("ns_per_op").is_none());
         assert!(rows[0].get("ratio").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn values_rows_carry_each_named_field() {
+        let path = tmp_path("values");
+        let _ = std::fs::remove_file(&path);
+        let mut log = BenchLog::new("bench_v");
+        log.record_values("gateway_query", &[("p50_ms", 0.5), ("p99_ms", 2.25), ("qps", 800.0)]);
+        log.write_to(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("benches").unwrap().get("bench_v").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(rows[0].get("kernel").unwrap().as_str(), Some("gateway_query"));
+        assert_eq!(rows[0].get("p50_ms").unwrap().as_f64(), Some(0.5));
+        assert_eq!(rows[0].get("p99_ms").unwrap().as_f64(), Some(2.25));
+        assert_eq!(rows[0].get("qps").unwrap().as_f64(), Some(800.0));
+        assert!(rows[0].get("ns_per_op").is_none(), "typed fields stay reserved");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,6 +1,6 @@
-//! Deterministic batch-parallel execution: shard an item batch across a
-//! `std::thread::scope` worker pool (anyhow-only dependency policy — no
-//! rayon) and stitch per-item results back in input order.
+//! Deterministic batch-parallel execution: shard an item batch across the
+//! persistent worker pool (`runtime::pool`, anyhow-only dependency policy
+//! — no rayon) and stitch per-item results back in input order.
 //!
 //! The determinism contract (DESIGN.md §Threading model): every item is
 //! processed independently by a pure `&self` function, shards are
@@ -8,14 +8,24 @@
 //! the output is bit-identical to the serial loop for any shard count.
 //! No reductions happen across shard boundaries, which is what keeps
 //! floating-point results exactly reproducible.
+//!
+//! Since PR 6 the shards run on long-lived workers instead of per-call
+//! `std::thread::scope` spawns: chunk jobs go to the thread's installed
+//! pool (`pool::with_pool`, which the coordinator worker wraps around its
+//! event loop) or the process-wide fallback (`pool::global`). The chunk
+//! formula, stitching order and error semantics are unchanged, so the
+//! contract carries over verbatim; only the per-call thread-spawn tax is
+//! gone.
 
-/// Apply `f` to every item, fanning the batch out over `shards` scoped
-/// worker threads. `shards <= 1` (or a batch of 0/1 items) runs the plain
-/// serial loop on the caller's thread — no threads are spawned.
+use crate::runtime::pool;
+
+/// Apply `f` to every item, fanning the batch out over `shards` workers of
+/// the persistent pool. `shards <= 1` (or a batch of 0/1 items) runs the
+/// plain serial loop on the caller's thread — the pool is never touched.
 ///
 /// Errors propagate like the serial loop's `collect::<Result<_>>`: the
 /// first failing item (in input order) wins. Worker panics resume on the
-/// caller's thread.
+/// caller's thread after all chunks have completed.
 pub fn shard_map<T, U, F>(items: &[T], shards: usize, f: F) -> anyhow::Result<Vec<U>>
 where
     T: Sync,
@@ -27,22 +37,23 @@ where
     }
     let chunk_len = items.len().div_ceil(shards.min(items.len()));
     let f = &f;
-    let mut chunk_results: Vec<anyhow::Result<Vec<U>>> = Vec::new();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = items
+    let mut chunk_results: Vec<Option<anyhow::Result<Vec<U>>>> = Vec::new();
+    chunk_results.resize_with(items.len().div_ceil(chunk_len), || None);
+    pool::with_current(|p| {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
             .chunks(chunk_len)
-            .map(|chunk| {
-                s.spawn(move || chunk.iter().map(f).collect::<anyhow::Result<Vec<U>>>())
+            .zip(chunk_results.iter_mut())
+            .map(|(chunk, slot)| {
+                Box::new(move || {
+                    *slot = Some(chunk.iter().map(f).collect::<anyhow::Result<Vec<U>>>());
+                }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        for h in handles {
-            let r = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-            chunk_results.push(r);
-        }
+        p.run_scoped(jobs);
     });
     let mut out = Vec::with_capacity(items.len());
     for r in chunk_results {
-        out.extend(r?);
+        out.extend(r.expect("run_scoped completed every chunk")?);
     }
     Ok(out)
 }
@@ -62,23 +73,25 @@ where
         return items.iter_mut().map(f).collect();
     }
     let chunk_len = items.len().div_ceil(shards.min(items.len()));
+    let n_chunks = items.len().div_ceil(chunk_len);
     let f = &f;
-    let mut chunk_results: Vec<anyhow::Result<Vec<U>>> = Vec::new();
-    std::thread::scope(|s| {
-        let handles: Vec<_> = items
+    let mut chunk_results: Vec<Option<anyhow::Result<Vec<U>>>> = Vec::new();
+    chunk_results.resize_with(n_chunks, || None);
+    pool::with_current(|p| {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
             .chunks_mut(chunk_len)
-            .map(|chunk| {
-                s.spawn(move || chunk.iter_mut().map(f).collect::<anyhow::Result<Vec<U>>>())
+            .zip(chunk_results.iter_mut())
+            .map(|(chunk, slot)| {
+                Box::new(move || {
+                    *slot = Some(chunk.iter_mut().map(f).collect::<anyhow::Result<Vec<U>>>());
+                }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
-        for h in handles {
-            let r = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
-            chunk_results.push(r);
-        }
+        p.run_scoped(jobs);
     });
     let mut out = Vec::with_capacity(items.len());
     for r in chunk_results {
-        out.extend(r?);
+        out.extend(r.expect("run_scoped completed every chunk")?);
     }
     Ok(out)
 }
@@ -86,6 +99,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::pool::{with_pool, WorkerPool};
 
     #[test]
     fn preserves_input_order_for_any_shard_count() {
@@ -170,5 +184,55 @@ mod tests {
         for shards in [2, 4, 9] {
             assert_eq!(shard_map(&items, shards, work).unwrap(), serial);
         }
+    }
+
+    #[test]
+    fn runs_on_an_installed_pool_without_residue() {
+        // with_pool routes the shards onto a caller-owned pool (what the
+        // coordinator worker does around its event loop); results stay
+        // bit-identical and no task is left behind on the pool
+        let items: Vec<u64> = (0..31).collect();
+        let serial = shard_map(&items, 1, |&i| Ok(i * i)).unwrap();
+        let p = WorkerPool::new(3);
+        let got = with_pool(&p, || shard_map(&items, 5, |&i| Ok(i * i))).unwrap();
+        assert_eq!(got, serial);
+        assert_eq!(p.queue_depth(), 0);
+    }
+
+    #[test]
+    fn nested_shard_map_matches_serial() {
+        // an outer shard closure calling shard_map again lands on a pool
+        // worker thread, where the inner call must run inline (deadlock
+        // guard) and still produce the serial result
+        let items: Vec<usize> = (0..12).collect();
+        let work = |&i: &usize| -> anyhow::Result<usize> {
+            let inner: Vec<usize> = (0..6).collect();
+            let parts = shard_map(&inner, 3, |&j| Ok(i * 10 + j))?;
+            Ok(parts.into_iter().sum())
+        };
+        let serial = shard_map(&items, 1, work).unwrap();
+        let p = WorkerPool::new(2);
+        for shards in [2, 4, 12] {
+            assert_eq!(shard_map(&items, shards, work).unwrap(), serial, "global pool");
+            let got = with_pool(&p, || shard_map(&items, shards, work)).unwrap();
+            assert_eq!(got, serial, "installed pool, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn worker_panics_resume_on_the_caller() {
+        let items: Vec<usize> = (0..8).collect();
+        let r = std::panic::catch_unwind(|| {
+            let _ = shard_map(&items, 4, |&i| {
+                if i == 5 {
+                    panic!("item {i} panicked")
+                }
+                Ok(i)
+            });
+        });
+        assert!(r.is_err(), "shard panic must unwind out of shard_map");
+        // the pool survives a panicking shard; later calls still work
+        let got = shard_map(&items, 4, |&i| Ok(i + 1)).unwrap();
+        assert_eq!(got, (1..9).collect::<Vec<_>>());
     }
 }
