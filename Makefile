@@ -28,6 +28,7 @@ bench-smoke:
 	$(CARGO) bench --bench hotpath_micro -- --smoke
 	$(CARGO) bench --bench fig05_chsub_sweep -- --smoke
 	$(CARGO) bench --bench fig14_precision_sweep -- --smoke
+	$(CARGO) bench --bench fig14_precision_sweep -- --smoke --backend ldc
 	$(CARGO) bench --bench fig17_early_exit -- --smoke
 	$(CARGO) run --release --example load_gen -- --smoke
 

@@ -12,13 +12,16 @@
 //! Add `--clustered` to serve through the packed weight-clustered FE,
 //! `--hv-bits N` / `--metric m` to pick the class-memory precision and
 //! distance metric of the packed HDC datapath, `--ee E_S,E_C` to move the
-//! early-exit operating point (default 2,2). Queries run the staged
+//! early-exit operating point (default 2,2), and `--backend hdc|ldc` /
+//! `--ldc-d N` to pick the classifier seam (the positional `backend`
+//! stays the compute engine, native|pjrt). Queries run the staged
 //! inference loop, so the reported `FE layers skipped` were never
 //! computed, and the energy table prices each exit depth separately.
 
 use std::time::Instant;
 
-use fsl_hdnn::config::{ChipConfig, EeConfig, HdcConfig, ModelConfig};
+use fsl_hdnn::classifier::ClassifierBackend;
+use fsl_hdnn::config::{ChipConfig, ClassifierConfig, EeConfig, HdcConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::hdc::Distance;
@@ -42,6 +45,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = ModelConfig { clustered: arg_flag("--clustered"), ..ModelConfig::default() };
     let hv_bits = arg_usize("--hv-bits", HdcConfig::default().hv_bits as usize) as u32;
     let metric = Distance::from_name(&arg_str("--metric", HdcConfig::default().metric.name()))?;
+    let cls = ClassifierConfig {
+        backend: ClassifierBackend::from_name(&arg_str("--backend", "hdc"))?,
+        ldc_d: arg_usize("--ldc-d", 0),
+    };
     let (n_way, k_shot, queries_per_class) = (10, 5, 10);
     let dir = std::path::PathBuf::from("artifacts");
     let model = ComputeEngine::open_or_synthetic_with(
@@ -60,15 +67,17 @@ fn main() -> anyhow::Result<()> {
     println!("== FSL-HDnn ODL serving driver ==");
     println!(
         "backend={backend:?}, {episodes} episodes of {n_way}-way {k_shot}-shot, {} queries \
-         each, clustered FE: {eff_clustered}, class HVs {hv_bits}-bit / {}",
+         each, clustered FE: {eff_clustered}, class HVs {hv_bits}-bit / {}, classifier {}",
         n_way * queries_per_class,
-        metric.name()
+        metric.name(),
+        cls.backend.name()
     );
 
     let dir2 = dir.clone();
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_with_classifier(
         move || ComputeEngine::open_or_synthetic_with(backend, &dir2, cfg),
         k_shot,
+        cls,
     )?;
     let gen = ImageGen::new(model.image_size, 64, 2024);
     let mut rng = Rng::new(2024);
@@ -84,7 +93,7 @@ fn main() -> anyhow::Result<()> {
     let t_total = Instant::now();
     for ep in 0..episodes {
         let classes = rng.choose_k(gen.n_classes, n_way);
-        let sid = coord.create_session_with(n_way, hv_bits, metric)?;
+        let sid = coord.create_session_full(n_way, hv_bits, metric, cls.backend)?;
         let t0 = Instant::now();
         for (label, &cls) in classes.iter().enumerate() {
             for _ in 0..k_shot {

@@ -16,9 +16,12 @@
 //! `--ee E_S,E_C` picks the early-exit operating point (default the
 //! paper's 2,2); queries run the staged loop, so an exit at block b means
 //! the remaining FE stages are never computed — the printed layer
-//! counters prove it.
+//! counters prove it. `--backend hdc|ldc` selects the classifier seam:
+//! `ldc` folds branch HVs to low-D prototypes (`--ldc-d`, 0 = auto) for
+//! ~8x less class memory at the paper's D=4096.
 
-use fsl_hdnn::config::{EeConfig, HdcConfig, ModelConfig};
+use fsl_hdnn::classifier::ClassifierBackend;
+use fsl_hdnn::config::{ClassifierConfig, EeConfig, HdcConfig, ModelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::hdc::Distance;
@@ -32,6 +35,10 @@ fn main() -> anyhow::Result<()> {
     let hv_bits = arg_usize("--hv-bits", HdcConfig::default().hv_bits as usize) as u32;
     let metric = Distance::from_name(&arg_str("--metric", HdcConfig::default().metric.name()))?;
     let ee = EeConfig::parse(&arg_str("--ee", "2,2"))?;
+    let cls = ClassifierConfig {
+        backend: ClassifierBackend::from_name(&arg_str("--backend", "hdc"))?,
+        ldc_d: arg_usize("--ldc-d", 0),
+    };
     // read geometry on the caller side; build the engine inside the worker.
     // Without `make artifacts` the native backend runs synthetic weights.
     let model = ComputeEngine::open_or_synthetic_with(
@@ -45,19 +52,20 @@ fn main() -> anyhow::Result<()> {
     // PJRT-first path below says which backend was actually taken
     println!(
         "model: {0}x{0}x{1} image -> F={2}, D={3}, clustered FE (native only): {4}, \
-         class HVs {5}-bit / {6}",
+         class HVs {5}-bit / {6}, classifier {7}",
         model.image_size,
         model.in_channels,
         model.feature_dim,
         model.d,
         cfg.clustered,
         hv_bits,
-        metric.name()
+        metric.name(),
+        cls.backend.name()
     );
 
     let (n_way, k_shot) = (5, 5);
     let dir2 = dir.clone();
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_with_classifier(
         move || {
             ComputeEngine::open(Backend::Pjrt, &dir2)
                 .or_else(|e| {
@@ -66,6 +74,7 @@ fn main() -> anyhow::Result<()> {
                 })
         },
         k_shot,
+        cls,
     )?;
 
     // synthetic class-structured images (per-class texture families)
@@ -74,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     let classes = rng.choose_k(gen.n_classes, n_way);
 
     // --- single-pass training ---
-    let session = coord.create_session_with(n_way, hv_bits, metric)?;
+    let session = coord.create_session_full(n_way, hv_bits, metric, cls.backend)?;
     for (label, &cls) in classes.iter().enumerate() {
         for _ in 0..k_shot {
             coord.add_shot(session, label, gen.sample(cls, &mut rng))?;

@@ -12,13 +12,17 @@
 //! the sharded batch path must be bit-identical to serial. `--smoke`
 //! shrinks the timing budgets to ~1 ms so CI exercises the harness
 //! without paying bench time; `--workers N` sets the sharded row's pool
-//! (0 = one per core).
+//! (0 = one per core). `--backend hdc|ldc` picks which classifier the
+//! sharded prediction row times; the backend-comparison table (capacity,
+//! accuracy, class-mem bits per backend, with the >= 4x LDC reduction
+//! assert) always runs both.
 
+use fsl_hdnn::classifier::ClassifierBackend;
 use fsl_hdnn::config::ParallelConfig;
 use fsl_hdnn::hdc::distance::argmin;
 use fsl_hdnn::hdc::{quant, Distance, HdcModel};
 use fsl_hdnn::sim::hdc_engine::distance_tally;
-use fsl_hdnn::util::args::{arg_flag, arg_usize};
+use fsl_hdnn::util::args::{arg_flag, arg_str, arg_usize};
 use fsl_hdnn::util::bench_log::BenchLog;
 use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::table::Table;
@@ -27,6 +31,8 @@ use fsl_hdnn::util::timer::{bench, black_box};
 fn main() {
     let smoke = arg_flag("--smoke");
     let budget = |ms: f64| if smoke { 1.0 } else { ms };
+    let cls_backend = ClassifierBackend::from_name(&arg_str("--backend", "hdc"))
+        .expect("--backend takes hdc|ldc");
     let par = ParallelConfig { workers: arg_usize("--workers", 0), min_batch_per_worker: 1 };
     let nw = par.resolved_workers();
     let mut log = BenchLog::new("fig14_precision_sweep");
@@ -141,18 +147,90 @@ fn main() {
         distance_tally(d, classes, 16).class_bits / distance_tally(d, classes, 1).class_bits
     );
 
-    // sharded prediction throughput at the default precision
-    let mut m = HdcModel::new(classes, d).with_precision(4);
+    // --- classifier backends: HDC vs LDC at matched n_way (32 x D=4096 in,
+    // 4-bit rows). Capacity, accuracy and class-memory bits per backend;
+    // the >= 4x LDC class-memory reduction is the PR acceptance ratio.
+    let mut tb = Table::new(
+        "classifier backends at 32-way, D=4096 ingest, 4-bit class rows",
+        &["backend", "stored dim", "class-mem bits", "classes @256KB", "accuracy", "ns/query"],
+    );
+    let mut mem_bits = Vec::new();
+    for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+        let mut m = backend.build(classes, d, 4, Distance::L1, 0);
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..shots {
+                let hv: Vec<f32> = p.iter().map(|&v| v + 0.3 * rng.gauss_f32()).collect();
+                m.train_shot(c, &hv);
+            }
+        }
+        // the conformance contract holds behind the trait too: sharded
+        // batch distances bit-identical to serial
+        let serial = m.distances_batch(&queries, 1);
+        for shards in [2usize, 7] {
+            assert_eq!(m.distances_batch(&queries, shards), serial, "{backend:?} shards={shards}");
+        }
+        let correct = queries
+            .iter()
+            .enumerate()
+            .filter(|(i, q)| m.predict(q) == i % classes)
+            .count();
+        assert_eq!(correct, queries.len(), "{backend:?} must separate the synthetic protos");
+        let q = &queries[0];
+        let r = bench(&format!("{} dist 32x{}", backend.name(), m.stored_dim()), budget(150.0),
+            || {
+                black_box(m.distances(black_box(q)));
+            });
+        println!("{r}");
+        tb.row(&[
+            backend.name().into(),
+            m.stored_dim().to_string(),
+            m.class_mem_bits().to_string(),
+            quant::classes_capacity(256, m.stored_dim(), 4).to_string(),
+            format!("{}/{}", correct, queries.len()),
+            format!("{:.0}", r.mean_ns),
+        ]);
+        log.record(
+            &format!("backend_{}_dist_32way_d4096", backend.name()),
+            r.mean_ns,
+            r.throughput(1.0),
+            1,
+        );
+        mem_bits.push(m.class_mem_bits());
+    }
+    tb.print();
+    let (hdc_bits, ldc_bits) = (mem_bits[0], mem_bits[1]);
+    assert!(
+        hdc_bits >= 4 * ldc_bits,
+        "LDC must cut class memory >= 4x at matched n_way: hdc {hdc_bits} vs ldc {ldc_bits}"
+    );
+    println!(
+        "backend shape check: LDC class memory {:.1}x smaller than HDC at 32-way \
+         (>= 4x required)",
+        hdc_bits as f64 / ldc_bits as f64
+    );
+
+    // sharded prediction throughput at the default precision, through the
+    // classifier seam — `--backend ldc` times the folded low-D datapath
+    let mut m = cls_backend.build(classes, d, 4, Distance::L1, 0);
     for (c, p) in protos.iter().enumerate() {
         m.train_shot(c, p);
     }
     let preds_serial = m.predict_batch(&queries, 1);
-    let rb = bench(&format!("predict_batch b=9 4b workers={nw}"), budget(150.0), || {
-        black_box(m.predict_batch(black_box(&queries), nw));
-    });
+    let rb = bench(
+        &format!("{} predict_batch b=9 4b workers={nw}", cls_backend.name()),
+        budget(150.0),
+        || {
+            black_box(m.predict_batch(black_box(&queries), nw));
+        },
+    );
     println!("{rb}");
     assert_eq!(m.predict_batch(&queries, nw), preds_serial, "sharded must equal serial");
-    log.record("predict_batch_b9_4b_sharded", rb.mean_ns, rb.throughput(9.0), nw);
+    log.record(
+        &format!("predict_batch_b9_4b_sharded_{}", cls_backend.name()),
+        rb.mean_ns,
+        rb.throughput(9.0),
+        nw,
+    );
 
     match log.write() {
         Ok(path) => println!("bench trajectory written to {}", path.display()),

@@ -1,9 +1,15 @@
 //! Table I — the full comparison with state-of-the-art ODL accelerators:
-//! published rows for [2]-[7] plus the simulated FSL-HDnn row.
+//! published rows for [2]-[7] plus the simulated FSL-HDnn row, and the
+//! classifier-backend comparison (HDC vs LDC) at the paper's 10-way
+//! 5-shot workload: capacity, accuracy and class-memory footprint per
+//! backend.
 
 use fsl_hdnn::baselines::chips::{relative_factors, table1_chips, OurChipRow};
+use fsl_hdnn::classifier::ClassifierBackend;
 use fsl_hdnn::config::ChipConfig;
+use fsl_hdnn::hdc::{quant, Distance};
 use fsl_hdnn::sim::Chip;
+use fsl_hdnn::util::prng::Rng;
 use fsl_hdnn::util::table::Table;
 
 fn main() {
@@ -62,4 +68,56 @@ fn main() {
     t.print();
     println!("paper shape check: latency factors 5.3-229.1x, energy factors 2.0-20.9x");
     println!("(paper row: 35 ms/img, 6 mJ/img, 197 GOPS, 59-305 mW, 1.4-2.9 TOPS/W)");
+
+    // --- classifier backends at the paper workload (10-way 5-shot,
+    // D=4096 ingest, 4-bit class rows): capacity / accuracy / class-mem
+    // per backend. LDC (Duan et al.) folds to low-D prototypes and must
+    // cut the class-memory footprint >= 4x at matched n_way.
+    let (n_way, k_shot, d) = (10usize, 5usize, 4096usize);
+    let mut rng = Rng::new(1);
+    let protos: Vec<Vec<f32>> =
+        (0..n_way).map(|_| (0..d).map(|_| 2.0 * rng.gauss_f32()).collect()).collect();
+    let mut t = Table::new(
+        "classifier backends, 10-way 5-shot @ D=4096 ingest, 4-bit class rows",
+        &["backend", "stored dim", "class-mem KB", "classes @256KB", "accuracy"],
+    );
+    let mut mem_bits = Vec::new();
+    for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+        let mut m = backend.build(n_way, d, 4, Distance::L1, 0);
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..k_shot {
+                let hv: Vec<f32> = p.iter().map(|&v| v + 0.3 * rng.gauss_f32()).collect();
+                m.train_shot(c, &hv);
+            }
+        }
+        let queries = 10 * n_way;
+        let correct = (0..queries)
+            .filter(|&i| {
+                let c = i % n_way;
+                let q: Vec<f32> =
+                    protos[c].iter().map(|&v| v + 0.3 * rng.gauss_f32()).collect();
+                m.predict(&q) == c
+            })
+            .count();
+        t.row(&[
+            backend.name().into(),
+            m.stored_dim().to_string(),
+            format!("{:.1}", m.class_mem_bits() as f64 / 8192.0),
+            quant::classes_capacity(256, m.stored_dim(), 4).to_string(),
+            format!("{:.0}% ({correct}/{queries})", 100.0 * correct as f64 / queries as f64),
+        ]);
+        mem_bits.push(m.class_mem_bits());
+    }
+    t.print();
+    assert!(
+        mem_bits[0] >= 4 * mem_bits[1],
+        "LDC must cut class memory >= 4x at matched n_way: hdc {} vs ldc {}",
+        mem_bits[0],
+        mem_bits[1]
+    );
+    println!(
+        "backend shape check: LDC stores {:.1}x less class memory than HDC at 10-way \
+         (>= 4x required), same single-pass training",
+        mem_bits[0] as f64 / mem_bits[1] as f64
+    );
 }

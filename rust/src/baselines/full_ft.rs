@@ -142,13 +142,9 @@ impl MlpHead {
     pub fn predict(&self, x: &[f32]) -> usize {
         let xs: Vec<f32> = x.iter().map(|v| v / self.scale.max(1e-6)).collect();
         let (_, logits) = self.forward(&xs);
-        let mut best = 0;
-        for (i, &l) in logits.iter().enumerate().skip(1) {
-            if l > logits[best] {
-                best = i;
-            }
-        }
-        best
+        // shared NaN-robust selection: the hand-rolled `l > logits[best]`
+        // loop silently elected class 0 on a NaN logit at index 0
+        crate::hdc::distance::argmax(&logits)
     }
 }
 

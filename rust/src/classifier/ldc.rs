@@ -1,0 +1,327 @@
+//! LDC: brain-inspired low-dimensional classifier (Duan et al.,
+//! arXiv 2203.04894 — see PAPERS.md).
+//!
+//! The key observation of the LDC line of work is that the accuracy HDC
+//! reaches with binary hypervectors at D in the thousands is reachable
+//! with *value-level* (non-binary) representations at D in the hundreds —
+//! a ~10x class-memory and distance-compute reduction. This module adapts
+//! that to the FSL-HDnn pipeline: the cRP encoder still produces full-D
+//! HVs (the encoder is the chip's fixed datapath), and the LDC backend
+//! folds each HV down to `d_low in 64..=512` with a deterministic
+//! sign-weighted cyclic accumulation before single-pass prototype
+//! training. Values stay in the real domain through the fold (value-level
+//! mapping, not binarization); the folded prototypes are then stored and
+//! compared through `hdc/packed.rs`'s narrow-code machinery at the
+//! session's `hv_bits`, so the packed integer-domain distance datapath,
+//! the bit-identical sharded batch contract and the quantization oracles
+//! all carry over unchanged.
+//!
+//! SynergicLearning (PAPERS.md) supplies the accuracy-per-dimension
+//! framing: `fig14_precision_sweep --backend ldc` and
+//! `table1_comparison` print the capacity/accuracy columns per backend.
+
+// the seam lands lint-clean: warnings and clippy findings are hard errors
+// scoped to this module (the CI clippy step enforces it)
+#![deny(warnings, clippy::all)]
+
+use crate::classifier::{ClassifierBackend, FslClassifier};
+use crate::hdc::{lfsr, Distance, HdcModel};
+
+/// Smallest fold dimension `auto_dim` will pick.
+pub const D_LOW_MIN: usize = 64;
+/// Largest fold dimension `auto_dim` will pick.
+pub const D_LOW_MAX: usize = 512;
+/// Auto fold factor: `d_low = d_in / 8`, clamped to the LDC range.
+pub const FOLD_FACTOR: usize = 8;
+
+/// Seed for the fold-sign LFSR stream (mixed with `d_in`, so encoders of
+/// different widths never share a sign sequence).
+const SIGN_SEED: u64 = 0x1DC0DE;
+
+/// Low-dimensional FSL classifier: a deterministic value-level fold
+/// (`d_in -> d_low`) in front of a packed prototype memory.
+///
+/// The prototype memory reuses [`HdcModel`] at `d_low` — that is not an
+/// implementation shortcut but the point of the design: LDC differs from
+/// HDC in *where the dimensionality lives*, not in the single-pass
+/// bundle/nearest-prototype algebra, so the folded path inherits the
+/// packed store, the sharded batch determinism contract and the
+/// quantization oracles verbatim.
+#[derive(Clone, Debug)]
+pub struct LdcModel {
+    d_in: usize,
+    /// `±1` fold signs, length `d_in`, from the cRP LFSR family.
+    signs: Vec<f32>,
+    /// Low-dimensional prototype memory (the packed narrow-code store).
+    proto: HdcModel,
+}
+
+impl LdcModel {
+    /// Build an LDC classifier ingesting `d_in`-dim HVs and storing
+    /// `d_low`-dim prototypes. `d_low` must be in `1..=d_in`; use
+    /// [`LdcModel::auto_dim`] for the paper-range default.
+    pub fn new(n_classes: usize, d_in: usize, d_low: usize) -> Self {
+        assert!(d_in >= 1, "LDC needs a non-empty input HV");
+        assert!(
+            (1..=d_in).contains(&d_low),
+            "LDC fold dim {d_low} out of range 1..={d_in}"
+        );
+        // one maximal-period 16-bit LFSR, advanced a full word per
+        // element: deterministic, balanced, and seeded per input width so
+        // the sign sequence is a function of the geometry alone
+        let mut state = lfsr::row_block_states(SIGN_SEED ^ d_in as u64, 0)[0];
+        let signs = (0..d_in)
+            .map(|_| {
+                state = lfsr::step16_fast(state);
+                if state & 1 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        LdcModel { d_in, signs, proto: HdcModel::new(n_classes, d_low) }
+    }
+
+    /// The fold dimension the auto policy picks for a `d_in`-dim encoder:
+    /// `d_in / 8`, clamped to the LDC range `64..=512` (never above
+    /// `d_in`). At the paper's D=4096 this is 512 — an 8x class-memory
+    /// reduction at matched precision.
+    pub fn auto_dim(d_in: usize) -> usize {
+        (d_in / FOLD_FACTOR).clamp(D_LOW_MIN, D_LOW_MAX).min(d_in).max(1)
+    }
+
+    /// Class-memory precision of the packed prototype store.
+    pub fn with_precision(mut self, bits: u32) -> Self {
+        self.proto = self.proto.with_precision(bits);
+        self
+    }
+
+    /// Distance metric for prototype inference.
+    pub fn with_metric(mut self, metric: Distance) -> Self {
+        self.proto = self.proto.with_metric(metric);
+        self
+    }
+
+    /// The stored prototype dimension.
+    pub fn d_low(&self) -> usize {
+        self.proto.d
+    }
+
+    /// The value-level fold: sign-weighted cyclic accumulation of the
+    /// full-D HV into `d_low` lanes. Linear, deterministic, and applied
+    /// identically at train and query time, so nearest-prototype geometry
+    /// is preserved in expectation (the signs decorrelate the lanes the
+    /// way the cRP rows decorrelate features).
+    pub fn fold(&self, hv: &[f32]) -> Vec<f32> {
+        assert_eq!(hv.len(), self.d_in, "LDC fold expects a {}-dim HV", self.d_in);
+        let d_low = self.proto.d;
+        let mut out = vec![0.0f32; d_low];
+        for (i, (&v, &s)) in hv.iter().zip(&self.signs).enumerate() {
+            out[i % d_low] += v * s;
+        }
+        out
+    }
+
+    fn fold_all(&self, hvs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        hvs.iter().map(|hv| self.fold(hv)).collect()
+    }
+}
+
+impl FslClassifier for LdcModel {
+    fn backend(&self) -> ClassifierBackend {
+        ClassifierBackend::Ldc
+    }
+
+    fn hv_dim(&self) -> usize {
+        self.d_in
+    }
+
+    fn stored_dim(&self) -> usize {
+        self.proto.d
+    }
+
+    fn hv_bits(&self) -> u32 {
+        self.proto.hv_bits
+    }
+
+    fn metric(&self) -> Distance {
+        self.proto.metric
+    }
+
+    fn class_mem_bits(&self) -> u64 {
+        self.proto.n_classes as u64 * self.proto.d as u64 * self.proto.hv_bits as u64
+    }
+
+    fn is_trained(&self) -> bool {
+        self.proto.is_trained()
+    }
+
+    fn train_shot(&mut self, class: usize, hv: &[f32]) {
+        let folded = self.fold(hv);
+        self.proto.train_shot(class, &folded);
+    }
+
+    fn train_batch(&mut self, class: usize, hvs: &[&[f32]]) {
+        // fold in arrival order, then row-major accumulate — bit-identical
+        // to the same shots through train_shot one by one
+        let folded: Vec<Vec<f32>> = hvs.iter().map(|hv| self.fold(hv)).collect();
+        self.proto.train_batch(class, &folded);
+    }
+
+    fn distances(&mut self, q: &[f32]) -> Vec<f64> {
+        let folded = self.fold(q);
+        self.proto.distances(&folded)
+    }
+
+    fn distances_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<Vec<f64>> {
+        // the fold is per-query deterministic; sharding happens inside the
+        // prototype memory's batch path, so serial == sharded carries over
+        let folded = self.fold_all(queries);
+        self.proto.distances_batch(&folded, shards)
+    }
+
+    fn predict(&mut self, q: &[f32]) -> usize {
+        let folded = self.fold(q);
+        self.proto.predict(&folded)
+    }
+
+    fn predict_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<usize> {
+        let folded = self.fold_all(queries);
+        self.proto.predict_batch(&folded, shards)
+    }
+
+    fn clone_box(&self) -> Box<dyn FslClassifier> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn cluster_hv(rng: &mut Rng, proto: &[f32], noise: f32) -> Vec<f32> {
+        proto.iter().map(|&p| p + noise * rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn auto_dim_clamps_to_the_ldc_range() {
+        assert_eq!(LdcModel::auto_dim(4096), 512, "paper D -> 8x fold");
+        assert_eq!(LdcModel::auto_dim(1024), 128);
+        assert_eq!(LdcModel::auto_dim(512), 64);
+        assert_eq!(LdcModel::auto_dim(256), 64, "clamped up to D_LOW_MIN");
+        assert_eq!(LdcModel::auto_dim(64), 64, "never above d_in");
+        assert_eq!(LdcModel::auto_dim(16), 16);
+        assert_eq!(LdcModel::auto_dim(100_000), 512, "clamped down to D_LOW_MAX");
+    }
+
+    #[test]
+    fn fold_is_deterministic_and_signs_balanced() {
+        let a = LdcModel::new(2, 1024, 128);
+        let b = LdcModel::new(2, 1024, 128);
+        assert_eq!(a.signs, b.signs);
+        let plus = a.signs.iter().filter(|&&s| s > 0.0).count();
+        assert!(
+            (358..=666).contains(&plus),
+            "LFSR fold signs should be roughly balanced, got {plus}/1024"
+        );
+        // different input widths draw different sign sequences
+        let c = LdcModel::new(2, 512, 128);
+        assert_ne!(a.signs[..512], c.signs[..]);
+        let hv: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+        assert_eq!(a.fold(&hv), b.fold(&hv));
+        assert_eq!(a.fold(&hv).len(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "LDC fold expects")]
+    fn fold_rejects_wrong_input_dim() {
+        LdcModel::new(2, 64, 64).fold(&[0.0; 32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn fold_dim_above_input_rejected() {
+        LdcModel::new(2, 64, 128);
+    }
+
+    #[test]
+    fn separable_classes_survive_the_fold() {
+        let d_in = 1024;
+        let mut rng = Rng::new(21);
+        let protos: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d_in).map(|_| 3.0 * rng.gauss_f32()).collect())
+            .collect();
+        let mut m = LdcModel::new(4, d_in, LdcModel::auto_dim(d_in)).with_precision(8);
+        for (c, p) in protos.iter().enumerate() {
+            for _ in 0..5 {
+                m.train_shot(c, &cluster_hv(&mut rng, p, 0.5));
+            }
+        }
+        assert!(m.is_trained());
+        for (c, p) in protos.iter().enumerate() {
+            assert_eq!(m.predict(&cluster_hv(&mut rng, p, 0.5)), c);
+        }
+    }
+
+    #[test]
+    fn batch_training_bit_identical_to_sequential() {
+        let d_in = 256;
+        let mut rng = Rng::new(22);
+        let shots: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..d_in).map(|_| rng.gauss_f32()).collect()).collect();
+        let mut seq = LdcModel::new(2, d_in, 64).with_precision(4);
+        for hv in &shots {
+            seq.train_shot(0, hv);
+        }
+        let mut bat = LdcModel::new(2, d_in, 64).with_precision(4);
+        let views: Vec<&[f32]> = shots.iter().map(|h| h.as_slice()).collect();
+        bat.train_batch(0, &views);
+        let q: Vec<f32> = (0..d_in).map(|_| rng.gauss_f32()).collect();
+        assert_eq!(seq.distances(&q), bat.distances(&q));
+    }
+
+    #[test]
+    fn batch_paths_bit_identical_across_shards() {
+        let d_in = 256;
+        let mut rng = Rng::new(23);
+        let mut m = LdcModel::new(3, d_in, 64).with_precision(4);
+        for c in 0..3 {
+            let hv: Vec<f32> = (0..d_in).map(|_| rng.gauss_f32()).collect();
+            m.train_shot(c, &hv);
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..9).map(|_| (0..d_in).map(|_| rng.gauss_f32()).collect()).collect();
+        let dists = m.distances_batch(&queries, 1);
+        let preds = m.predict_batch(&queries, 1);
+        for shards in [2usize, 7] {
+            assert_eq!(m.distances_batch(&queries, shards), dists, "shards={shards}");
+            assert_eq!(m.predict_batch(&queries, shards), preds, "shards={shards}");
+        }
+        // the serial batch agrees with the one-query path
+        for (q, want) in queries.iter().zip(&dists) {
+            assert_eq!(&m.distances(q), want);
+        }
+    }
+
+    #[test]
+    fn class_mem_reduction_at_paper_dims() {
+        // ISSUE 7 acceptance: >= 4x class-memory-bits reduction at matched
+        // n_way. Auto fold at D=4096 stores 512 dims -> exactly 8x.
+        let n_way = 32;
+        let hdc_bits = n_way as u64 * 4096 * 4;
+        let ldc = LdcModel::new(n_way, 4096, LdcModel::auto_dim(4096)).with_precision(4);
+        assert_eq!(ldc.class_mem_bits(), n_way as u64 * 512 * 4);
+        assert!(hdc_bits >= 4 * ldc.class_mem_bits());
+        assert_eq!(hdc_bits / ldc.class_mem_bits(), 8);
+    }
+
+    #[test]
+    fn metric_and_precision_flow_into_the_prototype_store() {
+        let m = LdcModel::new(2, 128, 64).with_precision(1).with_metric(Distance::Hamming);
+        assert_eq!(m.hv_bits(), 1);
+        assert_eq!(m.metric(), Distance::Hamming);
+        assert_eq!(m.class_mem_bits(), 2 * 64);
+    }
+}

@@ -1,0 +1,267 @@
+//! The classifier seam: pluggable FSL backends behind one trait.
+//!
+//! `FslSession` used to hard-code [`HdcModel`]; this module extracts the
+//! interface the session already implied — single-pass shot/batch
+//! training, packed distance evaluation, sharded batch prediction, and
+//! class-memory accounting — so a second backend can sit beside HDC
+//! without touching the coordinator's serving logic.
+//!
+//! Two backends implement it today (DESIGN.md §Classifier backends):
+//! * [`ClassifierBackend::Hdc`] — the paper's hyperdimensional classifier
+//!   ([`HdcModel`], D in the thousands), packed fast path and bit-identity
+//!   oracles untouched.
+//! * [`ClassifierBackend::Ldc`] — the brain-inspired low-dimensional
+//!   classifier ([`ldc::LdcModel`], Duan et al., PAPERS.md): a value-level
+//!   fold to D in the 64–512 range over the same packed narrow-code
+//!   machinery, for a ~8x class-memory and distance-compute reduction at
+//!   D=4096.
+
+pub mod ldc;
+
+use crate::hdc::{Distance, HdcModel};
+pub use ldc::LdcModel;
+
+/// Which FSL classifier a session runs on. Carried by
+/// `Request::CreateSession` (wire name `backend`) and the `[classifier]`
+/// config section.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClassifierBackend {
+    /// Hyperdimensional classifier at the cRP encoder's full D (paper).
+    #[default]
+    Hdc,
+    /// Low-dimensional classifier: value-level fold to 64–512 dims.
+    Ldc,
+}
+
+impl ClassifierBackend {
+    /// Parse a backend name (CLI `--backend`, TOML `classifier.backend`,
+    /// wire `backend` field). Unknown names are an error the caller must
+    /// surface (`Response::Error` at the request boundary, never a panic).
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hdc" => Ok(ClassifierBackend::Hdc),
+            "ldc" => Ok(ClassifierBackend::Ldc),
+            other => anyhow::bail!("unknown classifier backend {other} (hdc|ldc)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClassifierBackend::Hdc => "hdc",
+            ClassifierBackend::Ldc => "ldc",
+        }
+    }
+
+    /// Build a fully configured classifier for one FE branch.
+    ///
+    /// `d` is the encoded HV dimension the branch receives; `ldc_d` is the
+    /// LDC fold dimension (`0` = auto, [`LdcModel::auto_dim`]) and is
+    /// ignored by the HDC backend.
+    pub fn build(
+        &self,
+        n_way: usize,
+        d: usize,
+        hv_bits: u32,
+        metric: Distance,
+        ldc_d: usize,
+    ) -> Box<dyn FslClassifier> {
+        match self {
+            ClassifierBackend::Hdc => {
+                Box::new(HdcModel::new(n_way, d).with_precision(hv_bits).with_metric(metric))
+            }
+            ClassifierBackend::Ldc => {
+                let d_low = if ldc_d == 0 { LdcModel::auto_dim(d) } else { ldc_d };
+                Box::new(
+                    LdcModel::new(n_way, d, d_low).with_precision(hv_bits).with_metric(metric),
+                )
+            }
+        }
+    }
+}
+
+/// The per-branch classifier seam behind `FslSession`.
+///
+/// Contract (what the coordinator's serving paths rely on):
+/// * `train_batch` is **bit-identical** to the same shots through
+///   `train_shot` in order (row-major accumulation).
+/// * `distances_batch`/`predict_batch` are **bit-identical** to the
+///   serial loop for any shard count (DESIGN.md §Threading model).
+/// * `distances` runs the packed integer-domain datapath; per-metric
+///   exactness versus the f32 oracle is the `hdc/packed.rs` contract.
+/// * `class_mem_bits` is what the session occupies in the 256 KB class
+///   memory for this branch: `n_classes * stored_dim * hv_bits`.
+pub trait FslClassifier: Send + std::fmt::Debug {
+    /// Which backend this classifier is (metrics, debugging).
+    fn backend(&self) -> ClassifierBackend;
+    /// Input HV dimension `train_shot`/`distances` expect.
+    fn hv_dim(&self) -> usize;
+    /// Per-class stored dimension — the class-memory footprint dimension.
+    /// HDC stores full-D class HVs; LDC stores folded `d_low` prototypes.
+    fn stored_dim(&self) -> usize;
+    /// Class-memory precision (bits per stored element).
+    fn hv_bits(&self) -> u32;
+    /// Distance metric used for inference.
+    fn metric(&self) -> Distance;
+    /// Class-memory bits this branch classifier occupies when admitted.
+    fn class_mem_bits(&self) -> u64;
+    /// True when every class has at least one shot.
+    fn is_trained(&self) -> bool;
+    /// Single-pass training: bundle one encoded shot into its class row.
+    fn train_shot(&mut self, class: usize, hv: &[f32]);
+    /// Batched single-pass training — bit-identical to sequential shots.
+    fn train_batch(&mut self, class: usize, hvs: &[&[f32]]);
+    /// Distance from a query HV to every class, packed datapath.
+    fn distances(&mut self, q: &[f32]) -> Vec<f64>;
+    /// Sharded batch distances — bit-identical to serial for any shards.
+    fn distances_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<Vec<f64>>;
+    /// Predict the class of a query HV (NaN-robust argmin of distances).
+    fn predict(&mut self, q: &[f32]) -> usize;
+    /// Sharded batch prediction — bit-identical to serial.
+    fn predict_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<usize>;
+    /// Clone behind the object (FslSession is `Clone`).
+    fn clone_box(&self) -> Box<dyn FslClassifier>;
+}
+
+impl Clone for Box<dyn FslClassifier> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// First implementor: the paper's HDC model, delegating straight to the
+/// inherent methods (packed fast path, sharded batches and the
+/// bit-identity oracles carried over untouched).
+impl FslClassifier for HdcModel {
+    fn backend(&self) -> ClassifierBackend {
+        ClassifierBackend::Hdc
+    }
+
+    fn hv_dim(&self) -> usize {
+        self.d
+    }
+
+    fn stored_dim(&self) -> usize {
+        self.d
+    }
+
+    fn hv_bits(&self) -> u32 {
+        self.hv_bits
+    }
+
+    fn metric(&self) -> Distance {
+        self.metric
+    }
+
+    fn class_mem_bits(&self) -> u64 {
+        self.n_classes as u64 * self.d as u64 * self.hv_bits as u64
+    }
+
+    fn is_trained(&self) -> bool {
+        HdcModel::is_trained(self)
+    }
+
+    fn train_shot(&mut self, class: usize, hv: &[f32]) {
+        HdcModel::train_shot(self, class, hv);
+    }
+
+    fn train_batch(&mut self, class: usize, hvs: &[&[f32]]) {
+        HdcModel::train_batch(self, class, hvs);
+    }
+
+    fn distances(&mut self, q: &[f32]) -> Vec<f64> {
+        HdcModel::distances(self, q)
+    }
+
+    fn distances_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<Vec<f64>> {
+        HdcModel::distances_batch(self, queries, shards)
+    }
+
+    fn predict(&mut self, q: &[f32]) -> usize {
+        HdcModel::predict(self, q)
+    }
+
+    fn predict_batch(&mut self, queries: &[Vec<f32>], shards: usize) -> Vec<usize> {
+        HdcModel::predict_batch(self, queries, shards)
+    }
+
+    fn clone_box(&self) -> Box<dyn FslClassifier> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+            assert_eq!(ClassifierBackend::from_name(b.name()).unwrap(), b);
+        }
+        assert_eq!(ClassifierBackend::from_name("HDC").unwrap(), ClassifierBackend::Hdc);
+        assert_eq!(ClassifierBackend::from_name("Ldc").unwrap(), ClassifierBackend::Ldc);
+        let err = ClassifierBackend::from_name("svm").unwrap_err().to_string();
+        assert!(err.contains("svm") && err.contains("hdc|ldc"), "{err}");
+    }
+
+    #[test]
+    fn default_backend_is_hdc() {
+        assert_eq!(ClassifierBackend::default(), ClassifierBackend::Hdc);
+    }
+
+    #[test]
+    fn factory_builds_configured_classifiers() {
+        let hdc = ClassifierBackend::Hdc.build(10, 4096, 4, Distance::L1, 0);
+        assert_eq!(hdc.backend(), ClassifierBackend::Hdc);
+        assert_eq!((hdc.hv_dim(), hdc.stored_dim()), (4096, 4096));
+        assert_eq!((hdc.hv_bits(), hdc.metric()), (4, Distance::L1));
+        assert_eq!(hdc.class_mem_bits(), 10 * 4096 * 4);
+
+        let ldc = ClassifierBackend::Ldc.build(10, 4096, 4, Distance::Hamming, 0);
+        assert_eq!(ldc.backend(), ClassifierBackend::Ldc);
+        assert_eq!(ldc.hv_dim(), 4096, "LDC still ingests full-D HVs");
+        assert_eq!(ldc.stored_dim(), LdcModel::auto_dim(4096));
+        assert_eq!(ldc.metric(), Distance::Hamming);
+        // the acceptance ratio: >= 4x class-memory reduction at matched
+        // n_way (auto dim gives 8x at D=4096)
+        assert!(hdc.class_mem_bits() >= 4 * ldc.class_mem_bits());
+
+        // explicit fold dimension override
+        let ldc128 = ClassifierBackend::Ldc.build(10, 4096, 4, Distance::L1, 128);
+        assert_eq!(ldc128.stored_dim(), 128);
+    }
+
+    #[test]
+    fn hdc_through_the_trait_is_bit_identical_to_direct() {
+        let d = 96;
+        let mut rng = Rng::new(11);
+        let shots: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..d).map(|_| rng.gauss_f32()).collect()).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+
+        let mut direct = HdcModel::new(2, d).with_precision(4).with_metric(Distance::L1);
+        let mut boxed = ClassifierBackend::Hdc.build(2, d, 4, Distance::L1, 0);
+        for (i, hv) in shots.iter().enumerate() {
+            direct.train_shot(i % 2, hv);
+            boxed.train_shot(i % 2, hv);
+        }
+        assert_eq!(HdcModel::distances(&mut direct, &q), boxed.distances(&q));
+        assert_eq!(HdcModel::predict(&mut direct, &q), boxed.predict(&q));
+    }
+
+    #[test]
+    fn boxed_clone_preserves_training() {
+        let d = 32;
+        let mut rng = Rng::new(12);
+        for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+            let mut m = backend.build(2, d, 8, Distance::L1, 0);
+            let hv: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            m.train_shot(0, &hv);
+            m.train_shot(1, &hv);
+            let mut c = m.clone();
+            let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            assert_eq!(m.distances(&q), c.distances(&q), "{backend:?}");
+        }
+    }
+}

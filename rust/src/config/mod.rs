@@ -6,6 +6,7 @@
 
 pub mod toml;
 
+use crate::classifier::ClassifierBackend;
 use crate::hdc::Distance;
 use crate::util::json::Json;
 
@@ -187,6 +188,21 @@ impl Default for HdcConfig {
     }
 }
 
+/// Classifier-backend knobs (`[classifier]` TOML section / `--backend`,
+/// `--ldc-d`): which FSL classifier new sessions run
+/// ([`ClassifierBackend`]) and, for the LDC backend, the fold dimension
+/// (DESIGN.md §Classifier backends). Orthogonal to [`HdcConfig`], whose
+/// precision/metric knobs apply to *either* backend's prototype store.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassifierConfig {
+    /// classifier new sessions are created with (`hdc` full-D class HVs,
+    /// the paper's datapath; `ldc` folded low-D prototypes)
+    pub backend: ClassifierBackend,
+    /// LDC fold dimension, `0` = auto (`d / 8` clamped to `64..=512`);
+    /// ignored by the HDC backend
+    pub ldc_d: usize,
+}
+
 /// Few-shot workload: N-way k-shot episodes with q queries per class.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -340,6 +356,7 @@ pub struct RunConfig {
     pub workload: WorkloadConfig,
     pub chip: ChipConfig,
     pub hdc: HdcConfig,
+    pub classifier: ClassifierConfig,
     pub ee: Option<EeConfig>,
     pub batched_training: bool,
     pub parallel: ParallelConfig,
@@ -393,6 +410,17 @@ impl RunConfig {
                     self.hdc.hv_bits = bits as u32;
                 }
                 "hdc.metric" => self.hdc.metric = Distance::from_name(val.as_str()?)?,
+                "classifier.backend" => {
+                    self.classifier.backend = ClassifierBackend::from_name(val.as_str()?)?
+                }
+                "classifier.ldc_d" => {
+                    let d = val.as_int()?;
+                    anyhow::ensure!(
+                        (0..=i64::from(u16::MAX)).contains(&d),
+                        "classifier.ldc_d must be 0 (auto) or a small positive dim, got {d}"
+                    );
+                    self.classifier.ldc_d = d as usize;
+                }
                 "ee.e_s" => {
                     let e = self.ee.get_or_insert(EeConfig::paper_default());
                     e.e_s = val.as_int()? as usize;
@@ -564,6 +592,27 @@ mod tests {
         let err = RunConfig::default().apply_toml(&doc).unwrap_err().to_string();
         assert!(err.contains("1..=16"), "{err}");
         let doc = toml::Doc::parse("[hdc]\nmetric = \"euclid\"\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn apply_toml_classifier_section() {
+        let doc = toml::Doc::parse("[classifier]\nbackend = \"ldc\"\nldc_d = 256\n").unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(
+            rc.classifier,
+            ClassifierConfig { backend: ClassifierBackend::Ldc, ldc_d: 256 }
+        );
+        // default stays the paper's HDC with auto fold dim
+        let d = ClassifierConfig::default();
+        assert_eq!((d.backend, d.ldc_d), (ClassifierBackend::Hdc, 0));
+        // unknown backend names fail with the parse error, not a panic
+        let doc = toml::Doc::parse("[classifier]\nbackend = \"svm\"\n").unwrap();
+        let err = RunConfig::default().apply_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("svm"), "{err}");
+        // absurd fold dims are rejected at config time
+        let doc = toml::Doc::parse("[classifier]\nldc_d = 100000\n").unwrap();
         assert!(RunConfig::default().apply_toml(&doc).is_err());
     }
 

@@ -17,6 +17,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::classifier::ClassifierBackend;
 use crate::config::{EeConfig, ServingConfig};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::request::{Request, Response};
@@ -231,7 +232,19 @@ impl WireClient {
         hv_bits: u32,
         metric: Distance,
     ) -> anyhow::Result<u64> {
-        match self.call(&Request::CreateSession { n_way, hv_bits, metric })? {
+        self.create_session_full(n_way, hv_bits, metric, ClassifierBackend::Hdc)
+    }
+
+    /// Fully explicit remote session creation: metric *and* classifier
+    /// backend (the wire frame's `backend` field).
+    pub fn create_session_full(
+        &mut self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: Distance,
+        backend: ClassifierBackend,
+    ) -> anyhow::Result<u64> {
+        match self.call(&Request::CreateSession { n_way, hv_bits, metric, backend })? {
             Response::SessionCreated { session } => Ok(session),
             Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),

@@ -1,6 +1,7 @@
 //! Request/response protocol between clients and the coordinator's worker
 //! thread — the host<->device command stream of the test setup (Fig. 13a).
 
+use crate::classifier::ClassifierBackend;
 use crate::config::EeConfig;
 use crate::coordinator::session::QueryOutcome;
 use crate::hdc::Distance;
@@ -11,9 +12,11 @@ use crate::hdc::Distance;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Create a few-shot session at `hv_bits` class-memory precision with
-    /// the given distance metric; replies `SessionCreated` (or `Error`
-    /// when the session does not fit in class memory).
-    CreateSession { n_way: usize, hv_bits: u32, metric: Distance },
+    /// the given distance metric and classifier backend (wire field
+    /// `backend`, absent = `hdc` for frames from older clients); replies
+    /// `SessionCreated` (or `Error` when `n_way == 0`, when the session
+    /// does not fit in class memory, or when the backend name is unknown).
+    CreateSession { n_way: usize, hv_bits: u32, metric: Distance, backend: ClassifierBackend },
     /// Add one labeled shot (raw image, flat NHWC). The coordinator
     /// batches same-class shots and trains when a class reaches k_shot
     /// or on `FinishTraining`.

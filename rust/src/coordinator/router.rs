@@ -102,12 +102,25 @@ impl DeviceRouter {
         hv_bits: u32,
         metric: crate::hdc::Distance,
     ) -> anyhow::Result<u64> {
+        self.create_session_full(n_way, hv_bits, metric, crate::classifier::ClassifierBackend::Hdc)
+    }
+
+    /// Fully explicit placement: metric *and* classifier backend. An LDC
+    /// session charges its folded (low-D) footprint to the device's class
+    /// memory, so mixed fleets pack many more LDC sessions per device.
+    pub fn create_session_full(
+        &mut self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: crate::hdc::Distance,
+        backend: crate::classifier::ClassifierBackend,
+    ) -> anyhow::Result<u64> {
         let first = self.pick_device();
         let n = self.devices.len();
         let mut last_err = None;
         for off in 0..n {
             let d = (first + off) % n;
-            match self.devices[d].create_session_with(n_way, hv_bits, metric) {
+            match self.devices[d].create_session_full(n_way, hv_bits, metric, backend) {
                 Ok(local) => {
                     let gid = self.next_global;
                     self.next_global += 1;

@@ -18,7 +18,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::config::EeConfig;
+use crate::classifier::ClassifierBackend;
+use crate::config::{ClassifierConfig, EeConfig};
 use crate::coordinator::batcher::ClassBatcher;
 use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
 use crate::coordinator::metrics::{Metrics, Op};
@@ -95,6 +96,10 @@ struct SessionState {
 struct Worker {
     engine: ComputeEngine,
     k_shot: usize,
+    /// server-side classifier defaults: LDC fold dimension (`0` = auto).
+    /// The *backend* arrives per request on `CreateSession`; only the
+    /// knobs a wire client cannot express live here.
+    classifier: ClassifierConfig,
     sessions: HashMap<u64, SessionState>,
     next_id: u64,
     metrics: Metrics,
@@ -299,33 +304,54 @@ impl Worker {
 
     fn handle(&mut self, req: Request) -> Response {
         match req {
-            Request::CreateSession { n_way, hv_bits, metric } => {
-                // reject out-of-range precision here: it used to slip into
-                // the session and panic the worker at the first quantize
+            Request::CreateSession { n_way, hv_bits, metric, backend } => {
+                // reject malformed geometry here: it used to slip into the
+                // session and panic the worker (the hv_bits bug class) —
+                // a zero-way session would assert inside FslSession::new
                 if !(1..=16).contains(&hv_bits) {
                     self.metrics.errors += 1;
                     return Response::Error(format!("hv_bits must be 1..=16, got {hv_bits}"));
                 }
+                if n_way == 0 {
+                    self.metrics.errors += 1;
+                    return Response::Error("n_way must be >= 1".into());
+                }
                 let model = self.engine.model();
+                if model.d == 0 {
+                    self.metrics.errors += 1;
+                    return Response::Error("model HV dimension d must be >= 1".into());
+                }
+                let ldc_d = self.classifier.ldc_d;
+                if backend == ClassifierBackend::Ldc && ldc_d > model.d {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!(
+                        "ldc_d {ldc_d} exceeds encoder dimension D={}",
+                        model.d
+                    ));
+                }
                 let id = self.next_id;
+                let session = FslSession::new(id, n_way, model.d, model.n_branches())
+                    .with_precision(hv_bits)
+                    .with_metric(metric)
+                    .with_backend(backend, ldc_d);
                 // sessions are admitted through the class-memory manager:
                 // what does not fit on chip (32 @ 16-bit, 128 @ 4-bit at
-                // D=4096, scaled by EE branches) is rejected like hardware
+                // D=4096, scaled by EE branches) is rejected like hardware.
+                // `d` here is the *stored* dimension — the HDC backend
+                // stores full-D class HVs, LDC stores folded prototypes,
+                // so an LDC session charges ~8x fewer bits at D=4096.
                 let alloc = Allocation {
                     session: id,
                     n_classes: n_way,
                     n_branches: model.n_branches(),
                     hv_bits,
-                    d: model.d,
+                    d: session.stored_dim(),
                 };
                 if let Err(e) = self.class_mem.allocate(alloc) {
                     self.metrics.errors += 1;
                     return Response::Error(e.to_string());
                 }
                 self.next_id += 1;
-                let session = FslSession::new(id, n_way, model.d, model.n_branches())
-                    .with_precision(hv_bits)
-                    .with_metric(metric);
                 self.sessions.insert(
                     id,
                     SessionState { session, batcher: ClassBatcher::new(self.k_shot) },
@@ -605,6 +631,21 @@ impl Coordinator {
     where
         F: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
     {
+        Self::start_with_classifier(factory, k_shot, ClassifierConfig::default())
+    }
+
+    /// [`Coordinator::start`] with explicit server-side classifier
+    /// defaults (`[classifier]` in the TOML presets): the LDC fold
+    /// dimension applied to every `backend = ldc` session this worker
+    /// creates. The backend itself still arrives per `CreateSession`.
+    pub fn start_with_classifier<F>(
+        factory: F,
+        k_shot: usize,
+        classifier: ClassifierConfig,
+    ) -> anyhow::Result<Self>
+    where
+        F: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
+    {
         let (tx, rx) = channel::<(Request, Sender<Response>)>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let load = Arc::new(ServingLoad::default());
@@ -624,6 +665,7 @@ impl Coordinator {
             let mut worker = Worker {
                 engine,
                 k_shot,
+                classifier,
                 sessions: HashMap::new(),
                 next_id: 1,
                 metrics: Metrics::default(),
@@ -685,7 +727,19 @@ impl Coordinator {
         hv_bits: u32,
         metric: crate::hdc::Distance,
     ) -> anyhow::Result<u64> {
-        match self.call(Request::CreateSession { n_way, hv_bits, metric }) {
+        self.create_session_full(n_way, hv_bits, metric, ClassifierBackend::Hdc)
+    }
+
+    /// Fully explicit session creation: metric *and* classifier backend
+    /// (`hdc` full-D class HVs or `ldc` folded low-D prototypes).
+    pub fn create_session_full(
+        &self,
+        n_way: usize,
+        hv_bits: u32,
+        metric: crate::hdc::Distance,
+        backend: ClassifierBackend,
+    ) -> anyhow::Result<u64> {
+        match self.call(Request::CreateSession { n_way, hv_bits, metric, backend }) {
             Response::SessionCreated { session } => Ok(session),
             Response::Error(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),

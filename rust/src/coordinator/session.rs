@@ -2,9 +2,10 @@
 //! k-shot task — per-branch HDC models (branch class HVs for early exit,
 //! Section V-A) plus the single-pass training and query logic.
 
+use crate::classifier::{ClassifierBackend, FslClassifier};
 use crate::config::EeConfig;
 use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
-use crate::hdc::{distance::argmin, Distance, HdcModel};
+use crate::hdc::{distance::argmin, Distance};
 
 /// Outcome of one query.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -16,41 +17,105 @@ pub struct QueryOutcome {
     pub exited_early: bool,
 }
 
-/// Session state: one HDC model per FE branch.
+/// Session state: one classifier per FE branch, behind the
+/// [`FslClassifier`] seam — the session no longer knows (or branches on)
+/// which backend it runs; the backend choice happens once, at
+/// construction, through [`ClassifierBackend::build`].
 #[derive(Clone, Debug)]
 pub struct FslSession {
     pub id: u64,
     pub n_way: usize,
+    /// Encoded HV dimension each branch *ingests* (the cRP encoder's D).
+    /// What each branch *stores* is [`FslSession::stored_dim`].
     pub d: usize,
     pub n_branches: usize,
-    /// `branch_models[b]` = HDC model fed by CONV block b's features
-    branch_models: Vec<HdcModel>,
+    backend: ClassifierBackend,
+    hv_bits: u32,
+    metric: Distance,
+    /// LDC fold dimension (`0` = auto); ignored by the HDC backend.
+    ldc_d: usize,
+    /// `branch_models[b]` = classifier fed by CONV block b's features
+    branch_models: Vec<Box<dyn FslClassifier>>,
     pub shots_seen: usize,
 }
 
 impl FslSession {
     pub fn new(id: u64, n_way: usize, d: usize, n_branches: usize) -> Self {
+        assert!(n_way >= 1, "a session needs at least one class");
+        assert!(d >= 1, "a session needs a non-empty HV dimension");
         assert!(n_branches >= 1);
-        FslSession {
+        let mut s = FslSession {
             id,
             n_way,
             d,
             n_branches,
-            branch_models: (0..n_branches).map(|_| HdcModel::new(n_way, d)).collect(),
+            backend: ClassifierBackend::default(),
+            hv_bits: 16,
+            metric: Distance::L1,
+            ldc_d: 0,
+            branch_models: Vec::new(),
             shots_seen: 0,
-        }
+        };
+        s.rebuild();
+        s
+    }
+
+    /// Re-derive every branch classifier from the current knobs. Only
+    /// legal before training (the builders are constructor sugar, not a
+    /// live reconfiguration path).
+    fn rebuild(&mut self) {
+        assert_eq!(self.shots_seen, 0, "cannot reconfigure a session after training");
+        self.branch_models = (0..self.n_branches)
+            .map(|_| self.backend.build(self.n_way, self.d, self.hv_bits, self.metric, self.ldc_d))
+            .collect();
     }
 
     pub fn with_precision(mut self, bits: u32) -> Self {
-        self.branch_models =
-            self.branch_models.into_iter().map(|m| m.with_precision(bits)).collect();
+        self.hv_bits = bits;
+        self.rebuild();
         self
     }
 
     pub fn with_metric(mut self, metric: Distance) -> Self {
-        self.branch_models =
-            self.branch_models.into_iter().map(|m| m.with_metric(metric)).collect();
+        self.metric = metric;
+        self.rebuild();
         self
+    }
+
+    /// Select the classifier backend (and, for LDC, the fold dimension —
+    /// `0` = auto). Builder-order independent with the other knobs.
+    pub fn with_backend(mut self, backend: ClassifierBackend, ldc_d: usize) -> Self {
+        self.backend = backend;
+        self.ldc_d = ldc_d;
+        self.rebuild();
+        self
+    }
+
+    /// The classifier backend every branch runs.
+    pub fn backend(&self) -> ClassifierBackend {
+        self.backend
+    }
+
+    /// Class-memory precision (bits per stored element).
+    pub fn hv_bits(&self) -> u32 {
+        self.hv_bits
+    }
+
+    /// Distance metric used for inference.
+    pub fn metric(&self) -> Distance {
+        self.metric
+    }
+
+    /// Per-class *stored* dimension — what the class-memory admission
+    /// accounting charges. HDC stores full-D class HVs (`== self.d`); LDC
+    /// stores folded prototypes in `64..=512`.
+    pub fn stored_dim(&self) -> usize {
+        self.branch_models[0].stored_dim()
+    }
+
+    /// Total class-memory bits this session occupies across branches.
+    pub fn class_mem_bits(&self) -> u64 {
+        self.branch_models.iter().map(|m| m.class_mem_bits()).sum()
     }
 
     /// Single-pass training on one shot: `branch_hvs[b]` is the encoded HV
@@ -303,5 +368,83 @@ mod tests {
     fn branch_arity_checked() {
         let mut s = FslSession::new(1, 2, 16, 4);
         s.train_shot(0, &[vec![0.0; 16]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one class")]
+    fn zero_way_session_rejected() {
+        FslSession::new(1, 0, 16, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty HV dimension")]
+    fn zero_dim_session_rejected() {
+        FslSession::new(1, 2, 0, 1);
+    }
+
+    #[test]
+    fn backend_conformance_train_query_and_shards() {
+        // the same session battery over every backend: train/query
+        // accuracy, batch-vs-sequential bit-identity, sharded prediction
+        // bit-identity — the seam must not change any serving contract
+        let d = 256;
+        for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+            let mut rng = Rng::new(31);
+            let ps = protos(&mut rng, 3, d);
+            let mut s = FslSession::new(1, 3, d, 2).with_precision(8).with_backend(backend, 0);
+            assert_eq!(s.backend(), backend);
+            let shots: Vec<Vec<Vec<f32>>> =
+                (0..5).map(|_| (0..2).map(|_| hv(&mut rng, &ps[0])).collect()).collect();
+            let mut seq = s.clone();
+            for shot in &shots {
+                seq.train_shot(0, shot);
+            }
+            let mut bat = s.clone();
+            bat.train_batch(0, &shots);
+            let q = hv(&mut rng, &ps[0]);
+            assert_eq!(seq.final_distances(&q), bat.final_distances(&q), "{backend:?}");
+
+            for (c, p) in ps.iter().enumerate() {
+                for _ in 0..5 {
+                    let hvs: Vec<Vec<f32>> = (0..2).map(|_| hv(&mut rng, p)).collect();
+                    s.train_shot(c, &hvs);
+                }
+            }
+            assert!(s.is_trained());
+            for (c, p) in ps.iter().enumerate() {
+                assert_eq!(s.query_full(&hv(&mut rng, p)).prediction, c, "{backend:?}");
+            }
+            let qs: Vec<Vec<f32>> = (0..6).map(|_| hv(&mut rng, &ps[1])).collect();
+            let serial: Vec<usize> = qs.iter().map(|x| s.predict_branch(1, x)).collect();
+            for shards in [1, 2, 7] {
+                assert_eq!(s.predict_branch_batch(1, &qs, shards), serial, "{backend:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn backend_builder_order_independent() {
+        let a = FslSession::new(1, 4, 512, 2)
+            .with_backend(ClassifierBackend::Ldc, 0)
+            .with_precision(4);
+        let b = FslSession::new(1, 4, 512, 2)
+            .with_precision(4)
+            .with_backend(ClassifierBackend::Ldc, 0);
+        assert_eq!(a.backend(), b.backend());
+        assert_eq!(a.hv_bits(), b.hv_bits());
+        assert_eq!(a.stored_dim(), b.stored_dim());
+        assert_eq!(a.class_mem_bits(), b.class_mem_bits());
+    }
+
+    #[test]
+    fn class_mem_bits_reflect_the_backend() {
+        // matched n_way/D/bits: LDC's folded store is the class-memory win
+        let hdc = FslSession::new(1, 10, 4096, 2).with_precision(4);
+        let ldc =
+            FslSession::new(2, 10, 4096, 2).with_precision(4).with_backend(ClassifierBackend::Ldc, 0);
+        assert_eq!(hdc.stored_dim(), 4096);
+        assert_eq!(ldc.stored_dim(), 512);
+        assert_eq!(hdc.class_mem_bits(), 2 * 10 * 4096 * 4);
+        assert!(hdc.class_mem_bits() >= 4 * ldc.class_mem_bits());
     }
 }

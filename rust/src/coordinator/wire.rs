@@ -19,6 +19,7 @@
 
 use std::io::{Read, Write};
 
+use crate::classifier::ClassifierBackend;
 use crate::config::EeConfig;
 use crate::coordinator::metrics::{MetricsSnapshot, DEPTH_BINS};
 use crate::coordinator::request::{Request, Response};
@@ -107,11 +108,12 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut w = JsonWriter::new();
     w.obj();
     match req {
-        Request::CreateSession { n_way, hv_bits, metric } => {
+        Request::CreateSession { n_way, hv_bits, metric, backend } => {
             w.field_str("type", "create_session");
             w.field_num("n_way", *n_way as f64);
             w.field_num("hv_bits", f64::from(*hv_bits));
             w.field_str("metric", metric.name());
+            w.field_str("backend", backend.name());
         }
         Request::AddShot { session, class, image } => {
             w.field_str("type", "add_shot");
@@ -333,6 +335,15 @@ pub fn decode_request(payload: &[u8]) -> anyhow::Result<Request> {
             n_way: get_usize(&j, "n_way")?,
             hv_bits: get_u64(&j, "hv_bits")? as u32,
             metric: Distance::from_name(get_str(&j, "metric")?)?,
+            // absent on frames from pre-backend clients: default to hdc so
+            // old peers keep working; an unknown *named* backend is a
+            // decode error the gateway answers with an error frame
+            backend: match j.get("backend") {
+                None | Some(Json::Null) => ClassifierBackend::Hdc,
+                Some(b) => ClassifierBackend::from_name(
+                    b.as_str().ok_or_else(|| anyhow::anyhow!("non-string field \"backend\""))?,
+                )?,
+            },
         }),
         "add_shot" => Ok(Request::AddShot {
             session: get_u64(&j, "session")?,
@@ -491,7 +502,9 @@ mod tests {
         let mat = vec![img.clone(), vec![], vec![42.5]];
         let ee = Some(EeConfig { e_s: 2, e_c: 3 });
         for metric in [Distance::L1, Distance::Dot, Distance::Cosine, Distance::Hamming] {
-            roundtrip_req(Request::CreateSession { n_way: 10, hv_bits: 4, metric });
+            for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+                roundtrip_req(Request::CreateSession { n_way: 10, hv_bits: 4, metric, backend });
+            }
         }
         roundtrip_req(Request::AddShot { session: 1, class: 3, image: img.clone() });
         roundtrip_req(Request::AddShotBatch { session: 2, class: 0, images: mat.clone() });
@@ -560,6 +573,28 @@ mod tests {
                 other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn create_session_backend_defaults_to_hdc_for_old_frames() {
+        // a frame from a pre-backend client has no "backend" field; it
+        // must decode as an hdc session, not error
+        let old = b"{\"type\":\"create_session\",\"n_way\":5,\"hv_bits\":8,\"metric\":\"l1\"}";
+        match decode_request(old).unwrap() {
+            Request::CreateSession { n_way, hv_bits, metric, backend } => {
+                assert_eq!((n_way, hv_bits, metric), (5, 8, Distance::L1));
+                assert_eq!(backend, ClassifierBackend::Hdc);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_backend_name_is_a_decode_error_not_a_panic() {
+        let bad = b"{\"type\":\"create_session\",\"n_way\":5,\"hv_bits\":8,\
+                     \"metric\":\"l1\",\"backend\":\"svm\"}";
+        let err = decode_request(bad).unwrap_err().to_string();
+        assert!(err.contains("svm") && err.contains("hdc|ldc"), "{err}");
     }
 
     #[test]

@@ -95,24 +95,43 @@ pub fn l1(a: &[f32], b: &[f32]) -> f64 {
     s
 }
 
-/// Index of the smallest distance (ties -> lowest index). NaN-robust
-/// (consistent with the PR 2 NaN-sort sweep): NaN candidates are skipped
-/// and a NaN incumbent always loses, so a NaN distance can never win —
-/// the old `d < dists[best]` comparison was false for *every* candidate
-/// once `dists[0]` was NaN, silently returning class 0 (note `total_cmp`
-/// alone would not fix the sign-bit-set NaN, which sorts *below* -inf).
-/// All-NaN input still returns 0 (there is no better answer).
-pub fn argmin(dists: &[f64]) -> usize {
+/// Shared NaN-robust selection core for [`argmin`]/[`argmax`]: NaN
+/// candidates are skipped and a NaN incumbent always loses, so a NaN
+/// value can never win (note `total_cmp` alone would not fix the
+/// sign-bit-set NaN, which sorts *below* -inf). All-NaN input still
+/// returns 0 (there is no better answer).
+fn arg_best<T: Copy + Into<f64>>(vals: &[T], better: impl Fn(f64, f64) -> bool) -> usize {
     let mut best = 0;
-    for (i, &d) in dists.iter().enumerate().skip(1) {
-        if d.is_nan() {
+    for (i, &v) in vals.iter().enumerate().skip(1) {
+        let v: f64 = v.into();
+        if v.is_nan() {
             continue;
         }
-        if dists[best].is_nan() || d < dists[best] {
+        let b: f64 = vals[best].into();
+        if b.is_nan() || better(v, b) {
             best = i;
         }
     }
     best
+}
+
+/// Index of the smallest distance (ties -> lowest index). NaN-robust
+/// (consistent with the PR 2 NaN-sort sweep): the old `d < dists[best]`
+/// comparison was false for *every* candidate once `dists[0]` was NaN,
+/// silently returning class 0. Generic over `f32` and `f64` (f32 -> f64
+/// conversion is exact) so every distance/logit selection in the crate
+/// shares this one NaN-robust implementation instead of re-rolling the
+/// NaN-blind loop per element type.
+pub fn argmin<T: Copy + Into<f64>>(dists: &[T]) -> usize {
+    arg_best(dists, |a, b| a < b)
+}
+
+/// Index of the largest value (ties -> lowest index) — the similarity /
+/// logit twin of [`argmin`], same NaN rules. Used by the baseline
+/// classifiers, whose hand-rolled `l > logits[best]` loops silently
+/// elected class 0 on a NaN logit at index 0.
+pub fn argmax<T: Copy + Into<f64>>(vals: &[T]) -> usize {
+    arg_best(vals, |a, b| a > b)
 }
 
 #[cfg(test)]
@@ -163,6 +182,26 @@ mod tests {
         assert_eq!(argmin(&[-f64::NAN, 1.0]), 1, "sign-bit NaN must not win either");
         assert_eq!(argmin(&[f64::NAN, f64::NAN]), 0, "all-NaN falls back to 0");
         assert_eq!(argmin(&[f64::NAN, f64::INFINITY]), 1, "inf beats NaN");
+    }
+
+    #[test]
+    fn argmin_is_generic_over_f32() {
+        // the f32 instantiation shares the NaN-robust core, so the same
+        // regression battery must hold element-type-for-element-type
+        assert_eq!(argmin(&[3.0f32, 1.0, 1.0, 5.0]), 1);
+        assert_eq!(argmin(&[f32::NAN, 5.0, 3.0]), 2);
+        assert_eq!(argmin(&[2.0f32, f32::NAN, 1.0]), 2);
+        assert_eq!(argmin(&[-f32::NAN, 1.0]), 1, "sign-bit NaN must not win either");
+        assert_eq!(argmin(&[f32::NAN, f32::NAN]), 0, "all-NaN falls back to 0");
+    }
+
+    #[test]
+    fn argmax_mirrors_argmin_nan_rules() {
+        assert_eq!(argmax(&[3.0f32, 9.0, 9.0, 5.0]), 1, "ties -> lowest index");
+        assert_eq!(argmax(&[f32::NAN, 5.0, 3.0]), 1);
+        assert_eq!(argmax(&[2.0f64, f64::NAN, 7.0]), 2);
+        assert_eq!(argmax(&[f64::NAN, f64::NAN]), 0, "all-NaN falls back to 0");
+        assert_eq!(argmax(&[f64::NAN, f64::NEG_INFINITY]), 1, "-inf beats NaN");
     }
 
     #[test]

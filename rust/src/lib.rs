@@ -28,6 +28,7 @@
 //! file), so the documented quickstart can never drift from the real API.
 
 pub mod baselines;
+pub mod classifier;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -13,6 +13,7 @@
 //!   fsl-hdnn episode --workers 0 --batched true   # 0 = one worker per core
 //!   fsl-hdnn episode --clustered --ch-sub 64 --n-centroids 16  # Fig. 4b FE
 //!   fsl-hdnn episode --hv-bits 1 --metric hamming # packed binary classifier
+//!   fsl-hdnn episode --backend ldc --ldc-d 0      # low-dimensional classifier (LDC)
 //!   fsl-hdnn episode --base-width 32 --stages 3 --image-size 64  # synthetic geometry
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
 //!   fsl-hdnn serve --addr 127.0.0.1:7878 --workers 0 --high-water 64
@@ -22,7 +23,8 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use fsl_hdnn::config::{ChipConfig, EeConfig, ParallelConfig};
+use fsl_hdnn::classifier::ClassifierBackend;
+use fsl_hdnn::config::{ChipConfig, ClassifierConfig, EeConfig, ParallelConfig};
 use fsl_hdnn::coordinator::Coordinator;
 use fsl_hdnn::data::images::ImageGen;
 use fsl_hdnn::runtime::engine::{Backend, ComputeEngine};
@@ -78,6 +80,30 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_str("artifacts", "artifacts"))
 }
 
+/// Resolve the overloaded `--backend` flag. Historically it named the
+/// compute *engine* (`native|pjrt`); since the classifier seam it also
+/// accepts a *classifier* backend (`hdc|ldc`) — `--backend ldc` runs the
+/// low-dimensional classifier on the native engine. Returns
+/// `(engine, classifier)` with the TOML `[classifier]` section as the
+/// classifier default; any other name errors with the full menu.
+fn resolve_backends(
+    args: &Args,
+    rc: &fsl_hdnn::config::RunConfig,
+) -> anyhow::Result<(Backend, ClassifierBackend)> {
+    let mut engine = Backend::Native;
+    let mut classifier = rc.classifier.backend;
+    if let Some(v) = args.kv.get("backend") {
+        if let Ok(b) = Backend::from_name(v) {
+            engine = b;
+        } else if let Ok(c) = ClassifierBackend::from_name(v) {
+            classifier = c;
+        } else {
+            anyhow::bail!("unknown backend {v} (native|pjrt|hdc|ldc)");
+        }
+    }
+    Ok((engine, classifier))
+}
+
 fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     // optional TOML-subset config file, overridden by CLI flags
     let mut rc = fsl_hdnn::config::RunConfig::default();
@@ -85,7 +111,11 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
         let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
         rc.apply_toml(&doc)?;
     }
-    let backend = Backend::from_name(&args.get_str("backend", "native"))?;
+    let (backend, cls_backend) = resolve_backends(args, &rc)?;
+    let cls = ClassifierConfig {
+        backend: cls_backend,
+        ldc_d: args.get("ldc-d", rc.classifier.ldc_d),
+    };
     let n_way: usize = args.get("n-way", rc.workload.n_way);
     let k_shot: usize = args.get("k-shot", rc.workload.k_shot);
     let queries: usize = args.get("queries", rc.workload.queries_per_class);
@@ -146,21 +176,23 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     }
     println!(
         "backend={backend:?} model: {}x{}x{} -> F={} D={} | workers={eff_workers} \
-         batched={batched} clustered={eff_clustered} | hv_bits={hv_bits} metric={}",
+         batched={batched} clustered={eff_clustered} | classifier={} hv_bits={hv_bits} metric={}",
         model.image_size,
         model.image_size,
         model.in_channels,
         model.feature_dim,
         model.d,
+        cls.backend.name(),
         metric.name()
     );
     let dir2 = dir.clone();
     let mc2 = mc.clone();
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_with_classifier(
         move || {
             Ok(ComputeEngine::open_or_synthetic_with(backend, &dir2, mc2)?.with_parallelism(par))
         },
         k_shot,
+        cls,
     )?;
     let gen = ImageGen::new(model.image_size, 64.max(n_way), seed);
     let mut rng = Rng::new(seed);
@@ -168,7 +200,7 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     let mut blocks = Vec::new();
     for ep in 0..episodes {
         let classes = rng.choose_k(gen.n_classes, n_way);
-        let sid = coord.create_session_with(n_way, hv_bits, metric)?;
+        let sid = coord.create_session_full(n_way, hv_bits, metric, cls.backend)?;
         for (label, &cls) in classes.iter().enumerate() {
             if batched {
                 let shots: Vec<Vec<f32>> =
@@ -219,7 +251,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
         rc.apply_toml(&doc)?;
     }
-    let backend = Backend::from_name(&args.get_str("backend", "native"))?;
+    let (backend, cls_backend) = resolve_backends(args, &rc)?;
+    let cls = ClassifierConfig {
+        backend: cls_backend,
+        ldc_d: args.get("ldc-d", rc.classifier.ldc_d),
+    };
     let k_shot: usize = args.get("k-shot", rc.workload.k_shot);
     let par = ParallelConfig {
         workers: args.get("workers", rc.parallel.workers),
@@ -232,18 +268,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut mc = rc.model.clone();
     mc.clustered = args.get("clustered", mc.clustered);
     let dir = artifacts_dir(args);
-    let coord = Coordinator::start(
+    let coord = Coordinator::start_with_classifier(
         move || {
             Ok(ComputeEngine::open_or_synthetic_with(backend, &dir, mc)?.with_parallelism(par))
         },
         k_shot,
+        cls,
     )?;
     let gateway = fsl_hdnn::coordinator::Gateway::bind(coord.client(), &serving)?;
     println!(
-        "serving on {} (workers={}, high_water={}, k_shot={k_shot})",
+        "serving on {} (workers={}, high_water={}, k_shot={k_shot}, classifier={})",
         gateway.local_addr(),
         par.resolved_workers(),
-        serving.high_water
+        serving.high_water,
+        cls.backend.name()
     );
     // serve until the process is killed; `gateway` and `coord` stay owned
     // for the whole loop so their drop-time shutdown chains remain intact.

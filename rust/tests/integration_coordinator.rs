@@ -723,6 +723,110 @@ fn router_routes_query_batches() {
 }
 
 #[test]
+fn zero_way_session_request_rejected_not_panicked() {
+    // n_way = 0 at the request boundary must be Response::Error, never an
+    // assert in FslSession::new that kills the worker
+    let coord = start_synthetic(3, ParallelConfig::default());
+    let err = coord.create_session(0, 16).unwrap_err().to_string();
+    assert!(err.contains("n_way"), "{err}");
+    // the worker survived and still serves valid requests
+    assert!(coord.create_session(2, 16).is_ok());
+    assert!(coord.metrics().errors >= 1);
+}
+
+#[test]
+fn zero_dim_model_rejected_at_the_request_boundary() {
+    // a (mis)configured engine with D=0 must turn CreateSession into a
+    // Response::Error, not a dead worker (FslSession::new would assert)
+    let cfg = ModelConfig { d: 0, ..synthetic_cfg(false) };
+    let coord = Coordinator::start(move || Ok(ComputeEngine::from_config(cfg)), 3).unwrap();
+    let err = coord.create_session(2, 16).unwrap_err().to_string();
+    assert!(err.contains("d must be >= 1"), "{err}");
+    assert!(coord.metrics().errors >= 1);
+}
+
+#[test]
+fn backend_conformance_through_the_coordinator() {
+    use fsl_hdnn::classifier::ClassifierBackend;
+    use fsl_hdnn::hdc::Distance;
+    // the serving battery parameterized over both classifier backends:
+    // per-shot serial training must match class-batched training on
+    // worker-sharded engines {1, 2, 7}, query for query
+    for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+        let n_way = 3;
+        let mk_shots = |class: usize| -> Vec<Vec<f32>> {
+            let gen = ImageGen::new(8, 8, 47);
+            let mut rng = Rng::new(400 + class as u64);
+            (0..3).map(|_| gen.sample(class, &mut rng)).collect()
+        };
+        let serial = start_synthetic(3, ParallelConfig::default());
+        let s1 = serial.create_session_full(n_way, 16, Distance::L1, backend).unwrap();
+        for class in 0..n_way {
+            for img in mk_shots(class) {
+                serial.add_shot(s1, class, img).unwrap();
+            }
+        }
+        serial.finish_training(s1).unwrap();
+        let gen = ImageGen::new(8, 8, 47);
+        let mut rng = Rng::new(474);
+        let images: Vec<Vec<f32>> = (0..7).map(|i| gen.sample(i % n_way, &mut rng)).collect();
+        let want: Vec<_> =
+            images.iter().map(|img| serial.query(s1, img.clone(), None).unwrap()).collect();
+        for workers in [1usize, 2, 7] {
+            let coord = start_synthetic(3, ParallelConfig { workers, min_batch_per_worker: 1 });
+            let sid = coord.create_session_full(n_way, 16, Distance::L1, backend).unwrap();
+            for class in 0..n_way {
+                coord.add_shot_batch(sid, class, mk_shots(class)).unwrap();
+            }
+            coord.finish_training(sid).unwrap();
+            let got = coord.query_batch(sid, images.clone(), None).unwrap();
+            assert_eq!(got, want, "{backend:?} workers={workers}: sharded must match serial");
+        }
+    }
+}
+
+#[test]
+fn ldc_sessions_pack_denser_into_class_memory() {
+    use fsl_hdnn::classifier::ClassifierBackend;
+    use fsl_hdnn::hdc::Distance;
+    // at D=4096 single branch, 128-way @ 4-bit HDC is the exact 256 KB
+    // fit (paper capacity table); the same n_way through LDC folds to
+    // 512 dims, so eight such sessions fill the memory instead of one
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4],
+        blocks_per_stage: 1,
+        feature_dim: 4,
+        d: 4096,
+        ..Default::default()
+    };
+    let coord = {
+        let c = cfg.clone();
+        Coordinator::start(move || Ok(ComputeEngine::from_config(c)), 1).unwrap()
+    };
+    let hdc = coord.create_session_full(128, 4, Distance::L1, ClassifierBackend::Hdc).unwrap();
+    assert!(
+        coord.create_session_full(128, 4, Distance::L1, ClassifierBackend::Ldc).is_err(),
+        "a full memory rejects LDC sessions too"
+    );
+    coord.call(Request::CloseSession { session: hdc });
+    let sids: Vec<u64> = (0..8)
+        .map(|_| {
+            coord.create_session_full(128, 4, Distance::L1, ClassifierBackend::Ldc).unwrap()
+        })
+        .collect();
+    assert_eq!(sids.len(), 8);
+    let err = coord
+        .create_session_full(128, 4, Distance::L1, ClassifierBackend::Ldc)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("exhausted"), "ninth 128-way LDC session must not fit: {err}");
+    let m = coord.metrics();
+    assert_eq!(m.class_mem_used_bits, 8 * 128 * 512 * 4, "LDC is charged its folded bits");
+}
+
+#[test]
 fn raw_feature_input_mode() {
     // Fig. 7: raw features can bypass the FE and feed the FSL classifier
     let Some(coord) = start_native("raw_feature_input_mode") else { return };

@@ -298,6 +298,94 @@ fn gateway_survives_garbage_and_refuses_wire_shutdown() {
     assert!(wc.metrics().is_ok());
 }
 
+/// The classifier seam over the wire: `CreateSession` carries `backend`,
+/// the gateway serves both, and wire answers stay bit-identical to the
+/// in-process coordinator trained on the same shots.
+#[test]
+fn gateway_serves_both_classifier_backends_bit_identically() {
+    use fsl_hdnn::classifier::ClassifierBackend;
+    use fsl_hdnn::hdc::Distance;
+    for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+        let coord = start_synthetic(K_SHOT, 2);
+        let gateway = Gateway::bind(coord.client(), &loopback_cfg(64)).unwrap();
+        let mut wc = WireClient::connect(gateway.local_addr()).unwrap();
+        let sid_wire = wc.create_session_full(N_WAY, 16, Distance::L1, backend).unwrap();
+        let sid_local = coord.create_session_full(N_WAY, 16, Distance::L1, backend).unwrap();
+        let gen = ImageGen::new(8, 8, 7);
+        let mut rng = Rng::new(7);
+        for class in 0..N_WAY {
+            for _ in 0..K_SHOT {
+                let img = gen.sample(class, &mut rng);
+                wc.add_shot(sid_wire, class, img.clone()).unwrap();
+                Coordinator::add_shot(&coord, sid_local, class, img).unwrap();
+            }
+        }
+        assert_eq!(wc.finish_training(sid_wire).unwrap(), N_WAY * K_SHOT);
+        coord.finish_training(sid_local).unwrap();
+        for i in 0..6 {
+            let img = gen.sample(i % N_WAY, &mut rng);
+            let got = WireClient::query(&mut wc, sid_wire, img.clone(), None).unwrap();
+            let want = Coordinator::query(&coord, sid_local, img, None).unwrap();
+            assert_eq!(got, want, "{backend:?} q={i}: wire must match in-process");
+        }
+        // an unknown backend name on the raw wire is an Error frame, not
+        // a dead connection
+        let mut s = TcpStream::connect(gateway.local_addr()).unwrap();
+        wire::write_frame(
+            &mut s,
+            br#"{"type":"create_session","n_way":2,"hv_bits":16,"metric":"l1","backend":"svm"}"#,
+            CAP,
+        )
+        .unwrap();
+        let frame = wire::read_frame(&mut s, CAP).unwrap().expect("reply frame");
+        match wire::decode_response(&frame).unwrap() {
+            Response::Error(e) => assert!(e.contains("svm"), "{e}"),
+            other => panic!("expected Error for unknown backend, got {other:?}"),
+        }
+    }
+}
+
+/// ISSUE acceptance: `--backend ldc` serves a full 10-way 5-shot episode
+/// over TCP. D=256 folds to 64-dim LDC prototypes (a genuine 4x fold),
+/// the session trains in a single pass over the wire and answers well
+/// above chance.
+#[test]
+fn ldc_ten_way_five_shot_episode_over_tcp() {
+    use fsl_hdnn::classifier::ClassifierBackend;
+    use fsl_hdnn::hdc::Distance;
+    let (n_way, k_shot) = (10usize, 5usize);
+    let cfg = ModelConfig { d: 256, ..synthetic_cfg() };
+    let par = ParallelConfig { workers: 2, min_batch_per_worker: 1 };
+    let coord = Coordinator::start(
+        move || Ok(ComputeEngine::from_config(cfg).with_parallelism(par)),
+        k_shot,
+    )
+    .unwrap();
+    let gateway = Gateway::bind(coord.client(), &loopback_cfg(10_000)).unwrap();
+    let mut wc = WireClient::connect(gateway.local_addr()).unwrap();
+    let sid = wc.create_session_full(n_way, 16, Distance::L1, ClassifierBackend::Ldc).unwrap();
+    let gen = ImageGen::new(8, 16, 2026);
+    let mut rng = Rng::new(2026);
+    for class in 0..n_way {
+        for _ in 0..k_shot {
+            wc.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    assert_eq!(wc.finish_training(sid).unwrap(), n_way * k_shot);
+    let mut correct = 0;
+    let total = 30;
+    for i in 0..total {
+        let class = i % n_way;
+        let out = WireClient::query(&mut wc, sid, gen.sample(class, &mut rng), None).unwrap();
+        correct += (out.prediction == class) as usize;
+    }
+    assert!(
+        correct * n_way > 2 * total,
+        "10-way LDC over TCP must beat chance clearly: {correct}/{total}"
+    );
+    wc.close_session(sid).unwrap();
+}
+
 /// Regression for worker-pool shutdown: create/drop coordinators (each
 /// owning a 2-worker persistent pool) in a tight loop, some mid-training,
 /// and require every drop to join cleanly — no detached threads, no

@@ -511,12 +511,23 @@ fn shipped_config_presets_load() {
     rc.apply_toml(&doc).unwrap();
     assert_eq!(rc.hdc.hv_bits, 1, "low-power corner runs binary class HVs");
     assert_eq!(rc.hdc.metric, fsl_hdnn::hdc::Distance::Hamming);
+    assert_eq!(
+        rc.classifier.backend,
+        fsl_hdnn::classifier::ClassifierBackend::Ldc,
+        "low-power corner folds to low-D prototypes"
+    );
+    assert_eq!(rc.classifier.ldc_d, 0, "auto fold dimension");
     // the paper preset pins the headline workload
     let doc = Doc::load(std::path::Path::new("configs/paper_10way5shot.toml")).unwrap();
     let mut rc = RunConfig::default();
     rc.apply_toml(&doc).unwrap();
     assert_eq!((rc.workload.n_way, rc.workload.k_shot), (10, 5));
     assert_eq!(rc.ee, Some(fsl_hdnn::config::EeConfig { e_s: 2, e_c: 2 }));
+    assert_eq!(
+        rc.classifier.backend,
+        fsl_hdnn::classifier::ClassifierBackend::Hdc,
+        "the headline preset runs the paper's classifier"
+    );
 }
 
 /// Dataset presets stay calibrated to the paper's Fig. 15 bands
