@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test bench bench-smoke doc fmt clippy artifacts clean
+.PHONY: verify build test bench bench-smoke chaos doc fmt clippy artifacts clean
 
 ## tier-1 verify: must pass from a clean checkout (artifact-dependent
 ## tests self-skip with a distinct `SKIPPED` line, see DESIGN.md §Test skips)
@@ -31,6 +31,15 @@ bench-smoke:
 	$(CARGO) bench --bench fig14_precision_sweep -- --smoke --backend ldc
 	$(CARGO) bench --bench fig17_early_exit -- --smoke
 	$(CARGO) run --release --example load_gen -- --smoke
+
+## fault-tolerance drills (DESIGN.md §Fault model): the deterministic
+## chaos battery (device kill mid-episode -> bit-identical recovery,
+## strike-out, cascade loss, wire retries), an env-armed fail-point
+## smoke, and the load_gen --chaos recovery-latency row
+chaos:
+	$(CARGO) test -q --test integration_chaos
+	FSL_FAILPOINTS="device.query=latency-ms:1" $(CARGO) run --release --example load_gen -- --smoke
+	$(CARGO) run --release --example load_gen -- --chaos
 
 doc:
 	$(CARGO) doc --no-deps

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut router = DeviceRouter::start(n_devices, gen_trace.k_shot, Placement::LeastLoaded,
-        |_i| {
+        move |_i| {
             let d = dir.clone();
             move || ComputeEngine::open_or_synthetic(Backend::Native, &d)
         })?;

@@ -14,6 +14,9 @@
 //!              [--clients N] [--queries N] [--workers N] [--high-water N]
 //! `--smoke` (CI, `make bench-smoke`): 2 clients x 20 queries on the tiny
 //! synthetic geometry, with sanity asserts on the recorded rows.
+//! `--chaos` (CI, `make chaos`): kill a device mid-episode on a 2-device
+//! router and record the caller-observed recovery latency (fault
+//! detection + journal replay + retry) as a `chaos_recovery` row.
 
 use std::time::{Duration, Instant};
 
@@ -73,6 +76,7 @@ fn run_session<E: std::fmt::Debug>(
             n_way: N_WAY,
             hv_bits: 16,
             metric: fsl_hdnn::hdc::Distance::L1,
+            backend: fsl_hdnn::classifier::ClassifierBackend::Hdc,
         },
     ) {
         Response::SessionCreated { session } => session,
@@ -128,7 +132,100 @@ fn run_session<E: std::fmt::Debug>(
     ClientRun { latencies_ms, sheds_seen }
 }
 
+/// `--chaos`: the recovery-latency drill. A 10-way 5-shot episode on a
+/// 2-device router; `device.train=panic-once` kills the hosting device's
+/// worker mid-training, and the training call that rides through fault
+/// detection + shot-journal replay + retry is timed as the
+/// caller-observed recovery latency (EXPERIMENTS.md §Perf, `serving`
+/// section).
+fn run_chaos() -> anyhow::Result<()> {
+    use fsl_hdnn::classifier::ClassifierBackend;
+    use fsl_hdnn::coordinator::{DeviceHealth, DeviceRouter, Placement};
+    use fsl_hdnn::util::failpoint;
+
+    let (n_way, k_shot) = (10usize, 5usize);
+    let kill_at = 6usize; // classes already journaled when the device dies
+    let cfg = ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4, 8],
+        blocks_per_stage: 1,
+        feature_dim: 8,
+        d: 64,
+        ch_sub: 4,
+        n_centroids: 8,
+        ..Default::default()
+    };
+    let image_size = cfg.image_size;
+    let par = ParallelConfig { workers: 2, min_batch_per_worker: 1 };
+    let mut router = DeviceRouter::start(2, k_shot, Placement::LeastLoaded, move |_i| {
+        let c = cfg.clone();
+        move || Ok(ComputeEngine::from_config(c).with_parallelism(par))
+    })?;
+    println!("load_gen --chaos: 2 devices, {n_way}-way {k_shot}-shot, kill at class {kill_at}");
+
+    let gen = ImageGen::new(image_size, 16, 42);
+    let mut rng = Rng::new(42);
+    let sid = router.create_session_full(n_way, 16, fsl_hdnn::hdc::Distance::L1,
+        ClassifierBackend::Hdc)?;
+    let batch = |class: usize, rng: &mut Rng| -> Vec<Vec<f32>> {
+        (0..k_shot).map(|_| gen.sample(class, rng)).collect()
+    };
+    for class in 0..kill_at {
+        router.add_shot_batch(sid, class, batch(class, &mut rng))?;
+    }
+
+    // the next training request panics the hosting device's worker; the
+    // timed call covers detection, re-placement (journal replay of the
+    // classes above) and the retry that finally lands
+    failpoint::arm_spec("device.train=panic-once")?;
+    let t0 = Instant::now();
+    router.add_shot_batch(sid, kill_at, batch(kill_at, &mut rng))?;
+    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    failpoint::disarm_all();
+
+    for class in kill_at + 1..n_way {
+        router.add_shot_batch(sid, class, batch(class, &mut rng))?;
+    }
+    assert_eq!(router.finish_training(sid)?, n_way * k_shot);
+    for i in 0..20 {
+        router.query(sid, gen.sample(i % n_way, &mut rng), None)?;
+    }
+
+    let m = router.metrics();
+    assert_eq!(m.device_failures, 1, "exactly one device died");
+    assert_eq!(m.sessions_replaced, 1, "the session was re-placed once");
+    let dead = (0..router.n_devices())
+        .filter(|&d| router.health(d) == DeviceHealth::Dead)
+        .count();
+    assert_eq!(dead, 1, "one Dead device after the drill");
+    println!(
+        "chaos   : recovery {recovery_ms:.3} ms (journal retrain {:.3} ms) \
+         | {} session re-placed | {} device failure",
+        m.retrain_ms, m.sessions_replaced, m.device_failures
+    );
+
+    let mut log = BenchLog::new("serving");
+    log.record_values(
+        "chaos_recovery",
+        &[
+            ("recovery_ms", recovery_ms),
+            ("retrain_ms", m.retrain_ms),
+            ("shots_replayed", (kill_at * k_shot) as f64),
+            ("sessions_replaced", m.sessions_replaced as f64),
+            ("device_failures", m.device_failures as f64),
+        ],
+    );
+    let path = log.write()?;
+    println!("wrote serving section -> {}", path.display());
+    println!("chaos OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    if arg_flag("--chaos") {
+        return run_chaos();
+    }
     let smoke = arg_flag("--smoke");
     let clients = arg_usize("--clients", if smoke { 2 } else { 4 });
     let queries = arg_usize("--queries", if smoke { 20 } else { 200 });

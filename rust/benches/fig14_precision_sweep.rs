@@ -152,9 +152,19 @@ fn main() {
     // the >= 4x LDC class-memory reduction is the PR acceptance ratio.
     let mut tb = Table::new(
         "classifier backends at 32-way, D=4096 ingest, 4-bit class rows",
-        &["backend", "stored dim", "class-mem bits", "classes @256KB", "accuracy", "ns/query"],
+        &[
+            "backend",
+            "stored dim",
+            "class-mem bits",
+            "classes @256KB",
+            "accuracy",
+            "ns/query",
+            "dist uJ/query",
+        ],
     );
+    let energy = fsl_hdnn::sim::energy::EnergyModel::default();
     let mut mem_bits = Vec::new();
+    let mut dist_uj = Vec::new();
     for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
         let mut m = backend.build(classes, d, 4, Distance::L1, 0);
         for (c, p) in protos.iter().enumerate() {
@@ -181,6 +191,10 @@ fn main() {
                 black_box(m.distances(black_box(q)));
             });
         println!("{r}");
+        // price the distance search with the silicon energy model: the
+        // class-bit traffic of one query over this backend's STORED dim
+        // (LDC's folded rows touch far fewer class bits than full-D HDC)
+        let uj = energy.energy_mj(&distance_tally(m.stored_dim(), classes, 4), energy.v_ref) * 1e3;
         tb.row(&[
             backend.name().into(),
             m.stored_dim().to_string(),
@@ -188,7 +202,9 @@ fn main() {
             quant::classes_capacity(256, m.stored_dim(), 4).to_string(),
             format!("{}/{}", correct, queries.len()),
             format!("{:.0}", r.mean_ns),
+            format!("{uj:.3}"),
         ]);
+        dist_uj.push(uj);
         log.record(
             &format!("backend_{}_dist_32way_d4096", backend.name()),
             r.mean_ns,
@@ -207,6 +223,21 @@ fn main() {
         "backend shape check: LDC class memory {:.1}x smaller than HDC at 32-way \
          (>= 4x required)",
         hdc_bits as f64 / ldc_bits as f64
+    );
+    assert!(
+        dist_uj[1] < dist_uj[0],
+        "LDC's folded distance search must cost less energy per query: \
+         hdc {:.3} uJ vs ldc {:.3} uJ",
+        dist_uj[0],
+        dist_uj[1]
+    );
+    println!(
+        "energy shape check: LDC distance search {:.1}x cheaper per query than HDC \
+         ({:.3} vs {:.3} uJ at {:.1} V)",
+        dist_uj[0] / dist_uj[1],
+        dist_uj[1],
+        dist_uj[0],
+        energy.v_ref
     );
 
     // sharded prediction throughput at the default precision, through the

@@ -333,6 +333,11 @@ pub struct ServingConfig {
     /// largest accepted frame payload in bytes; an oversized length
     /// prefix is a framing error and closes the connection
     pub max_frame_bytes: usize,
+    /// per-request deadline in milliseconds; a coordinator call that does
+    /// not answer in time is returned as a retryable deadline error
+    /// (the worker still finishes the request — this bounds the caller's
+    /// wait, not the device's work). `0` disables deadlines (default).
+    pub deadline_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -345,8 +350,20 @@ impl Default for ServingConfig {
             // a 224x224x3 image is ~1.7 MB as JSON; 64 MB covers large
             // query batches while still rejecting nonsense prefixes
             max_frame_bytes: 64 << 20,
+            deadline_ms: 0,
         }
     }
+}
+
+/// Fault-injection knobs (`[faults]` TOML section / `--faults` flag /
+/// `FSL_FAILPOINTS` env var): a fail-point spec armed at startup so
+/// failure drills are reproducible from a config file (DESIGN.md §Fault
+/// model). Empty (the default) arms nothing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// fail-point spec, e.g. `"device.train=fail-once,gateway.write=fail-every-n:100"`
+    /// (grammar in [`crate::util::failpoint::arm_spec`])
+    pub points: String,
 }
 
 /// Top-level run configuration assembled by the CLI / examples.
@@ -361,6 +378,7 @@ pub struct RunConfig {
     pub batched_training: bool,
     pub parallel: ParallelConfig,
     pub serving: ServingConfig,
+    pub faults: FaultConfig,
 }
 
 impl RunConfig {
@@ -443,6 +461,14 @@ impl RunConfig {
                         "serving.max_frame_bytes must fit the u32 length prefix, got {bytes}"
                     );
                     self.serving.max_frame_bytes = bytes as usize;
+                }
+                "serving.deadline_ms" => self.serving.deadline_ms = val.as_int()? as u64,
+                "faults.points" => {
+                    let spec = val.as_str()?.to_string();
+                    // validate eagerly so a typo dies at config load, not
+                    // silently at the first (never-firing) check
+                    crate::util::failpoint::parse_spec(&spec)?;
+                    self.faults.points = spec;
                 }
                 other => anyhow::bail!("unknown config key: {other}"),
             }
@@ -669,6 +695,25 @@ mod tests {
         assert!(RunConfig::default().apply_toml(&doc).is_err());
         let doc = toml::Doc::parse("[serving]\nmax_frame_bytes = 4294967296\n").unwrap();
         assert!(RunConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn apply_toml_faults_and_deadline_keys() {
+        let doc = toml::Doc::parse(
+            "[serving]\ndeadline_ms = 250\n\
+             [faults]\npoints = \"device.query=latency-ms:1,gateway.write=fail-once\"\n",
+        )
+        .unwrap();
+        let mut rc = RunConfig::default();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.serving.deadline_ms, 250);
+        assert_eq!(rc.faults.points, "device.query=latency-ms:1,gateway.write=fail-once");
+        // a bad spec dies at config load (validated eagerly, never armed)
+        let doc = toml::Doc::parse("[faults]\npoints = \"device.query=warble\"\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&doc).is_err());
+        // defaults: deadlines off, nothing armed
+        assert_eq!(ServingConfig::default().deadline_ms, 0);
+        assert_eq!(FaultConfig::default().points, "");
     }
 
     #[test]

@@ -8,7 +8,16 @@
 //! [`CoordinatorClient`], so worker shutdown stays a `Coordinator::drop`
 //! concern. [`Gateway::stop`] (also run on drop) closes the listener and
 //! every live connection and joins all gateway threads; no detached
-//! threads survive.
+//! threads survive. Connection threads read with a short poll tick
+//! ([`READ_TICK_MS`]) and check the stop flag between ticks, so a client
+//! stalled mid-frame can never pin `stop` (DESIGN.md §Fault model).
+//!
+//! Failure handling: with `[serving] deadline_ms` set, coordinator calls
+//! are bounded by [`CoordinatorClient::call_deadline`]; the
+//! `gateway.read` / `gateway.write` fail points simulate transport loss
+//! on either side of a request; and [`WireClient`] survives a dropped
+//! connection — it reports [`ConnectionLost`], re-dials lazily, and
+//! [`WireClient::call_retry`] retries with deterministic capped backoff.
 //!
 //! [`Coordinator`]: crate::coordinator::Coordinator
 
@@ -16,6 +25,7 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::classifier::ClassifierBackend;
 use crate::config::{EeConfig, ServingConfig};
@@ -120,9 +130,10 @@ fn accept_loop(
         let Ok(for_stop) = stream.try_clone() else { continue };
         let client = client.clone();
         let cfg = cfg.clone();
+        let stop = stop.clone();
         let spawned = std::thread::Builder::new()
             .name("fsl-gateway-conn".into())
-            .spawn(move || handle_conn(stream, &client, &cfg));
+            .spawn(move || handle_conn(stream, &client, &cfg, &stop));
         let Ok(handle) = spawned else { continue };
         let mut conns = conns.lock().unwrap_or_else(|p| p.into_inner());
         // reap connections that already hung up, so a long-lived gateway
@@ -140,25 +151,63 @@ fn accept_loop(
     }
 }
 
-/// Serve one connection until EOF, a framing error, or gateway stop.
-fn handle_conn(mut stream: TcpStream, client: &CoordinatorClient, cfg: &ServingConfig) {
+/// Read poll tick for connection threads: the upper bound on how long a
+/// stalled client can delay a connection thread's reaction to
+/// [`Gateway::stop`].
+pub const READ_TICK_MS: u64 = 50;
+
+/// Serve one connection until EOF, a framing error, gateway stop, or an
+/// injected `gateway.read` / `gateway.write` transport fault.
+fn handle_conn(
+    mut stream: TcpStream,
+    client: &CoordinatorClient,
+    cfg: &ServingConfig,
+    stop: &AtomicBool,
+) {
+    // a short read timeout turns the blocking read into a poll loop; the
+    // cancellable reader resumes partial frames across ticks and checks
+    // the stop flag between them, so a client stalled mid-frame cannot
+    // pin this thread across Gateway::stop
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(READ_TICK_MS)));
+    serve_conn(&mut stream, client, cfg, stop);
+    // the accept loop holds a try_clone of this socket as its stop-side
+    // handle, so dropping `stream` alone would not send FIN until that
+    // clone is reaped; an explicit shutdown makes the peer see EOF
+    // promptly on every exit path instead of blocking on a dead reply
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn serve_conn(
+    stream: &mut TcpStream,
+    client: &CoordinatorClient,
+    cfg: &ServingConfig,
+    stop: &AtomicBool,
+) {
     loop {
-        let frame = match wire::read_frame(&mut stream, cfg.max_frame_bytes) {
-            Ok(Some(f)) => f,
-            Ok(None) => return, // clean EOF at a frame boundary
-            Err(e) => {
-                // the stream is desynchronized (truncated/oversized
-                // frame): answer best-effort and close — replying to
-                // misaligned bytes would corrupt every later exchange
-                let resp = Response::Error(format!("framing error: {e}"));
-                let _ = wire::write_frame(
-                    &mut stream,
-                    &wire::encode_response(&resp),
-                    cfg.max_frame_bytes,
-                );
-                return;
-            }
-        };
+        let mut cancelled = || stop.load(Ordering::Acquire);
+        let frame =
+            match wire::read_frame_cancellable(&mut stream, cfg.max_frame_bytes, &mut cancelled) {
+                Ok(Some(f)) => f,
+                Ok(None) => return, // clean EOF at a frame boundary, or stop
+                Err(e) => {
+                    // the stream is desynchronized (truncated/oversized
+                    // frame): answer best-effort and close — replying to
+                    // misaligned bytes would corrupt every later exchange
+                    let resp = Response::Error(format!("framing error: {e}"));
+                    let _ = wire::write_frame(
+                        &mut stream,
+                        &wire::encode_response(&resp),
+                        cfg.max_frame_bytes,
+                    );
+                    return;
+                }
+            };
+        if crate::util::failpoint::check("gateway.read").is_err() {
+            // injected inbound transport fault: the frame counts as never
+            // received — drop the connection without a reply, exactly like
+            // a peer that vanished mid-exchange (clients re-dial)
+            return;
+        }
         // a complete frame that fails to decode leaves the stream aligned:
         // reply Error and keep the connection
         let resp = match wire::decode_request(&frame) {
@@ -174,11 +223,16 @@ fn handle_conn(mut stream: TcpStream, client: &CoordinatorClient, cfg: &ServingC
                 if depth > cfg.high_water {
                     client.load().note_shed();
                     Response::Busy { queue_depth: depth }
+                } else if cfg.deadline_ms > 0 {
+                    client.call_deadline(req, Duration::from_millis(cfg.deadline_ms))
                 } else {
                     client.call(req)
                 }
             }
         };
+        if crate::util::failpoint::check("gateway.write").is_err() {
+            return; // injected outbound fault: reply lost, connection drops
+        }
         let payload = wire::encode_response(&resp);
         if wire::write_frame(&mut stream, &payload, cfg.max_frame_bytes).is_err() {
             return; // peer went away mid-reply
@@ -186,12 +240,36 @@ fn handle_conn(mut stream: TcpStream, client: &CoordinatorClient, cfg: &ServingC
     }
 }
 
+/// Marker error: the TCP connection to the gateway died mid-call — the
+/// request may or may not have executed, but no reply will ever arrive on
+/// this stream. Detect it with `err.is::<ConnectionLost>()`. The client
+/// drops the dead stream and re-dials on the next call;
+/// [`WireClient::call_retry`] does so automatically with backoff.
+#[derive(Debug)]
+pub struct ConnectionLost(pub String);
+
+impl std::fmt::Display for ConnectionLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "connection lost: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConnectionLost {}
+
 /// Blocking client for the gateway's wire protocol — the remote
 /// counterpart of [`crate::coordinator::Coordinator`]'s convenience
 /// methods, one frame round trip per call.
+///
+/// The client owns at most one live stream. Any transport failure (send
+/// error, EOF before the reply, torn frame) surfaces as [`ConnectionLost`]
+/// and poisons the stream; the next call re-dials the resolved address.
 pub struct WireClient {
-    stream: TcpStream,
+    stream: Option<TcpStream>,
+    addr: SocketAddr,
     max_frame_bytes: usize,
+    max_attempts: u32,
+    backoff_base_ms: u64,
+    backoff_cap_ms: u64,
 }
 
 impl WireClient {
@@ -206,17 +284,90 @@ impl WireClient {
         addr: impl ToSocketAddrs,
         max_frame_bytes: usize,
     ) -> anyhow::Result<WireClient> {
-        let stream = TcpStream::connect(addr)?;
-        let _ = stream.set_nodelay(true);
-        Ok(WireClient { stream, max_frame_bytes })
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("address resolved to nothing"))?;
+        let stream = Self::dial(addr)?;
+        Ok(WireClient {
+            stream: Some(stream),
+            addr,
+            max_frame_bytes,
+            max_attempts: 4,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 250,
+        })
     }
 
-    /// One request/response round trip over the wire.
+    /// Tune [`WireClient::call_retry`]: total attempts and the
+    /// deterministic backoff schedule (`base * 2^(attempt-1)`, capped).
+    pub fn with_retry(mut self, max_attempts: u32, base_ms: u64, cap_ms: u64) -> WireClient {
+        self.max_attempts = max_attempts.max(1);
+        self.backoff_base_ms = base_ms;
+        self.backoff_cap_ms = cap_ms.max(base_ms);
+        self
+    }
+
+    fn dial(addr: SocketAddr) -> anyhow::Result<TcpStream> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// Deterministic capped exponential backoff — no jitter, so failure
+    /// reproductions see the exact same retry schedule every run.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(1).min(16);
+        Duration::from_millis(self.backoff_base_ms.saturating_mul(1 << exp).min(self.backoff_cap_ms))
+    }
+
+    /// One request/response round trip over the wire (single attempt).
+    /// Transport failures return [`ConnectionLost`] and drop the stream;
+    /// the next call on this client transparently re-dials.
     pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
-        wire::write_frame(&mut self.stream, &wire::encode_request(req), self.max_frame_bytes)?;
-        match wire::read_frame(&mut self.stream, self.max_frame_bytes)? {
-            Some(frame) => wire::decode_response(&frame),
-            None => anyhow::bail!("gateway closed the connection"),
+        let max = self.max_frame_bytes;
+        let mut stream = match self.stream.take() {
+            Some(s) => s,
+            None => Self::dial(self.addr)?, // lazy re-dial after a loss
+        };
+        if let Err(e) = wire::write_frame(&mut stream, &wire::encode_request(req), max) {
+            return Err(anyhow::Error::new(ConnectionLost(format!("send failed: {e}"))));
+        }
+        match wire::read_frame(&mut stream, max) {
+            Ok(Some(frame)) => {
+                // a complete frame leaves the stream aligned even if the
+                // payload fails to decode — keep the connection
+                let resp = wire::decode_response(&frame);
+                self.stream = Some(stream);
+                resp
+            }
+            Ok(None) => Err(anyhow::Error::new(ConnectionLost(
+                "connection closed before the reply arrived".into(),
+            ))),
+            Err(e) => Err(anyhow::Error::new(ConnectionLost(format!("receive failed: {e}")))),
+        }
+    }
+
+    /// [`WireClient::call`] with automatic recovery: re-dials and retries
+    /// on [`ConnectionLost`] and on server-side [`Response::RetryableError`]
+    /// replies, sleeping the deterministic [`WireClient::with_retry`]
+    /// schedule between attempts. Non-retryable errors and
+    /// [`Response::Busy`] pass straight through — admission backoff is an
+    /// application policy, not a transport one.
+    pub fn call_retry(&mut self, req: &Request) -> anyhow::Result<Response> {
+        let mut attempt = 0u32;
+        loop {
+            let transient = match self.call(req) {
+                Ok(Response::RetryableError(m)) => m,
+                Ok(resp) => return Ok(resp),
+                Err(e) if e.is::<ConnectionLost>() => e.to_string(),
+                Err(e) => return Err(e),
+            };
+            attempt += 1;
+            if attempt >= self.max_attempts {
+                anyhow::bail!("request failed after {attempt} attempts: {transient}");
+            }
+            std::thread::sleep(self.backoff(attempt));
         }
     }
 
@@ -246,7 +397,7 @@ impl WireClient {
     ) -> anyhow::Result<u64> {
         match self.call(&Request::CreateSession { n_way, hv_bits, metric, backend })? {
             Response::SessionCreated { session } => Ok(session),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -254,7 +405,7 @@ impl WireClient {
     pub fn add_shot(&mut self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
         match self.call(&Request::AddShot { session, class, image })? {
             Response::ShotAccepted { .. } => Ok(()),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -262,7 +413,7 @@ impl WireClient {
     pub fn finish_training(&mut self, session: u64) -> anyhow::Result<usize> {
         match self.call(&Request::FinishTraining { session })? {
             Response::TrainingDone { shots, .. } => Ok(shots),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -275,7 +426,7 @@ impl WireClient {
     ) -> anyhow::Result<QueryOutcome> {
         match self.call(&Request::Query { session, image, ee })? {
             Response::QueryResult { outcome, .. } => Ok(outcome),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -288,7 +439,7 @@ impl WireClient {
     ) -> anyhow::Result<Vec<QueryOutcome>> {
         match self.call(&Request::QueryBatch { session, images, ee })? {
             Response::QueryBatchResult { outcomes, .. } => Ok(outcomes),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -296,7 +447,7 @@ impl WireClient {
     pub fn close_session(&mut self, session: u64) -> anyhow::Result<()> {
         match self.call(&Request::CloseSession { session })? {
             Response::SessionClosed { .. } => Ok(()),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -304,7 +455,7 @@ impl WireClient {
     pub fn metrics(&mut self) -> anyhow::Result<MetricsSnapshot> {
         match self.call(&Request::GetMetrics)? {
             Response::Metrics(m) => Ok(m),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }

@@ -127,6 +127,12 @@ impl Metrics {
             class_mem_active_banks: 0,
             class_mem_gated_banks: 0,
             requests_shed: 0,
+            // fault-recovery counters are owned by the DeviceRouter (the
+            // device whose sessions were re-placed is dead and cannot
+            // report them) — filled into the fleet snapshot by the router
+            device_failures: 0,
+            sessions_replaced: 0,
+            retrain_ms: 0.0,
         }
     }
 }
@@ -163,6 +169,57 @@ pub struct MetricsSnapshot {
     /// admission control; counted by the gateway (the shed happens before
     /// the worker ever sees the request) and filled in at `GetMetrics`
     pub requests_shed: u64,
+    /// devices the router declared Dead (worker gone or struck out).
+    /// Router-owned; 0 in a single-device snapshot. Wire decode tolerates
+    /// absence (old frames) by defaulting to 0.
+    pub device_failures: u64,
+    /// sessions re-placed onto a healthy device and retrained from their
+    /// shot journal after a device failure (router-owned, see above)
+    pub sessions_replaced: u64,
+    /// total wall time spent in journal-replay retrains (router-owned)
+    pub retrain_ms: f64,
+}
+
+impl MetricsSnapshot {
+    /// Merge another device's snapshot into this one for fleet-wide
+    /// aggregation: counts and histograms add, means combine weighted by
+    /// their op counts, maxes take the max. Gauges (class-memory occupancy
+    /// and bank counts) add — the fleet's total occupancy is the sum of
+    /// per-device occupancies.
+    pub fn absorb(&mut self, o: &MetricsSnapshot) {
+        fn wmean(a: f64, na: u64, b: f64, nb: u64) -> f64 {
+            let n = na + nb;
+            if n == 0 {
+                0.0
+            } else {
+                (a * na as f64 + b * nb as f64) / n as f64
+            }
+        }
+        self.add_shot_ms_mean = wmean(self.add_shot_ms_mean, self.shots, o.add_shot_ms_mean, o.shots);
+        self.train_ms_mean = wmean(self.train_ms_mean, self.trains, o.train_ms_mean, o.trains);
+        self.query_ms_mean = wmean(self.query_ms_mean, self.queries, o.query_ms_mean, o.queries);
+        self.early_exit_rate = wmean(self.early_exit_rate, self.queries, o.early_exit_rate, o.queries);
+        self.avg_blocks_used = wmean(self.avg_blocks_used, self.queries, o.avg_blocks_used, o.queries);
+        self.query_ms_max = self.query_ms_max.max(o.query_ms_max);
+        self.shots += o.shots;
+        self.trains += o.trains;
+        self.queries += o.queries;
+        self.errors += o.errors;
+        self.feature_pads += o.feature_pads;
+        for (b, ob) in self.query_depth_hist.iter_mut().zip(o.query_depth_hist.iter()) {
+            *b += ob;
+        }
+        self.fe_layers_executed += o.fe_layers_executed;
+        self.fe_layers_skipped += o.fe_layers_skipped;
+        self.branch_hvs_encoded += o.branch_hvs_encoded;
+        self.class_mem_used_bits += o.class_mem_used_bits;
+        self.class_mem_active_banks += o.class_mem_active_banks;
+        self.class_mem_gated_banks += o.class_mem_gated_banks;
+        self.requests_shed += o.requests_shed;
+        self.device_failures += o.device_failures;
+        self.sessions_replaced += o.sessions_replaced;
+        self.retrain_ms += o.retrain_ms;
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +285,30 @@ mod tests {
         assert_eq!(s.fe_layers_executed, 27);
         assert_eq!(s.fe_layers_skipped, 13);
         assert_eq!(s.branch_hvs_encoded, 3);
+    }
+
+    #[test]
+    fn absorb_merges_counts_and_weights_means() {
+        let mut a = Metrics::default();
+        a.record(Op::Query, 0.002);
+        a.record(Op::Query, 0.004);
+        let mut b = Metrics::default();
+        b.record(Op::Query, 0.010);
+        let mut sa = a.snapshot();
+        let sb = b.snapshot();
+        let mut merged = sa;
+        merged.absorb(&sb);
+        assert_eq!(merged.queries, 3);
+        assert!((merged.query_ms_mean - (2.0 + 4.0 + 10.0) / 3.0).abs() < 1e-9);
+        assert!((merged.query_ms_max - 10.0).abs() < 1e-9);
+        // absorbing an empty snapshot changes nothing
+        sa.absorb(&MetricsSnapshot::default());
+        assert_eq!(sa, a.snapshot());
+        // router-owned recovery counters add
+        let mut r = MetricsSnapshot { device_failures: 1, sessions_replaced: 2, ..Default::default() };
+        r.absorb(&MetricsSnapshot { sessions_replaced: 3, retrain_ms: 1.5, ..Default::default() });
+        assert_eq!((r.device_failures, r.sessions_replaced), (1, 5));
+        assert!((r.retrain_ms - 1.5).abs() < 1e-12);
     }
 
     #[test]

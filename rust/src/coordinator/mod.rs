@@ -23,6 +23,10 @@
 //!   and a [`ServingLoad`] signal for admission control;
 //! * [`router`] — [`DeviceRouter`]: fans sessions over a fleet of
 //!   coordinators with least-loaded/round-robin placement and spill;
+//!   since PR 8 also the fleet's fault domain — per-device health
+//!   (Healthy/Suspect/Dead/Probation), shot-journal session re-placement
+//!   with bit-identical retrain, and probation re-admission
+//!   (DESIGN.md §Fault model);
 //! * [`wire`] — length-prefixed JSON wire codec for [`Request`] /
 //!   [`Response`] (no new deps — `util::json` only);
 //! * [`gateway`] — the TCP front end: accept loop, per-connection
@@ -41,7 +45,7 @@ pub mod wire;
 
 pub use early_exit::EarlyExitController;
 pub use gateway::{Gateway, WireClient};
-pub use request::{Request, Response};
-pub use router::{DeviceRouter, Placement};
+pub use request::{Request, Response, DEVICE_UNAVAILABLE};
+pub use router::{DeviceHealth, DeviceRouter, Placement, RouterMetrics};
 pub use server::{Coordinator, CoordinatorClient, ServingLoad};
-pub use session::FslSession;
+pub use session::{FslSession, SessionSnapshot};

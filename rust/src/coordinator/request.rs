@@ -75,10 +75,34 @@ pub enum Response {
     /// was **not** executed; `queue_depth` is the depth that triggered the
     /// shed, so clients can back off proportionally and retry.
     Busy { queue_depth: usize },
+    /// The request failed for a reason the *caller* should treat as
+    /// transient: a deadline elapsed, an injected fault fired, or the
+    /// session's device became unavailable. On the wire this travels as an
+    /// `error` frame with `retryable: true`, so pre-taxonomy clients still
+    /// decode it as a plain [`Response::Error`] (they ignore the extra
+    /// field); taxonomy-aware clients retry, and the [`DeviceRouter`]
+    /// treats the [`DEVICE_UNAVAILABLE`]-prefixed subset as a device
+    /// failure that triggers session re-placement.
+    ///
+    /// [`DeviceRouter`]: crate::coordinator::DeviceRouter
+    RetryableError(String),
     Error(String),
 }
 
+/// Message prefix marking a [`Response::RetryableError`] whose cause is the
+/// device itself (worker thread gone or crashed mid-request) rather than a
+/// transient condition on a healthy device. The router keys re-placement
+/// off this prefix; deadline and injected-fault errors deliberately do not
+/// carry it.
+pub const DEVICE_UNAVAILABLE: &str = "device unavailable";
+
 impl Response {
+    /// True for retryable errors whose message marks the device itself as
+    /// gone (see [`DEVICE_UNAVAILABLE`]).
+    pub fn is_device_unavailable(&self) -> bool {
+        matches!(self, Response::RetryableError(m) if m.starts_with(DEVICE_UNAVAILABLE))
+    }
+
     /// Convenience for tests: unwrap a query result.
     pub fn expect_query(self) -> QueryOutcome {
         match self {

@@ -3,12 +3,28 @@
 //! gang several accelerators behind one endpoint; the router places each
 //! new session on the least-loaded device (class-memory pressure counts
 //! as load) and pins all of a session's traffic to its device.
+//!
+//! The router is also the fleet's fault domain (DESIGN.md §Fault model):
+//! it tracks per-device health (Healthy / Suspect / Dead / Probation),
+//! keeps a shot journal per session, and when a device dies — its worker
+//! thread panicked or its channel closed — re-places every session that
+//! lived there onto the least-loaded surviving devices, replaying each
+//! journal through the normal request path. Because single-pass HDC/LDC
+//! training has no state beyond the retained shots, the retrained class
+//! memory is **bit-identical** to the never-failed run, and the request
+//! that observed the failure is retried exactly once (fail points fire
+//! before any mutation, so the failed request provably never executed).
 
 use std::collections::HashMap;
+use std::time::Instant;
 
+use crate::classifier::ClassifierBackend;
 use crate::config::EeConfig;
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::request::{Request, Response, DEVICE_UNAVAILABLE};
 use crate::coordinator::server::Coordinator;
 use crate::coordinator::session::QueryOutcome;
+use crate::hdc::Distance;
 use crate::runtime::ComputeEngine;
 
 /// Routing policy for new sessions.
@@ -25,21 +41,97 @@ pub struct RoutedSession {
     pub local: u64,
 }
 
-/// The router: owns `n` coordinators and the session placement table.
+/// Device health as the router sees it.
+///
+/// `Healthy --soft fault--> Suspect --strikes/unavailable--> Dead`;
+/// a Dead device revived through [`DeviceRouter::revive`] re-enters as
+/// `Probation`, where its first successful call promotes it to Healthy
+/// and its first fault of any kind kills it again (no strike allowance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceHealth {
+    Healthy,
+    /// Served a retryable fault recently; still placeable, but striking
+    /// out ([`DEAD_AFTER_STRIKES`]) declares it Dead.
+    Suspect,
+    /// Worker gone. Its sessions were re-placed; it takes no traffic
+    /// until [`DeviceRouter::revive`].
+    Dead,
+    /// Freshly revived: one fault away from Dead, one success from
+    /// Healthy.
+    Probation,
+}
+
+/// Consecutive soft (retryable, non-fatal) faults before a Suspect device
+/// is declared Dead and its sessions are re-placed.
+pub const DEAD_AFTER_STRIKES: u32 = 3;
+
+/// Fault-recovery counters, reported through the fleet metrics snapshot
+/// ([`DeviceRouter::fleet_snapshot`]) since the failed device itself can
+/// no longer answer `GetMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RouterMetrics {
+    /// devices declared Dead (a revive that fails again counts again)
+    pub device_failures: u64,
+    /// sessions successfully re-placed and retrained from their journal
+    pub sessions_replaced: u64,
+    /// total wall time spent replaying shot journals, milliseconds
+    pub retrain_ms: f64,
+}
+
+/// One record in a session's shot journal — the router-side training
+/// history, retained so a dead device's sessions can be rebuilt on a
+/// surviving one by replaying the exact request sequence. Replay order
+/// equals arrival order, so the k-shot batcher flushes at the same points
+/// and the rebuilt class memory is bit-identical.
+#[derive(Clone, Debug)]
+enum ShotRecord {
+    Shot { class: usize, image: Vec<f32> },
+    Batch { class: usize, images: Vec<Vec<f32>> },
+    Finish,
+}
+
+#[derive(Clone, Debug)]
+struct SessionJournal {
+    n_way: usize,
+    hv_bits: u32,
+    metric: Distance,
+    backend: ClassifierBackend,
+    records: Vec<ShotRecord>,
+}
+
+type BoxedEngineFactory = Box<dyn FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static>;
+
+struct Device {
+    /// `None` once the device is Dead (dropping the handle joins its
+    /// worker thread, so no stray threads outlive the failure).
+    coord: Option<Coordinator>,
+    health: DeviceHealth,
+    strikes: u32,
+}
+
+/// The router: owns `n` coordinators, the session placement table, the
+/// per-session shot journals, and the per-device health state.
 pub struct DeviceRouter {
-    devices: Vec<Coordinator>,
+    devices: Vec<Device>,
+    /// respawns a device's engine for [`DeviceRouter::revive`]
+    factory: Box<dyn Fn(usize) -> BoxedEngineFactory>,
+    k_shot: usize,
     policy: Placement,
     /// open sessions per device (load proxy)
     load: Vec<usize>,
     /// global session id -> placement
     table: HashMap<u64, RoutedSession>,
+    journals: HashMap<u64, SessionJournal>,
+    metrics: RouterMetrics,
     next_global: u64,
     rr_next: usize,
 }
 
 impl DeviceRouter {
     /// Spawn `n_devices` coordinators from a factory-of-factories (each
-    /// device's engine is constructed inside its own worker thread).
+    /// device's engine is constructed inside its own worker thread). The
+    /// factory is retained so a Dead device can be respawned later
+    /// ([`DeviceRouter::revive`]).
     pub fn start<F, G>(
         n_devices: usize,
         k_shot: usize,
@@ -47,19 +139,29 @@ impl DeviceRouter {
         make: F,
     ) -> anyhow::Result<Self>
     where
-        F: Fn(usize) -> G,
+        F: Fn(usize) -> G + 'static,
         G: FnOnce() -> anyhow::Result<ComputeEngine> + Send + 'static,
     {
         anyhow::ensure!(n_devices >= 1, "need at least one device");
+        let factory: Box<dyn Fn(usize) -> BoxedEngineFactory> =
+            Box::new(move |i| Box::new(make(i)) as BoxedEngineFactory);
         let mut devices = Vec::with_capacity(n_devices);
         for i in 0..n_devices {
-            devices.push(Coordinator::start(make(i), k_shot)?);
+            devices.push(Device {
+                coord: Some(Coordinator::start(factory(i), k_shot)?),
+                health: DeviceHealth::Healthy,
+                strikes: 0,
+            });
         }
         Ok(DeviceRouter {
             load: vec![0; n_devices],
             devices,
+            factory,
+            k_shot,
             policy,
             table: HashMap::new(),
+            journals: HashMap::new(),
+            metrics: RouterMetrics::default(),
             next_global: 1,
             rr_next: 0,
         })
@@ -69,18 +171,41 @@ impl DeviceRouter {
         self.devices.len()
     }
 
+    /// Current health of device `d`.
+    pub fn health(&self, d: usize) -> DeviceHealth {
+        self.devices[d].health
+    }
+
+    /// Fault-recovery counters (also folded into
+    /// [`DeviceRouter::fleet_snapshot`]).
+    pub fn metrics(&self) -> RouterMetrics {
+        self.metrics
+    }
+
+    fn alive(&self, d: usize) -> bool {
+        self.devices[d].health != DeviceHealth::Dead && self.devices[d].coord.is_some()
+    }
+
     fn pick_device(&mut self) -> usize {
         match self.policy {
             Placement::RoundRobin => {
-                let d = self.rr_next % self.devices.len();
-                self.rr_next += 1;
-                d
+                // skip Dead devices; bounded by the fleet size
+                for _ in 0..self.devices.len() {
+                    let d = self.rr_next % self.devices.len();
+                    self.rr_next += 1;
+                    if self.alive(d) {
+                        return d;
+                    }
+                }
+                0
             }
             Placement::LeastLoaded => {
                 let mut best = 0;
+                let mut best_load = usize::MAX;
                 for (i, &l) in self.load.iter().enumerate() {
-                    if l < self.load[best] {
+                    if self.alive(i) && l < best_load {
                         best = i;
+                        best_load = l;
                     }
                 }
                 best
@@ -88,11 +213,213 @@ impl DeviceRouter {
         }
     }
 
+    /// A device fault was observed. Returns `true` if the device must now
+    /// be declared Dead: Probation devices get no strike allowance, others
+    /// strike out at [`DEAD_AFTER_STRIKES`].
+    fn strike(&mut self, d: usize) -> bool {
+        let dev = &mut self.devices[d];
+        match dev.health {
+            DeviceHealth::Dead => true,
+            DeviceHealth::Probation => true,
+            DeviceHealth::Healthy | DeviceHealth::Suspect => {
+                dev.health = DeviceHealth::Suspect;
+                dev.strikes += 1;
+                dev.strikes >= DEAD_AFTER_STRIKES
+            }
+        }
+    }
+
+    fn note_success(&mut self, d: usize) {
+        let dev = &mut self.devices[d];
+        if matches!(dev.health, DeviceHealth::Suspect | DeviceHealth::Probation) {
+            dev.health = DeviceHealth::Healthy;
+        }
+        dev.strikes = 0;
+    }
+
+    /// Declare device `d` Dead, join its worker, and re-place every
+    /// session it hosted onto surviving devices (journal retrain).
+    fn fail_device(&mut self, d: usize) {
+        if self.devices[d].health == DeviceHealth::Dead {
+            return;
+        }
+        self.devices[d].health = DeviceHealth::Dead;
+        self.devices[d].strikes = 0;
+        // dropping the handle sends Shutdown (a no-op if the worker is
+        // already gone) and joins the thread — no stray threads survive
+        self.devices[d].coord = None;
+        self.load[d] = 0;
+        self.metrics.device_failures += 1;
+        self.replace_sessions_of(d);
+    }
+
+    fn replace_sessions_of(&mut self, dead: usize) {
+        let sids: Vec<u64> = self
+            .table
+            .iter()
+            .filter(|(_, r)| r.device == dead)
+            .map(|(s, _)| *s)
+            .collect();
+        if sids.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        for sid in sids {
+            match self.replace_session(sid) {
+                Ok(()) => self.metrics.sessions_replaced += 1,
+                Err(e) => {
+                    // nowhere to put it: drop the route so callers get a
+                    // clean "unknown routed session" instead of a wedge
+                    self.table.remove(&sid);
+                    self.journals.remove(&sid);
+                    eprintln!("[router] session {sid} lost with device {dead}: {e}");
+                }
+            }
+        }
+        self.metrics.retrain_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Re-place one session: pick the least-loaded live device not yet
+    /// tried, re-create the session there, and replay its journal.
+    fn replace_session(&mut self, sid: u64) -> anyhow::Result<()> {
+        let j = self
+            .journals
+            .get(&sid)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no journal for session {sid}"))?;
+        let mut tried = vec![false; self.devices.len()];
+        loop {
+            let target = self
+                .devices
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !tried[*i] && self.alive(*i))
+                .min_by_key(|(i, _)| self.load[*i])
+                .map(|(i, _)| i)
+                .ok_or_else(|| anyhow::anyhow!("no live device could host session {sid}"))?;
+            tried[target] = true;
+            match self.replay_on(target, &j) {
+                Ok(local) => {
+                    self.table.insert(sid, RoutedSession { device: target, local });
+                    self.load[target] += 1;
+                    self.note_success(target);
+                    return Ok(());
+                }
+                Err(e) if e.to_string().contains(DEVICE_UNAVAILABLE) => {
+                    // the rescue device died too: recurse (its own sessions
+                    // re-place first), then try the next candidate
+                    self.fail_device(target);
+                }
+                Err(_) => {
+                    // e.g. the target's class memory is full — try another
+                    // device without penalizing this one
+                }
+            }
+        }
+    }
+
+    /// Replay a session journal on device `d`: create with the original
+    /// geometry, then re-issue every training record in arrival order.
+    fn replay_on(&self, d: usize, j: &SessionJournal) -> anyhow::Result<u64> {
+        let c = self.devices[d]
+            .coord
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{DEVICE_UNAVAILABLE}: device {d} is dead"))?;
+        let local = match c.call(Request::CreateSession {
+            n_way: j.n_way,
+            hv_bits: j.hv_bits,
+            metric: j.metric,
+            backend: j.backend,
+        }) {
+            Response::SessionCreated { session } => session,
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected re-create reply: {other:?}"),
+        };
+        for rec in &j.records {
+            let req = match rec {
+                ShotRecord::Shot { class, image } => {
+                    Request::AddShot { session: local, class: *class, image: image.clone() }
+                }
+                ShotRecord::Batch { class, images } => {
+                    Request::AddShotBatch { session: local, class: *class, images: images.clone() }
+                }
+                ShotRecord::Finish => Request::FinishTraining { session: local },
+            };
+            match c.call(req) {
+                Response::ShotAccepted { .. } | Response::TrainingDone { .. } => {}
+                Response::Error(e) | Response::RetryableError(e) => {
+                    // best-effort cleanup of the half-replayed session
+                    c.call(Request::CloseSession { session: local });
+                    anyhow::bail!("journal replay failed: {e}")
+                }
+                other => {
+                    c.call(Request::CloseSession { session: local });
+                    anyhow::bail!("unexpected replay reply: {other:?}")
+                }
+            }
+        }
+        Ok(local)
+    }
+
+    /// Issue a routed request with fault handling: device-unavailable
+    /// faults kill the device, re-place its sessions (journal retrain) and
+    /// retry this request on the session's new home; soft retryable faults
+    /// strike the device and surface to the caller (who may retry).
+    fn call_routed(&mut self, session: u64, mk: &dyn Fn(u64) -> Request) -> anyhow::Result<Response> {
+        // each failed attempt kills one device, so n_devices+1 bounds it
+        for _ in 0..=self.devices.len() {
+            let r = self.route(session)?;
+            let resp = match self.devices[r.device].coord.as_ref() {
+                Some(c) => c.call(mk(r.local)),
+                None => Response::RetryableError(format!(
+                    "{DEVICE_UNAVAILABLE}: device {} is dead",
+                    r.device
+                )),
+            };
+            match resp {
+                Response::RetryableError(m) if m.starts_with(DEVICE_UNAVAILABLE) => {
+                    self.fail_device(r.device);
+                    // loop: the session either has a new home now or
+                    // route() reports it lost
+                }
+                Response::RetryableError(m) => {
+                    if self.strike(r.device) {
+                        self.fail_device(r.device);
+                    } else {
+                        anyhow::bail!(m);
+                    }
+                }
+                other => {
+                    self.note_success(r.device);
+                    return Ok(other);
+                }
+            }
+        }
+        anyhow::bail!("session {session}: retries exhausted across the fleet")
+    }
+
+    /// Respawn a Dead device through the retained engine factory. It
+    /// re-enters as [`DeviceHealth::Probation`]: eligible for placement,
+    /// promoted to Healthy on its first success, Dead again on any fault.
+    pub fn revive(&mut self, d: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(d < self.devices.len(), "no device {d}");
+        anyhow::ensure!(
+            self.devices[d].health == DeviceHealth::Dead,
+            "device {d} is {:?}, only Dead devices can be revived",
+            self.devices[d].health
+        );
+        let coord = Coordinator::start((self.factory)(d), self.k_shot)?;
+        self.devices[d].coord = Some(coord);
+        self.devices[d].health = DeviceHealth::Probation;
+        self.devices[d].strikes = 0;
+        Ok(())
+    }
+
     /// Create a session somewhere in the fleet; on a full device, falls
-    /// back to any device with room (backpressure surfaces only when the
-    /// whole fleet is out of class memory).
+    /// back to any live device with room (backpressure surfaces only when
+    /// the whole fleet is out of class memory).
     pub fn create_session(&mut self, n_way: usize, hv_bits: u32) -> anyhow::Result<u64> {
-        self.create_session_with(n_way, hv_bits, crate::hdc::Distance::L1)
+        self.create_session_with(n_way, hv_bits, Distance::L1)
     }
 
     /// [`DeviceRouter::create_session`] with an explicit distance metric.
@@ -100,9 +427,9 @@ impl DeviceRouter {
         &mut self,
         n_way: usize,
         hv_bits: u32,
-        metric: crate::hdc::Distance,
+        metric: Distance,
     ) -> anyhow::Result<u64> {
-        self.create_session_full(n_way, hv_bits, metric, crate::classifier::ClassifierBackend::Hdc)
+        self.create_session_full(n_way, hv_bits, metric, ClassifierBackend::Hdc)
     }
 
     /// Fully explicit placement: metric *and* classifier backend. An LDC
@@ -112,26 +439,45 @@ impl DeviceRouter {
         &mut self,
         n_way: usize,
         hv_bits: u32,
-        metric: crate::hdc::Distance,
-        backend: crate::classifier::ClassifierBackend,
+        metric: Distance,
+        backend: ClassifierBackend,
     ) -> anyhow::Result<u64> {
         let first = self.pick_device();
         let n = self.devices.len();
         let mut last_err = None;
         for off in 0..n {
             let d = (first + off) % n;
-            match self.devices[d].create_session_full(n_way, hv_bits, metric, backend) {
-                Ok(local) => {
+            let Some(c) = self.devices[d].coord.as_ref().filter(|_| self.alive(d)) else {
+                continue;
+            };
+            match c.call(Request::CreateSession { n_way, hv_bits, metric, backend }) {
+                Response::SessionCreated { session: local } => {
+                    self.note_success(d);
                     let gid = self.next_global;
                     self.next_global += 1;
                     self.table.insert(gid, RoutedSession { device: d, local });
+                    self.journals.insert(
+                        gid,
+                        SessionJournal { n_way, hv_bits, metric, backend, records: Vec::new() },
+                    );
                     self.load[d] += 1;
                     return Ok(gid);
                 }
-                Err(e) => last_err = Some(e),
+                Response::RetryableError(m) if m.starts_with(DEVICE_UNAVAILABLE) => {
+                    self.fail_device(d);
+                    last_err = Some(anyhow::anyhow!(m));
+                }
+                Response::RetryableError(m) => {
+                    if self.strike(d) {
+                        self.fail_device(d);
+                    }
+                    last_err = Some(anyhow::anyhow!(m));
+                }
+                Response::Error(e) => last_err = Some(anyhow::anyhow!(e)),
+                other => last_err = Some(anyhow::anyhow!("unexpected: {other:?}")),
             }
         }
-        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no devices")))
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no live devices")))
     }
 
     fn route(&self, session: u64) -> anyhow::Result<RoutedSession> {
@@ -145,58 +491,112 @@ impl DeviceRouter {
         self.table.get(&session).copied()
     }
 
-    pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
-        let r = self.route(session)?;
-        self.devices[r.device].add_shot(r.local, class, image)
+    pub fn add_shot(&mut self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
+        let resp = self.call_routed(session, &|local| Request::AddShot {
+            session: local,
+            class,
+            image: image.clone(),
+        })?;
+        match resp {
+            Response::ShotAccepted { .. } => {
+                if let Some(j) = self.journals.get_mut(&session) {
+                    j.records.push(ShotRecord::Shot { class, image });
+                }
+                Ok(())
+            }
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
     }
 
     /// Route a whole class batch to the session's device in one request,
     /// so batched single-pass training crosses the fleet boundary as one
     /// message and hits the device's batched (worker-sharded) FE path.
     pub fn add_shot_batch(
-        &self,
+        &mut self,
         session: u64,
         class: usize,
         images: Vec<Vec<f32>>,
     ) -> anyhow::Result<()> {
-        let r = self.route(session)?;
-        self.devices[r.device].add_shot_batch(r.local, class, images)
+        let resp = self.call_routed(session, &|local| Request::AddShotBatch {
+            session: local,
+            class,
+            images: images.clone(),
+        })?;
+        match resp {
+            Response::ShotAccepted { .. } => {
+                if let Some(j) = self.journals.get_mut(&session) {
+                    j.records.push(ShotRecord::Batch { class, images });
+                }
+                Ok(())
+            }
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
     }
 
-    pub fn finish_training(&self, session: u64) -> anyhow::Result<usize> {
-        let r = self.route(session)?;
-        self.devices[r.device].finish_training(r.local)
+    pub fn finish_training(&mut self, session: u64) -> anyhow::Result<usize> {
+        let resp =
+            self.call_routed(session, &|local| Request::FinishTraining { session: local })?;
+        match resp {
+            Response::TrainingDone { shots, .. } => {
+                if let Some(j) = self.journals.get_mut(&session) {
+                    j.records.push(ShotRecord::Finish);
+                }
+                Ok(shots)
+            }
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
     }
 
     pub fn query(
-        &self,
+        &mut self,
         session: u64,
         image: Vec<f32>,
         ee: Option<EeConfig>,
     ) -> anyhow::Result<QueryOutcome> {
-        let r = self.route(session)?;
-        self.devices[r.device].query(r.local, image, ee)
+        let resp = self.call_routed(session, &|local| Request::Query {
+            session: local,
+            image: image.clone(),
+            ee,
+        })?;
+        match resp {
+            Response::QueryResult { outcome, .. } => Ok(outcome),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
     }
 
     /// Route a whole query batch to the session's device in one request —
     /// the inference mirror of [`DeviceRouter::add_shot_batch`]: the
     /// device runs the staged ragged-survivor loop over its worker pool.
     pub fn query_batch(
-        &self,
+        &mut self,
         session: u64,
         images: Vec<Vec<f32>>,
         ee: Option<EeConfig>,
     ) -> anyhow::Result<Vec<QueryOutcome>> {
-        let r = self.route(session)?;
-        self.devices[r.device].query_batch(r.local, images, ee)
+        let resp = self.call_routed(session, &|local| Request::QueryBatch {
+            session: local,
+            images: images.clone(),
+            ee,
+        })?;
+        match resp {
+            Response::QueryBatchResult { outcomes, .. } => Ok(outcomes),
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected: {other:?}"),
+        }
     }
 
     pub fn close_session(&mut self, session: u64) -> anyhow::Result<()> {
         let r = self.route(session)?;
-        self.devices[r.device]
-            .call(crate::coordinator::request::Request::CloseSession { session: r.local });
+        if let Some(c) = self.devices[r.device].coord.as_ref() {
+            c.call(Request::CloseSession { session: r.local });
+        }
         self.load[r.device] = self.load[r.device].saturating_sub(1);
         self.table.remove(&session);
+        self.journals.remove(&session);
         Ok(())
     }
 
@@ -205,15 +605,33 @@ impl DeviceRouter {
         &self.load
     }
 
-    /// Aggregate metrics across the fleet.
-    pub fn fleet_metrics(&self) -> Vec<crate::coordinator::metrics::MetricsSnapshot> {
-        self.devices.iter().map(|d| d.metrics()).collect()
+    /// Per-device metrics across the live fleet (Dead devices cannot
+    /// answer and are skipped).
+    pub fn fleet_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.devices.iter().filter_map(|d| d.coord.as_ref().map(|c| c.metrics())).collect()
+    }
+
+    /// One fleet-wide snapshot: every live device's metrics merged
+    /// ([`MetricsSnapshot::absorb`]) plus the router-owned recovery
+    /// counters (`device_failures` / `sessions_replaced` / `retrain_ms`).
+    pub fn fleet_snapshot(&self) -> MetricsSnapshot {
+        let mut agg = MetricsSnapshot::default();
+        for d in &self.devices {
+            if let Some(c) = d.coord.as_ref() {
+                agg.absorb(&c.metrics());
+            }
+        }
+        agg.device_failures = self.metrics.device_failures;
+        agg.sessions_replaced = self.metrics.sessions_replaced;
+        agg.retrain_ms = self.metrics.retrain_ms;
+        agg
     }
 }
 
 #[cfg(test)]
 mod tests {
     // Router tests that need a real engine live in
-    // rust/tests/integration_coordinator.rs; placement arithmetic is
-    // covered there too (it needs running devices).
+    // rust/tests/integration_coordinator.rs (placement arithmetic) and
+    // rust/tests/integration_chaos.rs (health, re-placement, journal
+    // retrain bit-identity) — they need running devices.
 }

@@ -23,7 +23,7 @@ use crate::config::{ClassifierConfig, EeConfig};
 use crate::coordinator::batcher::ClassBatcher;
 use crate::coordinator::early_exit::{EarlyExitController, EeDecision};
 use crate::coordinator::metrics::{Metrics, Op};
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, Response, DEVICE_UNAVAILABLE};
 use crate::coordinator::session::{FslSession, QueryOutcome};
 use crate::hdc::class_mem::{Allocation, ClassMemoryManager};
 use crate::runtime::{pool, ComputeEngine, FeStageExec, WorkerPool};
@@ -303,6 +303,27 @@ impl Worker {
     }
 
     fn handle(&mut self, req: Request) -> Response {
+        // Fail-point sites fire *before* any session/batcher mutation, so a
+        // request that draws an injected fault (or an injected panic that
+        // kills this worker) has provably not executed — the router can
+        // retry it after recovery without double-training a shot. Disarmed,
+        // each check is a single atomic load (util::failpoint).
+        let site = match &req {
+            Request::AddShot { .. }
+            | Request::AddShotBatch { .. }
+            | Request::AddFeatureShot { .. }
+            | Request::FinishTraining { .. } => Some("device.train"),
+            Request::Query { .. } | Request::QueryBatch { .. } | Request::QueryFeature { .. } => {
+                Some("device.query")
+            }
+            _ => None,
+        };
+        if let Some(site) = site {
+            if let Err(e) = crate::util::failpoint::check(site) {
+                self.metrics.errors += 1;
+                return Response::RetryableError(e.to_string());
+            }
+        }
         match req {
             Request::CreateSession { n_way, hv_bits, metric, backend } => {
                 // reject malformed geometry here: it used to slip into the
@@ -603,13 +624,49 @@ pub struct CoordinatorClient {
 impl CoordinatorClient {
     /// Synchronous request/response. Holds a [`LoadSlot`] for the full
     /// round trip, so the serving queue depth counts in-service requests.
+    ///
+    /// A dead worker (send fails: the thread exited and dropped its
+    /// receiver) or a worker that crashed mid-request (the reply sender
+    /// was dropped during an unwind) both come back as a
+    /// [`Response::RetryableError`] carrying the [`DEVICE_UNAVAILABLE`]
+    /// prefix — the signal the [`crate::coordinator::DeviceRouter`] keys
+    /// device death and session re-placement off.
     pub fn call(&self, req: Request) -> Response {
         let _slot = self.load.occupy();
         let (rtx, rrx) = channel();
         if self.tx.send((req, rtx)).is_err() {
-            return Response::Error("coordinator stopped".into());
+            return Response::RetryableError(format!("{DEVICE_UNAVAILABLE}: coordinator stopped"));
         }
-        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+        rrx.recv().unwrap_or_else(|_| {
+            Response::RetryableError(format!(
+                "{DEVICE_UNAVAILABLE}: worker dropped the reply (crashed mid-request?)"
+            ))
+        })
+    }
+
+    /// [`CoordinatorClient::call`] with a per-request deadline: if the
+    /// worker has not answered within `deadline`, give up and return a
+    /// retryable deadline error. The worker still finishes the request
+    /// eventually (its reply lands in a dropped channel); the deadline
+    /// bounds *caller* latency, it does not cancel device work — which is
+    /// why the error is retryable but NOT marked device-unavailable: a
+    /// slow device is not a dead one.
+    pub fn call_deadline(&self, req: Request, deadline: std::time::Duration) -> Response {
+        let _slot = self.load.occupy();
+        let (rtx, rrx) = channel();
+        if self.tx.send((req, rtx)).is_err() {
+            return Response::RetryableError(format!("{DEVICE_UNAVAILABLE}: coordinator stopped"));
+        }
+        match rrx.recv_timeout(deadline) {
+            Ok(resp) => resp,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Response::RetryableError(format!(
+                "deadline of {} ms exceeded",
+                deadline.as_millis()
+            )),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Response::RetryableError(
+                format!("{DEVICE_UNAVAILABLE}: worker dropped the reply (crashed mid-request?)"),
+            ),
+        }
     }
 
     /// The load signal admission control reads (shared with the
@@ -741,7 +798,7 @@ impl Coordinator {
     ) -> anyhow::Result<u64> {
         match self.call(Request::CreateSession { n_way, hv_bits, metric, backend }) {
             Response::SessionCreated { session } => Ok(session),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -749,7 +806,7 @@ impl Coordinator {
     pub fn add_shot(&self, session: u64, class: usize, image: Vec<f32>) -> anyhow::Result<()> {
         match self.call(Request::AddShot { session, class, image }) {
             Response::ShotAccepted { .. } => Ok(()),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -765,7 +822,7 @@ impl Coordinator {
     ) -> anyhow::Result<()> {
         match self.call(Request::AddShotBatch { session, class, images }) {
             Response::ShotAccepted { .. } => Ok(()),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -773,7 +830,7 @@ impl Coordinator {
     pub fn finish_training(&self, session: u64) -> anyhow::Result<usize> {
         match self.call(Request::FinishTraining { session }) {
             Response::TrainingDone { shots, .. } => Ok(shots),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -786,7 +843,7 @@ impl Coordinator {
     ) -> anyhow::Result<crate::coordinator::session::QueryOutcome> {
         match self.call(Request::Query { session, image, ee }) {
             Response::QueryResult { outcome, .. } => Ok(outcome),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }
@@ -802,7 +859,7 @@ impl Coordinator {
     ) -> anyhow::Result<Vec<crate::coordinator::session::QueryOutcome>> {
         match self.call(Request::QueryBatch { session, images, ee }) {
             Response::QueryBatchResult { outcomes, .. } => Ok(outcomes),
-            Response::Error(e) => anyhow::bail!(e),
+            Response::Error(e) | Response::RetryableError(e) => anyhow::bail!(e),
             other => anyhow::bail!("unexpected: {other:?}"),
         }
     }

@@ -17,6 +17,27 @@ pub struct QueryOutcome {
     pub exited_early: bool,
 }
 
+/// Everything needed to rebuild a session's class memory from scratch:
+/// backend + geometry knobs and the retained shots (encoded branch HVs in
+/// training order). Because HDC/LDC training is single-pass with no
+/// gradient state, [`FslSession::rebuild`] replaying this snapshot
+/// produces class memory **bit-identical** to the original session — the
+/// paper property that makes device failure cost one bounded retrain
+/// instead of a lost model (DESIGN.md §Fault model).
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    pub n_way: usize,
+    pub d: usize,
+    pub n_branches: usize,
+    pub backend: ClassifierBackend,
+    pub hv_bits: u32,
+    pub metric: Distance,
+    pub ldc_d: usize,
+    /// `(class, one encoded HV per branch)` for every trained shot, in
+    /// training order.
+    pub shots: Vec<(usize, Vec<Vec<f32>>)>,
+}
+
 /// Session state: one classifier per FE branch, behind the
 /// [`FslClassifier`] seam — the session no longer knows (or branches on)
 /// which backend it runs; the backend choice happens once, at
@@ -37,6 +58,10 @@ pub struct FslSession {
     /// `branch_models[b]` = classifier fed by CONV block b's features
     branch_models: Vec<Box<dyn FslClassifier>>,
     pub shots_seen: usize,
+    /// Shot journal backing [`FslSession::snapshot`]: the session's entire
+    /// training history (single-pass training has no other state). Few-shot
+    /// sessions retain k·N·B HVs — small by construction.
+    retained: Vec<(usize, Vec<Vec<f32>>)>,
 }
 
 impl FslSession {
@@ -55,15 +80,16 @@ impl FslSession {
             ldc_d: 0,
             branch_models: Vec::new(),
             shots_seen: 0,
+            retained: Vec::new(),
         };
-        s.rebuild();
+        s.rebuild_models();
         s
     }
 
     /// Re-derive every branch classifier from the current knobs. Only
     /// legal before training (the builders are constructor sugar, not a
     /// live reconfiguration path).
-    fn rebuild(&mut self) {
+    fn rebuild_models(&mut self) {
         assert_eq!(self.shots_seen, 0, "cannot reconfigure a session after training");
         self.branch_models = (0..self.n_branches)
             .map(|_| self.backend.build(self.n_way, self.d, self.hv_bits, self.metric, self.ldc_d))
@@ -72,13 +98,13 @@ impl FslSession {
 
     pub fn with_precision(mut self, bits: u32) -> Self {
         self.hv_bits = bits;
-        self.rebuild();
+        self.rebuild_models();
         self
     }
 
     pub fn with_metric(mut self, metric: Distance) -> Self {
         self.metric = metric;
-        self.rebuild();
+        self.rebuild_models();
         self
     }
 
@@ -87,8 +113,37 @@ impl FslSession {
     pub fn with_backend(mut self, backend: ClassifierBackend, ldc_d: usize) -> Self {
         self.backend = backend;
         self.ldc_d = ldc_d;
-        self.rebuild();
+        self.rebuild_models();
         self
+    }
+
+    /// Snapshot the session's configuration and full training history.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            n_way: self.n_way,
+            d: self.d,
+            n_branches: self.n_branches,
+            backend: self.backend,
+            hv_bits: self.hv_bits,
+            metric: self.metric,
+            ldc_d: self.ldc_d,
+            shots: self.retained.clone(),
+        }
+    }
+
+    /// Rebuild a session from a snapshot by replaying single-pass training
+    /// shot by shot. Training is order-dependent but batch/serial
+    /// bit-identical, so the rebuilt class memory matches the snapshotted
+    /// session's exactly — for both HDC and LDC backends.
+    pub fn rebuild(snap: &SessionSnapshot, id: u64) -> FslSession {
+        let mut s = FslSession::new(id, snap.n_way, snap.d, snap.n_branches)
+            .with_precision(snap.hv_bits)
+            .with_metric(snap.metric)
+            .with_backend(snap.backend, snap.ldc_d);
+        for (class, hvs) in &snap.shots {
+            s.train_shot(*class, hvs);
+        }
+        s
     }
 
     /// The classifier backend every branch runs.
@@ -126,6 +181,7 @@ impl FslSession {
             m.train_shot(class, hv);
         }
         self.shots_seen += 1;
+        self.retained.push((class, branch_hvs.to_vec()));
     }
 
     /// Batched single-pass training: all k same-class shots at once
@@ -149,6 +205,11 @@ impl FslSession {
             m.train_batch(class, &hvs);
         }
         self.shots_seen += shots_branch_hvs.len();
+        // journal per shot: replay goes through train_shot, which is
+        // bit-identical to the batched accumulation by contract
+        for shot in shots_branch_hvs {
+            self.retained.push((class, shot.clone()));
+        }
     }
 
     pub fn is_trained(&self) -> bool {
@@ -420,6 +481,59 @@ mod tests {
                 assert_eq!(s.predict_branch_batch(1, &qs, shards), serial, "{backend:?}");
             }
         }
+    }
+
+    #[test]
+    fn rebuild_from_snapshot_is_bit_identical_for_both_backends() {
+        let d = 256;
+        for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+            let mut rng = Rng::new(77);
+            let ps = protos(&mut rng, 4, d);
+            let mut s = FslSession::new(1, 4, d, 3)
+                .with_precision(4)
+                .with_metric(Distance::L1)
+                .with_backend(backend, 0);
+            // mix per-shot and batched training so the journal covers both
+            for (c, p) in ps.iter().enumerate().take(2) {
+                for _ in 0..5 {
+                    let hvs: Vec<Vec<f32>> = (0..3).map(|_| hv(&mut rng, p)).collect();
+                    s.train_shot(c, &hvs);
+                }
+            }
+            for (c, p) in ps.iter().enumerate().skip(2) {
+                let shots: Vec<Vec<Vec<f32>>> =
+                    (0..5).map(|_| (0..3).map(|_| hv(&mut rng, p)).collect()).collect();
+                s.train_batch(c, &shots);
+            }
+            let snap = s.snapshot();
+            assert_eq!(snap.shots.len(), 20, "{backend:?}: journal retains every shot");
+            let mut r = FslSession::rebuild(&snap, 99);
+            assert_eq!(r.shots_seen, s.shots_seen);
+            assert_eq!(r.backend(), backend);
+            assert_eq!(r.stored_dim(), s.stored_dim());
+            // the recovery invariant: distances (hence predictions) from
+            // the rebuilt class memory are bit-identical
+            for p in &ps {
+                let q = hv(&mut rng, p);
+                assert_eq!(s.final_distances(&q), r.final_distances(&q), "{backend:?}");
+                for b in 0..3 {
+                    assert_eq!(s.predict_branch(b, &q), r.predict_branch(b, &q), "{backend:?}");
+                }
+            }
+            // a rebuilt session can itself be snapshotted and rebuilt
+            let rr = FslSession::rebuild(&r.snapshot(), 100);
+            let q = hv(&mut rng, &ps[0]);
+            assert_eq!(r.final_distances(&q), FslSession::rebuild(&rr.snapshot(), 101).final_distances(&q));
+        }
+    }
+
+    #[test]
+    fn untrained_snapshot_rebuilds_untrained() {
+        let s = FslSession::new(1, 3, 64, 2).with_precision(8);
+        let r = FslSession::rebuild(&s.snapshot(), 2);
+        assert_eq!(r.shots_seen, 0);
+        assert!(!r.is_trained());
+        assert_eq!(r.hv_bits(), 8);
     }
 
     #[test]

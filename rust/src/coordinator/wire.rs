@@ -45,23 +45,68 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8], max_bytes: usize) -> anyh
 /// payload, or a length prefix over `max_bytes` — leave the stream
 /// desynchronized; the connection handler answers best-effort and closes.
 pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> anyhow::Result<Option<Vec<u8>>> {
-    let mut hdr = [0u8; 4];
-    let mut got = 0;
-    while got < 4 {
-        let n = r.read(&mut hdr[got..])?;
-        if n == 0 {
-            if got == 0 {
-                return Ok(None);
+    read_frame_cancellable(r, max_bytes, &mut || false)
+}
+
+/// [`read_frame`] for streams carrying a read timeout: a timed-out read
+/// (`WouldBlock`/`TimedOut`) polls `cancelled` and, if the caller still
+/// wants the frame, resumes exactly where it left off — partial header or
+/// payload bytes are never lost, so a slow peer's frame is not torn by the
+/// timeout tick. `cancelled() == true` returns `Ok(None)` (treated like a
+/// clean close; the gateway uses this so a client stalled mid-frame cannot
+/// block joined shutdown). `Interrupted` reads always resume.
+pub fn read_frame_cancellable(
+    r: &mut impl Read,
+    max_bytes: usize,
+    cancelled: &mut dyn FnMut() -> bool,
+) -> anyhow::Result<Option<Vec<u8>>> {
+    fn fill(
+        r: &mut impl Read,
+        buf: &mut [u8],
+        cancelled: &mut dyn FnMut() -> bool,
+        what: &str,
+    ) -> anyhow::Result<Option<usize>> {
+        // Ok(Some(n)): n bytes read before EOF (n == buf.len() means done);
+        // Ok(None): cancelled mid-read.
+        let mut got = 0;
+        while got < buf.len() {
+            match r.read(&mut buf[got..]) {
+                Ok(0) => return Ok(Some(got)),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if cancelled() {
+                        return Ok(None);
+                    }
+                }
+                Err(e) => anyhow::bail!("read failed mid-{what}: {e}"),
             }
-            anyhow::bail!("truncated frame header ({got}/4 bytes)");
         }
-        got += n;
+        Ok(Some(got))
     }
+
+    let mut hdr = [0u8; 4];
+    let got = match fill(r, &mut hdr, cancelled, "header")? {
+        None => return Ok(None),
+        Some(g) => g,
+    };
+    if got == 0 {
+        return Ok(None);
+    }
+    anyhow::ensure!(got == 4, "truncated frame header ({got}/4 bytes)");
     let len = u32::from_be_bytes(hdr) as usize;
     anyhow::ensure!(len <= max_bytes, "oversized frame: {len} bytes exceeds the cap {max_bytes}");
     let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf).map_err(|e| anyhow::anyhow!("truncated frame payload: {e}"))?;
-    Ok(Some(buf))
+    match fill(r, &mut buf, cancelled, "payload")? {
+        None => Ok(None),
+        Some(g) if g == len => Ok(Some(buf)),
+        Some(g) => anyhow::bail!("truncated frame payload: {g}/{len} bytes"),
+    }
 }
 
 // --- encoding ------------------------------------------------------------
@@ -233,6 +278,9 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             w.field_num("class_mem_active_banks", m.class_mem_active_banks as f64);
             w.field_num("class_mem_gated_banks", m.class_mem_gated_banks as f64);
             w.field_num("requests_shed", m.requests_shed as f64);
+            w.field_num("device_failures", m.device_failures as f64);
+            w.field_num("sessions_replaced", m.sessions_replaced as f64);
+            w.field_num("retrain_ms", m.retrain_ms);
         }
         Response::ShuttingDown => {
             w.field_str("type", "shutting_down");
@@ -240,6 +288,14 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
         Response::Busy { queue_depth } => {
             w.field_str("type", "busy");
             w.field_num("queue_depth", *queue_depth as f64);
+        }
+        // Both error flavors share the "error" type tag so pre-taxonomy
+        // clients (which read only "message") keep decoding them; the
+        // retryable flag is an extra field new clients key retries off.
+        Response::RetryableError(msg) => {
+            w.field_str("type", "error");
+            w.field_str("message", msg);
+            w.key("retryable").bool_val(true);
         }
         Response::Error(msg) => {
             w.field_str("type", "error");
@@ -264,6 +320,23 @@ fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
 
 fn get_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
     Ok(get_f64(j, key)? as u64)
+}
+
+/// Absent-tolerant u64: fields added after a wire release use this so
+/// frames from older peers (which lack the field) still decode.
+fn get_u64_or(j: &Json, key: &str, default: u64) -> anyhow::Result<u64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(_) => get_u64(j, key),
+    }
+}
+
+/// Absent-tolerant f64 (see [`get_u64_or`]).
+fn get_f64_or(j: &Json, key: &str, default: f64) -> anyhow::Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(_) => get_f64(j, key),
+    }
 }
 
 fn get_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
@@ -446,11 +519,22 @@ pub fn decode_response(payload: &[u8]) -> anyhow::Result<Response> {
                 class_mem_active_banks: get_usize(&j, "class_mem_active_banks")?,
                 class_mem_gated_banks: get_usize(&j, "class_mem_gated_banks")?,
                 requests_shed: get_u64(&j, "requests_shed")?,
+                // post-PR-8 fields: absent on frames from older peers
+                device_failures: get_u64_or(&j, "device_failures", 0)?,
+                sessions_replaced: get_u64_or(&j, "sessions_replaced", 0)?,
+                retrain_ms: get_f64_or(&j, "retrain_ms", 0.0)?,
             }))
         }
         "shutting_down" => Ok(Response::ShuttingDown),
         "busy" => Ok(Response::Busy { queue_depth: get_usize(&j, "queue_depth")? }),
-        "error" => Ok(Response::Error(get_str(&j, "message")?.to_string())),
+        "error" => {
+            let msg = get_str(&j, "message")?.to_string();
+            // absent/false retryable (old peers never send it) = fatal
+            match j.get("retryable").and_then(Json::as_bool) {
+                Some(true) => Ok(Response::RetryableError(msg)),
+                _ => Ok(Response::Error(msg)),
+            }
+        }
         other => anyhow::bail!("unknown response type {other:?}"),
     }
 }
@@ -558,6 +642,92 @@ mod tests {
         roundtrip_resp(Response::ShuttingDown);
         roundtrip_resp(Response::Busy { queue_depth: 129 });
         roundtrip_resp(Response::Error("bad \"quoted\" \n multiline".into()));
+        roundtrip_resp(Response::RetryableError("device unavailable: device 2 is dead".into()));
+    }
+
+    #[test]
+    fn error_taxonomy_is_backward_compatible_on_the_wire() {
+        // a retryable error still travels under the "error" type tag, so a
+        // pre-taxonomy client's decoder sees a plain Error frame
+        let bytes = encode_response(&Response::RetryableError("deadline exceeded".into()));
+        let j = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert_eq!(j.get("type").and_then(Json::as_str), Some("error"));
+        assert_eq!(j.get("message").and_then(Json::as_str), Some("deadline exceeded"));
+        // an old peer's error frame (no retryable field) decodes as fatal
+        let old = b"{\"type\":\"error\",\"message\":\"boom\"}";
+        assert_eq!(decode_response(old).unwrap(), Response::Error("boom".into()));
+        // explicit retryable:false is also fatal
+        let fatal = b"{\"type\":\"error\",\"message\":\"boom\",\"retryable\":false}";
+        assert_eq!(decode_response(fatal).unwrap(), Response::Error("boom".into()));
+    }
+
+    #[test]
+    fn metrics_frames_without_recovery_fields_decode_with_zero_defaults() {
+        // simulate a pre-PR-8 peer: encode, then strip the new fields
+        let m = MetricsSnapshot {
+            shots: 3,
+            device_failures: 7,
+            sessions_replaced: 9,
+            retrain_ms: 1.25,
+            ..Default::default()
+        };
+        let s = String::from_utf8(encode_response(&Response::Metrics(m))).unwrap();
+        let old = s
+            .replace(",\"device_failures\":7", "")
+            .replace(",\"sessions_replaced\":9", "")
+            .replace(",\"retrain_ms\":1.25", "");
+        assert!(!old.contains("retrain_ms"), "strip failed: {old}");
+        match decode_response(old.as_bytes()).unwrap() {
+            Response::Metrics(b) => {
+                assert_eq!(b.shots, 3);
+                assert_eq!((b.device_failures, b.sessions_replaced), (0, 0));
+                assert_eq!(b.retrain_ms, 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancellable_read_resumes_after_timeouts_and_honors_cancel() {
+        use std::io::Read;
+
+        // a reader that yields WouldBlock between every real byte —
+        // read_frame_cancellable must reassemble the frame across ticks
+        struct Chopper {
+            data: Vec<u8>,
+            pos: usize,
+            tick: bool,
+        }
+        impl Read for Chopper {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.tick = !self.tick;
+                if self.tick {
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                if self.pos >= self.data.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+
+        let mut framed = Vec::new();
+        write_frame(&mut framed, b"{\"type\":\"get_metrics\"}", CAP).unwrap();
+        let mut r = Chopper { data: framed.clone(), pos: 0, tick: false };
+        let frame = read_frame_cancellable(&mut r, CAP, &mut || false).unwrap().unwrap();
+        assert_eq!(decode_request(&frame).unwrap(), Request::GetMetrics);
+
+        // cancel mid-frame: Ok(None), no panic, no partial-frame error
+        let mut r = Chopper { data: framed, pos: 0, tick: false };
+        let mut polls = 0;
+        let got = read_frame_cancellable(&mut r, CAP, &mut || {
+            polls += 1;
+            polls > 2
+        })
+        .unwrap();
+        assert!(got.is_none(), "cancelled read reports a clean close");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //!   fsl-hdnn episode --base-width 32 --stages 3 --image-size 64  # synthetic geometry
 //!   fsl-hdnn episode --backend pjrt --ee 2,2
 //!   fsl-hdnn serve --addr 127.0.0.1:7878 --workers 0 --high-water 64
+//!   fsl-hdnn serve --deadline-ms 250                # bound caller waits
+//!   fsl-hdnn episode --faults "device.query=latency-ms:1"  # fault drill
 //!   fsl-hdnn sim --task train --batched true --voltage 1.2 --freq 250
 //!   fsl-hdnn check-artifacts
 
@@ -104,6 +106,19 @@ fn resolve_backends(
     Ok((engine, classifier))
 }
 
+/// Arm fail points from `[faults] points` and/or the `--faults` flag —
+/// shared by `episode` and `serve` so fault drills are reproducible from
+/// either entry point (`FSL_FAILPOINTS` is read lazily regardless).
+fn arm_faults(args: &Args, rc: &fsl_hdnn::config::RunConfig) -> anyhow::Result<()> {
+    if !rc.faults.points.is_empty() {
+        fsl_hdnn::util::failpoint::arm_spec(&rc.faults.points)?;
+    }
+    if let Some(spec) = args.kv.get("faults") {
+        fsl_hdnn::util::failpoint::arm_spec(spec)?;
+    }
+    Ok(())
+}
+
 fn cmd_episode(args: &Args) -> anyhow::Result<()> {
     // optional TOML-subset config file, overridden by CLI flags
     let mut rc = fsl_hdnn::config::RunConfig::default();
@@ -111,6 +126,7 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
         let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
         rc.apply_toml(&doc)?;
     }
+    arm_faults(args, &rc)?;
     let (backend, cls_backend) = resolve_backends(args, &rc)?;
     let cls = ClassifierConfig {
         backend: cls_backend,
@@ -243,14 +259,16 @@ fn cmd_episode(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `serve`: one coordinator behind the TCP gateway, until killed. The
-/// `[serving]` TOML section supplies defaults; `--addr`, `--high-water`
-/// and `--max-frame-bytes` override. Model/engine knobs mirror `episode`.
+/// `[serving]` TOML section supplies defaults; `--addr`, `--high-water`,
+/// `--max-frame-bytes` and `--deadline-ms` override. Model/engine knobs
+/// mirror `episode`.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut rc = fsl_hdnn::config::RunConfig::default();
     if let Some(path) = args.kv.get("config") {
         let doc = fsl_hdnn::config::toml::Doc::load(std::path::Path::new(path))?;
         rc.apply_toml(&doc)?;
     }
+    arm_faults(args, &rc)?;
     let (backend, cls_backend) = resolve_backends(args, &rc)?;
     let cls = ClassifierConfig {
         backend: cls_backend,
@@ -265,6 +283,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     serving.addr = args.get_str("addr", &serving.addr);
     serving.high_water = args.get("high-water", serving.high_water);
     serving.max_frame_bytes = args.get("max-frame-bytes", serving.max_frame_bytes);
+    serving.deadline_ms = args.get("deadline-ms", serving.deadline_ms);
     let mut mc = rc.model.clone();
     mc.clustered = args.get("clustered", mc.clustered);
     let dir = artifacts_dir(args);

@@ -87,8 +87,16 @@ impl WorkerPool {
                         while let Ok(task) = rx.recv() {
                             // a panicking task must not kill the long-lived
                             // worker or wedge the gauge; run_scoped catches
-                            // first and re-raises on the submitting thread
-                            let _ = catch_unwind(AssertUnwindSafe(task));
+                            // first and re-raises on the submitting thread.
+                            // The `pool.task` fail point fires inside the
+                            // same catch, replacing the task body with an
+                            // injected panic — chaos tests prove drop still
+                            // drains and joins under mid-flight panics.
+                            let _ = catch_unwind(AssertUnwindSafe(|| {
+                                crate::util::failpoint::check("pool.task")
+                                    .expect("injected pool.task fault");
+                                task()
+                            }));
                             gauge.fetch_sub(1, Ordering::AcqRel);
                         }
                     })

@@ -1,0 +1,402 @@
+//! Deterministic fail-point registry for fault-injection testing.
+//!
+//! A fail point is a named site in the serving stack where a test (or an
+//! operator, via env / `[faults]` TOML) can inject a failure, a panic, or
+//! latency with a deterministic trigger. The registry is zero-dependency
+//! and designed so that the **disarmed hot path is a single atomic load
+//! and compare** — no allocation, no lock, no map lookup:
+//!
+//! ```text
+//! failpoint::check("device.query")?;   // disarmed: one Relaxed load + branch
+//! ```
+//!
+//! Sites wired into the stack (see DESIGN.md §Fault model):
+//!
+//! | site            | where it fires                                   |
+//! |-----------------|--------------------------------------------------|
+//! | `device.query`  | coordinator worker, Query / QueryBatch / QueryFeature |
+//! | `device.train`  | coordinator worker, AddShot* / FinishTraining    |
+//! | `gateway.read`  | gateway per-connection loop, after a frame is read |
+//! | `gateway.write` | gateway per-connection loop, before the reply write |
+//! | `pool.task`     | worker-pool task execution (inside `catch_unwind`) |
+//!
+//! Triggers are counted per site, so a sequence of checks is exactly
+//! reproducible: `fail-once` fires on the first check only, `fail-every-n:3`
+//! on checks 3, 6, 9, …, `fail-after-k:5` on every check past the fifth,
+//! `latency-ms:10` sleeps 10 ms on every check. `panic-*` variants panic
+//! instead of returning an error (that is how a chaos test kills a device
+//! worker dead rather than handing it a recoverable error).
+//!
+//! Arming is process-global: tests that arm fail points must serialize
+//! (the chaos battery shares one mutex) and disarm when done — use
+//! [`armed_scope`] so a panicking assertion cannot leak an armed site into
+//! the next test.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What a firing fail point does at its site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// `check` returns an error the site maps to its natural failure
+    /// (e.g. a retryable wire error).
+    Fail,
+    /// `check` panics — simulates a crashing worker/device.
+    Panic,
+}
+
+/// When a fail point fires, counted per site from 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Trigger {
+    /// Fire on the first check, then never again.
+    Once,
+    /// Fire on every `n`-th check (n, 2n, 3n, …).
+    EveryN(u64),
+    /// Pass the first `k` checks, fire on every check after.
+    AfterK(u64),
+    /// Never fail; sleep this many milliseconds on every check.
+    LatencyMs(u64),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Site {
+    trigger: Trigger,
+    action: Action,
+    hits: u64,
+}
+
+/// Error returned by [`check`] when an armed fail point fires.
+#[derive(Debug)]
+pub struct Injected {
+    pub site: &'static str,
+}
+
+impl std::fmt::Display for Injected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at fail point {}", self.site)
+    }
+}
+
+impl std::error::Error for Injected {}
+
+// Registry state machine. The hot path loads STATE once: DISARMED (the
+// steady state with no sites armed) short-circuits before any lock.
+const UNINIT: u8 = 0;
+const DISARMED: u8 = 1;
+const ARMED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn registry() -> &'static Mutex<HashMap<&'static str, Site>> {
+    static REG: OnceLock<Mutex<HashMap<&'static str, Site>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The env var read on first use: same syntax as [`arm_spec`], e.g.
+/// `FSL_FAILPOINTS="device.query=latency-ms:1;gateway.write=fail-once"`.
+pub const ENV_VAR: &str = "FSL_FAILPOINTS";
+
+/// Fail-point site names are interned so the registry key is `&'static str`
+/// and the armed path allocates nothing per check. Unknown names are
+/// accepted (they just never match a wired site).
+fn intern(site: &str) -> &'static str {
+    const KNOWN: &[&str] =
+        &["device.query", "device.train", "gateway.read", "gateway.write", "pool.task"];
+    for k in KNOWN {
+        if *k == site {
+            return k;
+        }
+    }
+    Box::leak(site.to_string().into_boxed_str())
+}
+
+fn init_from_env() {
+    // Racing initializers both parse the env var; arming is idempotent.
+    match std::env::var(ENV_VAR) {
+        Ok(spec) if !spec.trim().is_empty() => {
+            if let Err(e) = arm_spec(&spec) {
+                eprintln!("[failpoint] ignoring bad {ENV_VAR}: {e}");
+                STATE.compare_exchange(UNINIT, DISARMED, Ordering::SeqCst, Ordering::SeqCst).ok();
+            }
+        }
+        _ => {
+            STATE.compare_exchange(UNINIT, DISARMED, Ordering::SeqCst, Ordering::SeqCst).ok();
+        }
+    }
+}
+
+/// Arm `site` with a trigger and action. Replaces any previous arming of
+/// the same site and resets its hit counter.
+pub fn arm(site: &str, trigger: Trigger, action: Action) {
+    let key = intern(site);
+    let mut reg = registry().lock().expect("failpoint registry poisoned");
+    reg.insert(key, Site { trigger, action, hits: 0 });
+    STATE.store(ARMED, Ordering::SeqCst);
+}
+
+/// Disarm one site. The hot path stays in the armed (slow) state until
+/// [`disarm_all`] runs; per-site disarm only stops that site firing.
+pub fn disarm(site: &str) {
+    let mut reg = registry().lock().expect("failpoint registry poisoned");
+    reg.remove(site);
+    if reg.is_empty() {
+        STATE.store(DISARMED, Ordering::SeqCst);
+    }
+}
+
+/// Disarm every site and restore the single-branch hot path.
+pub fn disarm_all() {
+    let mut reg = registry().lock().expect("failpoint registry poisoned");
+    reg.clear();
+    STATE.store(DISARMED, Ordering::SeqCst);
+}
+
+/// Parse a `;`/`,`-separated spec without touching the registry —
+/// config loading validates specs eagerly through this. Each entry is
+/// `site=trigger` where trigger is one of `fail-once`, `fail-every-n:N`,
+/// `fail-after-k:K`, `latency-ms:M`, `panic-once`, `panic-every-n:N`,
+/// `panic-after-k:K`, or `off`. Returns `(site, None)` for `off` entries
+/// and `(site, Some((trigger, action)))` otherwise.
+#[allow(clippy::type_complexity)]
+pub fn parse_spec(spec: &str) -> anyhow::Result<Vec<(String, Option<(Trigger, Action)>)>> {
+    let mut out = Vec::new();
+    for entry in spec.split([';', ',']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (site, trig) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fail-point entry `{entry}` is not site=trigger"))?;
+        let (site, trig) = (site.trim(), trig.trim());
+        if trig == "off" {
+            out.push((site.to_string(), None));
+            continue;
+        }
+        let (name, param) = match trig.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (trig, None),
+        };
+        let num = |what: &str| -> anyhow::Result<u64> {
+            let p = param
+                .ok_or_else(|| anyhow::anyhow!("trigger `{trig}` needs a `:{what}` parameter"))?;
+            let v: u64 = p
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad {what} `{p}` in fail-point `{entry}`"))?;
+            anyhow::ensure!(v >= 1 || what == "k" || what == "ms", "{what} must be >= 1");
+            Ok(v)
+        };
+        let (trigger, action) = match name {
+            "fail-once" => (Trigger::Once, Action::Fail),
+            "panic-once" => (Trigger::Once, Action::Panic),
+            "fail-every-n" => (Trigger::EveryN(num("n")?), Action::Fail),
+            "panic-every-n" => (Trigger::EveryN(num("n")?), Action::Panic),
+            "fail-after-k" => (Trigger::AfterK(num("k")?), Action::Fail),
+            "panic-after-k" => (Trigger::AfterK(num("k")?), Action::Panic),
+            "latency-ms" => (Trigger::LatencyMs(num("ms")?), Action::Fail),
+            other => anyhow::bail!("unknown fail-point trigger `{other}` in `{entry}`"),
+        };
+        out.push((site.to_string(), Some((trigger, action))));
+    }
+    Ok(out)
+}
+
+/// Parse and apply a spec (grammar in [`parse_spec`]): arm every
+/// `site=trigger` entry, disarm every `site=off` entry.
+pub fn arm_spec(spec: &str) -> anyhow::Result<()> {
+    for (site, entry) in parse_spec(spec)? {
+        match entry {
+            Some((trigger, action)) => arm(&site, trigger, action),
+            None => disarm(&site),
+        }
+    }
+    Ok(())
+}
+
+/// Check a fail-point site. Disarmed (the production steady state): one
+/// relaxed atomic load and a branch — no allocation, no lock. Armed: takes
+/// the registry lock, counts the hit, and fires per the site's trigger.
+///
+/// A firing `Action::Fail` returns `Err(Injected)`; `Action::Panic`
+/// panics; `Trigger::LatencyMs` sleeps and returns `Ok(())`.
+#[inline]
+pub fn check(site: &'static str) -> Result<(), Injected> {
+    if STATE.load(Ordering::Relaxed) == DISARMED {
+        return Ok(());
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &'static str) -> Result<(), Injected> {
+    if STATE.load(Ordering::SeqCst) == UNINIT {
+        init_from_env();
+        if STATE.load(Ordering::SeqCst) == DISARMED {
+            return Ok(());
+        }
+    }
+    let fired = {
+        let mut reg = registry().lock().expect("failpoint registry poisoned");
+        let Some(s) = reg.get_mut(site) else { return Ok(()) };
+        s.hits += 1;
+        match s.trigger {
+            Trigger::Once => {
+                if s.hits == 1 {
+                    Some(s.action)
+                } else {
+                    None
+                }
+            }
+            Trigger::EveryN(n) => {
+                if s.hits % n.max(1) == 0 {
+                    Some(s.action)
+                } else {
+                    None
+                }
+            }
+            Trigger::AfterK(k) => {
+                if s.hits > k {
+                    Some(s.action)
+                } else {
+                    None
+                }
+            }
+            Trigger::LatencyMs(ms) => {
+                // Sleep outside the lock so latency injection on one site
+                // does not stall arming/checks on others.
+                drop(reg);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                return Ok(());
+            }
+        }
+    };
+    match fired {
+        None => Ok(()),
+        Some(Action::Fail) => Err(Injected { site }),
+        Some(Action::Panic) => panic!("injected panic at fail point {site}"),
+    }
+}
+
+/// Number of times `site` has been checked since it was (re-)armed.
+/// Test-facing: asserts that a site actually saw traffic.
+pub fn hits(site: &str) -> u64 {
+    registry().lock().expect("failpoint registry poisoned").get(site).map_or(0, |s| s.hits)
+}
+
+/// RAII guard: arms a spec, disarms everything on drop (even on panic).
+/// Chaos tests hold this inside their shared serialization lock.
+pub struct ArmedScope(());
+
+/// Arm `spec` for the lifetime of the returned guard.
+pub fn armed_scope(spec: &str) -> anyhow::Result<ArmedScope> {
+    arm_spec(spec)?;
+    Ok(ArmedScope(()))
+}
+
+impl Drop for ArmedScope {
+    fn drop(&mut self) {
+        disarm_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    // The registry is process-global; unit tests here serialize on one
+    // lock and always go through ArmedScope so state never leaks.
+    fn lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disarmed_check_is_ok_and_counts_nothing() {
+        let _g = lock();
+        disarm_all();
+        assert!(check("device.query").is_ok());
+        assert_eq!(hits("device.query"), 0);
+    }
+
+    #[test]
+    fn fail_once_fires_exactly_once() {
+        let _g = lock();
+        let _s = armed_scope("device.query=fail-once").unwrap();
+        assert!(check("device.query").is_err());
+        assert!(check("device.query").is_ok());
+        assert!(check("device.query").is_ok());
+        assert_eq!(hits("device.query"), 3);
+        // other sites untouched
+        assert!(check("device.train").is_ok());
+    }
+
+    #[test]
+    fn fail_every_n_fires_on_multiples() {
+        let _g = lock();
+        let _s = armed_scope("device.train=fail-every-n:3").unwrap();
+        let fired: Vec<bool> = (0..9).map(|_| check("device.train").is_err()).collect();
+        assert_eq!(
+            fired,
+            [false, false, true, false, false, true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn fail_after_k_passes_k_then_always_fires() {
+        let _g = lock();
+        let _s = armed_scope("gateway.read=fail-after-k:2").unwrap();
+        assert!(check("gateway.read").is_ok());
+        assert!(check("gateway.read").is_ok());
+        assert!(check("gateway.read").is_err());
+        assert!(check("gateway.read").is_err());
+    }
+
+    #[test]
+    fn latency_trigger_sleeps_but_never_fails() {
+        let _g = lock();
+        let _s = armed_scope("gateway.write=latency-ms:1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(check("gateway.write").is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(1));
+    }
+
+    #[test]
+    fn panic_action_panics_with_site_name() {
+        let _g = lock();
+        let _s = armed_scope("pool.task=panic-once").unwrap();
+        let err = std::panic::catch_unwind(|| {
+            let _ = check("pool.task");
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("pool.task"), "panic names the site: {msg}");
+        // once: second check passes
+        assert!(check("pool.task").is_ok());
+    }
+
+    #[test]
+    fn spec_parser_rejects_garbage_and_accepts_off() {
+        let _g = lock();
+        assert!(arm_spec("nonsense").is_err());
+        assert!(arm_spec("a=fail-every-n").is_err());
+        assert!(arm_spec("a=fail-every-n:zero").is_err());
+        assert!(arm_spec("a=warble-once").is_err());
+        let _s = armed_scope("device.query=fail-once; device.train=latency-ms:0").unwrap();
+        arm_spec("device.query=off").unwrap();
+        assert!(check("device.query").is_ok());
+    }
+
+    #[test]
+    fn scope_guard_disarms_on_drop() {
+        let _g = lock();
+        {
+            let _s = armed_scope("device.query=fail-every-n:1").unwrap();
+            assert!(check("device.query").is_err());
+        }
+        assert!(check("device.query").is_ok());
+        assert_eq!(hits("device.query"), 0, "disarm_all cleared the site");
+    }
+}

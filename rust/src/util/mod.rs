@@ -7,6 +7,7 @@
 pub mod args;
 pub mod bench_log;
 pub mod bf16;
+pub mod failpoint;
 pub mod json;
 pub mod parallel;
 pub mod prng;

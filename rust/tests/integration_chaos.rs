@@ -1,0 +1,395 @@
+//! Chaos battery: deterministic fault injection against the fleet
+//! (DESIGN.md §Fault model).
+//!
+//! The fail-point registry is process-global, so every test that arms a
+//! site runs in THIS integration binary (its own process, away from the
+//! concurrently-running lib unit tests) and serializes on [`faults_lock`].
+//! Armed state always lives inside an [`failpoint::armed_scope`] guard so
+//! a panicking assertion cannot leak a live fail point into the next test.
+//!
+//! The headline property under test is the paper's: single-pass HDC/LDC
+//! training has no hidden state beyond the retained shots, so a device
+//! that dies mid-episode can be rebuilt on a survivor by journal replay
+//! and the episode's outcomes are **bit-identical** to a run where
+//! nothing ever failed — at any worker count.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use fsl_hdnn::classifier::ClassifierBackend;
+use fsl_hdnn::config::{ModelConfig, ParallelConfig, ServingConfig};
+use fsl_hdnn::coordinator::session::QueryOutcome;
+use fsl_hdnn::coordinator::{
+    Coordinator, DeviceHealth, DeviceRouter, Gateway, Placement, Request, Response, WireClient,
+};
+use fsl_hdnn::data::images::ImageGen;
+use fsl_hdnn::hdc::Distance;
+use fsl_hdnn::runtime::{ComputeEngine, WorkerPool};
+use fsl_hdnn::util::failpoint;
+use fsl_hdnn::util::prng::Rng;
+
+const N_WAY: usize = 10;
+const K_SHOT: usize = 5;
+const QUERIES_PER_CLASS: usize = 2;
+
+/// One lock for every fault-arming test in this binary.
+fn faults_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Tiny synthetic FE so episodes run in milliseconds; identical config on
+/// every device means identical synthetic weights, which is what makes
+/// cross-device replay bit-identical.
+fn synthetic_cfg() -> ModelConfig {
+    ModelConfig {
+        image_size: 8,
+        in_channels: 3,
+        widths: vec![4, 8],
+        blocks_per_stage: 1,
+        feature_dim: 8,
+        d: 64,
+        ch_sub: 4,
+        n_centroids: 8,
+        ..Default::default()
+    }
+}
+
+fn start_router(workers: usize) -> DeviceRouter {
+    let cfg = synthetic_cfg();
+    let par = ParallelConfig { workers, min_batch_per_worker: 1 };
+    DeviceRouter::start(2, K_SHOT, Placement::LeastLoaded, move |_i| {
+        let c = cfg.clone();
+        move || Ok(ComputeEngine::from_config(c).with_parallelism(par))
+    })
+    .unwrap()
+}
+
+/// A full episode's data, generated once so the baseline and chaos runs
+/// consume the exact same images.
+struct Episode {
+    shots: Vec<Vec<Vec<f32>>>,
+    queries: Vec<Vec<f32>>,
+}
+
+fn episode_data(seed: u64) -> Episode {
+    let gen = ImageGen::new(8, 16.max(N_WAY), seed);
+    let mut rng = Rng::new(seed);
+    let shots = (0..N_WAY)
+        .map(|class| (0..K_SHOT).map(|_| gen.sample(class, &mut rng)).collect())
+        .collect();
+    let queries = (0..N_WAY)
+        .flat_map(|class| {
+            (0..QUERIES_PER_CLASS).map(|_| gen.sample(class, &mut rng)).collect::<Vec<_>>()
+        })
+        .collect();
+    Episode { shots, queries }
+}
+
+/// Run the 10-way 5-shot episode; `kill_at` arms `device.train=panic-once`
+/// right before training class `kill_at` so the hosting device's worker
+/// thread dies mid-episode. Returns serial predictions plus one batched
+/// query pass (and asserts they agree).
+fn run_episode(
+    router: &mut DeviceRouter,
+    ep: &Episode,
+    backend: ClassifierBackend,
+    kill_at: Option<usize>,
+) -> Vec<QueryOutcome> {
+    let sid = router.create_session_full(N_WAY, 16, Distance::L1, backend).unwrap();
+    for (class, shots) in ep.shots.iter().enumerate() {
+        if kill_at == Some(class) {
+            failpoint::arm_spec("device.train=panic-once").unwrap();
+        }
+        router.add_shot_batch(sid, class, shots.clone()).unwrap();
+    }
+    assert_eq!(router.finish_training(sid).unwrap(), N_WAY * K_SHOT);
+    let serial: Vec<QueryOutcome> =
+        ep.queries.iter().map(|q| router.query(sid, q.clone(), None).unwrap()).collect();
+    let batched = router.query_batch(sid, ep.queries.clone(), None).unwrap();
+    assert_eq!(batched, serial, "batched queries must match serial after recovery");
+    serial
+}
+
+#[test]
+fn device_death_mid_episode_is_bit_identical_to_unfailed_run() {
+    let _g = faults_lock();
+    let ep = episode_data(0xC0FFEE);
+    for backend in [ClassifierBackend::Hdc, ClassifierBackend::Ldc] {
+        for workers in [1usize, 2, 7] {
+            // baseline: no faults, ever
+            let _scope = failpoint::armed_scope("").unwrap();
+            let mut base_router = start_router(workers);
+            let baseline = run_episode(&mut base_router, &ep, backend, None);
+            assert_eq!(base_router.metrics().device_failures, 0);
+
+            // chaos: the hosting device is killed mid-training (class 6 of
+            // 10); every call still succeeds because the router re-places
+            // the session from its shot journal and retries
+            let mut router = start_router(workers);
+            let survived = run_episode(&mut router, &ep, backend, Some(6));
+            failpoint::disarm_all();
+
+            assert_eq!(
+                survived, baseline,
+                "backend {backend:?} workers {workers}: post-recovery predictions \
+                 must be bit-identical to the unfailed run"
+            );
+            let m = router.metrics();
+            assert_eq!(m.device_failures, 1, "exactly one device died");
+            assert_eq!(m.sessions_replaced, 1, "exactly one session re-placed");
+            assert!(m.retrain_ms >= 0.0);
+            let dead =
+                (0..2).filter(|&d| router.health(d) == DeviceHealth::Dead).count();
+            assert_eq!(dead, 1, "one Dead device after the kill");
+            // the fleet snapshot carries the router-owned recovery counters
+            let snap = router.fleet_snapshot();
+            assert_eq!(snap.device_failures, 1);
+            assert_eq!(snap.sessions_replaced, 1);
+        }
+    }
+}
+
+#[test]
+fn soft_faults_strike_suspect_then_dead_and_recover() {
+    let _g = faults_lock();
+    let ep = episode_data(0xBEEF);
+    let mut router = start_router(1);
+    let sid = router.create_session_full(N_WAY, 16, Distance::L1, ClassifierBackend::Hdc).unwrap();
+    for (class, shots) in ep.shots.iter().enumerate() {
+        router.add_shot_batch(sid, class, shots.clone()).unwrap();
+    }
+    router.finish_training(sid).unwrap();
+    let want = router.query(sid, ep.queries[0].clone(), None).unwrap();
+    let home = router.placement(sid).unwrap().device;
+
+    // two soft (non-fatal, retryable) faults: Suspect, errors surface
+    for strike in 1..=2u32 {
+        let _s = failpoint::armed_scope("device.query=fail-once").unwrap();
+        let err = router.query(sid, ep.queries[0].clone(), None).unwrap_err().to_string();
+        assert!(err.contains("injected"), "strike {strike}: {err}");
+        assert_eq!(router.health(home), DeviceHealth::Suspect);
+        assert_eq!(router.metrics().device_failures, 0);
+    }
+    // third strike: the device is declared Dead, the session re-places,
+    // and the retry succeeds — callers see recovery, not an error
+    {
+        let _s = failpoint::armed_scope("device.query=fail-once").unwrap();
+        let out = router.query(sid, ep.queries[0].clone(), None).unwrap();
+        assert_eq!(out, want, "re-placed session answers bit-identically");
+    }
+    assert_eq!(router.health(home), DeviceHealth::Dead);
+    let m = router.metrics();
+    assert_eq!((m.device_failures, m.sessions_replaced), (1, 1));
+    assert_ne!(router.placement(sid).unwrap().device, home);
+    // a success on the new home resets nothing surprising: further queries fine
+    assert_eq!(router.query(sid, ep.queries[0].clone(), None).unwrap(), want);
+}
+
+#[test]
+fn cascading_failure_loses_cleanly_and_revive_reenters_probation() {
+    let _g = faults_lock();
+    let ep = episode_data(0xD00D);
+    let mut router = start_router(1);
+    let sid = router.create_session_full(4, 16, Distance::L1, ClassifierBackend::Hdc).unwrap();
+    for class in 0..4 {
+        router.add_shot_batch(sid, class, ep.shots[class].clone()).unwrap();
+    }
+    router.finish_training(sid).unwrap();
+
+    // every training check panics: the home device dies on the next shot,
+    // and the journal replay kills the rescue device too — the session is
+    // lost, but the caller gets a clean error, never a hang or a panic
+    {
+        let _s = failpoint::armed_scope("device.train=panic-every-n:1").unwrap();
+        let err = router.add_shot(sid, 0, ep.shots[0][0].clone()).unwrap_err().to_string();
+        assert!(!err.is_empty());
+    }
+    assert_eq!(router.health(0), DeviceHealth::Dead);
+    assert_eq!(router.health(1), DeviceHealth::Dead);
+    assert_eq!(router.metrics().device_failures, 2);
+    assert_eq!(router.metrics().sessions_replaced, 0, "nowhere to re-place");
+    // the lost session routes as unknown, and nothing can be created
+    assert!(router.query(sid, ep.queries[0].clone(), None).is_err());
+    assert!(router.create_session(2, 4).is_err(), "no live devices");
+
+    // revive: Probation until the first success, then Healthy again
+    assert!(router.revive(0).is_ok());
+    assert_eq!(router.health(0), DeviceHealth::Probation);
+    assert!(router.revive(0).is_err(), "only Dead devices can be revived");
+    let sid2 = router.create_session(2, 4).unwrap();
+    assert_eq!(router.health(0), DeviceHealth::Healthy);
+    router.add_shot_batch(sid2, 0, ep.shots[0].clone()).unwrap();
+    router.add_shot_batch(sid2, 1, ep.shots[1].clone()).unwrap();
+    router.finish_training(sid2).unwrap();
+    assert!(router.query(sid2, ep.queries[0].clone(), None).is_ok());
+}
+
+#[test]
+fn double_close_and_unknown_sessions_stay_clean_errors() {
+    let _g = faults_lock();
+    let _scope = failpoint::armed_scope("").unwrap();
+    let mut router = start_router(1);
+    let sid = router.create_session(2, 4).unwrap();
+    assert_eq!(router.loads().iter().sum::<usize>(), 1);
+    router.close_session(sid).unwrap();
+    assert_eq!(router.loads().iter().sum::<usize>(), 0);
+    let err = router.close_session(sid).unwrap_err().to_string();
+    assert!(err.contains("unknown routed session"), "{err}");
+    assert_eq!(router.loads().iter().sum::<usize>(), 0, "double close never double-decrements");
+    assert!(router.add_shot(999, 0, vec![0.0; 192]).is_err());
+    assert!(router.query_batch(999, vec![], None).is_err());
+    assert_eq!(router.metrics().device_failures, 0, "bad session ids are not device faults");
+}
+
+#[test]
+fn pool_survives_injected_task_panics_and_drop_joins() {
+    let _g = faults_lock();
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    let ran = Arc::new(AtomicUsize::new(0));
+    {
+        // every second pool task panics inside the worker loop's
+        // catch_unwind; the pool must keep serving and its Drop must still
+        // drain queues and join every worker with tasks in flight
+        let _s = failpoint::armed_scope("pool.task=panic-every-n:2").unwrap();
+        let pool = WorkerPool::new(3);
+        for _ in 0..24 {
+            let ran = ran.clone();
+            pool.submit(move || {
+                ran.fetch_add(1, Ordering::AcqRel);
+            });
+        }
+        drop(pool); // drains + joins with panicking tasks still queued
+    }
+    let n = ran.load(Ordering::Acquire);
+    // the hits counter is one atomic across workers, so panic-every-n:2
+    // panics exactly every second drained task regardless of interleaving
+    assert_eq!(n, 12, "exactly half the tasks run, got {n}/24");
+    // the registry is disarmed again: a fresh pool runs everything
+    let pool = WorkerPool::new(2);
+    let ran2 = Arc::new(AtomicUsize::new(0));
+    for _ in 0..8 {
+        let r = ran2.clone();
+        pool.submit(move || {
+            r.fetch_add(1, Ordering::AcqRel);
+        });
+    }
+    drop(pool);
+    assert_eq!(ran2.load(Ordering::Acquire), 8);
+}
+
+#[test]
+fn deadline_bounds_caller_latency_without_killing_the_device() {
+    let _g = faults_lock();
+    let cfg = synthetic_cfg();
+    let coord = Coordinator::start(move || Ok(ComputeEngine::from_config(cfg)), K_SHOT).unwrap();
+    let sid = coord.create_session(2, 4).unwrap();
+    {
+        // 300 ms injected latency on queries vs a 30 ms deadline
+        let _s = failpoint::armed_scope("device.query=latency-ms:300").unwrap();
+        let t0 = Instant::now();
+        let resp = coord
+            .client()
+            .call_deadline(Request::Query { session: sid, image: vec![0.1; 192], ee: None },
+                Duration::from_millis(30));
+        assert!(t0.elapsed() < Duration::from_millis(280), "deadline cut the wait short");
+        match &resp {
+            Response::RetryableError(m) => {
+                assert!(m.contains("deadline"), "{m}");
+                assert!(!resp.is_device_unavailable(), "a slow device is not a dead one");
+            }
+            other => panic!("expected a retryable deadline error, got {other:?}"),
+        }
+    }
+    // the worker finished the stale request in the background and serves on
+    let gen = ImageGen::new(8, 8, 7);
+    let mut rng = Rng::new(7);
+    for class in 0..2 {
+        for _ in 0..K_SHOT {
+            coord.add_shot(sid, class, gen.sample(class, &mut rng)).unwrap();
+        }
+    }
+    coord.finish_training(sid).unwrap();
+    assert!(coord.query(sid, gen.sample(0, &mut rng), None).is_ok());
+}
+
+#[test]
+fn wire_client_redials_through_injected_gateway_write_faults() {
+    let _g = faults_lock();
+    let cfg = synthetic_cfg();
+    let coord = Coordinator::start(move || Ok(ComputeEngine::from_config(cfg)), K_SHOT).unwrap();
+    let gateway = Gateway::bind(coord.client(), &ServingConfig::default()).unwrap();
+    let mut client = WireClient::connect(gateway.local_addr()).unwrap().with_retry(4, 1, 8);
+    {
+        // the gateway drops the connection instead of writing the reply;
+        // call_retry re-dials and the second attempt lands
+        let _s = failpoint::armed_scope("gateway.write=fail-once").unwrap();
+        let resp = client.call_retry(&Request::GetMetrics).unwrap();
+        assert!(matches!(resp, Response::Metrics(_)));
+    }
+    // single-attempt call reports the distinct marker error instead
+    {
+        let _s = failpoint::armed_scope("gateway.write=fail-once").unwrap();
+        let err = client.call(&Request::GetMetrics).unwrap_err();
+        assert!(
+            err.is::<fsl_hdnn::coordinator::gateway::ConnectionLost>(),
+            "wanted ConnectionLost, got: {err}"
+        );
+    }
+    // and the client recovers on the very next plain call (lazy re-dial)
+    let resp = client.call(&Request::GetMetrics).unwrap();
+    assert!(matches!(resp, Response::Metrics(_)));
+}
+
+#[test]
+fn injected_read_faults_drop_the_connection_without_a_reply() {
+    let _g = faults_lock();
+    let cfg = synthetic_cfg();
+    let coord = Coordinator::start(move || Ok(ComputeEngine::from_config(cfg)), K_SHOT).unwrap();
+    let gateway = Gateway::bind(coord.client(), &ServingConfig::default()).unwrap();
+    let mut client = WireClient::connect(gateway.local_addr()).unwrap().with_retry(4, 1, 8);
+    let _s = failpoint::armed_scope("gateway.read=fail-once").unwrap();
+    // the first frame is swallowed server-side (request never executed);
+    // retry re-dials and succeeds — session id 1 proves the dropped frame
+    // never reached the worker (ids are allocated on execution, from 1)
+    let resp = client.call_retry(&Request::CreateSession {
+        n_way: 2,
+        hv_bits: 4,
+        metric: Distance::L1,
+        backend: ClassifierBackend::Hdc,
+    })
+    .unwrap();
+    match resp {
+        Response::SessionCreated { session } => {
+            assert_eq!(session, 1, "the swallowed frame must not have executed");
+        }
+        other => panic!("expected SessionCreated, got {other:?}"),
+    }
+    drop(coord);
+}
+
+#[test]
+fn retryable_errors_surface_through_the_wire_taxonomy() {
+    let _g = faults_lock();
+    let cfg = synthetic_cfg();
+    let coord = Coordinator::start(move || Ok(ComputeEngine::from_config(cfg)), K_SHOT).unwrap();
+    let gateway = Gateway::bind(coord.client(), &ServingConfig::default()).unwrap();
+    let mut client = WireClient::connect(gateway.local_addr()).unwrap().with_retry(3, 1, 4);
+    let sid = client.create_session(2, 4).unwrap();
+    {
+        // an injected device fault crosses the wire as retryable=true and
+        // call_retry absorbs it (second attempt passes: fail-once)
+        let _s = failpoint::armed_scope("device.query=fail-once").unwrap();
+        let resp = client
+            .call_retry(&Request::Query { session: sid, image: vec![0.2; 192], ee: None })
+            .unwrap();
+        // untrained session still classifies (all-zero prototypes) — the
+        // point is the transport recovered, not the prediction
+        assert!(matches!(resp, Response::QueryResult { .. }));
+    }
+    // the convenience wrappers surface retryable errors as plain Errs
+    let _s = failpoint::armed_scope("device.query=fail-once").unwrap();
+    let err = client.query(sid, vec![0.2; 192], None).unwrap_err().to_string();
+    assert!(err.contains("injected"), "{err}");
+}

@@ -198,7 +198,7 @@ fn router_places_and_isolates_sessions() {
         return;
     };
     let (size, _) = model_geometry();
-    let mut router = DeviceRouter::start(2, 2, Placement::LeastLoaded, |_i| {
+    let mut router = DeviceRouter::start(2, 2, Placement::LeastLoaded, move |_i| {
         let d = dir.clone();
         move || ComputeEngine::open(Backend::Native, &d)
     })
@@ -236,7 +236,7 @@ fn router_spills_to_other_device_when_full() {
     let Some(dir) = common::artifacts_or_skip("router_spills_to_other_device_when_full") else {
         return;
     };
-    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, move |_i| {
         let d = dir.clone();
         move || ComputeEngine::open(Backend::Native, &d)
     })
@@ -488,7 +488,7 @@ fn router_routes_class_batches() {
         ..Default::default()
     };
     let par = ParallelConfig { workers: 2, min_batch_per_worker: 1 };
-    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, move |_i| {
         let c = cfg.clone();
         move || Ok(ComputeEngine::from_config(c).with_parallelism(par))
     })
@@ -699,7 +699,7 @@ fn query_batch_error_paths_and_empty_batch() {
 fn router_routes_query_batches() {
     use fsl_hdnn::coordinator::{DeviceRouter, Placement};
     let cfg = synthetic_cfg(false);
-    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, |_i| {
+    let mut router = DeviceRouter::start(2, 2, Placement::RoundRobin, move |_i| {
         let c = cfg.clone();
         move || Ok(ComputeEngine::from_config(c))
     })

@@ -10,9 +10,9 @@
 mod common;
 
 use std::io::Write as _;
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use fsl_hdnn::config::{EeConfig, ModelConfig, ParallelConfig, ServingConfig};
 use fsl_hdnn::coordinator::{wire, Coordinator, Gateway, Request, Response, WireClient};
@@ -425,4 +425,63 @@ fn gateway_stop_is_idempotent_and_leaves_coordinator_alive() {
     });
     // in-process path unaffected
     assert_eq!(coord.metrics().errors, 0);
+}
+
+/// Regression for the shutdown hang: a client that sends a frame header
+/// and then stalls mid-payload used to pin its connection thread inside a
+/// blocking `read_exact`, so `Gateway::stop` never joined. The tick-poll
+/// reader plus the stop-side stream shutdown must bound stop latency even
+/// with a connection parked mid-frame.
+#[test]
+fn gateway_stop_is_not_blocked_by_a_client_stalled_mid_frame() {
+    let coord = start_synthetic(1, 1);
+    let mut gateway = Gateway::bind(coord.client(), &loopback_cfg(64)).unwrap();
+    let mut stalled = TcpStream::connect(gateway.local_addr()).unwrap();
+    // header promises 64 bytes; send only 8 and go quiet
+    stalled.write_all(&64u32.to_be_bytes()).unwrap();
+    stalled.write_all(&[b'{'; 8]).unwrap();
+    stalled.flush().unwrap();
+    // let the accept loop hand the connection to its thread
+    std::thread::sleep(Duration::from_millis(100));
+
+    let t0 = Instant::now();
+    gateway.stop();
+    let took = t0.elapsed();
+    // generous bound: a few read ticks plus thread-join slack, far below
+    // the "hangs forever" failure mode this guards against
+    assert!(took < Duration::from_secs(5), "stop took {took:?} with a stalled client");
+    assert_eq!(coord.metrics().errors, 0, "a stalled client is not a coordinator error");
+}
+
+/// A server that dies between request and reply must surface as the
+/// distinct `ConnectionLost` marker (so retry layers know no reply was
+/// seen), and the client must lazily re-dial on the next call rather than
+/// staying wedged on the dead socket.
+#[test]
+fn wire_client_flags_lost_connections_and_redials() {
+    use fsl_hdnn::coordinator::gateway::ConnectionLost;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        // first connection: read the request, close without replying
+        let (mut s, _) = listener.accept().unwrap();
+        let _ = wire::read_frame(&mut s, CAP).unwrap().expect("request frame");
+        drop(s);
+        // second connection (the re-dial): reply properly
+        let (mut s, _) = listener.accept().unwrap();
+        let _ = wire::read_frame(&mut s, CAP).unwrap().expect("request frame");
+        let reply = wire::encode_response(&Response::SessionClosed { session: 7 });
+        wire::write_frame(&mut s, &reply, CAP).unwrap();
+    });
+
+    let mut wc = WireClient::connect(addr).unwrap();
+    let err = wc.call(&Request::GetMetrics).unwrap_err();
+    assert!(err.is::<ConnectionLost>(), "EOF mid-response must be ConnectionLost, got: {err}");
+    assert!(err.to_string().contains("connection lost"), "{err}");
+    // next call re-dials the remembered address and succeeds
+    match wc.call(&Request::GetMetrics).unwrap() {
+        Response::SessionClosed { session } => assert_eq!(session, 7),
+        other => panic!("expected the fake server's reply, got {other:?}"),
+    }
+    server.join().unwrap();
 }
