@@ -3,7 +3,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: verify build test bench bench-smoke chaos doc fmt clippy artifacts clean
+.PHONY: verify build test bench bench-smoke chaos doc fmt clippy lint miri artifacts clean
 
 ## tier-1 verify: must pass from a clean checkout (artifact-dependent
 ## tests self-skip with a distinct `SKIPPED` line, see DESIGN.md §Test skips)
@@ -48,7 +48,26 @@ fmt:
 	$(CARGO) fmt --all
 
 clippy:
-	$(CARGO) clippy --all-targets
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## fsl-lint: the repo-invariant static analysis pass (DESIGN.md §Static
+## analysis). Walks rust/src, rust/benches, rust/tests and examples/ and
+## enforces the six repo rules (NaN-unsafe sorts, raw spawns, panics in
+## serving modules, wall-clock reads in kernels, unguarded narrowing
+## casts, fail-point/wire-codec registry coverage). Exits non-zero on any
+## unsuppressed violation; suppressions need a justified
+## `lint:allow(<rule>)` comment. Blocking in CI's lint job.
+lint:
+	$(CARGO) run --release --bin fsl_lint
+
+## Miri over the unsafe core: runtime::pool's scope/lifetime transmutes
+## are the only `unsafe` in the tree, so the interpreter run is scoped to
+## the pool + shard-determinism tests to keep wall-clock sane. Needs a
+## nightly toolchain with the miri component:
+##   rustup +nightly component add miri
+miri:
+	MIRIFLAGS=-Zmiri-disable-isolation $(CARGO) +nightly miri test -p fsl-hdnn --lib runtime::pool
+	MIRIFLAGS=-Zmiri-disable-isolation $(CARGO) +nightly miri test -p fsl-hdnn --lib util::parallel
 
 ## AOT compile path: lowers every L2 entrypoint to HLO-text artifacts under
 ## artifacts/ (manifest.json, *.hlo.txt, fe_weights.bin, goldens/). This is

@@ -266,16 +266,21 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- concurrent wire clients ---------------------------------------
+    // scoped join instead of raw spawns (fsl_lint raw-spawn): every client
+    // provably finishes inside this block, so a panicking client surfaces
+    // here instead of leaving a detached thread behind the summary lines
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..clients)
-        .map(|c| {
-            std::thread::spawn(move || {
-                let mut wc = WireClient::connect(addr).expect("connect");
-                run_session(queries, 7000 + c as u64, image_size, |req| wc.call(&req))
+    let runs: Vec<ClientRun> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut wc = WireClient::connect(addr).expect("connect");
+                    run_session(queries, 7000 + c as u64, image_size, |req| wc.call(&req))
+                })
             })
-        })
-        .collect();
-    let runs: Vec<ClientRun> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut all_ms: Vec<f64> = runs.iter().flat_map(|r| r.latencies_ms.iter().copied()).collect();

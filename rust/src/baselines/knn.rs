@@ -39,7 +39,9 @@ impl KnnClassifier {
             .iter()
             .map(|(f, l)| (l1(query, f), *l))
             .collect();
-        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp so a NaN distance (NaN feature value) sorts last as a
+        // worst-possible neighbor instead of panicking the comparator
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut votes = vec![0usize; self.n_classes];
         for (_, l) in dists.iter().take(self.k.min(dists.len())) {
             votes[*l] += 1;
@@ -116,5 +118,24 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_store_panics() {
         KnnClassifier::new(1).predict(&[0.0]);
+    }
+
+    #[test]
+    fn nan_feature_does_not_panic() {
+        // regression: partial_cmp().unwrap() panicked here when any stored
+        // feature produced a NaN distance; now NaN sorts as farthest-away
+        let mut knn = KnnClassifier::new(1);
+        knn.add_example(vec![f32::NAN, 0.0], 1);
+        knn.add_example(vec![0.0, 0.0], 0);
+        assert_eq!(knn.predict(&[0.1, 0.1]), 0, "finite neighbor beats NaN");
+    }
+
+    #[test]
+    fn all_nan_store_does_not_panic() {
+        let mut knn = KnnClassifier::new(3);
+        knn.add_example(vec![f32::NAN], 0);
+        knn.add_example(vec![f32::NAN], 1);
+        let pred = knn.predict(&[0.5]);
+        assert!(pred <= 1, "some stored label, no panic");
     }
 }

@@ -1,0 +1,82 @@
+//! `fsl_lint` — run the repo-invariant static analysis pass over the tree.
+//!
+//! ```text
+//! cargo run --bin fsl_lint              # lint from anywhere inside the repo
+//! cargo run --bin fsl_lint -- --root .. # or point at the repo root
+//! cargo run --bin fsl_lint -- --list    # print the rule table and exit
+//! ```
+//!
+//! Exit status: 0 when clean (justified suppressions are fine), 1 on any
+//! unsuppressed violation, 2 on usage/io errors. CI runs this as the
+//! blocking `lint` job; `make lint` wraps it locally. Rules and escape-hatch
+//! policy are documented in DESIGN.md §Static analysis.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fsl_hdnn::util::lint;
+
+fn main() -> ExitCode {
+    let mut root_arg: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root_arg = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("fsl-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quiet" | "-q" => quiet = true,
+            "--list" => {
+                for r in lint::Rule::ALL {
+                    println!("{}", r.id());
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("fsl-lint: unknown argument `{other}` (flags: --root <dir>, --quiet, --list)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cwd = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("fsl-lint: cannot read current dir: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let Some(root) = lint::find_repo_root(&root_arg.unwrap_or(cwd)) else {
+        eprintln!("fsl-lint: no directory containing rust/src above here; pass --root");
+        return ExitCode::from(2);
+    };
+
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fsl-lint: walking {} failed: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    if !quiet {
+        println!(
+            "fsl-lint: {} files scanned, {} violation(s), {} suppressed (justified)",
+            report.files_scanned,
+            report.violations.len(),
+            report.suppressed.len()
+        );
+    }
+    if report.ok() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

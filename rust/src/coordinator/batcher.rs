@@ -30,8 +30,9 @@ impl<T> ClassBatcher<T> {
         let slot = self.pending.entry(class).or_default();
         slot.push(item);
         if slot.len() >= self.k_shot {
-            let items = self.pending.remove(&class).unwrap();
-            Some(ClassBatch { class, items })
+            // the entry above guarantees the key exists; map instead of
+            // unwrap keeps this serving path structurally panic-free
+            self.pending.remove(&class).map(|items| ClassBatch { class, items })
         } else {
             None
         }

@@ -399,7 +399,13 @@ impl Worker {
                         return Response::Error(e.to_string());
                     }
                 }
-                let st = self.sessions.get(&session).unwrap();
+                // re-borrow after train_full_batch; a missing entry here
+                // means the train path dropped the session, which the
+                // client should see as an error, not a dead worker
+                let Some(st) = self.sessions.get(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("session {session} lost during training"));
+                };
                 self.metrics.record(Op::AddShot, t0.elapsed().as_secs_f64());
                 Response::ShotAccepted {
                     session,
@@ -436,7 +442,10 @@ impl Worker {
                         return Response::Error(e.to_string());
                     }
                 }
-                let st = self.sessions.get(&session).unwrap();
+                let Some(st) = self.sessions.get(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("session {session} lost during training"));
+                };
                 self.metrics.record_batch(Op::AddShot, n, t0.elapsed().as_secs_f64());
                 Response::ShotAccepted {
                     session,
@@ -508,7 +517,11 @@ impl Worker {
                         return Response::Error(e.to_string());
                     }
                 }
-                let shots = self.sessions.get(&session).unwrap().session.shots_seen;
+                let Some(st) = self.sessions.get(&session) else {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("session {session} lost during training"));
+                };
+                let shots = st.session.shots_seen;
                 self.metrics.record(Op::Train, t0.elapsed().as_secs_f64());
                 Response::TrainingDone { session, shots }
             }

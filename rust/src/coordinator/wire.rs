@@ -16,6 +16,12 @@
 //! NaN pixels fails loudly at the boundary instead of corrupting a
 //! session. Session ids and counters are exact below 2^53 (ids are
 //! sequential from 1, so this never binds in practice).
+//!
+//! Panic audit (PR 9, enforced by `fsl_lint`'s `panic-in-serving` rule):
+//! every `unwrap`/`panic!` in this file lives in `#[cfg(test)]`. The
+//! non-test decode path is fully typed — malformed frames, unknown tags,
+//! oversized lengths and non-finite floats all surface as `Err`/`Error`
+//! frames, never as a gateway death.
 
 use std::io::{Read, Write};
 

@@ -265,7 +265,13 @@ impl PackedIdx {
                 *b |= if co % 2 == 0 { v } else { v << 4 };
             }
         }
-        let goff: Vec<u16> = (0..kkc).map(|p| (((p % cin) / ch_sub) * n) as u16).collect();
+        let goff: Vec<u16> = (0..kkc)
+            .map(|p| {
+                let off = ((p % cin) / ch_sub) * n;
+                debug_assert!(u16::try_from(off).is_ok(), "bin offset checked above");
+                off as u16
+            })
+            .collect();
         PackedIdx { cout, k, cin, ch_sub, n, cpb, data, goff }
     }
 

@@ -85,6 +85,8 @@ pub struct PackedClassHvs {
 fn nibble_at(row: &[u8], i: usize) -> i32 {
     let b = row[i / 2];
     let n = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+    // the shift-left/shift-right pair below IS the sign extension, so:
+    // lint:allow(unchecked-narrowing) same-width u8->i8 reinterpret, no bits lost
     (((n << 4) as i8) >> 4) as i32
 }
 
@@ -129,6 +131,7 @@ impl PackedClassHvs {
                 for (c, codes) in quantized.iter().enumerate() {
                     let row = &mut bytes[c * bpr..(c + 1) * bpr];
                     for (i, &code) in codes.iter().enumerate() {
+                        debug_assert!((-8..=7).contains(&code), "4-bit code out of range");
                         let nib = (code as u8) & 0x0F;
                         row[i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
                     }
@@ -136,10 +139,26 @@ impl PackedClassHvs {
                 Store::B4 { bytes_per_row: bpr, bytes }
             }
             5..=8 => Store::B8 {
-                codes: quantized.iter().flat_map(|r| r.iter().map(|&c| c as i8)).collect(),
+                codes: quantized
+                    .iter()
+                    .flat_map(|r| {
+                        r.iter().map(|&c| {
+                            debug_assert!(i8::try_from(c).is_ok(), "8-bit code out of range");
+                            c as i8
+                        })
+                    })
+                    .collect(),
             },
             _ => Store::B16 {
-                codes: quantized.iter().flat_map(|r| r.iter().map(|&c| c as i16)).collect(),
+                codes: quantized
+                    .iter()
+                    .flat_map(|r| {
+                        r.iter().map(|&c| {
+                            debug_assert!(i16::try_from(c).is_ok(), "16-bit code out of range");
+                            c as i16
+                        })
+                    })
+                    .collect(),
             },
         };
         PackedClassHvs { n_classes, d, hv_bits, scales, store }
@@ -178,8 +197,17 @@ impl PackedClassHvs {
         } else {
             Vec::new()
         };
-        let codes16 =
-            if self.hv_bits == 1 { Vec::new() } else { codes.iter().map(|&c| c as i16).collect() };
+        let codes16 = if self.hv_bits == 1 {
+            Vec::new()
+        } else {
+            codes
+                .iter()
+                .map(|&c| {
+                    debug_assert!(i16::try_from(c).is_ok(), "query code exceeds i16");
+                    c as i16
+                })
+                .collect()
+        };
         PackedQuery { d: self.d, hv_bits: self.hv_bits, scale, codes: codes16, deq, words }
     }
 

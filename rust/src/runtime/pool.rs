@@ -27,7 +27,7 @@
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
@@ -61,12 +61,30 @@ pub struct WorkerPool {
     /// tasks submitted but not yet finished, across all queues — the load
     /// signal the serving gateway's admission control reads
     queued: Arc<AtomicUsize>,
+    /// schedule-perturbation seed (tests only): when set, every dispatched
+    /// task sleeps a short seed-derived interval before running, shuffling
+    /// worker completion order deterministically per (seed, submit index)
+    perturb: Option<u64>,
+    /// monotone task counter feeding the perturbation hash
+    task_seq: AtomicU64,
 }
 
 impl WorkerPool {
     /// Spawn `n` workers (clamped to at least 1).
     pub fn new(n: usize) -> Self {
         Self::with_gauge(n, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// A pool whose task *completion order* is deterministically shuffled:
+    /// every dispatched task first sleeps a `splitmix64(seed, index)`-derived
+    /// sub-millisecond interval. The race harness (`tests/sched_perturb.rs`)
+    /// uses this to prove the `shard_map` bit-identity contract holds under
+    /// adversarial schedules, not just the ones the OS happens to produce —
+    /// the dynamic complement to the `raw-spawn` lint rule.
+    pub fn with_perturbation(n: usize, seed: u64) -> Self {
+        let mut pool = Self::new(n);
+        pool.perturb = Some(seed);
+        pool
     }
 
     /// [`WorkerPool::new`] with a caller-owned queue-depth gauge, so an
@@ -104,7 +122,7 @@ impl WorkerPool {
                 WorkerHandle { tx: Some(tx), handle: Some(handle) }
             })
             .collect();
-        WorkerPool { workers, next: AtomicUsize::new(0), queued }
+        WorkerPool { workers, next: AtomicUsize::new(0), queued, perturb: None, task_seq: AtomicU64::new(0) }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -124,6 +142,21 @@ impl WorkerPool {
     }
 
     fn dispatch(&self, task: Task) {
+        let task: Task = match self.perturb {
+            None => task,
+            Some(seed) => {
+                // hash (seed, submit index) to a 0..293 us delay: co-prime
+                // with common timer quanta, long enough to reorder short
+                // tasks, short enough that a 10k-task harness stays fast
+                let k = self.task_seq.fetch_add(1, Ordering::Relaxed);
+                let delay_us =
+                    crate::util::prng::splitmix64_next(seed.wrapping_add(k.wrapping_mul(0x9E37_79B9_7F4A_7C15))) % 293;
+                Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_micros(delay_us));
+                    task();
+                })
+            }
+        };
         self.queued.fetch_add(1, Ordering::AcqRel);
         let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
         let tx = self.workers[i].tx.as_ref().expect("dispatch after shutdown");
@@ -386,6 +419,23 @@ mod tests {
             }
         }
         assert_eq!(ran.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn perturbed_pool_still_runs_every_task_and_drains() {
+        // the perturbation wrapper delays tasks but must not drop, reorder
+        // results (run_scoped joins by slot, not by completion), or wedge
+        // the gauge
+        let pool = WorkerPool::with_perturbation(2, 0xF51D);
+        let mut slots = vec![0usize; 9];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| Box::new(move || *s = i + 1) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(slots, (1..=9).collect::<Vec<_>>());
+        assert_eq!(pool.queue_depth(), 0);
     }
 
     #[test]

@@ -1,0 +1,878 @@
+//! `fsl-lint`: the repo-invariant static analysis pass (DESIGN.md §Static
+//! analysis).
+//!
+//! Zero-dependency, text-level linter that walks `rust/src`, `rust/benches`,
+//! `rust/tests` and `examples/` and enforces the cross-cutting contracts the
+//! code base documents in prose but nothing else checks mechanically:
+//!
+//! | rule id               | invariant                                              |
+//! |-----------------------|--------------------------------------------------------|
+//! | `nan-unsafe-ord`      | float ordering goes through `total_cmp`                |
+//! | `raw-spawn`           | parallelism flows through `WorkerPool` / scoped joins  |
+//! | `panic-in-serving`    | request-serving modules never panic                    |
+//! | `wall-clock-in-kernel`| deterministic kernels read no wall clock               |
+//! | `unchecked-narrowing` | packed hot-path casts carry an adjacent guard          |
+//! | `failpoint-registry`  | fail-point sites and wire variants stay registered     |
+//!
+//! Diagnostics are `file:line: [rule-id] message`; any unsuppressed violation
+//! makes [`Report::ok`] false and the `fsl_lint` binary exit non-zero. A
+//! violation can be suppressed in place with a comment on the same line or
+//! the line above, spelled `lint:allow` + `(<rule-id>) <justification>` —
+//! the justification text is **required**; an allow with nothing after the
+//! closing parenthesis does not suppress.
+//!
+//! This is deliberately a line-oriented scanner, not a real parser: the
+//! rules it enforces are lexical (a call spelling, a cast spelling, a string
+//! literal) and the repo's vendored-offline constraint rules out `syn`. The
+//! scanner does strip comments and mask string/char-literal contents first,
+//! so patterns inside strings or docs never fire, and it tracks the first
+//! `#[cfg(test)]` line so rules that only bind non-test code can skip test
+//! modules.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// The enforced rule set. Stable ids: these appear in diagnostics, allow
+/// comments, DESIGN.md and CI logs, so renaming one is a breaking change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// `partial_cmp().unwrap()` / float `sort_by` outside `total_cmp`.
+    NanUnsafeOrd,
+    /// `std::thread::spawn` outside the sanctioned runtime sites.
+    RawSpawn,
+    /// `unwrap`/`expect`/`panic!`/`unreachable!` in request-serving modules.
+    PanicInServing,
+    /// `Instant::now` / `SystemTime` inside deterministic kernels.
+    WallClockInKernel,
+    /// Bare truncating `as` cast in the packed hot paths without a guard.
+    UncheckedNarrowing,
+    /// Fail-point site registry and wire variant coverage drift.
+    FailpointRegistry,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::NanUnsafeOrd,
+        Rule::RawSpawn,
+        Rule::PanicInServing,
+        Rule::WallClockInKernel,
+        Rule::UncheckedNarrowing,
+        Rule::FailpointRegistry,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::NanUnsafeOrd => "nan-unsafe-ord",
+            Rule::RawSpawn => "raw-spawn",
+            Rule::PanicInServing => "panic-in-serving",
+            Rule::WallClockInKernel => "wall-clock-in-kernel",
+            Rule::UncheckedNarrowing => "unchecked-narrowing",
+            Rule::FailpointRegistry => "failpoint-registry",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == id)
+    }
+}
+
+/// One diagnostic. `line` is 1-based; `file` is repo-relative.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Violation {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+/// Lint result over a file set.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed violations — any entry here fails the run.
+    pub violations: Vec<Violation>,
+    /// Violations silenced by a justified allow comment.
+    pub suppressed: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// A source file handed to the linter: repo-relative path + full text.
+/// Tests construct these in memory; the binary loads them via
+/// [`collect_tree`].
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+// ---------------------------------------------------------------------------
+// Preprocessing: comment stripping + literal masking
+// ---------------------------------------------------------------------------
+
+/// Per-file line views produced by [`preprocess`].
+///
+/// - `scan`: comments stripped AND string/char-literal contents masked to
+///   spaces — the view most rules match against, so a pattern spelled inside
+///   a string or a doc comment never fires.
+/// - `code`: comments stripped, string literals kept verbatim — the view the
+///   fail-point site extractor and the enum parser read.
+/// - `comment`: the comment text of each line — the only place allow
+///   comments are parsed from, so a fixture string containing an allow does
+///   not suppress anything.
+struct FileScan {
+    path: String,
+    scan: Vec<String>,
+    code: Vec<String>,
+    comment: Vec<String>,
+    /// 0-based line index of the first `#[cfg(test)]`; everything from there
+    /// to EOF is treated as test code by the rules that skip tests.
+    test_start: Option<usize>,
+}
+
+impl FileScan {
+    fn in_test(&self, idx: usize) -> bool {
+        self.test_start.is_some_and(|t| idx >= t)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn preprocess(path: &str, text: &str) -> FileScan {
+    #[derive(Clone, Copy)]
+    enum St {
+        Normal,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut scan_lines = Vec::new();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let (mut scan, mut code, mut comment) = (Vec::new(), Vec::new(), Vec::new());
+    let mut st = St::Normal;
+    let mut esc = false; // inside Str: previous byte was a backslash
+    let mut prev: u8 = b' '; // last byte emitted in Normal state
+    let mut i = 0usize;
+
+    macro_rules! flush {
+        () => {{
+            scan_lines.push(String::from_utf8_lossy(&scan).into_owned());
+            code_lines.push(String::from_utf8_lossy(&code).into_owned());
+            comment_lines.push(String::from_utf8_lossy(&comment).into_owned());
+            scan.clear();
+            code.clear();
+            comment.clear();
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        match st {
+            St::Normal => {
+                if c == b'\n' {
+                    flush!();
+                    prev = b' ';
+                    i += 1;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r'))
+                    && !is_ident(prev)
+                {
+                    // Possible raw-string opener: r"..." / r#"..."# / br"...".
+                    let mut j = i + if c == b'b' { 2 } else { 1 };
+                    let mut hashes = 0u32;
+                    while j < n && b[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'"' {
+                        for &p in &b[i..=j] {
+                            scan.push(p);
+                            code.push(p);
+                        }
+                        st = St::RawStr(hashes);
+                        prev = b'"';
+                        i = j + 1;
+                    } else {
+                        // raw identifier (r#type) or plain ident char
+                        scan.push(c);
+                        code.push(c);
+                        prev = c;
+                        i += 1;
+                    }
+                } else if c == b'"' {
+                    scan.push(c);
+                    code.push(c);
+                    st = St::Str;
+                    esc = false;
+                    prev = c;
+                    i += 1;
+                } else if c == b'\'' {
+                    // Char literal vs lifetime. 'x' and b'x' are 3 bytes
+                    // after the opening quote's position; escapes ('\n',
+                    // '\\', '\u{FFFD}') close within a short window.
+                    let close = if i + 1 < n && b[i + 1] == b'\\' {
+                        (i + 3..n.min(i + 14)).find(|&j| b[j] == b'\'')
+                    } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                        Some(i + 2)
+                    } else {
+                        None
+                    };
+                    match close {
+                        Some(e) => {
+                            scan.push(b'\'');
+                            code.push(b'\'');
+                            for &p in &b[i + 1..e] {
+                                scan.push(b' ');
+                                code.push(p);
+                            }
+                            scan.push(b'\'');
+                            code.push(b'\'');
+                            prev = b'\'';
+                            i = e + 1;
+                        }
+                        None => {
+                            // lifetime ('a, 'static) — emit and move on
+                            scan.push(c);
+                            code.push(c);
+                            prev = c;
+                            i += 1;
+                        }
+                    }
+                } else {
+                    scan.push(c);
+                    code.push(c);
+                    prev = c;
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                if c == b'\n' {
+                    flush!();
+                    st = St::Normal;
+                    prev = b' ';
+                } else {
+                    comment.push(c);
+                }
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == b'\n' {
+                    flush!();
+                    i += 1;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    st = if depth == 1 { St::Normal } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if esc {
+                    // the escaped byte, whatever it is (incl. a quote or a
+                    // line-continuation newline), stays inside the string
+                    if c == b'\n' {
+                        flush!();
+                    } else {
+                        scan.push(b' ');
+                        code.push(c);
+                    }
+                    esc = false;
+                    i += 1;
+                } else if c == b'\\' {
+                    scan.push(b' ');
+                    code.push(c);
+                    esc = true;
+                    i += 1;
+                } else if c == b'"' {
+                    scan.push(c);
+                    code.push(c);
+                    st = St::Normal;
+                    prev = c;
+                    i += 1;
+                } else if c == b'\n' {
+                    flush!();
+                    i += 1;
+                } else {
+                    scan.push(b' ');
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                let h = hashes as usize;
+                if c == b'"' && i + h < n && b[i + 1..=i + h].iter().all(|&p| p == b'#') {
+                    for &p in &b[i..=i + h] {
+                        scan.push(p);
+                        code.push(p);
+                    }
+                    st = St::Normal;
+                    prev = b'#';
+                    i += h + 1;
+                } else if c == b'\n' {
+                    flush!();
+                    i += 1;
+                } else {
+                    scan.push(b' ');
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !scan.is_empty() || !code.is_empty() || !comment.is_empty() {
+        flush!();
+    }
+
+    let test_start = scan_lines.iter().position(|l| l.contains("#[cfg(test)]"));
+    FileScan { path: path.to_string(), scan: scan_lines, code: code_lines, comment: comment_lines, test_start }
+}
+
+/// Count occurrences of `pat` in `text` where the byte after the match is
+/// not an identifier byte — so `Request::Query` does not also count every
+/// `Request::QueryBatch`.
+fn count_ident_bounded(text: &str, pat: &str) -> usize {
+    let bytes = text.as_bytes();
+    let mut count = 0;
+    let mut from = 0;
+    while let Some(p) = text[from..].find(pat) {
+        let end = from + p + pat.len();
+        if end >= bytes.len() || !is_ident(bytes[end]) {
+            count += 1;
+        }
+        from = end;
+    }
+    count
+}
+
+// ---------------------------------------------------------------------------
+// Allow comments
+// ---------------------------------------------------------------------------
+
+struct Allow {
+    rule: Rule,
+    /// 0-based line the comment sits on.
+    line: usize,
+    /// True when text follows the closing parenthesis — the justification.
+    justified: bool,
+}
+
+fn parse_allows(fs: &FileScan) -> Vec<Allow> {
+    // Built by concatenation so this file's own source never contains the
+    // marker and cannot suppress anything when the linter scans itself.
+    let marker: String = ["lint:", "allow("].concat();
+    let mut allows = Vec::new();
+    for (idx, text) in fs.comment.iter().enumerate() {
+        let mut from = 0;
+        while let Some(p) = text[from..].find(&marker) {
+            let ids_start = from + p + marker.len();
+            let rest = &text[ids_start..];
+            let Some(close) = rest.find(')') else { break };
+            let justified = !rest[close + 1..].trim().is_empty();
+            for id in rest[..close].split(',') {
+                if let Some(rule) = Rule::from_id(id.trim()) {
+                    allows.push(Allow { rule, line: idx, justified });
+                }
+            }
+            from = ids_start + close;
+        }
+    }
+    allows
+}
+
+// ---------------------------------------------------------------------------
+// Rule passes
+// ---------------------------------------------------------------------------
+
+/// Paths whose non-test code must never panic: one worker death kills every
+/// session pinned to it, so these modules return `Response::Error` instead.
+const SERVING_FILES: [&str; 6] = [
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/gateway.rs",
+    "rust/src/coordinator/wire.rs",
+    "rust/src/coordinator/session.rs",
+    "rust/src/coordinator/batcher.rs",
+];
+
+/// The only files allowed to call `std::thread::spawn`: the worker pool
+/// itself, the gateway's per-connection accept loop, and the coordinator's
+/// event-loop thread (`Coordinator::start`). Everything else must use
+/// `runtime::pool` (determinism contract) or `std::thread::scope`.
+const SPAWN_ALLOWLIST: [&str; 3] = [
+    "rust/src/runtime/pool.rs",
+    "rust/src/coordinator/gateway.rs",
+    "rust/src/coordinator/server.rs",
+];
+
+/// Deterministic-kernel directories: replay-based recovery (DESIGN.md
+/// §Fault model) only holds if these never read a wall clock.
+const KERNEL_DIRS: [&str; 3] = ["rust/src/fe/", "rust/src/hdc/", "rust/src/classifier/"];
+
+/// Packed hot paths where a truncating cast needs an adjacent guard.
+const NARROWING_FILES: [&str; 2] = ["rust/src/hdc/packed.rs", "rust/src/fe/conv.rs"];
+
+fn is_serving(path: &str) -> bool {
+    SERVING_FILES.contains(&path) || path.starts_with("rust/src/classifier/")
+}
+
+fn rule_nan_unsafe_ord(fs: &FileScan, out: &mut Vec<Violation>) {
+    for (idx, line) in fs.scan.iter().enumerate() {
+        if !line.contains("partial_cmp") || line.contains("total_cmp") {
+            continue;
+        }
+        let sorted = ["sort_by", "sort_unstable_by", "max_by", "min_by"]
+            .iter()
+            .any(|p| line.contains(p));
+        if sorted || line.contains(".unwrap()") {
+            out.push(Violation {
+                rule: Rule::NanUnsafeOrd,
+                file: fs.path.clone(),
+                line: idx + 1,
+                msg: "NaN-unsafe float ordering via partial_cmp; use total_cmp \
+                      (see util/timer.rs percentile for the idiom)"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn rule_raw_spawn(fs: &FileScan, out: &mut Vec<Violation>) {
+    let in_scope = fs.path.starts_with("rust/src/") || fs.path.starts_with("examples/");
+    if !in_scope || SPAWN_ALLOWLIST.contains(&fs.path.as_str()) {
+        return;
+    }
+    for (idx, line) in fs.scan.iter().enumerate() {
+        if fs.in_test(idx) {
+            break;
+        }
+        if line.contains("thread::spawn(") || line.contains("thread::Builder") {
+            out.push(Violation {
+                rule: Rule::RawSpawn,
+                file: fs.path.clone(),
+                line: idx + 1,
+                msg: "raw thread spawn outside the sanctioned runtime sites; route \
+                      work through runtime::pool::WorkerPool or std::thread::scope"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn rule_panic_in_serving(fs: &FileScan, out: &mut Vec<Violation>) {
+    if !is_serving(&fs.path) {
+        return;
+    }
+    const PATTERNS: [&str; 6] =
+        [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    for (idx, line) in fs.scan.iter().enumerate() {
+        if fs.in_test(idx) {
+            break;
+        }
+        for p in PATTERNS {
+            if line.contains(p) {
+                out.push(Violation {
+                    rule: Rule::PanicInServing,
+                    file: fs.path.clone(),
+                    line: idx + 1,
+                    msg: format!(
+                        "`{}` in a request-serving module; a panic here kills a worker \
+                         and every session pinned to it — return Response::Error",
+                        p.trim_start_matches('.')
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+fn rule_wall_clock_in_kernel(fs: &FileScan, out: &mut Vec<Violation>) {
+    if !KERNEL_DIRS.iter().any(|d| fs.path.starts_with(d)) {
+        return;
+    }
+    for (idx, line) in fs.scan.iter().enumerate() {
+        if fs.in_test(idx) {
+            break;
+        }
+        if line.contains("Instant::now") || line.contains("SystemTime") {
+            out.push(Violation {
+                rule: Rule::WallClockInKernel,
+                file: fs.path.clone(),
+                line: idx + 1,
+                msg: "wall-clock read inside a deterministic kernel breaks replay \
+                      recovery; time at the coordinator or bench layer instead"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn rule_unchecked_narrowing(fs: &FileScan, out: &mut Vec<Violation>) {
+    if !NARROWING_FILES.contains(&fs.path.as_str()) {
+        return;
+    }
+    const CASTS: [&str; 4] = [" as u8", " as i8", " as u16", " as i16"];
+    const GUARDS: [&str; 4] = ["debug_assert", "try_from", "TryFrom", "assert!"];
+    for (idx, line) in fs.scan.iter().enumerate() {
+        if fs.in_test(idx) {
+            break;
+        }
+        let cast = CASTS.iter().any(|p| count_ident_bounded(line, p) > 0);
+        if !cast {
+            continue;
+        }
+        let lo = idx.saturating_sub(2);
+        let guarded =
+            fs.scan[lo..=idx].iter().any(|l| GUARDS.iter().any(|g| l.contains(g)));
+        if !guarded {
+            out.push(Violation {
+                rule: Rule::UncheckedNarrowing,
+                file: fs.path.clone(),
+                line: idx + 1,
+                msg: "bare truncating cast in a packed hot path; add a debug_assert \
+                      or try_from within two lines (or a justified allow)"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 6, part 1: every literal fail-point site used in `rust/src` must be
+/// in the registry's KNOWN list, and every KNOWN site must occur as a string
+/// literal at some call/definition site outside the registry.
+/// Part 2: every `Request`/`Response` variant must be referenced at least
+/// twice (encode + decode) in `wire.rs` non-test code.
+fn rule_failpoint_registry(scans: &[FileScan], out: &mut Vec<Violation>) {
+    const FP_PATH: &str = "rust/src/util/failpoint.rs";
+    if let Some(fp) = scans.iter().find(|f| f.path == FP_PATH) {
+        let mut known: Vec<String> = Vec::new();
+        let mut known_line = 1;
+        if let Some(start) = fp.code.iter().position(|l| l.contains("const KNOWN")) {
+            known_line = start + 1;
+            for line in &fp.code[start..] {
+                known.extend(quoted_strings(line));
+                // "];" ends the declaration; a bare ']' also occurs in the
+                // `&[&str]` type on the first line, so don't stop on that
+                if line.contains("];") {
+                    break;
+                }
+            }
+        }
+        // part 1a: used sites must be registered
+        let check_pat: String = ["failpoint::", "check(\""].concat();
+        for fs in scans.iter().filter(|f| f.path.starts_with("rust/src/") && f.path != FP_PATH) {
+            for (idx, line) in fs.code.iter().enumerate() {
+                if fs.in_test(idx) {
+                    break;
+                }
+                let mut from = 0;
+                while let Some(p) = line[from..].find(&check_pat) {
+                    let site_start = from + p + check_pat.len();
+                    let Some(len) = line[site_start..].find('"') else { break };
+                    let site = &line[site_start..site_start + len];
+                    if !known.iter().any(|k| k == site) {
+                        out.push(Violation {
+                            rule: Rule::FailpointRegistry,
+                            file: fs.path.clone(),
+                            line: idx + 1,
+                            msg: format!(
+                                "fail-point site \"{site}\" is not in util::failpoint's \
+                                 KNOWN registry"
+                            ),
+                        });
+                    }
+                    from = site_start + len;
+                }
+            }
+        }
+        // part 1b: registered sites must have a literal somewhere in src
+        for site in &known {
+            let needle = format!("\"{site}\"");
+            let used = scans.iter().any(|fs| {
+                fs.path.starts_with("rust/src/")
+                    && fs.path != FP_PATH
+                    && fs.code.iter().enumerate().any(|(idx, l)| !fs.in_test(idx) && l.contains(&needle))
+            });
+            if !used {
+                out.push(Violation {
+                    rule: Rule::FailpointRegistry,
+                    file: FP_PATH.into(),
+                    line: known_line,
+                    msg: format!(
+                        "registry site \"{site}\" has no literal call site under rust/src \
+                         — dead registry entry or a site renamed without updating KNOWN"
+                    ),
+                });
+            }
+        }
+    }
+
+    // part 2: wire coverage of every Request/Response variant
+    let req = scans.iter().find(|f| f.path == "rust/src/coordinator/request.rs");
+    let wire = scans.iter().find(|f| f.path == "rust/src/coordinator/wire.rs");
+    if let (Some(req), Some(wire)) = (req, wire) {
+        let nontest_end = wire.test_start.unwrap_or(wire.scan.len());
+        let wire_text = wire.scan[..nontest_end].join("\n");
+        for (enum_name, variants) in
+            [("Request", enum_variants(req, "Request")), ("Response", enum_variants(req, "Response"))]
+        {
+            for v in variants {
+                let pat = format!("{enum_name}::{v}");
+                let hits = count_ident_bounded(&wire_text, &pat);
+                if hits < 2 {
+                    out.push(Violation {
+                        rule: Rule::FailpointRegistry,
+                        file: wire.path.clone(),
+                        line: 1,
+                        msg: format!(
+                            "{pat} appears {hits}x in wire.rs non-test code; every \
+                             variant needs an encode arm and a decode arm"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Double-quoted substrings of a comment-stripped code line.
+fn quoted_strings(line: &str) -> Vec<String> {
+    line.split('"').skip(1).step_by(2).map(str::to_string).collect()
+}
+
+/// Variant names of `pub enum <name>` in a file, assuming the repo style of
+/// one variant declaration per line (request.rs holds to this).
+fn enum_variants(fs: &FileScan, name: &str) -> Vec<String> {
+    let header = format!("enum {name} ");
+    let Some(start) = fs
+        .scan
+        .iter()
+        .position(|l| l.contains(&header) || l.trim_end().ends_with(&format!("enum {name}")))
+    else {
+        return Vec::new();
+    };
+    let mut variants = Vec::new();
+    for line in &fs.scan[start + 1..] {
+        let t = line.trim();
+        if t == "}" {
+            break;
+        }
+        let ident: String = t.bytes().take_while(|&b| is_ident(b)).map(char::from).collect();
+        if ident.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            variants.push(ident);
+        }
+    }
+    variants
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Run every rule over a file set and fold in allow comments.
+pub fn lint_files(files: &[SourceFile]) -> Report {
+    let scans: Vec<FileScan> = files.iter().map(|f| preprocess(&f.path, &f.text)).collect();
+    let allows: HashMap<&str, Vec<Allow>> =
+        scans.iter().map(|fs| (fs.path.as_str(), parse_allows(fs))).collect();
+
+    let mut raw = Vec::new();
+    for fs in &scans {
+        rule_nan_unsafe_ord(fs, &mut raw);
+        rule_raw_spawn(fs, &mut raw);
+        rule_panic_in_serving(fs, &mut raw);
+        rule_wall_clock_in_kernel(fs, &mut raw);
+        rule_unchecked_narrowing(fs, &mut raw);
+    }
+    rule_failpoint_registry(&scans, &mut raw);
+
+    let mut report = Report { files_scanned: files.len(), ..Report::default() };
+    for mut v in raw {
+        let line0 = v.line - 1;
+        let hit = allows.get(v.file.as_str()).into_iter().flatten().find(|a| {
+            a.rule == v.rule && (a.line == line0 || a.line + 1 == line0)
+        });
+        match hit {
+            Some(a) if a.justified => report.suppressed.push(v),
+            Some(_) => {
+                v.msg.push_str(" (allow comment present but carries no justification)");
+                report.violations.push(v);
+            }
+            None => report.violations.push(v),
+        }
+    }
+    report.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report.suppressed.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report
+}
+
+/// Load every `.rs` file under the linted subtrees of `root`.
+pub fn collect_tree(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    for sub in ["rust/src", "rust/benches", "rust/tests", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, root, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path).to_string_lossy().into_owned();
+            out.push(SourceFile { path: rel, text: fs::read_to_string(&path)? });
+        }
+    }
+    Ok(())
+}
+
+/// Ascend from `start` to the directory containing `rust/src` — works from
+/// the repo root, from `rust/`, and from wherever CI invokes the binary.
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.canonicalize().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Convenience: collect + lint in one call (the binary and the self-check
+/// test share this path).
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    Ok(lint_files(&collect_tree(root)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(path: &str, text: &str) -> FileScan {
+        preprocess(path, text)
+    }
+
+    #[test]
+    fn masker_strips_comments_and_masks_strings() {
+        let fs = scan_one(
+            "rust/src/x.rs",
+            "let a = \"partial_cmp\"; // partial_cmp note\nlet b = 1;\n",
+        );
+        assert!(!fs.scan[0].contains("partial_cmp"), "string content must be masked");
+        assert!(fs.code[0].contains("partial_cmp"), "code view keeps strings");
+        assert!(fs.comment[0].contains("partial_cmp note"));
+        assert_eq!(fs.scan[1].trim(), "let b = 1;");
+    }
+
+    #[test]
+    fn masker_handles_char_literals_and_lifetimes() {
+        let fs = scan_one(
+            "rust/src/x.rs",
+            "fn f<'a>(s: &'a str) -> char { if s.is_empty() { '\\\\' } else { 'x' } }\n",
+        );
+        // the lifetime must not open a string and swallow the rest
+        assert!(fs.scan[0].contains("is_empty"));
+        assert!(fs.scan[0].contains('{'));
+    }
+
+    #[test]
+    fn masker_handles_raw_strings_and_escaped_quotes() {
+        let src = "let a = r#\"thread::spawn(\"#;\nlet b = \"say \\\"hi\\\" now\";\nlet c = 2;\n";
+        let fs = scan_one("rust/src/x.rs", src);
+        assert!(!fs.scan[0].contains("thread::spawn"));
+        assert!(!fs.scan[1].contains("hi"));
+        assert_eq!(fs.scan[2].trim(), "let c = 2;");
+    }
+
+    #[test]
+    fn masker_tracks_multiline_strings() {
+        let src = "let s = \"line one \\\n    line two\";\nlet t = 3;\n";
+        let fs = scan_one("rust/src/x.rs", src);
+        assert!(!fs.scan[1].contains("line two"));
+        assert_eq!(fs.scan[2].trim(), "let t = 3;");
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests { }\n";
+        let fs = scan_one("rust/src/x.rs", src);
+        assert_eq!(fs.test_start, Some(1));
+        assert!(!fs.in_test(0));
+        assert!(fs.in_test(2));
+    }
+
+    #[test]
+    fn ident_bounded_counting() {
+        let text = "Request::Query Request::QueryBatch Request::Query(";
+        assert_eq!(count_ident_bounded(text, "Request::Query"), 2);
+        assert_eq!(count_ident_bounded(text, "Request::QueryBatch"), 1);
+    }
+
+    #[test]
+    fn enum_variant_parse() {
+        let src = "pub enum Request {\n    A { x: usize },\n    BLong(Vec<u8>),\n    C,\n}\n";
+        let fs = scan_one("rust/src/coordinator/request.rs", src);
+        assert_eq!(enum_variants(&fs, "Request"), vec!["A", "BLong", "C"]);
+    }
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::from_id(r.id()), Some(r));
+        }
+        assert_eq!(Rule::from_id("no-such-rule"), None);
+    }
+
+    #[test]
+    fn allow_requires_justification() {
+        let viol = "rust/src/coordinator/session.rs";
+        let bad = "fn f(x: Option<u32>) -> u32 {\n    // lint:".to_string()
+            + "allow(panic-in-serving)\n    x.unwrap()\n}\n";
+        let good = bad.replace("serving)", "serving) checked non-empty by caller");
+        let r = lint_files(&[SourceFile { path: viol.into(), text: bad }]);
+        assert_eq!(r.violations.len(), 1, "bare allow must not suppress");
+        assert!(r.violations[0].msg.contains("justification"));
+        let r = lint_files(&[SourceFile { path: viol.into(), text: good }]);
+        assert!(r.ok(), "justified allow suppresses: {:?}", r.violations);
+        assert_eq!(r.suppressed.len(), 1);
+    }
+}

@@ -9,6 +9,7 @@ pub mod bench_log;
 pub mod bf16;
 pub mod failpoint;
 pub mod json;
+pub mod lint;
 pub mod parallel;
 pub mod prng;
 pub mod stats;

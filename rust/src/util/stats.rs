@@ -18,12 +18,15 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+/// NaN-robust like `util::timer`: NaN samples are dropped before ranking
+/// (a NaN latency must not poison the sort order or panic), and an
+/// all-NaN/empty input yields 0.0 like the other empty-input helpers here.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -130,5 +133,20 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[1.0]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // regression for the PR 2/PR 4 bug class: partial_cmp().unwrap()
+        // panicked the moment a NaN latency reached a percentile sort
+        let xs = [f64::NAN, 10.0, f64::NAN, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_all_nan_is_zero() {
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), 0.0);
     }
 }

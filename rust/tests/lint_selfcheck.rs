@@ -1,0 +1,297 @@
+//! Self-check suite for `fsl_lint` (DESIGN.md §Static analysis): one tiny
+//! violating fixture per rule asserting detection, allow fixtures asserting
+//! suppression (with the justification requirement), allowlist fixtures for
+//! the sanctioned spawn sites, and — the CI gate — a run over the real tree
+//! asserting zero unsuppressed violations.
+//!
+//! Fixtures are in-memory [`SourceFile`]s with synthetic repo-relative
+//! paths, so path-scoped rules (serving modules, kernel dirs, packed hot
+//! paths) can be exercised without touching the disk tree.
+
+use std::path::Path;
+
+use fsl_hdnn::util::lint::{lint_files, lint_tree, Report, Rule, SourceFile};
+
+fn sf(path: &str, text: &str) -> SourceFile {
+    SourceFile { path: path.into(), text: text.into() }
+}
+
+fn lint_one(path: &str, text: &str) -> Report {
+    lint_files(&[sf(path, text)])
+}
+
+fn hits(report: &Report, rule: Rule) -> usize {
+    report.violations.iter().filter(|v| v.rule == rule).count()
+}
+
+// -- nan-unsafe-ord ---------------------------------------------------------
+
+#[test]
+fn detects_nan_unsafe_sorts_anywhere() {
+    let bad = r#"
+fn p(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#;
+    let r = lint_one("rust/src/data/metrics.rs", bad);
+    assert_eq!(hits(&r, Rule::NanUnsafeOrd), 1, "{:?}", r.violations);
+
+    // bare partial_cmp().unwrap() without a sort is still a violation
+    let bad2 = "fn m(a: f32, b: f32) -> std::cmp::Ordering { a.partial_cmp(&b).unwrap() }\n";
+    assert_eq!(hits(&lint_one("rust/benches/x.rs", bad2), Rule::NanUnsafeOrd), 1);
+
+    // total_cmp is the sanctioned idiom
+    let good = "fn p(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+    assert!(lint_one("rust/src/data/metrics.rs", good).ok());
+}
+
+#[test]
+fn justified_allow_suppresses_nan_rule() {
+    let src = "\
+// lint:allow(nan-unsafe-ord) inputs proven finite three lines up
+fn p(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }
+";
+    let r = lint_one("rust/src/data/metrics.rs", src);
+    assert!(r.ok(), "{:?}", r.violations);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+// -- raw-spawn --------------------------------------------------------------
+
+#[test]
+fn detects_raw_spawn_outside_allowlist() {
+    let bad = "fn go() { std::thread::spawn(move || {}); }\n";
+    assert_eq!(hits(&lint_one("rust/src/data/loader.rs", bad), Rule::RawSpawn), 1);
+    assert_eq!(hits(&lint_one("examples/my_tool.rs", bad), Rule::RawSpawn), 1);
+    let builder = "fn go() { std::thread::Builder::new().spawn(move || {}); }\n";
+    assert_eq!(hits(&lint_one("rust/src/sim/run.rs", builder), Rule::RawSpawn), 1);
+}
+
+#[test]
+fn sanctioned_spawn_sites_are_allowlisted() {
+    // the three sanctioned sites in the real tree: the worker pool's own
+    // threads, the gateway's accept/connection threads, and the
+    // coordinator's event-loop thread (server.rs)
+    let spawn = "fn go() { std::thread::spawn(move || {}); }\n";
+    for path in [
+        "rust/src/runtime/pool.rs",
+        "rust/src/coordinator/gateway.rs",
+        "rust/src/coordinator/server.rs",
+    ] {
+        let r = lint_files(&[sf(path, spawn)]);
+        assert_eq!(hits(&r, Rule::RawSpawn), 0, "{path} is sanctioned");
+    }
+    // scoped joins are structured concurrency — never flagged (this is
+    // what examples/load_gen.rs uses for its client threads)
+    let scoped = "fn go() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+    assert!(lint_one("examples/load_gen.rs", scoped).ok());
+    // test modules may spawn freely
+    let in_test = "#[cfg(test)]\nmod t { fn go() { std::thread::spawn(|| {}); } }\n";
+    assert!(lint_one("rust/src/data/loader.rs", in_test).ok());
+}
+
+// -- panic-in-serving -------------------------------------------------------
+
+#[test]
+fn detects_panics_in_serving_modules() {
+    let cases = [
+        "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        "fn f(x: Option<u32>) -> u32 { x.expect(\"present\") }\n",
+        "fn f() { panic!(\"boom\"); }\n",
+        "fn f() { unreachable!(); }\n",
+    ];
+    for bad in cases {
+        let r = lint_one("rust/src/coordinator/session.rs", bad);
+        assert_eq!(hits(&r, Rule::PanicInServing), 1, "snippet: {bad:?}");
+        let r = lint_one("rust/src/classifier/ldc.rs", bad);
+        assert_eq!(hits(&r, Rule::PanicInServing), 1, "classifier scope: {bad:?}");
+    }
+    // the same code outside serving modules is not this rule's business
+    let r = lint_one("rust/src/experiments/fig3.rs", cases[0]);
+    assert_eq!(hits(&r, Rule::PanicInServing), 0);
+    // test modules inside serving files are exempt
+    let in_test = "#[cfg(test)]\nmod t { fn f(x: Option<u32>) -> u32 { x.unwrap() } }\n";
+    assert!(lint_one("rust/src/coordinator/wire.rs", in_test).ok());
+}
+
+#[test]
+fn allow_without_justification_does_not_suppress() {
+    let bare = "\
+// lint:allow(panic-in-serving)
+fn f(x: Option<u32>) -> u32 { x.unwrap() }
+";
+    let r = lint_one("rust/src/coordinator/router.rs", bare);
+    assert_eq!(r.violations.len(), 1, "bare allow must not count");
+    assert!(r.violations[0].msg.contains("justification"), "{}", r.violations[0].msg);
+
+    let justified = "\
+// lint:allow(panic-in-serving) key inserted by the entry() call above
+fn f(x: Option<u32>) -> u32 { x.unwrap() }
+";
+    let r = lint_one("rust/src/coordinator/router.rs", justified);
+    assert!(r.ok(), "{:?}", r.violations);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+// -- wall-clock-in-kernel ---------------------------------------------------
+
+#[test]
+fn detects_wall_clock_in_kernels() {
+    let bad = "fn conv() { let t0 = std::time::Instant::now(); let _ = t0; }\n";
+    for path in ["rust/src/fe/conv.rs", "rust/src/hdc/encode.rs", "rust/src/classifier/ldc.rs"] {
+        assert_eq!(hits(&lint_one(path, bad), Rule::WallClockInKernel), 1, "{path}");
+    }
+    let sys = "fn now() -> std::time::SystemTime { std::time::SystemTime::now() }\n";
+    assert_eq!(hits(&lint_one("rust/src/fe/stages.rs", sys), Rule::WallClockInKernel), 1);
+    // the coordinator layer is where timing belongs
+    assert!(lint_one("rust/src/coordinator/server.rs", bad).ok());
+    // kernel tests may time themselves
+    let in_test = "#[cfg(test)]\nmod t { fn f() { let _ = std::time::Instant::now(); } }\n";
+    assert!(lint_one("rust/src/hdc/packed.rs", in_test).ok());
+}
+
+#[test]
+fn justified_allow_suppresses_wall_clock_rule() {
+    let src = "\
+// lint:allow(wall-clock-in-kernel) one-shot self-calibration, result cached
+fn cal() { let _ = std::time::Instant::now(); }
+";
+    let r = lint_one("rust/src/fe/conv.rs", src);
+    assert!(r.ok(), "{:?}", r.violations);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+// -- unchecked-narrowing ----------------------------------------------------
+
+#[test]
+fn detects_unguarded_narrowing_in_packed_paths() {
+    let bad = "fn pack(x: i32) -> u8 { x as u8 }\n";
+    assert_eq!(hits(&lint_one("rust/src/hdc/packed.rs", bad), Rule::UncheckedNarrowing), 1);
+    assert_eq!(hits(&lint_one("rust/src/fe/conv.rs", bad), Rule::UncheckedNarrowing), 1);
+    // a guard within two lines sanctions the cast
+    let guarded = "\
+fn pack(x: i32) -> u8 {
+    debug_assert!(u8::try_from(x).is_ok());
+    x as u8
+}
+";
+    assert!(lint_one("rust/src/hdc/packed.rs", guarded).ok());
+    // the rule binds only in the packed hot paths
+    assert!(lint_one("rust/src/sim/energy.rs", bad).ok());
+    // widening casts are fine anywhere
+    let widen = "fn w(x: u8) -> u32 { x as u32 }\n";
+    assert!(lint_one("rust/src/hdc/packed.rs", widen).ok());
+}
+
+#[test]
+fn justified_allow_suppresses_narrowing_rule() {
+    let src = "\
+fn reinterpret(n: u8) -> i8 {
+    // lint:allow(unchecked-narrowing) same-width reinterpret, no bits lost
+    n as i8
+}
+";
+    let r = lint_one("rust/src/hdc/packed.rs", src);
+    assert!(r.ok(), "{:?}", r.violations);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+// -- failpoint-registry -----------------------------------------------------
+
+fn registry_fixture(known: &str, call_site: &str) -> Vec<SourceFile> {
+    let fp = format!("pub fn check(_s: &str) {{}}\nconst KNOWN: &[&str] = &[{known}];\n");
+    let caller = format!("fn f() {{ crate::util::failpoint::check({call_site}); }}\n");
+    vec![sf("rust/src/util/failpoint.rs", &fp), sf("rust/src/coordinator/server.rs", &caller)]
+}
+
+#[test]
+fn detects_unregistered_failpoint_site() {
+    let files = registry_fixture("\"device.query\"", "\"not.registered\"");
+    let r = lint_files(&files);
+    assert_eq!(hits(&r, Rule::FailpointRegistry), 2, "{:?}", r.violations);
+    let msgs: Vec<&str> = r.violations.iter().map(|v| v.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("not.registered")), "unregistered site flagged");
+    assert!(msgs.iter().any(|m| m.contains("device.query")), "dead registry entry flagged");
+}
+
+#[test]
+fn registered_and_used_sites_are_clean() {
+    let files = registry_fixture("\"device.query\"", "\"device.query\"");
+    let r = lint_files(&files);
+    assert!(r.ok(), "{:?}", r.violations);
+}
+
+#[test]
+fn detects_wire_variant_missing_a_codec_arm() {
+    let request = "\
+pub enum Request {
+    Ping,
+    Pong,
+}
+pub enum Response {
+    Ack,
+}
+";
+    // Ping has encode + decode arms; Pong only encodes; Ack has both
+    let wire = "\
+fn encode(r: &Request) {
+    match r { Request::Ping => {}, Request::Pong => {} }
+}
+fn decode() -> Request { Request::Ping }
+fn codec_resp(x: &Response) { match x { Response::Ack => {} } }
+fn decode_resp() -> Response { Response::Ack }
+";
+    let r = lint_files(&[
+        sf("rust/src/coordinator/request.rs", request),
+        sf("rust/src/coordinator/wire.rs", wire),
+    ]);
+    assert_eq!(hits(&r, Rule::FailpointRegistry), 1, "{:?}", r.violations);
+    assert!(r.violations[0].msg.contains("Request::Pong"), "{}", r.violations[0].msg);
+}
+
+// -- diagnostics & report shape --------------------------------------------
+
+#[test]
+fn diagnostics_carry_file_line_and_rule_id() {
+    let bad = "fn a() {}\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let r = lint_one("rust/src/coordinator/session.rs", bad);
+    assert_eq!(r.violations.len(), 1);
+    let v = &r.violations[0];
+    assert_eq!(v.line, 2, "1-based line of the offending text");
+    let rendered = v.render();
+    assert!(
+        rendered.starts_with("rust/src/coordinator/session.rs:2: [panic-in-serving]"),
+        "{rendered}"
+    );
+}
+
+#[test]
+fn patterns_inside_strings_and_comments_never_fire() {
+    let tricky = r#"
+// this comment mentions partial_cmp().unwrap() and thread::spawn(
+fn f() -> &'static str {
+    "sort_by(|a, b| a.partial_cmp(b).unwrap()) std::thread::spawn("
+}
+"#;
+    let r = lint_one("rust/src/coordinator/session.rs", tricky);
+    assert!(r.ok(), "{:?}", r.violations);
+}
+
+// -- the CI gate: the real tree is clean ------------------------------------
+
+#[test]
+fn real_tree_has_zero_unsuppressed_violations() {
+    // CARGO_MANIFEST_DIR is <repo>/rust; the linted roots hang off <repo>
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root above rust/");
+    let report = lint_tree(root).expect("tree walk");
+    let rendered: Vec<String> = report.violations.iter().map(|v| v.render()).collect();
+    assert!(
+        report.ok(),
+        "fsl-lint found unsuppressed violations in the tree:\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.files_scanned >= 60, "walked {} files — tree roots missing?", report.files_scanned);
+    // the deliberate suppressions (e.g. hdc/packed.rs nibble sign-extend)
+    // are present and all carry written justifications
+    assert!(!report.suppressed.is_empty(), "expected at least one justified suppression");
+}
