@@ -1,9 +1,12 @@
 # FSL-HDnn build/verify entry points. `make verify` is the tier-1 gate.
 
 CARGO ?= cargo
+## nightly invocation for the `simd` feature (std::simd is nightly-only)
+CARGO_NIGHTLY ?= $(CARGO) +nightly
 PYTHON ?= python3
 
-.PHONY: verify build test bench bench-smoke chaos doc fmt clippy lint miri artifacts clean
+.PHONY: verify build test bench bench-smoke bench-smoke-scalar bench-smoke-simd chaos doc fmt \
+	clippy lint miri artifacts clean
 
 ## tier-1 verify: must pass from a clean checkout (artifact-dependent
 ## tests self-skip with a distinct `SKIPPED` line, see DESIGN.md §Test skips)
@@ -23,14 +26,24 @@ bench:
 
 ## bench-harness smoke (what CI runs): tiny budgets, all asserts live,
 ## refreshes BENCH_hotpath.json at the repo root (including the `serving`
-## section from the gateway load generator)
-bench-smoke:
+## section from the gateway load generator). Runs both feature settings:
+## the scalar leg on the default toolchain, then the simd leg on nightly
+## (the lane bit-identity asserts run in both).
+bench-smoke: bench-smoke-scalar bench-smoke-simd
+
+bench-smoke-scalar:
 	$(CARGO) bench --bench hotpath_micro -- --smoke
 	$(CARGO) bench --bench fig05_chsub_sweep -- --smoke
 	$(CARGO) bench --bench fig14_precision_sweep -- --smoke
 	$(CARGO) bench --bench fig14_precision_sweep -- --smoke --backend ldc
 	$(CARGO) bench --bench fig17_early_exit -- --smoke
 	$(CARGO) run --release --example load_gen -- --smoke
+
+## the explicit-vector lane of the two packed fast paths (DESIGN.md §SIMD
+## datapath); needs a nightly toolchain for `--features simd`
+bench-smoke-simd:
+	$(CARGO_NIGHTLY) bench --bench hotpath_micro --features simd -- --smoke
+	$(CARGO_NIGHTLY) bench --bench fig14_precision_sweep --features simd -- --smoke
 
 ## fault-tolerance drills (DESIGN.md §Fault model): the deterministic
 ## chaos battery (device kill mid-episode -> bit-identical recovery,

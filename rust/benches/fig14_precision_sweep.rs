@@ -8,7 +8,9 @@
 //! `sim::hdc_engine` class-bit traffic each precision pays per query.
 //!
 //! Numeric asserts are always live: packed distances must match the
-//! oracle within f32-association tolerance, predictions must agree, and
+//! oracle within f32-association tolerance, predictions must agree, the
+//! simd and chunked-scalar kernel lanes must be bitwise identical per
+//! (bits, metric) case (`packed_*_simd_vs_scalar_speedup` rows), and
 //! the sharded batch path must be bit-identical to serial. `--smoke`
 //! shrinks the timing budgets to ~1 ms so CI exercises the harness
 //! without paying bench time; `--workers N` sets the sharded row's pool
@@ -25,6 +27,7 @@ use fsl_hdnn::sim::hdc_engine::distance_tally;
 use fsl_hdnn::util::args::{arg_flag, arg_str, arg_usize};
 use fsl_hdnn::util::bench_log::BenchLog;
 use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::simd::Lane;
 use fsl_hdnn::util::table::Table;
 use fsl_hdnn::util::timer::{bench, black_box};
 
@@ -138,6 +141,32 @@ fn main() {
             ro.throughput(1.0),
             1,
         );
+        // simd-vs-scalar kernel lanes for this (bits, metric) case,
+        // through the lane-explicit entry point (the global dispatch is
+        // immutable). Every timed case here is lane-bitwise-identical —
+        // asserted before timing. Without the `simd` feature both lanes
+        // run the chunked kernels and the ratio sits at ~1.0.
+        {
+            let packed = m.packed();
+            let pq = packed.quantize_query_for(q, metric);
+            let chunked = packed.distances_in_lane(&pq, metric, Lane::Chunked);
+            let vectored = packed.distances_in_lane(&pq, metric, Lane::Simd);
+            assert_eq!(chunked, vectored, "bits={bits} {metric:?}: lanes diverged");
+            let chunked_name = format!("chunked {bits}b {} 32xD=4096", metric.name());
+            let rc = bench(&chunked_name, budget(150.0), || {
+                black_box(packed.distances_in_lane(black_box(&pq), metric, Lane::Chunked));
+            });
+            println!("{rc}");
+            let simd_name = format!("simd    {bits}b {} 32xD=4096", metric.name());
+            let rs = bench(&simd_name, budget(150.0), || {
+                black_box(packed.distances_in_lane(black_box(&pq), metric, Lane::Simd));
+            });
+            println!("{rs}");
+            log.record_ratio(
+                &format!("packed_{}_b{bits}_simd_vs_scalar_speedup", metric.name()),
+                rc.mean_ns / rs.mean_ns,
+            );
+        }
     }
     t.print();
     println!(

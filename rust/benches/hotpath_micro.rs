@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks (the §Perf targets in DESIGN.md): native cRP
 //! encode throughput, L1 distance search, the packed class-memory HDC
 //! datapath vs the dequantized-f32 path (1-bit hamming popcount, 4-bit
-//! L1), the clustered-conv kernels (reference vs the packed fast path, at
+//! L1), the simd-vs-scalar kernel lanes of both packed fast paths
+//! (DESIGN.md §SIMD datapath; lanes asserted bitwise identical), the
+//! clustered-conv kernels (reference vs the packed fast path, at
 //! ResNet-18 stage geometries), FE forward (dense and clustered, serial
 //! and batch-parallel, `--workers N`, 0 = one per core) and the chip
 //! simulator itself. Not a paper figure —
@@ -13,14 +15,18 @@
 //! whole harness (all asserts still run) without paying bench time.
 
 use fsl_hdnn::config::{ChipConfig, ModelConfig, ParallelConfig};
-use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
+use fsl_hdnn::fe::conv::{
+    clustered_conv2d, clustered_conv2d_lut_in_lane, clustered_conv2d_packed, conv2d, CodebookLut,
+    Tensor3,
+};
 use fsl_hdnn::fe::kmeans::cluster_layer;
-use fsl_hdnn::hdc::{distance, quant, CrpEncoder, Distance, HdcModel};
+use fsl_hdnn::hdc::{distance, quant, CrpEncoder, Distance, HdcModel, PackedClassHvs};
 use fsl_hdnn::runtime::ComputeEngine;
 use fsl_hdnn::sim::Chip;
 use fsl_hdnn::util::args::{arg_flag, arg_usize};
 use fsl_hdnn::util::bench_log::BenchLog;
 use fsl_hdnn::util::prng::Rng;
+use fsl_hdnn::util::simd::{self, Lane};
 use fsl_hdnn::util::timer::{bench, black_box};
 
 fn main() {
@@ -115,6 +121,39 @@ fn main() {
         println!("    -> packed vs f32: {speedup:.2}x (distances checked vs oracle)");
     }
 
+    // --- simd-vs-scalar kernel lanes (ISSUE 10): the packed distance
+    // kernels on the chunked-scalar lane vs the std::simd lane, through
+    // the lane-explicit entry point. Without the `simd` feature both lanes
+    // run the chunked kernels and the ratio sits at ~1.0 — the row then
+    // documents the chunked baseline, not a vector win. Lanes are asserted
+    // bitwise identical on every timed metric before timing. ---
+    println!(
+        "simd dispatch: compiled={} active={:?} (FSL_NO_SIMD forces Chunked)",
+        simd::SIMD_COMPILED,
+        simd::active_lane()
+    );
+    for (bits, metric) in [(1u32, Distance::Hamming), (4, Distance::L1), (8, Distance::Dot)] {
+        let rows: Vec<f32> = (0..32 * 4096).map(|_| rng.gauss_f32()).collect();
+        let packed = PackedClassHvs::from_rows(&rows, 32, 4096, bits);
+        let q: Vec<f32> = (0..4096).map(|_| rng.gauss_f32()).collect();
+        let pq = packed.quantize_query(&q);
+        let chunked = packed.distances_in_lane(&pq, metric, Lane::Chunked);
+        let vectored = packed.distances_in_lane(&pq, metric, Lane::Simd);
+        assert_eq!(chunked, vectored, "{bits}b {metric:?}: lanes must be bitwise identical");
+        let tag = format!("{}_b{bits}", metric.name());
+        let rc = bench(&format!("hdc chunked {metric:?} {bits}b 32 x D=4096"), budget(150.0), || {
+            black_box(packed.distances_in_lane(black_box(&pq), metric, Lane::Chunked));
+        });
+        println!("{rc}");
+        let rs = bench(&format!("hdc simd    {metric:?} {bits}b 32 x D=4096"), budget(150.0), || {
+            black_box(packed.distances_in_lane(black_box(&pq), metric, Lane::Simd));
+        });
+        println!("{rs}");
+        let speedup = rc.mean_ns / rs.mean_ns;
+        log.record_ratio(&format!("hdc_{tag}_simd_vs_scalar_speedup"), speedup);
+        println!("    -> simd vs chunked-scalar: {speedup:.2}x (bitwise identical, asserted)");
+    }
+
     // --- clustered conv: reference kernel vs the packed fast path, at
     // ResNet-18 stage geometries (the acceptance target: packed >= 3x
     // faster than the reference at these shapes) ---
@@ -167,6 +206,29 @@ fn main() {
             rr.mean_ns / rp.mean_ns,
             rd.mean_ns / rp.mean_ns
         );
+        // simd-vs-scalar lanes over the codebook-LUT phase-2 MAC (prebuilt
+        // LUT, as resnet's hot loop runs it); lanes bitwise identical
+        let lut = CodebookLut::new(&cl.codebook, packed.cout, packed.groups() * packed.n);
+        let lc = clustered_conv2d_lut_in_lane(&img, &packed, &lut, 1, Lane::Chunked);
+        let ls = clustered_conv2d_lut_in_lane(&img, &packed, &lut, 1, Lane::Simd);
+        assert_eq!(lc.data, ls.data, "{geo}: conv lanes must be bitwise identical");
+        let rlc = bench(&format!("conv lut chunked {geo}"), budget(300.0), || {
+            black_box(clustered_conv2d_lut_in_lane(
+                black_box(&img),
+                &packed,
+                &lut,
+                1,
+                Lane::Chunked,
+            ));
+        });
+        println!("{rlc}");
+        let rls = bench(&format!("conv lut simd    {geo}"), budget(300.0), || {
+            black_box(clustered_conv2d_lut_in_lane(black_box(&img), &packed, &lut, 1, Lane::Simd));
+        });
+        println!("{rls}");
+        let speedup = rlc.mean_ns / rls.mean_ns;
+        log.record_ratio(&format!("conv_packed_{cin}x{cout}_{hw}_simd_vs_scalar_speedup"), speedup);
+        println!("    -> conv simd vs chunked-scalar: {speedup:.2}x (bitwise identical, asserted)");
     }
 
     // --- batched native FE forward + encode: serial vs worker-sharded,

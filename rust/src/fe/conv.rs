@@ -4,6 +4,15 @@
 //! Padding matches `jax.lax.conv_general_dilated(..., padding="SAME")`
 //! exactly (out = ceil(in/stride), asymmetric low/high pads) so the native
 //! FE reproduces the artifact numerics.
+//!
+//! The clustered fast path runs phase 2 over a flat `[group][centroid]`
+//! codebook LUT ([`CodebookLut`]) with `util::simd`'s lane-blocked MAC
+//! (DESIGN.md §SIMD datapath); [`clustered_conv2d_lut_in_lane`] is the
+//! lane-explicit entry the simd-vs-scalar benches use, and
+//! [`clustered_conv2d_packed`] keeps the pre-LUT signature as a
+//! compatibility wrapper.
+
+use crate::util::simd::{self, Lane};
 
 /// A minimal HxWxC tensor (row-major, NHWC per image).
 #[derive(Clone, Debug, PartialEq)]
@@ -300,10 +309,62 @@ impl PackedIdx {
     }
 }
 
+/// Flat `[group][centroid]` codebook layout for the clustered fast path:
+/// row `co` holds that output channel's G*N centroid table contiguously,
+/// zero-padded to a multiple of 4 so the phase-2 [`simd::mac_f32`] runs
+/// whole aligned lane groups (the zero pad MACs against zeroed bin pad —
+/// an exact `+0.0` contribution). Built once per layer
+/// (`fe::resnet::into_clustered`), not per call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodebookLut {
+    pub cout: usize,
+    /// logical row length G*N
+    pub gn: usize,
+    /// padded row stride: `gn` rounded up to a multiple of 4
+    row_len: usize,
+    data: Vec<f32>,
+}
+
+impl CodebookLut {
+    /// Lay out a flat (Cout, G*N) codebook (the layout of
+    /// [`crate::fe::kmeans::ClusteredLayer::codebook`]) into padded rows.
+    pub fn new(codebook: &[f32], cout: usize, gn: usize) -> Self {
+        assert_eq!(codebook.len(), cout * gn, "codebook must be cout x G*N");
+        let row_len = gn.div_ceil(4) * 4;
+        let mut data = vec![0f32; cout * row_len];
+        for co in 0..cout {
+            data[co * row_len..co * row_len + gn]
+                .copy_from_slice(&codebook[co * gn..(co + 1) * gn]);
+        }
+        CodebookLut { cout, gn, row_len, data }
+    }
+
+    /// Padded centroid row of output channel `co` (length
+    /// [`CodebookLut::padded_row_len`]).
+    #[inline]
+    pub fn row(&self, co: usize) -> &[f32] {
+        &self.data[co * self.row_len..(co + 1) * self.row_len]
+    }
+
+    /// Row stride including lane padding (a multiple of 4).
+    pub fn padded_row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// The flat (Cout, G*N) codebook this LUT was built from — exact
+    /// round-trip with [`CodebookLut::new`].
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cout * self.gn);
+        for co in 0..self.cout {
+            out.extend_from_slice(&self.row(co)[..self.gn]);
+        }
+        out
+    }
+}
+
 /// Weight-clustered conv, **fast kernel** — the native FE hot path.
 /// Same two-phase dataflow as [`clustered_conv2d`] and numerically equal
-/// to it up to f32 association (phase 2 is multi-accumulated like
-/// `dot_f32`), but restructured for speed:
+/// to it up to f32 association, but restructured for speed:
 ///
 /// * output channels are processed in `COUT_TILE`-wide (16) tiles, so
 ///   each activation is read once per tile instead of once per channel;
@@ -311,22 +372,30 @@ impl PackedIdx {
 ///   the inner channel loop walks contiguous bytes, two channels per byte;
 /// * padding is handled by the same trimmed contiguous-run structure as
 ///   `conv2d` — no per-element bounds checks;
-/// * the `ci / ch_sub` group map is precomputed (`PackedIdx::goff`).
-pub fn clustered_conv2d_packed(
+/// * the `ci / ch_sub` group map is precomputed (`PackedIdx::goff`);
+/// * phase 2 MACs each tile's bins against the contiguous, lane-padded
+///   [`CodebookLut`] row with [`simd::mac_f32`] — 4 independent f32
+///   accumulators per lane, no scalar tail.
+pub fn clustered_conv2d_lut_in_lane(
     x: &Tensor3,
     idx: &PackedIdx,
-    codebook: &[f32],
+    lut: &CodebookLut,
     stride: usize,
+    lane: Lane,
 ) -> Tensor3 {
     let (cout, k, cin) = (idx.cout, idx.k, idx.cin);
     assert_eq!(cin, x.c, "packed indices built for Cin={cin}, input has {}", x.c);
     let gn = idx.groups() * idx.n;
-    assert_eq!(codebook.len(), cout * gn);
+    assert_eq!(lut.cout, cout, "LUT built for a different cout");
+    assert_eq!(lut.gn, gn, "LUT built for a different G*N bin space");
     let (ho, pad_y) = same_pad(x.h, k, stride);
     let (wo, pad_x) = same_pad(x.w, k, stride);
     let cpb = idx.cpb;
+    // bins share the LUT's padded row stride; the pad stays zero (phase 1
+    // only writes offsets < gn), so phase 2 needs no per-row trim
+    let rl = lut.padded_row_len();
     let mut out = Tensor3::zeros(ho, wo, cout);
-    let mut bins = vec![0f32; COUT_TILE * gn];
+    let mut bins = vec![0f32; COUT_TILE * rl];
     for oy in 0..ho {
         for ox in 0..wo {
             let obase = (oy * wo + ox) * cout;
@@ -334,7 +403,7 @@ pub fn clustered_conv2d_packed(
             while t0 < cout {
                 let tlen = COUT_TILE.min(cout - t0);
                 let pairs = tlen / 2;
-                bins[..tlen * gn].fill(0.0);
+                bins[..tlen * rl].fill(0.0);
                 // phase 1: accumulate each in-bounds activation into the
                 // tile's (group, index) bins — one pass over the window
                 for ky in 0..k {
@@ -357,26 +426,50 @@ pub fn clustered_conv2d_packed(
                         let boff = idx.goff[p] as usize;
                         let row = &idx.data[p * cpb + t0 / 2..p * cpb + t0 / 2 + tlen.div_ceil(2)];
                         for (tc, &byte) in row[..pairs].iter().enumerate() {
-                            bins[2 * tc * gn + boff + (byte & 0x0F) as usize] += a;
-                            bins[(2 * tc + 1) * gn + boff + (byte >> 4) as usize] += a;
+                            bins[2 * tc * rl + boff + (byte & 0x0F) as usize] += a;
+                            bins[(2 * tc + 1) * rl + boff + (byte >> 4) as usize] += a;
                         }
                         if tlen % 2 == 1 {
                             let byte = row[pairs];
-                            bins[(tlen - 1) * gn + boff + (byte & 0x0F) as usize] += a;
+                            bins[(tlen - 1) * rl + boff + (byte & 0x0F) as usize] += a;
                         }
                     }
                 }
-                // phase 2: codebook MAC, multi-accumulated
+                // phase 2: lane-blocked codebook MAC over contiguous rows
                 for tc in 0..tlen {
                     let co = t0 + tc;
                     out.data[obase + co] =
-                        dot_f32(&bins[tc * gn..(tc + 1) * gn], &codebook[co * gn..(co + 1) * gn]);
+                        simd::mac_f32(&bins[tc * rl..(tc + 1) * rl], lut.row(co), lane);
                 }
                 t0 += tlen;
             }
         }
     }
     out
+}
+
+/// [`clustered_conv2d_lut_in_lane`] on the immutable process-wide kernel
+/// lane — what `fe::resnet::run_layer` executes.
+pub fn clustered_conv2d_lut(
+    x: &Tensor3,
+    idx: &PackedIdx,
+    lut: &CodebookLut,
+    stride: usize,
+) -> Tensor3 {
+    clustered_conv2d_lut_in_lane(x, idx, lut, stride, simd::active_lane())
+}
+
+/// Compatibility wrapper over the LUT kernel for callers that still hold a
+/// flat (Cout, G*N) codebook — builds the [`CodebookLut`] per call, so hot
+/// paths should build it once and use [`clustered_conv2d_lut`] instead.
+pub fn clustered_conv2d_packed(
+    x: &Tensor3,
+    idx: &PackedIdx,
+    codebook: &[f32],
+    stride: usize,
+) -> Tensor3 {
+    let lut = CodebookLut::new(codebook, idx.cout, idx.groups() * idx.n);
+    clustered_conv2d_lut(x, idx, &lut, stride)
 }
 
 #[cfg(test)]
@@ -497,6 +590,48 @@ mod tests {
                         "cin={cin} cout={cout} stride={stride}: {a} vs {b}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_roundtrips_and_pads_to_lanes() {
+        let mut rng = Rng::new(13);
+        for (cout, gn) in [(5usize, 7usize), (16, 16), (3, 1)] {
+            let cb: Vec<f32> = (0..cout * gn).map(|_| rng.gauss_f32()).collect();
+            let lut = CodebookLut::new(&cb, cout, gn);
+            assert_eq!(lut.padded_row_len() % 4, 0);
+            assert!(lut.padded_row_len() >= gn && lut.padded_row_len() < gn + 4);
+            assert_eq!(lut.to_flat(), cb, "cout={cout} gn={gn}");
+            for co in 0..cout {
+                assert!(lut.row(co)[gn..].iter().all(|&v| v == 0.0), "pad must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_kernel_lanes_are_bit_identical() {
+        use crate::util::simd::Lane;
+        // odd geometry: cin % ch_sub != 0, odd cout (nibble tail), gn % 4 != 0
+        let mut rng = Rng::new(14);
+        let (cin, cout, k, ch_sub, n) = (6usize, 21usize, 3usize, 4usize, 5usize);
+        let x = rand_tensor(9, 7, cin, &mut rng);
+        let idx: Vec<u8> = (0..cout * k * k * cin).map(|_| rng.below(n) as u8).collect();
+        let g = cin.div_ceil(ch_sub.min(cin));
+        let cb: Vec<f32> = (0..cout * g * n).map(|_| rng.gauss_f32()).collect();
+        let packed = PackedIdx::pack(&idx, cout, k, cin, ch_sub, n);
+        let lut = CodebookLut::new(&cb, cout, g * n);
+        for stride in [1, 2] {
+            let chunked = clustered_conv2d_lut_in_lane(&x, &packed, &lut, stride, Lane::Chunked);
+            let simd = clustered_conv2d_lut_in_lane(&x, &packed, &lut, stride, Lane::Simd);
+            assert_eq!(chunked.data, simd.data, "stride={stride}: lanes diverged");
+            // the compat wrapper runs the same kernel on the active lane
+            let compat = clustered_conv2d_packed(&x, &packed, &cb, stride);
+            assert_eq!(chunked.data, compat.data, "stride={stride}: wrapper diverged");
+            // and both stay within f32 association of the reference kernel
+            let want = clustered_conv2d(&x, &idx, &cb, cout, k, stride, ch_sub, n);
+            for (a, b) in want.data.iter().zip(&chunked.data) {
+                assert!((a - b).abs() < 1e-3, "stride={stride}: {a} vs {b}");
             }
         }
     }

@@ -9,6 +9,9 @@ pub mod kmeans;
 pub mod quant;
 pub mod resnet;
 
-pub use conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, PackedIdx, Tensor3};
+pub use conv::{
+    clustered_conv2d, clustered_conv2d_lut, clustered_conv2d_lut_in_lane,
+    clustered_conv2d_packed, conv2d, CodebookLut, PackedIdx, Tensor3,
+};
 pub use kmeans::{cluster_layer, ClusteredLayer};
 pub use resnet::{FeModel, StagedForward};

@@ -10,9 +10,10 @@
 //! (layer indices into a flat `Vec`), so the per-image hot loop never
 //! formats layer names or walks a map. When `cfg.clustered` is set, every
 //! layer is quantized through [`cluster_layer`] once at construction and
-//! `forward` runs the packed two-phase kernel
-//! ([`clustered_conv2d_packed`]) instead of the dense conv — the chip's
-//! cheap path (Fig. 4b) is then also the native fast path.
+//! `forward` runs the packed two-phase kernel over a per-layer
+//! lane-padded codebook LUT ([`clustered_conv2d_lut`]) instead of the
+//! dense conv — the chip's cheap path (Fig. 4b) is then also the native
+//! fast path.
 //!
 //! All forwards run through the resumable [`StagedForward`] executor
 //! ([`FeModel::stage_start`] + `step`), so the early-exit loop can stop
@@ -23,7 +24,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::config::ModelConfig;
-use crate::fe::conv::{clustered_conv2d_packed, conv2d, PackedIdx, Tensor3};
+use crate::fe::conv::{clustered_conv2d_lut, conv2d, CodebookLut, PackedIdx, Tensor3};
 use crate::fe::kmeans::{cluster_layer, ClusteredLayer};
 use crate::util::json::Json;
 
@@ -42,7 +43,9 @@ struct Layer {
 #[derive(Clone, Debug)]
 struct ClusteredKernel {
     idx: PackedIdx,
-    codebook: Vec<f32>,
+    /// lane-padded codebook, built once here so the per-image hot loop
+    /// never re-lays-out the centroid table
+    lut: CodebookLut,
 }
 
 /// One basic block of the execution plan: layer indices resolved at model
@@ -200,7 +203,9 @@ impl FeModel {
         );
         for l in &mut self.layers {
             let cl = cluster_layer(&l.w, l.cout, l.k, l.cin, self.cfg.ch_sub, self.cfg.n_centroids);
-            l.clustered = Some(ClusteredKernel { idx: cl.packed(), codebook: cl.codebook });
+            let idx = cl.packed();
+            let lut = CodebookLut::new(&cl.codebook, idx.cout, idx.groups() * idx.n);
+            l.clustered = Some(ClusteredKernel { idx, lut });
         }
         self.cfg.clustered = true;
         self
@@ -228,7 +233,7 @@ impl FeModel {
                     ch_sub: ck.idx.ch_sub,
                     n: ck.idx.n,
                     idx: ck.idx.unpack(),
-                    codebook: ck.codebook,
+                    codebook: ck.lut.to_flat(),
                 };
                 l.w = cl.reconstruct();
             }
@@ -242,7 +247,7 @@ impl FeModel {
         let l = &self.layers[li];
         anyhow::ensure!(l.cin == x.c, "{}: cin {} != input {}", l.name, l.cin, x.c);
         Ok(match &l.clustered {
-            Some(ck) => clustered_conv2d_packed(x, &ck.idx, &ck.codebook, stride),
+            Some(ck) => clustered_conv2d_lut(x, &ck.idx, &ck.lut, stride),
             None => conv2d(x, &l.w, l.cout, l.k, stride),
         })
     }

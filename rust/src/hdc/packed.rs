@@ -38,9 +38,20 @@
 //! class comparison then runs in the code domain — unlike the pre-packed
 //! implementation, which dequantized the whole class memory to f32 on
 //! every rebuild and compared against the raw f32 query.
+//!
+//! The kernels run through `util::simd` in explicit width (DESIGN.md §SIMD
+//! datapath): 4-word popcount chunks on the 1-bit planes, 4-lane
+//! byte-pair nibble streaming for the 2–4-bit L1/dot/hamming paths (no
+//! per-element [`nibble_at`] in any inner loop), and `L1Sink`-generic
+//! dequantize-in-register accumulation that keeps the multi-bit L1
+//! bit-identity contract under both kernel lanes.
+//! [`PackedClassHvs::distances`] dispatches on the immutable
+//! process-wide lane; [`PackedClassHvs::distances_in_lane`] is the
+//! lane-explicit entry point benches and prop tests use.
 
 use super::distance::Distance;
 use super::quant;
+use crate::util::simd::{self, L1Sink, Lane};
 
 /// A query HV quantized once to the class-memory precision.
 #[derive(Clone, Debug)]
@@ -88,6 +99,31 @@ fn nibble_at(row: &[u8], i: usize) -> i32 {
     // the shift-left/shift-right pair below IS the sign extension, so:
     // lint:allow(unchecked-narrowing) same-width u8->i8 reinterpret, no bits lost
     (((n << 4) as i8) >> 4) as i32
+}
+
+/// Branch-free sign extension of a 4-bit code (the low nibble of `n`):
+/// `(n ^ 8) - 8` maps 0..=15 onto -8..=7 with no narrowing cast at all —
+/// the form the streamed inner loops use ([`nibble_at`] stays for the
+/// random-access tails and `dequantize_row`).
+#[inline]
+fn sext4(n: u8) -> i32 {
+    (n as i32 ^ 8) - 8
+}
+
+/// The 1-bit store never reaches the multi-bit kernels: `row_distance`
+/// matches `Store::B1` first and routes every metric through the popcount
+/// path, so the per-kernel `B1` arms are unreachable by construction.
+/// Serving code sits one call above this module and must not panic in
+/// release (the fsl-lint `panic-in-serving` policy boundary), so release
+/// builds return a typed zero here; debug builds panic to catch a future
+/// routing regression immediately.
+#[cold]
+#[inline(never)]
+fn debug_unreachable_b1<T: Default>(kernel: &'static str) -> T {
+    if cfg!(debug_assertions) {
+        panic!("Store::B1 must route through the popcount path, not the {kernel} kernel");
+    }
+    T::default()
 }
 
 /// Pack the sign plane of a dequantized row (bit set ⇔ value >= 0.0 — the
@@ -211,8 +247,19 @@ impl PackedClassHvs {
         PackedQuery { d: self.d, hv_bits: self.hv_bits, scale, codes: codes16, deq, words }
     }
 
-    /// Distance from a packed query to every class row.
+    /// Distance from a packed query to every class row, on the immutable
+    /// process-wide kernel lane ([`simd::active_lane`]).
     pub fn distances(&self, pq: &PackedQuery, metric: Distance) -> Vec<f64> {
+        self.distances_in_lane(pq, metric, simd::active_lane())
+    }
+
+    /// Like [`PackedClassHvs::distances`], but on a caller-chosen kernel
+    /// lane. The global dispatch is deliberately immutable (see
+    /// `util::simd`), so the simd-vs-scalar benches and the lane
+    /// bit-identity prop tests compare lanes through this entry point —
+    /// both lanes keep every per-metric oracle contract in the module
+    /// docs, and return bit-identical results to each other.
+    pub fn distances_in_lane(&self, pq: &PackedQuery, metric: Distance, lane: Lane) -> Vec<f64> {
         assert_eq!(pq.d, self.d, "query dimension mismatch");
         assert_eq!(pq.hv_bits, self.hv_bits, "query quantized at a different precision");
         assert!(
@@ -220,16 +267,15 @@ impl PackedClassHvs {
             "query was packed without the dequantized view {metric:?} reads — \
              use quantize_query or quantize_query_for({metric:?})"
         );
-        (0..self.n_classes).map(|c| self.row_distance(c, pq, metric)).collect()
+        (0..self.n_classes).map(|c| self.row_distance(c, pq, metric, lane)).collect()
     }
 
-    fn row_distance(&self, c: usize, pq: &PackedQuery, metric: Distance) -> f64 {
+    fn row_distance(&self, c: usize, pq: &PackedQuery, metric: Distance, lane: Lane) -> f64 {
         let sc = self.scales[c];
         let sq = pq.scale;
         if let Store::B1 { words_per_row, words } = &self.store {
             let row = &words[c * words_per_row..(c + 1) * words_per_row];
-            let mis: u64 =
-                row.iter().zip(&pq.words).map(|(a, b)| (a ^ b).count_ones() as u64).sum();
+            let mis = simd::xor_popcount(row, &pq.words, lane);
             let n_match = self.d as u64 - mis;
             return match metric {
                 Distance::Hamming => mis as f64,
@@ -243,75 +289,122 @@ impl PackedClassHvs {
             };
         }
         match metric {
-            Distance::L1 => self.row_l1(c, &pq.deq, sc),
-            Distance::Dot => -(self.row_dot_codes(c, &pq.codes) as f64
-                * (sq as f64)
-                * (sc as f64)),
+            Distance::L1 => self.row_l1(c, &pq.deq, sc, lane),
+            Distance::Dot => {
+                -(self.row_dot_codes(c, &pq.codes, lane) as f64 * (sq as f64) * (sc as f64))
+            }
             Distance::Hamming => self.row_sign_mismatches(c, &pq.codes) as f64,
             Distance::Cosine => metric.eval(&pq.deq, &self.dequantize_row(c)),
         }
     }
 
     /// Multi-bit L1: stream the narrow codes, dequantize in-register, and
-    /// accumulate with exactly `distance::l1`'s 4-lane structure so the
-    /// result is bit-identical to the f32 oracle.
-    fn row_l1(&self, c: usize, qd: &[f32], scale: f32) -> f64 {
+    /// accumulate through an [`L1Sink`] with exactly `distance::l1`'s
+    /// 4-lane structure — bit-identical to the f32 oracle on both kernel
+    /// lanes (the sinks themselves are lane-bit-identical; `util::simd`).
+    fn row_l1(&self, c: usize, qd: &[f32], scale: f32, lane: Lane) -> f64 {
+        match lane {
+            Lane::Chunked => self.row_l1_in::<simd::L1Chunked>(c, qd, scale),
+            Lane::Simd => self.row_l1_in::<simd::L1Simd>(c, qd, scale),
+        }
+    }
+
+    fn row_l1_in<S: L1Sink>(&self, c: usize, qd: &[f32], scale: f32) -> f64 {
+        /// Aligned groups of four into the sink, scalar tail onto the
+        /// folded sum (the oracle adds its tail sequentially too).
         #[inline]
-        fn l1_codes(qd: &[f32], scale: f32, code: impl Fn(usize) -> f32) -> f64 {
-            let mut acc = [0f64; 4];
+        fn l1_slice<S: L1Sink, T: Copy>(
+            qd: &[f32],
+            row: &[T],
+            scale: f32,
+            f: impl Fn(T) -> f32,
+        ) -> f64 {
             let n4 = qd.len() / 4 * 4;
+            let mut sink = S::default();
             let mut i = 0;
             while i < n4 {
-                acc[0] += (qd[i] - code(i) * scale).abs() as f64;
-                acc[1] += (qd[i + 1] - code(i + 1) * scale).abs() as f64;
-                acc[2] += (qd[i + 2] - code(i + 2) * scale).abs() as f64;
-                acc[3] += (qd[i + 3] - code(i + 3) * scale).abs() as f64;
+                sink.push4(
+                    [qd[i], qd[i + 1], qd[i + 2], qd[i + 3]],
+                    [f(row[i]), f(row[i + 1]), f(row[i + 2]), f(row[i + 3])],
+                    scale,
+                );
                 i += 4;
             }
-            let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+            let mut s = sink.finish();
             for j in n4..qd.len() {
-                s += (qd[j] - code(j) * scale).abs() as f64;
+                s += (qd[j] - f(row[j]) * scale).abs() as f64;
             }
             s
         }
         let d = self.d;
         match &self.store {
             Store::B4 { bytes_per_row, bytes } => {
+                // byte-pair streaming: each step decodes two bytes (four
+                // nibbles) straight into the sink — no per-element
+                // nibble_at call in the loop
                 let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
-                l1_codes(qd, scale, |i| nibble_at(row, i) as f32)
+                let n4 = d / 4 * 4;
+                let mut sink = S::default();
+                let mut i = 0;
+                while i < n4 {
+                    let (b0, b1) = (row[i / 2], row[i / 2 + 1]);
+                    sink.push4(
+                        [qd[i], qd[i + 1], qd[i + 2], qd[i + 3]],
+                        [
+                            sext4(b0 & 0x0F) as f32,
+                            sext4(b0 >> 4) as f32,
+                            sext4(b1 & 0x0F) as f32,
+                            sext4(b1 >> 4) as f32,
+                        ],
+                        scale,
+                    );
+                    i += 4;
+                }
+                let mut s = sink.finish();
+                for j in n4..d {
+                    s += (qd[j] - nibble_at(row, j) as f32 * scale).abs() as f64;
+                }
+                s
             }
             Store::B8 { codes } => {
-                let row = &codes[c * d..(c + 1) * d];
-                l1_codes(qd, scale, |i| row[i] as f32)
+                l1_slice::<S, i8>(qd, &codes[c * d..(c + 1) * d], scale, |v| v as f32)
             }
             Store::B16 { codes } => {
-                let row = &codes[c * d..(c + 1) * d];
-                l1_codes(qd, scale, |i| row[i] as f32)
+                l1_slice::<S, i16>(qd, &codes[c * d..(c + 1) * d], scale, |v| v as f32)
             }
-            Store::B1 { .. } => unreachable!("1-bit L1 uses the popcount path"),
+            Store::B1 { .. } => debug_unreachable_b1::<f64>("L1"),
         }
     }
 
-    /// Multi-bit dot: exact integer accumulation over the code domain.
-    fn row_dot_codes(&self, c: usize, qc: &[i16]) -> i64 {
+    /// Multi-bit dot: exact integer accumulation over the code domain
+    /// (order-independent, so any lane returns the same bits).
+    fn row_dot_codes(&self, c: usize, qc: &[i16], lane: Lane) -> i64 {
         let d = self.d;
         match &self.store {
             Store::B4 { bytes_per_row, bytes } => {
+                // byte-pair streaming with independent accumulators; the
+                // exact integer sum makes one form serve both lanes
                 let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
-                qc.iter()
-                    .enumerate()
-                    .map(|(i, &q)| q as i64 * nibble_at(row, i) as i64)
-                    .sum()
+                let n4 = d / 4 * 4;
+                let mut acc = [0i64; 4];
+                let mut i = 0;
+                while i < n4 {
+                    let (b0, b1) = (row[i / 2], row[i / 2 + 1]);
+                    acc[0] += qc[i] as i64 * sext4(b0 & 0x0F) as i64;
+                    acc[1] += qc[i + 1] as i64 * sext4(b0 >> 4) as i64;
+                    acc[2] += qc[i + 2] as i64 * sext4(b1 & 0x0F) as i64;
+                    acc[3] += qc[i + 3] as i64 * sext4(b1 >> 4) as i64;
+                    i += 4;
+                }
+                let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+                for j in n4..d {
+                    s += qc[j] as i64 * nibble_at(row, j) as i64;
+                }
+                s
             }
-            Store::B8 { codes } => {
-                let row = &codes[c * d..(c + 1) * d];
-                qc.iter().zip(row).map(|(&q, &cc)| q as i64 * cc as i64).sum()
-            }
-            Store::B16 { codes } => {
-                let row = &codes[c * d..(c + 1) * d];
-                qc.iter().zip(row).map(|(&q, &cc)| q as i64 * cc as i64).sum()
-            }
-            Store::B1 { .. } => unreachable!("1-bit dot uses the popcount path"),
+            Store::B8 { codes } => simd::dot_codes_i8(qc, &codes[c * d..(c + 1) * d], lane),
+            Store::B16 { codes } => simd::dot_codes_i16(qc, &codes[c * d..(c + 1) * d], lane),
+            Store::B1 { .. } => debug_unreachable_b1::<i64>("dot"),
         }
     }
 
@@ -326,8 +419,24 @@ impl PackedClassHvs {
         let d = self.d;
         match &self.store {
             Store::B4 { bytes_per_row, bytes } => {
+                // exact mismatch count over streamed byte pairs
                 let row = &bytes[c * bytes_per_row..(c + 1) * bytes_per_row];
-                count(qc, |i| nibble_at(row, i))
+                let n4 = d / 4 * 4;
+                let mut acc = [0u64; 4];
+                let mut i = 0;
+                while i < n4 {
+                    let (b0, b1) = (row[i / 2], row[i / 2 + 1]);
+                    let cs = [sext4(b0 & 0x0F), sext4(b0 >> 4), sext4(b1 & 0x0F), sext4(b1 >> 4)];
+                    for l in 0..4 {
+                        acc[l] += ((qc[i + l] >= 0) != (cs[l] >= 0)) as u64;
+                    }
+                    i += 4;
+                }
+                let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+                for j in n4..d {
+                    s += ((qc[j] >= 0) != (nibble_at(row, j) >= 0)) as u64;
+                }
+                s
             }
             Store::B8 { codes } => {
                 let row = &codes[c * d..(c + 1) * d];
@@ -337,7 +446,7 @@ impl PackedClassHvs {
                 let row = &codes[c * d..(c + 1) * d];
                 count(qc, |i| row[i] as i32)
             }
-            Store::B1 { .. } => unreachable!("1-bit hamming uses the popcount path"),
+            Store::B1 { .. } => debug_unreachable_b1::<u64>("hamming"),
         }
     }
 
@@ -499,6 +608,26 @@ mod tests {
             p.distances(&pq, Distance::Hamming),
             oracle(&r, 3, d, 1, &q, Distance::Hamming)
         );
+    }
+
+    #[test]
+    fn kernel_lanes_are_bit_identical() {
+        use crate::util::simd::Lane;
+        let mut rng = Rng::new(7);
+        for d in [70usize, 111, 256] {
+            let r = rows(&mut rng, 4, d);
+            let q: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            for bits in [1u32, 2, 4, 8, 16] {
+                let p = PackedClassHvs::from_rows(&r, 4, d, bits);
+                let pq = p.quantize_query(&q);
+                for m in METRICS {
+                    let chunked = p.distances_in_lane(&pq, m, Lane::Chunked);
+                    let simd = p.distances_in_lane(&pq, m, Lane::Simd);
+                    assert_eq!(chunked, simd, "d={d} bits={bits} {m:?}: lanes diverged");
+                    assert_eq!(chunked, p.distances(&pq, m), "active lane inconsistent");
+                }
+            }
+        }
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //! `cargo test --doc` (via a doctest-only module at the bottom of this
 //! file), so the documented quickstart can never drift from the real API.
 
+// `std::simd` is nightly-only; the `simd` feature opts into it (DESIGN.md
+// §SIMD datapath). Without the feature the crate is stable-only and the
+// chunked-scalar lanes in `util::simd` serve every fast path.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod baselines;
 pub mod classifier;
 pub mod config;

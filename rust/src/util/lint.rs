@@ -437,11 +437,15 @@ const SPAWN_ALLOWLIST: [&str; 3] = [
 ];
 
 /// Deterministic-kernel directories: replay-based recovery (DESIGN.md
-/// §Fault model) only holds if these never read a wall clock.
-const KERNEL_DIRS: [&str; 3] = ["rust/src/fe/", "rust/src/hdc/", "rust/src/classifier/"];
+/// §Fault model) only holds if these never read a wall clock. The SIMD
+/// kernel layer rides along — both its lanes sit under every packed fast
+/// path, so a wall-clock read there would break the same contract.
+const KERNEL_DIRS: [&str; 4] =
+    ["rust/src/fe/", "rust/src/hdc/", "rust/src/classifier/", "rust/src/util/simd.rs"];
 
 /// Packed hot paths where a truncating cast needs an adjacent guard.
-const NARROWING_FILES: [&str; 2] = ["rust/src/hdc/packed.rs", "rust/src/fe/conv.rs"];
+const NARROWING_FILES: [&str; 3] =
+    ["rust/src/hdc/packed.rs", "rust/src/fe/conv.rs", "rust/src/util/simd.rs"];
 
 fn is_serving(path: &str) -> bool {
     SERVING_FILES.contains(&path) || path.starts_with("rust/src/classifier/")

@@ -12,6 +12,7 @@ pub mod json;
 pub mod lint;
 pub mod parallel;
 pub mod prng;
+pub mod simd;
 pub mod stats;
 pub mod table;
 pub mod timer;

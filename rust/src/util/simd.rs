@@ -1,0 +1,476 @@
+//! Explicit SIMD-width kernels for the two packed fast paths (DESIGN.md
+//! §SIMD datapath): chunked `u64x4`-style popcount for the 1-bit class-HV
+//! planes, 4-lane dequantize-and-accumulate sinks for the multi-bit L1
+//! stream, exact integer code dots, and the lane-blocked f32 MAC the
+//! codebook-LUT conv runs.
+//!
+//! Every kernel exists in two **lanes**:
+//!
+//! * [`Lane::Chunked`] — plain Rust restructured for width: fixed-width
+//!   chunks with independent accumulators and a scalar tail. Always
+//!   compiled, every toolchain; this is the default fast path and is what
+//!   the pre-SIMD scalar loops were rewritten into.
+//! * [`Lane::Simd`] — `std::simd` (portable SIMD) vectors, compiled only
+//!   under the `simd` cargo feature (nightly: `portable_simd`). When the
+//!   feature is off, `Lane::Simd` transparently aliases the chunked
+//!   kernels, so lane-explicit callers (benches, the lane bit-identity
+//!   prop tests) compile and pass under both feature settings.
+//!
+//! **Lane bit-identity contract.** For every kernel here the two lanes
+//! return *bit-identical* results: the integer kernels are
+//! order-independent sums, and the floating-point kernels perform the same
+//! per-lane IEEE operations in the same order and spell the horizontal
+//! fold identically (`((acc0 + acc1) + acc2) + acc3`, matching
+//! `hdc::distance::l1`'s accumulator fold). Rust never contracts mul+add
+//! into FMA implicitly, so the contract holds on every target. This is
+//! what lets the packed-distance exactness contracts (multi-bit L1
+//! bit-identical to the oracle, hamming/dot exact) survive the lane switch
+//! unchanged — asserted by the `prop_simd_lane_bit_identity` battery and
+//! the `--smoke` bench gates.
+//!
+//! **Dispatch policy.** [`active_lane`] decides once per process and is
+//! immutable afterwards (cached in an atomic): `Lane::Simd` iff the
+//! feature is compiled in, `FSL_NO_SIMD` is not set in the environment,
+//! and the host passes the hardware check (x86_64 requires `popcnt`;
+//! other architectures rely on portable-SIMD lowering). Immutability
+//! matters: the worker-count bit-identity tests run concurrently in one
+//! process, and a lane flip mid-run would break the
+//! sharded-equals-serial contract. Benches that need both lanes in one
+//! process use the lane-explicit entry points
+//! (`PackedClassHvs::distances_in_lane`,
+//! `fe::conv::clustered_conv2d_lut_in_lane`) instead of mutating the
+//! global decision.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Whether the crate was compiled with the `simd` cargo feature (i.e.
+/// whether [`Lane::Simd`] is a real `std::simd` build rather than an alias
+/// of the chunked kernels).
+pub const SIMD_COMPILED: bool = cfg!(feature = "simd");
+
+/// Which kernel implementation a call runs. See the module docs for the
+/// lane bit-identity contract between the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Width-restructured scalar kernels (4-wide chunks, independent
+    /// accumulators, scalar tail). Always available.
+    Chunked,
+    /// `std::simd` vector kernels; aliases `Chunked` when the `simd`
+    /// feature is off.
+    Simd,
+}
+
+/// One-time lane decision: 0 = undecided, 1 = chunked, 2 = simd.
+static LANE: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide lane every non-lane-explicit fast-path call runs.
+/// Decided once on first use and immutable afterwards (see module docs);
+/// racing first calls compute the same answer, so the benign double-store
+/// needs no CAS.
+pub fn active_lane() -> Lane {
+    match LANE.load(Ordering::Relaxed) {
+        1 => Lane::Chunked,
+        2 => Lane::Simd,
+        _ => {
+            let lane = decide_lane();
+            LANE.store(if lane == Lane::Chunked { 1 } else { 2 }, Ordering::Relaxed);
+            lane
+        }
+    }
+}
+
+fn decide_lane() -> Lane {
+    if !SIMD_COMPILED || std::env::var_os("FSL_NO_SIMD").is_some() || !hw_supported() {
+        Lane::Chunked
+    } else {
+        Lane::Simd
+    }
+}
+
+/// x86_64: the popcount planes want the `popcnt` instruction; without it
+/// the chunked kernel's `count_ones` lowering is just as good.
+#[cfg(target_arch = "x86_64")]
+fn hw_supported() -> bool {
+    std::arch::is_x86_feature_detected!("popcnt")
+}
+
+/// Non-x86 targets lean on portable-SIMD lowering unconditionally.
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_supported() -> bool {
+    true
+}
+
+// ---------------------------------------------------------------------------
+// 1-bit plane kernel: XOR + popcount
+// ---------------------------------------------------------------------------
+
+/// Popcount of `a ^ b` over whole u64 words — the 1-bit class-HV distance
+/// kernel (every metric at 1 bit reduces to this mismatch count). Exact
+/// integer sum, so the lanes are trivially bit-identical.
+pub fn xor_popcount(a: &[u64], b: &[u64], lane: Lane) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    match lane {
+        Lane::Chunked => xor_popcount_chunked(a, b),
+        Lane::Simd => xor_popcount_simd(a, b),
+    }
+}
+
+/// 4 words per step with independent accumulators, scalar tail.
+fn xor_popcount_chunked(a: &[u64], b: &[u64]) -> u64 {
+    let n4 = a.len() / 4 * 4;
+    let mut acc = [0u64; 4];
+    for (ca, cb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        for l in 0..4 {
+            acc[l] += (ca[l] ^ cb[l]).count_ones() as u64;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in n4..a.len() {
+        s += (a[i] ^ b[i]).count_ones() as u64;
+    }
+    s
+}
+
+#[cfg(feature = "simd")]
+fn xor_popcount_simd(a: &[u64], b: &[u64]) -> u64 {
+    use std::simd::num::SimdUint;
+    use std::simd::u64x4;
+    let n4 = a.len() / 4 * 4;
+    let mut acc = u64x4::splat(0);
+    let mut i = 0;
+    while i < n4 {
+        let va = u64x4::from_slice(&a[i..i + 4]);
+        let vb = u64x4::from_slice(&b[i..i + 4]);
+        acc += (va ^ vb).count_ones();
+        i += 4;
+    }
+    let mut s = acc.reduce_sum();
+    for i in n4..a.len() {
+        s += (a[i] ^ b[i]).count_ones() as u64;
+    }
+    s
+}
+
+#[cfg(not(feature = "simd"))]
+fn xor_popcount_simd(a: &[u64], b: &[u64]) -> u64 {
+    xor_popcount_chunked(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-bit L1 sink: dequantize-in-register 4-lane accumulation
+// ---------------------------------------------------------------------------
+
+/// A 4-lane `|q - c*scale|` accumulator with `hdc::distance::l1`'s exact
+/// accumulation structure: lane `l` only ever sees elements `i` with
+/// `i % 4 == l`, and [`L1Sink::finish`] folds `((a0 + a1) + a2) + a3`.
+/// Implementors must keep per-lane IEEE operation order identical so the
+/// sinks are bit-identical to each other *and* to the scalar oracle.
+pub trait L1Sink: Default {
+    /// Accumulate one aligned group of four elements.
+    fn push4(&mut self, q: [f32; 4], c: [f32; 4], scale: f32);
+    /// Horizontal fold, spelled exactly like `distance::l1`'s.
+    fn finish(self) -> f64;
+}
+
+/// The chunked-scalar sink: four independent f64 accumulators.
+#[derive(Default)]
+pub struct L1Chunked([f64; 4]);
+
+impl L1Sink for L1Chunked {
+    #[inline]
+    fn push4(&mut self, q: [f32; 4], c: [f32; 4], scale: f32) {
+        for l in 0..4 {
+            self.0[l] += (q[l] - c[l] * scale).abs() as f64;
+        }
+    }
+
+    #[inline]
+    fn finish(self) -> f64 {
+        ((self.0[0] + self.0[1]) + self.0[2]) + self.0[3]
+    }
+}
+
+/// The `std::simd` sink: one f64x4 accumulator, per-lane ops in the same
+/// order as [`L1Chunked`] (f32 mul, sub, abs, exact f32→f64 cast, f64 add).
+#[cfg(feature = "simd")]
+pub struct L1Simd(std::simd::f64x4);
+
+#[cfg(feature = "simd")]
+impl Default for L1Simd {
+    fn default() -> Self {
+        L1Simd(std::simd::f64x4::splat(0.0))
+    }
+}
+
+#[cfg(feature = "simd")]
+impl L1Sink for L1Simd {
+    #[inline]
+    fn push4(&mut self, q: [f32; 4], c: [f32; 4], scale: f32) {
+        use std::simd::f32x4;
+        use std::simd::num::SimdFloat;
+        let vq = f32x4::from_array(q);
+        let vc = f32x4::from_array(c);
+        self.0 += (vq - vc * f32x4::splat(scale)).abs().cast::<f64>();
+    }
+
+    #[inline]
+    fn finish(self) -> f64 {
+        let a = self.0.to_array();
+        ((a[0] + a[1]) + a[2]) + a[3]
+    }
+}
+
+/// Feature off: the simd sink *is* the chunked sink, so lane-explicit
+/// callers compile unchanged.
+#[cfg(not(feature = "simd"))]
+pub type L1Simd = L1Chunked;
+
+// ---------------------------------------------------------------------------
+// Integer code dots (exact i64 accumulation)
+// ---------------------------------------------------------------------------
+
+/// Exact `sum(q[i] * row[i])` over i8 class codes. Integer, so any
+/// accumulation order gives the same bits.
+pub fn dot_codes_i8(q: &[i16], row: &[i8], lane: Lane) -> i64 {
+    debug_assert_eq!(q.len(), row.len());
+    match lane {
+        Lane::Chunked => dot_i8_chunked(q, row),
+        Lane::Simd => dot_i8_simd(q, row),
+    }
+}
+
+/// Exact `sum(q[i] * row[i])` over i16 class codes.
+pub fn dot_codes_i16(q: &[i16], row: &[i16], lane: Lane) -> i64 {
+    debug_assert_eq!(q.len(), row.len());
+    match lane {
+        Lane::Chunked => dot_i16_chunked(q, row),
+        Lane::Simd => dot_i16_simd(q, row),
+    }
+}
+
+fn dot_i8_chunked(q: &[i16], row: &[i8]) -> i64 {
+    let n4 = q.len() / 4 * 4;
+    let mut acc = [0i64; 4];
+    for (cq, cr) in q[..n4].chunks_exact(4).zip(row[..n4].chunks_exact(4)) {
+        for l in 0..4 {
+            acc[l] += cq[l] as i64 * cr[l] as i64;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in n4..q.len() {
+        s += q[i] as i64 * row[i] as i64;
+    }
+    s
+}
+
+fn dot_i16_chunked(q: &[i16], row: &[i16]) -> i64 {
+    let n4 = q.len() / 4 * 4;
+    let mut acc = [0i64; 4];
+    for (cq, cr) in q[..n4].chunks_exact(4).zip(row[..n4].chunks_exact(4)) {
+        for l in 0..4 {
+            acc[l] += cq[l] as i64 * cr[l] as i64;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in n4..q.len() {
+        s += q[i] as i64 * row[i] as i64;
+    }
+    s
+}
+
+#[cfg(feature = "simd")]
+fn dot_i8_simd(q: &[i16], row: &[i8]) -> i64 {
+    use std::simd::num::SimdInt;
+    use std::simd::{i16x8, i64x8, i8x8};
+    let n8 = q.len() / 8 * 8;
+    let mut acc = i64x8::splat(0);
+    let mut i = 0;
+    while i < n8 {
+        // i16*i16 products fit i32; widen to i64 before accumulating so
+        // the running sum can never wrap
+        let vq = i16x8::from_slice(&q[i..i + 8]).cast::<i32>();
+        let vr = i8x8::from_slice(&row[i..i + 8]).cast::<i32>();
+        acc += (vq * vr).cast::<i64>();
+        i += 8;
+    }
+    let mut s = acc.reduce_sum();
+    for i in n8..q.len() {
+        s += q[i] as i64 * row[i] as i64;
+    }
+    s
+}
+
+#[cfg(not(feature = "simd"))]
+fn dot_i8_simd(q: &[i16], row: &[i8]) -> i64 {
+    dot_i8_chunked(q, row)
+}
+
+#[cfg(feature = "simd")]
+fn dot_i16_simd(q: &[i16], row: &[i16]) -> i64 {
+    use std::simd::num::SimdInt;
+    use std::simd::{i16x8, i64x8};
+    let n8 = q.len() / 8 * 8;
+    let mut acc = i64x8::splat(0);
+    let mut i = 0;
+    while i < n8 {
+        let vq = i16x8::from_slice(&q[i..i + 8]).cast::<i32>();
+        let vr = i16x8::from_slice(&row[i..i + 8]).cast::<i32>();
+        acc += (vq * vr).cast::<i64>();
+        i += 8;
+    }
+    let mut s = acc.reduce_sum();
+    for i in n8..q.len() {
+        s += q[i] as i64 * row[i] as i64;
+    }
+    s
+}
+
+#[cfg(not(feature = "simd"))]
+fn dot_i16_simd(q: &[i16], row: &[i16]) -> i64 {
+    dot_i16_chunked(q, row)
+}
+
+// ---------------------------------------------------------------------------
+// f32 MAC (the codebook-LUT conv phase 2)
+// ---------------------------------------------------------------------------
+
+/// 4-lane multiply-accumulate — the phase-2 codebook MAC of the clustered
+/// conv. Lanes are bit-identical (same per-lane op order, same fold);
+/// callers that pad both operands to a multiple of 4
+/// ([`crate::fe::conv::CodebookLut`]) never take the scalar tail.
+pub fn mac_f32(a: &[f32], b: &[f32], lane: Lane) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match lane {
+        Lane::Chunked => mac_f32_chunked(a, b),
+        Lane::Simd => mac_f32_simd(a, b),
+    }
+}
+
+fn mac_f32_chunked(a: &[f32], b: &[f32]) -> f32 {
+    let n4 = a.len() / 4 * 4;
+    let mut acc = [0f32; 4];
+    for (ca, cb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        for l in 0..4 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+    for i in n4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(feature = "simd")]
+fn mac_f32_simd(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::f32x4;
+    let n4 = a.len() / 4 * 4;
+    let mut acc = f32x4::splat(0.0);
+    let mut i = 0;
+    while i < n4 {
+        acc += f32x4::from_slice(&a[i..i + 4]) * f32x4::from_slice(&b[i..i + 4]);
+        i += 4;
+    }
+    let r = acc.to_array();
+    let mut s = ((r[0] + r[1]) + r[2]) + r[3];
+    for i in n4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(not(feature = "simd"))]
+fn mac_f32_simd(a: &[f32], b: &[f32]) -> f32 {
+    mac_f32_chunked(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    const LANES: [Lane; 2] = [Lane::Chunked, Lane::Simd];
+
+    #[test]
+    fn active_lane_is_stable_and_honors_feature_gate() {
+        let first = active_lane();
+        assert_eq!(first, active_lane(), "lane decision must be immutable");
+        if !SIMD_COMPILED {
+            assert_eq!(first, Lane::Chunked, "feature off always runs chunked");
+        }
+    }
+
+    #[test]
+    fn xor_popcount_matches_naive_on_odd_lengths() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 3, 4, 7, 8, 64, 65] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let naive: u64 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones() as u64).sum();
+            for lane in LANES {
+                assert_eq!(xor_popcount(&a, &b, lane), naive, "len={len} {lane:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn l1_sinks_are_bit_identical_to_the_scalar_oracle() {
+        let mut rng = Rng::new(2);
+        for len in [4usize, 8, 108, 4096] {
+            let q: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+            let c: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+            let scale = 0.37f32;
+            // the scalar oracle: distance::l1's accumulation structure
+            let mut acc = [0f64; 4];
+            for i in (0..len).step_by(4) {
+                for l in 0..4 {
+                    acc[l] += (q[i + l] - c[i + l] * scale).abs() as f64;
+                }
+            }
+            let want = ((acc[0] + acc[1]) + acc[2]) + acc[3];
+            let mut chunked = L1Chunked::default();
+            let mut simd = L1Simd::default();
+            for i in (0..len).step_by(4) {
+                let qa = [q[i], q[i + 1], q[i + 2], q[i + 3]];
+                let ca = [c[i], c[i + 1], c[i + 2], c[i + 3]];
+                chunked.push4(qa, ca, scale);
+                simd.push4(qa, ca, scale);
+            }
+            let (a, b) = (chunked.finish(), simd.finish());
+            assert_eq!(a, want, "len={len}: chunked sink != scalar oracle");
+            assert_eq!(a, b, "len={len}: sinks diverged");
+        }
+    }
+
+    #[test]
+    fn code_dots_are_exact_across_lanes_and_tails() {
+        let mut rng = Rng::new(3);
+        for len in [0usize, 1, 7, 8, 9, 111, 512] {
+            let q: Vec<i16> = (0..len).map(|_| (rng.below(65536) as i32 - 32768) as i16).collect();
+            let r8: Vec<i8> = (0..len).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let r16: Vec<i16> =
+                (0..len).map(|_| (rng.below(65536) as i32 - 32768) as i16).collect();
+            let want8: i64 = q.iter().zip(&r8).map(|(&a, &b)| a as i64 * b as i64).sum();
+            let want16: i64 = q.iter().zip(&r16).map(|(&a, &b)| a as i64 * b as i64).sum();
+            for lane in LANES {
+                assert_eq!(dot_codes_i8(&q, &r8, lane), want8, "len={len} {lane:?}");
+                assert_eq!(dot_codes_i16(&q, &r16, lane), want16, "len={len} {lane:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mac_lanes_are_bit_identical() {
+        let mut rng = Rng::new(4);
+        for len in [4usize, 16, 64, 100, 102] {
+            let a: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+            let c = mac_f32(&a, &b, Lane::Chunked);
+            let s = mac_f32(&a, &b, Lane::Simd);
+            assert_eq!(c, s, "len={len}: mac lanes diverged");
+            // and both stay close to the plain serial sum
+            let serial: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((c - serial).abs() <= 1e-3 * (1.0 + serial.abs()), "{c} vs {serial}");
+        }
+    }
+}

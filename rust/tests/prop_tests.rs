@@ -6,7 +6,10 @@ use fsl_hdnn::config::EeConfig;
 use fsl_hdnn::config::ModelConfig;
 use fsl_hdnn::coordinator::batcher::ClassBatcher;
 use fsl_hdnn::coordinator::early_exit::{EarlyExitController, EeDecision};
-use fsl_hdnn::fe::conv::{clustered_conv2d, clustered_conv2d_packed, conv2d, Tensor3};
+use fsl_hdnn::fe::conv::{
+    clustered_conv2d, clustered_conv2d_lut_in_lane, clustered_conv2d_packed, conv2d, CodebookLut,
+    Tensor3,
+};
 use fsl_hdnn::fe::kmeans::{cluster_layer, kmeans_1d};
 use fsl_hdnn::fe::FeModel;
 use fsl_hdnn::hdc::{quant, CrpEncoder, HdcModel};
@@ -127,7 +130,7 @@ fn prop_packed_matches_dequantized_oracle() {
             }
             let queries: Vec<Vec<f32>> =
                 (0..7).map(|_| (0..d).map(|_| 3.0 * rng.gauss_f32()).collect()).collect();
-            for bits in [1u32, 4, 8, 16] {
+            for bits in [1u32, 2, 4, 8, 16] {
                 for metric in [Distance::L1, Distance::Hamming, Distance::Dot] {
                     let mut m =
                         HdcModel::new(n_classes, d).with_precision(bits).with_metric(metric);
@@ -168,6 +171,112 @@ fn prop_packed_matches_dequantized_oracle() {
                     }
                 }
             }
+        }
+    }
+}
+
+/// The chunked-scalar and simd kernel lanes of the packed class-memory
+/// datapath are bitwise identical to each other and to the dispatching
+/// `distances` entry point, across D (odd D exercises every scalar tail),
+/// the full precision range, and all three metrics; where the exactness
+/// contract holds (hamming at any precision, multi-bit L1) both lanes are
+/// also bit-identical to the dequantized-f32 oracle (DESIGN.md §SIMD
+/// datapath). With the `simd` feature off, `Lane::Simd` aliases the
+/// chunked kernels, so this battery is meaningful under both builds.
+#[test]
+fn prop_simd_lane_bit_identity() {
+    use fsl_hdnn::hdc::Distance;
+    use fsl_hdnn::util::simd::Lane;
+    for &d in &[64usize, 111, 4096] {
+        let cases = if d == 4096 { 2 } else { 6 };
+        for case in 0..cases {
+            let mut rng = Rng::new(14_000 + d as u64 * 37 + case);
+            let n_classes = 3 + rng.below(3);
+            let mut shots: Vec<(usize, Vec<f32>)> = Vec::new();
+            for c in 0..n_classes {
+                for _ in 0..(1 + rng.below(3)) {
+                    shots.push((c, (0..d).map(|_| 3.0 * rng.gauss_f32()).collect()));
+                }
+            }
+            let q: Vec<f32> = (0..d).map(|_| 3.0 * rng.gauss_f32()).collect();
+            for bits in [1u32, 2, 4, 8, 16] {
+                for metric in [Distance::L1, Distance::Hamming, Distance::Dot] {
+                    let mut m =
+                        HdcModel::new(n_classes, d).with_precision(bits).with_metric(metric);
+                    for (c, hv) in &shots {
+                        m.train_shot(*c, hv);
+                    }
+                    let (chunked, vectored) = {
+                        let packed = m.packed();
+                        let pq = packed.quantize_query_for(&q, metric);
+                        (
+                            packed.distances_in_lane(&pq, metric, Lane::Chunked),
+                            packed.distances_in_lane(&pq, metric, Lane::Simd),
+                        )
+                    };
+                    assert_eq!(
+                        chunked, vectored,
+                        "d={d} case {case} bits={bits} {metric:?}: lanes diverged"
+                    );
+                    assert_eq!(
+                        m.distances(&q),
+                        chunked,
+                        "d={d} case {case} bits={bits} {metric:?}: dispatch != explicit lane"
+                    );
+                    let oracle = m.distances_oracle(&q);
+                    if metric == Distance::Hamming || (metric == Distance::L1 && bits > 1) {
+                        assert_eq!(
+                            chunked, oracle,
+                            "d={d} case {case} bits={bits} {metric:?}: exact contract broken"
+                        );
+                    } else {
+                        let qmag: f64 = q.iter().map(|v| v.abs() as f64).sum();
+                        for (c, (a, b)) in chunked.iter().zip(&oracle).enumerate() {
+                            assert!(
+                                (a - b).abs() <= 1e-6 * (1.0 + b.abs() + 8.0 * qmag),
+                                "d={d} case {case} bits={bits} {metric:?} class {c}: \
+                                 lane {a} vs oracle {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Both kernel lanes of the LUT-layout packed convolution are bitwise
+/// identical to each other and to the compat `clustered_conv2d_packed`
+/// wrapper, and match the reference clustered kernel within the usual
+/// f32-association tolerance — across odd geometries, `cin` not divisible
+/// by `ch_sub`, and nibble-tail `cout`.
+#[test]
+fn prop_conv_lut_lanes_match_reference() {
+    use fsl_hdnn::util::simd::Lane;
+    for case in 0..16 {
+        let mut rng = Rng::new(15_000 + case);
+        let cin = 1 + rng.below(12);
+        let cout = 1 + rng.below(36);
+        let ch_sub = 1 + rng.below(8);
+        let n = 2 + rng.below(15);
+        let hw = 3 + rng.below(8);
+        let stride = 1 + rng.below(2);
+        let k = 3;
+        let w: Vec<f32> = (0..cout * k * k * cin).map(|_| rng.gauss_f32()).collect();
+        let cl = cluster_layer(&w, cout, k, cin, ch_sub, n);
+        let packed = cl.packed();
+        let lut = CodebookLut::new(&cl.codebook, packed.cout, packed.groups() * packed.n);
+        let x =
+            Tensor3::from_vec(hw, hw, cin, (0..hw * hw * cin).map(|_| rng.gauss_f32()).collect());
+        let chunked = clustered_conv2d_lut_in_lane(&x, &packed, &lut, stride, Lane::Chunked);
+        let vectored = clustered_conv2d_lut_in_lane(&x, &packed, &lut, stride, Lane::Simd);
+        assert_eq!(chunked.data, vectored.data, "case {case}: conv lanes diverged");
+        let compat = clustered_conv2d_packed(&x, &packed, &cl.codebook, stride);
+        assert_eq!(chunked.data, compat.data, "case {case}: compat wrapper diverged");
+        let reference = clustered_conv2d(&x, &cl.idx, &cl.codebook, cout, k, stride, cl.ch_sub, n);
+        assert_eq!((reference.h, reference.w, reference.c), (chunked.h, chunked.w, chunked.c));
+        for (i, (a, b)) in reference.data.iter().zip(&chunked.data).enumerate() {
+            assert!((a - b).abs() < 1e-3, "case {case} idx {i}: ref {a} vs lut {b}");
         }
     }
 }
